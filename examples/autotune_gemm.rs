@@ -1,0 +1,141 @@
+//! Auto-tuning study: random vs GBT cost-model tuner, simulator vs real
+//! AOT-codegen measurement targets — the §III-A methodology as a runnable
+//! ablation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example autotune_gemm -- [--n 256] [--trials 48]
+//! ```
+//!
+//! 1. tunes an N×N×N GEMM on the A53 and A72 simulators with both tuners,
+//!    printing best-so-far convergence curves (the AutoTVM ablation);
+//! 2. if artifact variants exist for N, re-runs the measurement loop over
+//!    *real* Pallas codegen through PJRT (the paper's actual loop: propose
+//!    schedule → compile → run on device → feed the cost model);
+//! 3. cross-checks: does the simulator's best schedule rank near the top
+//!    of the artifact measurements?
+
+use anyhow::Result;
+use cachebound::hw::profile_by_name;
+use cachebound::operators::gemm::GemmSchedule;
+use cachebound::runtime::Registry;
+use cachebound::tuner::{
+    tune, ArtifactGemmTarget, GemmSpace, MeasureTarget, SearchSpace, SimGemmTarget, Tuner,
+    TunerKind,
+};
+use cachebound::util::bench::BenchConfig;
+use cachebound::util::csv::Csv;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = flag(&args, "--n").unwrap_or_else(|| "256".into()).parse()?;
+    let trials: usize = flag(&args, "--trials").unwrap_or_else(|| "48".into()).parse()?;
+
+    println!("=== auto-tuning study: GEMM N={n}, {trials} trials ===\n");
+    let mut csv = Csv::new(&["profile", "tuner", "trial", "best_so_far_ms"]);
+
+    // --- 1. simulator targets, both tuners, both profiles ------------------
+    for profile in ["a53", "a72"] {
+        let cpu = profile_by_name(profile)?.cpu;
+        let space = GemmSpace::new(&cpu, n, n, n);
+        println!("{} (space: {} configs):", cpu.name, space.len());
+        for kind in [TunerKind::Random, TunerKind::Gbt] {
+            let mut target = SimGemmTarget::square(&cpu, n);
+            let res = tune(&Tuner::new(kind, trials), &space, &mut target)?;
+            let curve = res.best_curve();
+            for (i, b) in curve.iter().enumerate() {
+                csv.row(vec![
+                    profile.to_string(),
+                    format!("{kind:?}"),
+                    i.to_string(),
+                    format!("{:.6}", b * 1e3),
+                ]);
+            }
+            let gflops = 2.0 * (n as f64).powi(3) / res.best_seconds / 1e9;
+            println!(
+                "  {:<8} best {:?} -> {:.3} ms ({:.2} GFLOP/s); half-budget best {:.3} ms",
+                format!("{kind:?}"),
+                res.best_config,
+                res.best_seconds * 1e3,
+                gflops,
+                curve[curve.len() / 2] * 1e3,
+            );
+        }
+    }
+
+    // --- 2. real-codegen measurement loop (artifact variants) --------------
+    println!("\nreal-codegen measurement loop (PJRT artifact variants):");
+    match Registry::open("artifacts") {
+        Ok(mut reg) => {
+            let variant_names = reg.names(Some("gemm_variant"));
+            let available: Vec<GemmSchedule> = variant_names
+                .iter()
+                .filter(|name| name.contains(&format!("_n{n}_")))
+                .filter_map(|name| parse_block(name))
+                .collect();
+            if available.is_empty() {
+                println!("  no variants for N={n} (AOT grid covers N=128,256) — skipping");
+            } else {
+                let mut target = ArtifactGemmTarget {
+                    registry: &mut reg,
+                    n,
+                    cfg: BenchConfig::quick(),
+                };
+                let mut measured: Vec<(GemmSchedule, f64)> = Vec::new();
+                for s in &available {
+                    let secs = target.measure(*s)?;
+                    measured.push((*s, secs));
+                    println!(
+                        "  variant b{}x{}x{}: {:.3} ms/iter",
+                        s.bm, s.bn, s.bk, secs * 1e3
+                    );
+                }
+                measured.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                println!(
+                    "  best real-codegen schedule: b{}x{}x{} ({:.3} ms)",
+                    measured[0].0.bm,
+                    measured[0].0.bn,
+                    measured[0].0.bk,
+                    measured[0].1 * 1e3
+                );
+
+                // --- 3. cross-check sim ranking vs artifact ranking ---------
+                let cpu = profile_by_name("a53")?.cpu;
+                let mut sim_target = SimGemmTarget::square(&cpu, n);
+                let mut sim_ranked: Vec<(GemmSchedule, f64)> = available
+                    .iter()
+                    .map(|s| (*s, sim_target.measure(*s).unwrap()))
+                    .collect();
+                sim_ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                // the naive 8x8x8 variant must be ranked worst by both
+                let worst_real = measured.last().unwrap().0;
+                let worst_sim = sim_ranked.last().unwrap().0;
+                println!(
+                    "  worst by real codegen: b{}x{}x{}; worst by simulator: b{}x{}x{}",
+                    worst_real.bm, worst_real.bn, worst_real.bk,
+                    worst_sim.bm, worst_sim.bn, worst_sim.bk
+                );
+            }
+        }
+        Err(e) => println!("  skipping ({e:#}) — run `make artifacts`"),
+    }
+
+    csv.write("results/autotune_gemm_curves.csv")?;
+    println!("\nwrote results/autotune_gemm_curves.csv");
+    Ok(())
+}
+
+fn parse_block(name: &str) -> Option<GemmSchedule> {
+    // gemm_f32_var_n128_b64x128x128
+    let b = name.split("_b").nth(1)?;
+    let mut it = b.split('x');
+    Some(GemmSchedule::new(
+        it.next()?.parse().ok()?,
+        it.next()?.parse().ok()?,
+        it.next()?.parse().ok()?,
+        4,
+    ))
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}

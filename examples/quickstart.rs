@@ -1,0 +1,97 @@
+//! Quickstart: the cache-bound model in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's core argument on the Cortex-A53 profile:
+//! 1. eq. (1) theoretical peak vs the measured bandwidths (Tables I/II),
+//! 2. a tuned GEMM simulated under the calibrated machine model,
+//! 3. classification: which hardware bound explains the time,
+//! 4. (if `make artifacts` was run) the same operator as a real Pallas→
+//!    PJRT artifact executing from rust.
+
+use anyhow::Result;
+use cachebound::analysis::bounds::gemm_bounds;
+use cachebound::analysis::classify::classify;
+use cachebound::analysis::required_bw::required_bandwidth;
+use cachebound::hw::{profile_by_name, MemLevel};
+use cachebound::operators::gemm::GemmSchedule;
+use cachebound::runtime::Registry;
+use cachebound::sim::timing::simulate_gemm_time;
+
+fn main() -> Result<()> {
+    let profile = profile_by_name("a53")?;
+    let cpu = &profile.cpu;
+    println!("== cachebound quickstart ==\n");
+    println!(
+        "machine: {} ({}) — {} cores @ {:.1} GHz, NEON {} bit",
+        cpu.name,
+        cpu.soc,
+        cpu.cores,
+        cpu.frequency_hz / 1e9,
+        cpu.simd_bits
+    );
+    println!(
+        "eq.(1) theoretical peak: {:.1} GFLOP/s (float32)",
+        cpu.peak_flops(32) / 1e9
+    );
+    println!(
+        "measured bandwidths (Table I): L1 {:.0} / L2 {:.0} / RAM {:.0} MiB/s read\n",
+        cpu.l1.read_bw, cpu.l2.read_bw, cpu.ram_read_bw
+    );
+
+    // 2. simulate a tuned 512x512 GEMM
+    let n = 512;
+    let schedule = GemmSchedule::new(64, 64, 64, 4);
+    let tb = simulate_gemm_time(cpu, n, n, n, schedule, 32);
+    let flops = 2.0 * (n as f64).powi(3);
+    println!(
+        "simulated tuned GEMM N={n}: {:.3} ms -> {:.2} GFLOP/s (binding: {})",
+        tb.total_s * 1e3,
+        flops / tb.total_s / 1e9,
+        tb.bound.name()
+    );
+
+    // 3. classify against the paper's bound lines
+    let bounds = gemm_bounds(cpu, n);
+    println!(
+        "bound lines: compute {:.3} ms | L1 {:.3} ms | L2 {:.3} ms | RAM {:.3} ms",
+        bounds.compute_s * 1e3,
+        bounds.l1_read_s * 1e3,
+        bounds.l2_read_s * 1e3,
+        bounds.ram_read_s * 1e3
+    );
+    let class = classify(tb.total_s, &bounds, 2.0);
+    println!("classification: **{}** (the paper's central finding)\n", class.name());
+
+    // eq. (5): what bandwidth would the peak need?
+    let req = required_bandwidth(cpu.peak_flops(32), 4.0);
+    println!(
+        "to sustain the {:.1} GFLOP/s peak, eq.(5) demands {:.1} GiB/s from L1 — {:.1}x what it has",
+        cpu.peak_flops(32) / 1e9,
+        req.bw_req / (1 << 30) as f64,
+        req.utilization(cpu, MemLevel::L1)
+    );
+
+    // 4. the real artifact path (optional)
+    match Registry::open("artifacts") {
+        Ok(mut reg) => {
+            let name = "gemm_f32_tuned_n512";
+            let v = reg.validate(name)?;
+            println!(
+                "\nPJRT artifact '{name}': checksum {} (expected {:.3}, got {:.3})",
+                if v.passed { "OK" } else { "MISMATCH" },
+                v.details[0].0,
+                v.details[0].1
+            );
+            let m = reg.measure(name, &cachebound::util::bench::BenchConfig::quick())?;
+            println!(
+                "host wallclock via PJRT: {:.3} ms/iter (interpret-mode Pallas; structural, not ARM-comparable)",
+                m.seconds.median * 1e3
+            );
+        }
+        Err(_) => println!("\n(run `make artifacts` to exercise the Pallas → PJRT path)"),
+    }
+    Ok(())
+}

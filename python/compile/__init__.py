@@ -1,0 +1,1 @@
+"""Build-time compilation package: L1 Pallas kernels, L2 jax graphs, AOT."""

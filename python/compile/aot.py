@@ -1,0 +1,501 @@
+"""AOT compiler: lower every operator variant to HLO text + manifest.
+
+This is the only place python runs in the whole system — ``make artifacts``
+invokes it once; the rust coordinator then loads ``artifacts/*.hlo.txt``
+through PJRT and never touches python again.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowering goes stablehlo -> XlaComputation -> ``as_hlo_text`` with
+``return_tuple=True`` (rust unwraps with ``to_tuple1``).
+
+Cross-language numerics protocol: for every artifact we generate inputs with
+a SplitMix64 stream (identical implementation in ``rust/src/util/rng.rs``),
+execute the jitted graph, and record output checksums in the manifest.  The
+rust integration tests regenerate the same inputs, execute the artifact via
+PJRT, and compare — exact for integer outputs, 1e-3 relative for floats
+(python jaxlib and xla_extension 0.5.1 are different XLA builds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, workloads
+from .kernels import bitpack, bitserial, conv2d, gemm
+from .workloads import RESNET18_LAYERS
+
+# ---------------------------------------------------------------------------
+# SplitMix64 — must match rust/src/util/rng.rs exactly
+# ---------------------------------------------------------------------------
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+
+
+def splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """Vectorized SplitMix64: element i is mix(seed + (i+1)*GOLDEN)."""
+    with np.errstate(over="ignore"):
+        i = np.arange(1, n + 1, dtype=np.uint64)
+        z = np.uint64(seed) + i * GOLDEN
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def gen_input(seed: int, shape: tuple[int, ...], dtype: str) -> np.ndarray:
+    """Deterministic input tensor; the rust side mirrors this bit-for-bit."""
+    n = math.prod(shape)
+    z = splitmix64_stream(seed, n)
+    if dtype == "f32":
+        # upper 24 bits -> [0,1) -> [-1,1)
+        vals = (z >> np.uint64(40)).astype(np.float64) / float(1 << 24)
+        return (vals * 2.0 - 1.0).astype(np.float32).reshape(shape)
+    if dtype == "i8":
+        # small symmetric range keeps int32 accumulators far from overflow
+        return (((z >> np.uint64(40)) % np.uint64(15)).astype(np.int64) - 7).astype(
+            np.int8
+        ).reshape(shape)
+    if dtype == "u32":
+        return (z >> np.uint64(32)).astype(np.uint32).reshape(shape)
+    if dtype.startswith("i32u"):  # unipolar activations with `bits` precision
+        bits = int(dtype[4:])
+        return ((z >> np.uint64(40)) % np.uint64(1 << bits)).astype(np.int32).reshape(
+            shape
+        )
+    raise ValueError(f"unknown dtype spec {dtype}")
+
+
+def checksum(arr: np.ndarray) -> float:
+    """Order-stable float64 sum — the cross-language output fingerprint."""
+    return float(np.asarray(arr, dtype=np.float64).sum())
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default ToString ELIDES big literals
+    # ("constant({...})"), which the rust-side text parser reads back as
+    # zeros — baked weights (e.g. the whole-network artifact) would
+    # silently vanish.  Full literals round-trip exactly.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+class Artifact:
+    """One lowered operator variant."""
+
+    def __init__(self, name: str, fn, inputs: list[tuple[tuple[int, ...], str]], meta: dict):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs
+        self.meta = meta
+
+    def build(self, out_dir: Path, seed_base: int, execute: bool) -> dict:
+        specs = [
+            jax.ShapeDtypeStruct(shape, _np_dtype(d)) for shape, d in self.inputs
+        ]
+        t0 = time.time()
+        lowered = jax.jit(self.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{self.name}.hlo.txt"
+        path.write_text(text)
+        entry = {
+            "name": self.name,
+            "file": path.name,
+            "inputs": [
+                {"shape": list(shape), "dtype": d, "seed": seed_base + idx}
+                for idx, (shape, d) in enumerate(self.inputs)
+            ],
+            "meta": self.meta,
+            "hlo_bytes": len(text),
+        }
+        if execute:
+            args = [
+                gen_input(seed_base + idx, shape, d)
+                for idx, (shape, d) in enumerate(self.inputs)
+            ]
+            outs = jax.jit(self.fn)(*args)
+            entry["outputs"] = [
+                {
+                    "shape": list(np.shape(o)),
+                    "dtype": str(np.asarray(o).dtype),
+                    "checksum": checksum(o),
+                    "exact": np.asarray(o).dtype.kind in "iu",
+                }
+                for o in outs
+            ]
+        entry["lower_seconds"] = round(time.time() - t0, 3)
+        return entry
+
+
+def _np_dtype(d: str):
+    if d == "f32":
+        return jnp.float32
+    if d == "i8":
+        return jnp.int8
+    if d == "u32":
+        return jnp.uint32
+    if d.startswith("i32"):
+        return jnp.int32
+    raise ValueError(d)
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalog — the full workload grid from workloads.py
+# ---------------------------------------------------------------------------
+
+
+def catalog(quick: bool = False) -> list[Artifact]:
+    arts: list[Artifact] = []
+
+    # --- float32 GEMM: naive + tuned (Tables IV/V, Figs 1 & 9) -------------
+    naive_sizes = [32, 128, 256]  # larger naive grids are interpret-hostile;
+    # the rust native operator + simulator carry the naive column beyond 256.
+    tuned_sizes = workloads.GEMM_SIZES
+    if quick:
+        naive_sizes, tuned_sizes = [32], [32, 128]
+    for n in naive_sizes:
+        arts.append(
+            Artifact(
+                f"gemm_f32_naive_n{n}",
+                model.gemm_net(gemm.NAIVE_SCHEDULE),
+                [((n, n), "f32"), ((n, n), "f32")],
+                {
+                    "kind": "gemm",
+                    "dtype": "f32",
+                    "schedule": "naive",
+                    "n": n,
+                    "macs": n**3,
+                    "block": list(gemm.NAIVE_SCHEDULE),
+                },
+            )
+        )
+    for n in tuned_sizes:
+        arts.append(
+            Artifact(
+                f"gemm_f32_tuned_n{n}",
+                model.gemm_net(gemm.TUNED_SCHEDULE),
+                [((n, n), "f32"), ((n, n), "f32")],
+                {
+                    "kind": "gemm",
+                    "dtype": "f32",
+                    "schedule": "tuned",
+                    "n": n,
+                    "macs": n**3,
+                    "block": list(gemm.TUNED_SCHEDULE),
+                },
+            )
+        )
+
+    # --- GEMM schedule variants: the tuner's artifact-backed space ---------
+    variant_sizes = [] if quick else workloads.GEMM_VARIANT_SIZES
+    for n in variant_sizes:
+        for bm, bn, bk in workloads.GEMM_VARIANTS:
+            arts.append(
+                Artifact(
+                    f"gemm_f32_var_n{n}_b{bm}x{bn}x{bk}",
+                    model.gemm_net(gemm.GemmSchedule(bm, bn, bk)),
+                    [((n, n), "f32"), ((n, n), "f32")],
+                    {
+                        "kind": "gemm_variant",
+                        "dtype": "f32",
+                        "n": n,
+                        "macs": n**3,
+                        "block": [bm, bn, bk],
+                    },
+                )
+            )
+
+    # --- dense layer (fused epilogue) --------------------------------------
+    if not quick:
+        n = 256
+        arts.append(
+            Artifact(
+                f"dense_f32_n{n}",
+                model.dense_net(gemm.TUNED_SCHEDULE),
+                [((n, n), "f32"), ((n, n), "f32"), ((n,), "f32")],
+                {"kind": "dense", "dtype": "f32", "n": n, "macs": n**3},
+            )
+        )
+
+    # --- float32 ResNet-18 convolutions (Figs 2 & 3) -----------------------
+    layers = RESNET18_LAYERS[:1] if quick else RESNET18_LAYERS
+    for layer in layers:
+        arts.append(
+            Artifact(
+                f"conv_f32_{layer.name.lower()}",
+                model.conv_net(layer, conv2d.TUNED_CONV_SCHEDULE),
+                [
+                    ((layer.b, layer.cin, layer.h, layer.w), "f32"),
+                    ((layer.cout, layer.cin, layer.k, layer.k), "f32"),
+                ],
+                {
+                    "kind": "conv",
+                    "dtype": "f32",
+                    "layer": layer.name,
+                    "macs": layer.macs,
+                    "geometry": [layer.cin, layer.cout, layer.h, layer.w,
+                                 layer.k, layer.stride, layer.pad],
+                },
+            )
+        )
+
+    # --- IM2COL conv variant ------------------------------------------------
+    if not quick:
+        layer = RESNET18_LAYERS[3]  # C5
+        arts.append(
+            Artifact(
+                f"conv_f32_im2col_{layer.name.lower()}",
+                model.conv_im2col_net(layer, gemm.TUNED_SCHEDULE),
+                [
+                    ((layer.b, layer.cin, layer.h, layer.w), "f32"),
+                    ((layer.cout, layer.cin, layer.k, layer.k), "f32"),
+                ],
+                {
+                    "kind": "conv_im2col",
+                    "dtype": "f32",
+                    "layer": layer.name,
+                    "macs": layer.macs,
+                },
+            )
+        )
+
+    # --- QNN int8 GEMM ------------------------------------------------------
+    qnn_sizes = [] if quick else workloads.QNN_GEMM_SIZES
+    for n in qnn_sizes:
+        arts.append(
+            Artifact(
+                f"gemm_qnn8_n{n}",
+                model.qnn_gemm_net(gemm.TUNED_SCHEDULE),
+                [((n, n), "i8"), ((n, n), "i8")],
+                {"kind": "qnn_gemm", "dtype": "i8", "n": n, "macs": n**3},
+            )
+        )
+
+    # --- QNN int8 convolutions (Figs 6-8) -----------------------------------
+    qnn_layers = [] if quick else ["C2", "C5", "C8", "C11"]
+    for lname in qnn_layers:
+        layer = next(l for l in RESNET18_LAYERS if l.name == lname)
+        arts.append(
+            Artifact(
+                f"conv_qnn8_{layer.name.lower()}",
+                model.qnn_conv_net(layer, conv2d.TUNED_CONV_SCHEDULE),
+                [
+                    ((layer.b, layer.cin, layer.h, layer.w), "i8"),
+                    ((layer.cout, layer.cin, layer.k, layer.k), "i8"),
+                ],
+                {
+                    "kind": "qnn_conv",
+                    "dtype": "i8",
+                    "layer": layer.name,
+                    "macs": layer.macs,
+                },
+            )
+        )
+
+    # --- bit-serial GEMM (Figs 4 & 5) ---------------------------------------
+    bs_cfgs = [] if quick else [
+        (256, bits, pol) for bits in workloads.BITSERIAL_BITS for pol in ("uni", "bi")
+    ]
+    for n, bits, pol in bs_cfgs:
+        kw = n // 32
+        arts.append(
+            Artifact(
+                f"gemm_bs_{pol}_a{bits}w{bits}_n{n}_prepacked",
+                model.bitserial_gemm_prepacked_net(
+                    n, unipolar=(pol == "uni"), schedule=bitserial.BitserialSchedule()
+                ),
+                [((bits, n, kw), "u32"), ((bits, n, kw), "u32")],
+                {
+                    "kind": "bitserial_gemm",
+                    "polarity": pol,
+                    "abits": bits,
+                    "wbits": bits,
+                    "n": n,
+                    "macs": n**3,
+                    "prepacked": True,
+                },
+            )
+        )
+    # runtime-activation-packing variant (the measured configuration of §V-A)
+    if not quick:
+        for n, bits in [(256, 2)]:
+            kw = n // 32
+            arts.append(
+                Artifact(
+                    f"gemm_bs_uni_a{bits}w{bits}_n{n}_runtime_pack",
+                    model.bitserial_gemm_net(
+                        n, bits, bits, True, bitserial.BitserialSchedule()
+                    ),
+                    [((n, n), f"i32u{bits}"), ((bits, n, kw), "u32")],
+                    {
+                        "kind": "bitserial_gemm",
+                        "polarity": "uni",
+                        "abits": bits,
+                        "wbits": bits,
+                        "n": n,
+                        "macs": n**3,
+                        "prepacked": False,
+                    },
+                )
+            )
+
+    # --- whole-network ResNet-18 (end-to-end driver) -------------------------
+    if not quick:
+        from . import network
+
+        hw = 32  # every block exercised; final feature map 1x1
+        wspecs = network.weight_specs(classes=10)
+
+        def resnet_fwd(x, *flat_ws):
+            return (network.forward_flat(x, *flat_ws, classes=10),)
+
+        # MACs: stem + blocks at 32x32-input geometry
+        def conv_macs_at(cin, cout, h, k, s, p):
+            ho = (h + 2 * p - k) // s + 1
+            return ho * ho * cin * cout * k * k, ho
+
+        total, h = conv_macs_at(3, 64, hw, 7, 2, 3)
+        h = (h + 2 * 1 - 3) // 2 + 1  # stem maxpool
+        for b in network.resnet18_blocks():
+            m1, h1 = conv_macs_at(b.cin, b.cout, h, 3, b.stride, 1)
+            m2, _ = conv_macs_at(b.cout, b.cout, h1, 3, 1, 1)
+            total += m1 + m2
+            if b.has_downsample:
+                md, _ = conv_macs_at(b.cin, b.cout, h, 1, b.stride, 0)
+                total += md
+            h = h1
+        arts.append(
+            Artifact(
+                f"resnet18_full_i{hw}",
+                resnet_fwd,
+                [((1, 3, hw, hw), "f32")] + [(shape, "f32") for _, shape, _ in wspecs],
+                {
+                    "kind": "network",
+                    "dtype": "f32",
+                    "input_hw": hw,
+                    "classes": 10,
+                    "macs": int(total),
+                },
+            )
+        )
+
+    # --- bit-serial convolutions (Figs 6-8) ---------------------------------
+    bs_conv = [] if quick else [("C8", 1), ("C8", 2), ("C11", 1), ("C11", 2)]
+    for lname, bits in bs_conv:
+        layer = next(l for l in RESNET18_LAYERS if l.name == lname)
+        ckk = layer.cin * layer.k * layer.k
+        kpad = (ckk + 31) // 32 * 32
+        arts.append(
+            Artifact(
+                f"conv_bs_uni_a{bits}w{bits}_{layer.name.lower()}",
+                model.bitserial_conv_net(
+                    layer, bits, bits, True, bitserial.BitserialSchedule()
+                ),
+                [
+                    ((layer.b, layer.cin, layer.h, layer.w), f"i32u{bits}"),
+                    ((bits, layer.cout, kpad // 32), "u32"),
+                ],
+                {
+                    "kind": "bitserial_conv",
+                    "polarity": "uni",
+                    "abits": bits,
+                    "wbits": bits,
+                    "layer": layer.name,
+                    "macs": layer.macs,
+                },
+            )
+        )
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="(compat) manifest path; implies out dir")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--quick", action="store_true", help="tiny subset for smoke tests")
+    ap.add_argument("--no-execute", action="store_true", help="skip checksum execution")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out).parent if args.out else Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    arts = catalog(quick=args.quick)
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+
+    # --only must not clobber the rest of the manifest: start from any
+    # existing entries and overwrite just the rebuilt ones.
+    entries = []
+    manifest_path = out_dir / "manifest.json"
+    if args.only and manifest_path.exists():
+        old = json.loads(manifest_path.read_text())
+        rebuilt = {a.name for a in arts}
+        entries = [e for e in old.get("artifacts", []) if e["name"] not in rebuilt]
+
+    t0 = time.time()
+    # seed_base is derived from the artifact's position in the FULL catalog
+    # so --only rebuilds reproduce identical inputs/checksums.
+    full_index = {a.name: i for i, a in enumerate(catalog(quick=args.quick))}
+    for idx, art in enumerate(arts):
+        print(f"[{idx + 1}/{len(arts)}] {art.name} ...", flush=True)
+        pos = full_index.get(art.name, idx)
+        entry = art.build(out_dir, seed_base=0xC0FFEE00 + pos * 64, execute=not args.no_execute)
+        entries.append(entry)
+    entries.sort(key=lambda e: e["name"])
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python/compile/aot.py",
+        "artifact_count": len(entries),
+        "workloads": {
+            "resnet18_layers": [
+                {
+                    "name": l.name, "b": l.b, "cin": l.cin, "cout": l.cout,
+                    "h": l.h, "w": l.w, "k": l.k, "stride": l.stride,
+                    "pad": l.pad, "macs": l.macs,
+                }
+                for l in RESNET18_LAYERS
+            ],
+            "gemm_sizes": workloads.GEMM_SIZES,
+            "bitserial_bits": workloads.BITSERIAL_BITS,
+        },
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json to {out_dir} "
+        f"in {time.time() - t0:.1f}s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

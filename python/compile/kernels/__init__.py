@@ -1,0 +1,3 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import bitpack, bitserial, conv2d, gemm, pooling, qnn, ref  # noqa: F401

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: runtime activation bit-packing.
+
+Section V-A of the paper: *"The weights can be pre-packed and thus do not
+need to be packed during runtime, but the activations require bit-packing
+just before the calculation."*  This kernel is that runtime step — it is part
+of the measured quantized-operator hot path and its cost is exactly the
+"mandatory bit-packing step" the paper calls out as un-modelled overhead.
+
+Packing layout (matches ``ref.pack_unipolar``): values ``v < 2**bits`` along
+the reduction axis K are split into ``bits`` planes; each plane groups 32
+consecutive K positions into one little-endian uint32 word, so a ``(M, K)``
+tensor becomes ``(bits, M, K/32)``.  Packing along K (the paper's "spatial"
+bit-packing axis for dense) is what lets the bit-serial GEMM use full-word
+AND/XOR + popcount vector ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 32
+
+
+class PackSchedule(NamedTuple):
+    """Row-block size for the packing sweep."""
+
+    brow: int = 64
+
+    def clamp(self, m: int) -> "PackSchedule":
+        return PackSchedule(min(self.brow, m))
+
+
+def _pack_kernel(v_ref, o_ref, *, bits: int, kw: int):
+    """Pack a (brow, K) int block into (bits, brow, K/32) uint32 planes."""
+    v = v_ref[...].astype(jnp.uint32)
+    brow = v.shape[0]
+    weights = jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32)
+    planes = []
+    for b in range(bits):
+        bitvals = (v >> jnp.uint32(b)) & jnp.uint32(1)
+        grouped = bitvals.reshape(brow, kw, LANES)
+        planes.append(jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32))
+    o_ref[...] = jnp.stack(planes, axis=0)
+
+
+def pack_unipolar(
+    v: jax.Array,
+    bits: int,
+    schedule: PackSchedule = PackSchedule(),
+    interpret: bool = True,
+) -> jax.Array:
+    """Pack (M, K) unsigned ints (< 2**bits) into (bits, M, K/32) planes."""
+    m, k = v.shape
+    if k % LANES:
+        raise ValueError(f"K={k} must be a multiple of {LANES}")
+    s = schedule.clamp(m)
+    if m % s.brow:
+        raise ValueError(f"brow={s.brow} does not divide M={m}")
+    kw = k // LANES
+    kernel = functools.partial(_pack_kernel, bits=bits, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s.brow,),
+        in_specs=[pl.BlockSpec((s.brow, k), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((bits, s.brow, kw), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((bits, m, kw), jnp.uint32),
+        interpret=interpret,
+    )(v)
+
+
+def _pack_bipolar_kernel(s_ref, o_ref, *, bits: int, kw: int):
+    """Pack (bits, brow, K) sign planes in {-1,+1} into uint32 words."""
+    signs = s_ref[...]
+    brow = signs.shape[1]
+    s01 = ((signs + 1) // 2).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32)
+    grouped = s01.reshape(bits, brow, kw, LANES)
+    o_ref[...] = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+
+
+def pack_bipolar(
+    sign_planes: jax.Array,
+    schedule: PackSchedule = PackSchedule(),
+    interpret: bool = True,
+) -> jax.Array:
+    """Pack (bits, M, K) sign planes (entries in {-1,+1}) to (bits, M, K/32)."""
+    bits, m, k = sign_planes.shape
+    if k % LANES:
+        raise ValueError(f"K={k} must be a multiple of {LANES}")
+    s = schedule.clamp(m)
+    if m % s.brow:
+        raise ValueError(f"brow={s.brow} does not divide M={m}")
+    kw = k // LANES
+    kernel = functools.partial(_pack_bipolar_kernel, bits=bits, kw=kw)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s.brow,),
+        in_specs=[pl.BlockSpec((bits, s.brow, k), lambda r: (0, r, 0))],
+        out_specs=pl.BlockSpec((bits, s.brow, kw), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((bits, m, kw), jnp.uint32),
+        interpret=interpret,
+    )(sign_planes)

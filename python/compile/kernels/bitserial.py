@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: bit-serial GEMM over packed bit-planes.
+
+The paper's Section V quantized-operator study (Figs 4–8) uses TVM's
+bit-serial dense/conv operators (Cowan et al. CGO'20, BISMO-style): the
+precision dimension is processed *serially* — one plane pair at a time —
+while the K dimension is processed in parallel with vectorized full-word
+logical ops and popcounts.
+
+Arithmetic (see ``ref.py`` for the oracle):
+
+* unipolar: ``out += 2^(i+j) * popcount(a_i & w_j)``
+* bipolar:  ``out += 2^(i+j) * (K - 2*popcount(a_i ^ w_j))``  — one extra
+  subtract per word pair, which is why the paper finds bipolar *faster*
+  than unipolar's extra ``AND``+popcount-correction variant in TVM; here the
+  cost difference is one subtract, kept for fidelity.
+
+Schedule: grid over (M blocks, N blocks); the (ba·bw) plane loop and the
+packed-K reduction run inside the kernel instance.  The packed operand rows
+are the VMEM-resident panels; one 32-lane uint32 word carries 32 MACs, which
+is exactly the data-volume reduction the cache-bound model credits
+quantization with (eq. 5: d = bits/8 bytes per MAC operand).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class BitserialSchedule(NamedTuple):
+    """Schedule knobs: output tile (bm × bn)."""
+
+    bm: int = 64
+    bn: int = 64
+
+    def clamp(self, m: int, n: int) -> "BitserialSchedule":
+        return BitserialSchedule(min(self.bm, m), min(self.bn, n))
+
+    def vmem_bytes(self, ba: int, bw: int, kw: int) -> int:
+        """Packed A rows + packed W rows + int32 accumulator tile."""
+        return ba * self.bm * kw * 4 + bw * self.bn * kw * 4 + self.bm * self.bn * 4
+
+
+def _bitserial_kernel(a_ref, w_ref, o_ref, *, ba: int, bw: int, unipolar: bool, k: int):
+    """One (bm, bn) int32 output tile; serial loop over plane pairs.
+
+    a_ref: (ba, bm, kw) uint32; w_ref: (bw, bn, kw) uint32.
+    """
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for i in range(ba):
+        a_plane = a_ref[i]  # (bm, kw)
+        for j in range(bw):
+            w_plane = w_ref[j]  # (bn, kw)
+            if unipolar:
+                words = a_plane[:, None, :] & w_plane[None, :, :]
+                pc = jax.lax.population_count(words).astype(jnp.int32).sum(-1)
+                acc = acc + (pc << (i + j))
+            else:
+                words = a_plane[:, None, :] ^ w_plane[None, :, :]
+                pc = jax.lax.population_count(words).astype(jnp.int32).sum(-1)
+                acc = acc + ((k - 2 * pc) << (i + j))
+    o_ref[...] = acc
+
+
+def bitserial_gemm(
+    a_planes: jax.Array,
+    w_planes: jax.Array,
+    k: int,
+    unipolar: bool = True,
+    schedule: BitserialSchedule = BitserialSchedule(),
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-serial GEMM over packed planes.
+
+    a_planes: (ba, M, K/32) uint32, w_planes: (bw, N, K/32) uint32 ->
+    int32 (M, N).  ``k`` is the unpacked reduction length (for bipolar).
+    """
+    ba, m, kw = a_planes.shape
+    bw, n, kw2 = w_planes.shape
+    assert kw == kw2, (a_planes.shape, w_planes.shape)
+    s = schedule.clamp(m, n)
+    if m % s.bm or n % s.bn:
+        raise ValueError(f"schedule {s} does not divide ({m},{n})")
+    kernel = functools.partial(
+        _bitserial_kernel, ba=ba, bw=bw, unipolar=unipolar, k=k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s.bm, n // s.bn),
+        in_specs=[
+            pl.BlockSpec((ba, s.bm, kw), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((bw, s.bn, kw), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_planes, w_planes)

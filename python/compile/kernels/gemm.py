@@ -1,0 +1,141 @@
+"""L1 Pallas kernels: tiled float32 GEMM.
+
+The paper's GEMM study (Tables IV/V, Figs 1 & 9) compares *naive* and
+*auto-tuned* TVM schedules.  We mirror that with a parameterized Pallas
+schedule: the block shape ``(bm, bn, bk)`` is the schedule knob the tuner
+searches over (the TPU analog of TVM's tiling factors), and "naive" is a
+deliberately-untuned small-tile default.
+
+Hardware adaptation (DESIGN.md §3): the paper keeps one operand panel hot in
+L1 and streams the other through NEON registers.  Here the ``BlockSpec``
+keeps an ``(bm, bk)`` A-panel and a ``(bk, bn)`` B-panel resident in VMEM and
+the MXU consumes them; the grid's k axis plays the paper's outer-K loop and
+the revisited output block is the accumulator.  Kernels are lowered with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class GemmSchedule(NamedTuple):
+    """Schedule knobs for the tiled GEMM — the tuner's search-space axes.
+
+    ``bm``/``bn``/``bk`` are the VMEM block sizes of the M/N/K loops.  The
+    MXU-friendly default is 128 (the systolic array edge); "naive" uses 8.
+    """
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def clamp(self, m: int, n: int, k: int) -> "GemmSchedule":
+        """Clamp block sizes to the problem so tiny problems still lower."""
+        return GemmSchedule(min(self.bm, m), min(self.bn, n), min(self.bk, k))
+
+    def divides(self, m: int, n: int, k: int) -> bool:
+        return m % self.bm == 0 and n % self.bn == 0 and k % self.bk == 0
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """Resident VMEM footprint: A panel + B panel + f32 output block."""
+        return (
+            self.bm * self.bk * dtype_bytes
+            + self.bk * self.bn * dtype_bytes
+            + self.bm * self.bn * 4
+        )
+
+
+NAIVE_SCHEDULE = GemmSchedule(8, 8, 8)
+TUNED_SCHEDULE = GemmSchedule(128, 128, 128)
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One (bm,bn) output tile; grid axis 2 walks the K panels.
+
+    The output block index is independent of the k grid axis, so the same
+    VMEM block is revisited across k steps and serves as the accumulator.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def gemm(
+    x: jax.Array,
+    w: jax.Array,
+    schedule: GemmSchedule = TUNED_SCHEDULE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled GEMM ``(M,K) @ (K,N) -> (M,N)`` float32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    s = schedule.clamp(m, n, k)
+    if not s.divides(m, n, k):
+        raise ValueError(f"schedule {s} does not divide problem ({m},{n},{k})")
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // s.bm, n // s.bn, k // s.bk),
+        in_specs=[
+            pl.BlockSpec((s.bm, s.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s.bk, s.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """Fused dense tile: GEMM accumulate + bias + optional ReLU on flush."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        o_ref[...] = jnp.maximum(acc, 0.0) if relu else acc
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    schedule: GemmSchedule = TUNED_SCHEDULE,
+    relu: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dense layer ``relu(x @ w + b)`` — the paper's dense operator, with the
+    bias/activation epilogue fused into the flush step of the GEMM."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    s = schedule.clamp(m, n, k)
+    if not s.divides(m, n, k):
+        raise ValueError(f"schedule {s} does not divide problem ({m},{n},{k})")
+    kernel = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s.bm, n // s.bn, k // s.bk),
+        in_specs=[
+            pl.BlockSpec((s.bm, s.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s.bk, s.bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((s.bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

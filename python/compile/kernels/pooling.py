@@ -1,0 +1,123 @@
+"""L1 Pallas kernels: pooling + residual add — the ResNet glue operators.
+
+The paper studies conv/dense in isolation, but its workload is ResNet-18;
+composing the full network (examples/resnet18_analysis end-to-end graph)
+needs max-pool, global-average-pool and the residual shortcut add.  These
+are bandwidth-trivial operators (the cache-bound model classifies them as
+pure streaming), included so the L2 network graph is complete.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k: int, stride: int, wo: int, ho: int):
+    """Max-pool one (bc, ho, wo) channel block from the padded input."""
+    acc = None
+    for dy in range(k):
+        rows = x_ref[:, dy : dy + (ho - 1) * stride + 1 : stride, :]
+        for dx in range(k):
+            patch = rows[:, :, dx : dx + (wo - 1) * stride + 1 : stride]
+            acc = patch if acc is None else jnp.maximum(acc, patch)
+    o_ref[...] = acc
+
+
+def maxpool2d(
+    x: jax.Array,
+    k: int,
+    stride: int,
+    pad: int,
+    bc: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Max pooling, NCHW: x (B, C, H, W) -> (B, C, ho, wo).
+
+    Padding uses -inf so border maxima are exact.
+    """
+    b, c, h, w = x.shape
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)), constant_values=-jnp.inf)
+    hp, wp = xp.shape[2], xp.shape[3]
+    bc = min(bc, c)
+    if c % bc:
+        raise ValueError(f"bc={bc} does not divide C={c}")
+    kernel = functools.partial(_maxpool_kernel, k=k, stride=stride, wo=wo, ho=ho)
+
+    def one_image(xi):
+        return pl.pallas_call(
+            kernel,
+            grid=(c // bc,),
+            in_specs=[pl.BlockSpec((bc, hp, wp), lambda ci: (ci, 0, 0))],
+            out_specs=pl.BlockSpec((bc, ho, wo), lambda ci: (ci, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((c, ho, wo), x.dtype),
+            interpret=interpret,
+        )(xi)
+
+    return jax.vmap(one_image)(xp)
+
+
+def _gap_kernel(x_ref, o_ref):
+    """Global average pool one channel block: (bc, H, W) -> (bc,)."""
+    o_ref[...] = jnp.mean(x_ref[...], axis=(1, 2))
+
+
+def global_avgpool(x: jax.Array, bc: int = 16, interpret: bool = True) -> jax.Array:
+    """Global average pooling: (B, C, H, W) -> (B, C)."""
+    b, c, h, w = x.shape
+    bc = min(bc, c)
+    if c % bc:
+        raise ValueError(f"bc={bc} does not divide C={c}")
+
+    def one_image(xi):
+        return pl.pallas_call(
+            _gap_kernel,
+            grid=(c // bc,),
+            in_specs=[pl.BlockSpec((bc, h, w), lambda ci: (ci, 0, 0))],
+            out_specs=pl.BlockSpec((bc,), lambda ci: (ci,)),
+            out_shape=jax.ShapeDtypeStruct((c,), x.dtype),
+            interpret=interpret,
+        )(xi)
+
+    return jax.vmap(one_image)(x)
+
+
+def _residual_kernel(x_ref, y_ref, o_ref, *, relu: bool):
+    s = x_ref[...] + y_ref[...]
+    o_ref[...] = jnp.maximum(s, 0.0) if relu else s
+
+
+def residual_add(
+    x: jax.Array,
+    y: jax.Array,
+    relu: bool = True,
+    bc: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Residual shortcut: relu(x + y), NCHW, shapes must match."""
+    assert x.shape == y.shape, (x.shape, y.shape)
+    b, c, h, w = x.shape
+    bc = min(bc, c)
+    if c % bc:
+        raise ValueError(f"bc={bc} does not divide C={c}")
+    kernel = functools.partial(_residual_kernel, relu=relu)
+
+    def one_image(xi, yi):
+        return pl.pallas_call(
+            kernel,
+            grid=(c // bc,),
+            in_specs=[
+                pl.BlockSpec((bc, h, w), lambda ci: (ci, 0, 0)),
+                pl.BlockSpec((bc, h, w), lambda ci: (ci, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bc, h, w), lambda ci: (ci, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((c, h, w), x.dtype),
+            interpret=interpret,
+        )(xi, yi)
+
+    return jax.vmap(one_image)(x, y)

@@ -1,0 +1,147 @@
+"""L1 Pallas kernels: QNN-style int8 GEMM and conv2d.
+
+The paper's "8-bit QNN" operators (TVM's QNN dialect, NCHW layout) are the
+de-facto-standard quantization baseline in Figs 6–8.  Arithmetic: int8
+operands, int32 accumulation, optional affine requantization back to int8.
+
+The cache-bound significance is purely the 4× operand-size reduction
+(d = 1 byte per MAC read in eq. 5); the schedule shape is identical to the
+float32 kernels so measured differences isolate the data-volume effect —
+exactly how the paper frames the comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import GemmSchedule
+from .conv2d import ConvSchedule, padded_geometry
+
+
+def _qnn_gemm_kernel(x_ref, w_ref, o_ref):
+    """int8 x int8 -> int32 tile with the k grid axis as accumulator walk."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def qnn_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    schedule: GemmSchedule = GemmSchedule(),
+    interpret: bool = True,
+) -> jax.Array:
+    """int8 GEMM ``(M,K) @ (K,N) -> int32 (M,N)``."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    s = schedule.clamp(m, n, k)
+    if not s.divides(m, n, k):
+        raise ValueError(f"schedule {s} does not divide problem ({m},{n},{k})")
+    return pl.pallas_call(
+        _qnn_gemm_kernel,
+        grid=(m // s.bm, n // s.bn, k // s.bk),
+        in_specs=[
+            pl.BlockSpec((s.bm, s.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((s.bk, s.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((s.bm, s.bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _requant_kernel(acc_ref, o_ref, *, scale: float, zp: int):
+    """Affine requantization: int32 -> int8 with round + clip."""
+    v = acc_ref[...].astype(jnp.float32) * scale + zp
+    o_ref[...] = jnp.clip(jnp.round(v), -128, 127).astype(jnp.int8)
+
+
+def requantize(
+    acc: jax.Array,
+    scale: float,
+    zp: int = 0,
+    block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Requantize an int32 accumulator tensor (M, N) to int8."""
+    m, n = acc.shape
+    bm = min(block, m)
+    if m % bm:
+        raise ValueError(f"block={bm} does not divide M={m}")
+    kernel = functools.partial(_requant_kernel, scale=scale, zp=zp)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(acc)
+
+
+def _qnn_conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, wo: int, brow: int):
+    """int8 spatial-pack conv tile with int32 accumulation."""
+    r = pl.program_id(1)
+    row0 = r * brow * stride
+    span = (brow - 1) * stride + 1
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for dy in range(k):
+        rows = x_ref[:, pl.ds(row0 + dy, span), :]
+        rows = rows[:, ::stride, :].astype(jnp.int32)
+        for dx in range(k):
+            patch = rows[:, :, dx : dx + (wo - 1) * stride + 1 : stride]
+            tap = w_ref[:, :, dy, dx].astype(jnp.int32)
+            acc += jnp.einsum("oc,chw->ohw", tap, patch, preferred_element_type=jnp.int32)
+    o_ref[...] = acc
+
+
+def qnn_conv2d_nchw(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int,
+    pad: int,
+    schedule: ConvSchedule = ConvSchedule(),
+    interpret: bool = True,
+) -> jax.Array:
+    """int8 conv: x (B,cin,H,W) int8, w (cout,cin,k,k) int8 -> int32 NCHW."""
+    b, cin, h, wdt = x.shape
+    cout, cin2, k, k2 = w.shape
+    assert cin == cin2 and k == k2, (x.shape, w.shape)
+    s = schedule.clamp(cout, (h + 2 * pad - k) // stride + 1)
+    if cout % s.bco:
+        raise ValueError(f"bco={s.bco} does not divide cout={cout}")
+    ho, wo, ho_pad, extra = padded_geometry(h, wdt, k, stride, pad, s.brow)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad + extra), (pad, pad)))
+    hp, wp = xp.shape[2], xp.shape[3]
+    kernel = functools.partial(
+        _qnn_conv_kernel, k=k, stride=stride, wo=wo, brow=s.brow
+    )
+
+    def one_image(xi):
+        out = pl.pallas_call(
+            kernel,
+            grid=(cout // s.bco, ho_pad // s.brow),
+            in_specs=[
+                pl.BlockSpec((cin, hp, wp), lambda co, r: (0, 0, 0)),
+                pl.BlockSpec((s.bco, cin, k, k), lambda co, r: (co, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((s.bco, s.brow, wo), lambda co, r: (co, r, 0)),
+            out_shape=jax.ShapeDtypeStruct((cout, ho_pad, wo), jnp.int32),
+            interpret=interpret,
+        )(xi, w)
+        return out[:, :ho, :]
+
+    return jax.vmap(one_image)(xp)

@@ -1,0 +1,244 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each Pallas kernel (gemm, conv2d,
+bitpack, bitserial, qnn) is checked against the function here with
+``numpy.testing.assert_allclose`` in ``python/tests``.  They are written for
+clarity, not speed, and use only ``jax.numpy`` / ``jax.lax`` primitives.
+
+The bit-serial arithmetic follows the paper's Section V (and Cowan et al.,
+CGO'20):
+
+* **unipolar** — values are unsigned ``bits``-bit integers
+  ``v = sum_b 2^b * plane_b`` with ``plane_b in {0,1}``; a dot product over
+  packed planes is ``sum_{i,j} 2^{i+j} * popcount(a_i & w_j)``.
+* **bipolar** — each plane holds signs ``s_b in {-1,+1}`` encoded as bits
+  (bit=1 -> +1), ``v = sum_b 2^b * s_b``; per plane pair the dot is
+  ``K - 2*popcount(a_i ^ w_j)`` (matches minus mismatches).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+def gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """float32 GEMM oracle: ``(M,K) @ (K,N) -> (M,N)``."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense layer oracle: GEMM + bias + ReLU (the paper's dense operator)."""
+    return jnp.maximum(gemm(x, w) + b, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Convolution (NCHW, OIHW weights) — the paper's conv2d operator family
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """float32 conv oracle via lax.conv: x (B,C,H,W), w (O,I,kh,kw)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_relu(x, w, stride: int, padding: int):
+    return jnp.maximum(conv2d(x, w, stride, padding), 0.0)
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """IM2COL oracle: x (B,C,H,W) -> (B, ho*wo, C*kh*kw).
+
+    Column order is (c, dy, dx) to match the kernel implementation.
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = xp[:, :, dy : dy + ho * stride : stride, dx : dx + wo * stride : stride]
+            cols.append(patch.reshape(b, c, ho * wo))
+    # (B, C, P) per (dy,dx) -> stack (B, C, P, kh*kw) -> (B, P, C*kh*kw)
+    stacked = jnp.stack(cols, axis=-1)
+    return stacked.transpose(0, 2, 1, 3).reshape(b, ho * wo, c * kh * kw)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+LANES = 32  # bits per packed word (uint32 planes)
+
+
+def pack_unipolar(v: jax.Array, bits: int) -> jax.Array:
+    """Pack unsigned ints ``v`` (.., K) with values < 2**bits into uint32
+    bit-planes of shape (bits, .., K // 32).  K must be a multiple of 32."""
+    assert v.shape[-1] % LANES == 0, "K must be a multiple of 32"
+    v = v.astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32)
+    planes = []
+    for b in range(bits):
+        bitvals = (v >> jnp.uint32(b)) & jnp.uint32(1)
+        grouped = bitvals.reshape(*v.shape[:-1], v.shape[-1] // LANES, LANES)
+        planes.append(jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32))
+    return jnp.stack(planes, axis=0)
+
+
+def pack_bipolar(sign_planes: jax.Array) -> jax.Array:
+    """Pack bipolar sign planes (bits, .., K) with entries in {-1,+1} into
+    uint32 words (bits, .., K//32); bit=1 encodes +1."""
+    assert sign_planes.shape[-1] % LANES == 0
+    signs01 = ((sign_planes + 1) // 2).astype(jnp.uint32)  # -1 -> 0, +1 -> 1
+    weights = jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32)
+    grouped = signs01.reshape(
+        *sign_planes.shape[:-1], sign_planes.shape[-1] // LANES, LANES
+    )
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_unipolar(planes: jax.Array) -> jax.Array:
+    """Inverse of pack_unipolar -> int32 values (.., K)."""
+    bits = planes.shape[0]
+    shifts = jnp.arange(LANES, dtype=jnp.uint32)
+    vals = jnp.zeros((*planes.shape[1:-1], planes.shape[-1] * LANES), jnp.int32)
+    for b in range(bits):
+        bitlanes = (planes[b][..., None] >> shifts) & jnp.uint32(1)
+        flat = bitlanes.reshape(*planes.shape[1:-1], planes.shape[-1] * LANES)
+        vals = vals + (flat.astype(jnp.int32) << b)
+    return vals
+
+
+def bipolar_values(sign_planes: jax.Array) -> jax.Array:
+    """Materialize integer values from sign planes (bits, .., K) in {-1,+1}."""
+    bits = sign_planes.shape[0]
+    scale = (2 ** jnp.arange(bits, dtype=jnp.int32)).reshape(
+        (bits,) + (1,) * (sign_planes.ndim - 1)
+    )
+    return jnp.sum(sign_planes.astype(jnp.int32) * scale, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Bit-serial GEMM
+# ---------------------------------------------------------------------------
+
+
+def bitserial_gemm_unipolar(a_planes: jax.Array, w_planes: jax.Array) -> jax.Array:
+    """Oracle over packed planes: a (ba, M, Kw), w (bw, N, Kw) -> int32 (M,N)."""
+    ba, m, kw = a_planes.shape
+    bw, n, _ = w_planes.shape
+    out = jnp.zeros((m, n), jnp.int32)
+    for i in range(ba):
+        for j in range(bw):
+            ands = a_planes[i][:, None, :] & w_planes[j][None, :, :]
+            pc = jax.lax.population_count(ands).astype(jnp.int32).sum(-1)
+            out = out + (pc << (i + j))
+    return out
+
+
+def bitserial_gemm_bipolar(a_planes: jax.Array, w_planes: jax.Array, k: int) -> jax.Array:
+    """Bipolar oracle: dot per plane pair is K - 2*popcount(xor)."""
+    ba, m, kw = a_planes.shape
+    bw, n, _ = w_planes.shape
+    out = jnp.zeros((m, n), jnp.int32)
+    for i in range(ba):
+        for j in range(bw):
+            xors = a_planes[i][:, None, :] ^ w_planes[j][None, :, :]
+            pc = jax.lax.population_count(xors).astype(jnp.int32).sum(-1)
+            out = out + ((k - 2 * pc) << (i + j))
+    return out
+
+
+def bitserial_gemm_from_ints(a: jax.Array, w: jax.Array, abits: int, wbits: int) -> jax.Array:
+    """End-to-end unipolar oracle from integer operands (pack -> popcount)."""
+    ap = pack_unipolar(a, abits)
+    wp = pack_unipolar(w, wbits)
+    return bitserial_gemm_unipolar(ap, wp)
+
+
+# ---------------------------------------------------------------------------
+# QNN int8
+# ---------------------------------------------------------------------------
+
+
+def qnn_gemm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 GEMM oracle."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def qnn_gemm_requant(x, w, scale: float, zp: int):
+    """Requantized int8 GEMM: int32 accumulate -> scale -> clip to int8."""
+    acc = qnn_gemm(x, w).astype(jnp.float32) * scale + zp
+    return jnp.clip(jnp.round(acc), -128, 127).astype(jnp.int8)
+
+
+def qnn_conv2d(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """int8 conv oracle with int32 accumulation (NCHW/OIHW)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workload bookkeeping shared with the rust side (mirrors eq. (3)/(4))
+# ---------------------------------------------------------------------------
+
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+def conv_macs(b, cin, cout, h, w, k, stride, pad) -> int:
+    ho = conv_out_size(h, k, stride, pad)
+    wo = conv_out_size(w, k, stride, pad)
+    return b * ho * wo * cin * cout * k * k
+
+
+def gemm_macs(n: int) -> int:
+    return n * n * n
+
+
+def np_i32(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pooling + residual (ResNet glue operators)
+# ---------------------------------------------------------------------------
+
+
+def maxpool2d(x: jax.Array, k: int, stride: int, pad: int) -> jax.Array:
+    """Max-pool oracle via reduce_window (NCHW)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding=((0, 0), (0, 0), (pad, pad), (pad, pad)),
+    )
+
+
+def global_avgpool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(2, 3))
+
+
+def residual_add(x: jax.Array, y: jax.Array, relu: bool = True) -> jax.Array:
+    s = x + y
+    return jnp.maximum(s, 0.0) if relu else s

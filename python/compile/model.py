@@ -1,0 +1,196 @@
+"""L2: JAX operator graphs — the paper's "single-layer networks".
+
+The paper's AutoTVM methodology (§III-A) evaluates operators by wrapping each
+one in a single-layer network.  This module builds those networks as jax
+functions over the L1 Pallas kernels, ready for ``aot.py`` to lower to HLO
+text per (shape, dtype, schedule) variant.
+
+Every function here is shape-specialized at trace time (XLA is static), so
+``aot.py`` enumerates the workload grid from ``workloads.py`` and lowers one
+artifact per point.  Python never runs at serving time: the rust runtime
+executes the lowered HLO through PJRT.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitpack, bitserial, conv2d, gemm, qnn
+from .workloads import ConvLayer
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# float32 GEMM / dense networks (Tables IV/V, Figs 1 & 9)
+# ---------------------------------------------------------------------------
+
+
+def gemm_net(schedule: gemm.GemmSchedule) -> Callable[[Array, Array], tuple[Array]]:
+    """Single-operator GEMM network with a fixed schedule."""
+
+    def fwd(x: Array, w: Array) -> tuple[Array]:
+        return (gemm.gemm(x, w, schedule=schedule),)
+
+    return fwd
+
+
+def dense_net(schedule: gemm.GemmSchedule, relu: bool = True):
+    """Dense layer network: relu(x @ w + b)."""
+
+    def fwd(x: Array, w: Array, b: Array) -> tuple[Array]:
+        return (gemm.dense(x, w, b, schedule=schedule, relu=relu),)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# float32 convolution networks (Figs 2 & 3)
+# ---------------------------------------------------------------------------
+
+
+def conv_net(layer: ConvLayer, schedule: conv2d.ConvSchedule, relu: bool = False):
+    """Single conv layer network for one Table III row."""
+
+    def fwd(x: Array, w: Array) -> tuple[Array]:
+        return (
+            conv2d.conv2d_nchw(
+                x, w, stride=layer.stride, pad=layer.pad, schedule=schedule, relu=relu
+            ),
+        )
+
+    return fwd
+
+
+def conv_im2col_net(layer: ConvLayer, gemm_schedule: gemm.GemmSchedule):
+    """IM2COL + GEMM convolution (§III-C2's alternative algorithm).
+
+    The GEMM contraction dim is cin*k*k which is generally not
+    schedule-divisible, so the matmul uses a clamped schedule over the
+    column matrix; correctness is what matters for this variant.
+    """
+
+    def fwd(x: Array, w: Array) -> tuple[Array]:
+        cols = conv2d.im2col(x, layer.k, layer.stride, layer.pad)  # (B,P,CKK)
+        wmat = w.reshape(layer.cout, -1).T  # (CKK, cout); (c,dy,dx) col order
+        out = jnp.einsum("bpc,cn->bpn", cols, wmat)
+        b = x.shape[0]
+        return (
+            out.transpose(0, 2, 1).reshape(b, layer.cout, layer.ho, layer.wo),
+        )
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Quantized networks (Figs 4-8)
+# ---------------------------------------------------------------------------
+
+
+def qnn_gemm_net(schedule: gemm.GemmSchedule):
+    """int8 GEMM with int32 accumulate (QNN baseline for dense)."""
+
+    def fwd(x: Array, w: Array) -> tuple[Array]:
+        return (qnn.qnn_gemm(x, w, schedule=schedule),)
+
+    return fwd
+
+
+def qnn_conv_net(layer: ConvLayer, schedule: conv2d.ConvSchedule):
+    """int8 conv with int32 accumulate (the paper's 8-bit QNN operator)."""
+
+    def fwd(x: Array, w: Array) -> tuple[Array]:
+        return (
+            qnn.qnn_conv2d_nchw(x, w, stride=layer.stride, pad=layer.pad, schedule=schedule),
+        )
+
+    return fwd
+
+
+def bitserial_gemm_net(
+    k: int,
+    abits: int,
+    wbits: int,
+    unipolar: bool,
+    schedule: bitserial.BitserialSchedule,
+):
+    """Bit-serial GEMM network with *runtime activation packing*.
+
+    Inputs: activations as (M, K) int32 (unipolar) and *pre-packed* weights
+    (wbits, N, K/32) uint32 — mirroring the paper: "weights can be
+    pre-packed ... the activations require bit-packing just before the
+    calculation".  The packing kernel is part of the measured graph.
+    """
+
+    def fwd(a: Array, w_packed: Array) -> tuple[Array]:
+        a_planes = bitpack.pack_unipolar(a, abits)
+        return (
+            bitserial.bitserial_gemm(
+                a_planes, w_packed, k=k, unipolar=unipolar, schedule=schedule
+            ),
+        )
+
+    return fwd
+
+
+def bitserial_gemm_prepacked_net(
+    k: int, unipolar: bool, schedule: bitserial.BitserialSchedule
+):
+    """Bit-serial GEMM over already-packed planes (isolates packing cost)."""
+
+    def fwd(a_planes: Array, w_planes: Array) -> tuple[Array]:
+        return (
+            bitserial.bitserial_gemm(
+                a_planes, w_planes, k=k, unipolar=unipolar, schedule=schedule
+            ),
+        )
+
+    return fwd
+
+
+def bitserial_conv_net(
+    layer: ConvLayer,
+    abits: int,
+    wbits: int,
+    unipolar: bool,
+    schedule: bitserial.BitserialSchedule,
+):
+    """Bit-serial convolution via NHWC im2col + packed GEMM.
+
+    The paper notes the bit-serial conv uses NHWC layout, whose interaction
+    with bit-packing hurts small images (Fig 6, layer C11).  We reproduce
+    that structure: im2col produces (P, cin*k*k) rows — NHWC-style
+    channel-innermost columns — which are then runtime-packed along the
+    reduction axis and contracted bit-serially.
+
+    The contraction length cin*k*k must be padded to a multiple of 32 for
+    packing; zero padding is exact for unipolar (zeros contribute nothing).
+    """
+    ckk = layer.cin * layer.k * layer.k
+    kpad = (ckk + 31) // 32 * 32
+
+    def fwd(x: Array, w_packed: Array) -> tuple[Array]:
+        cols = conv2d.im2col(x, layer.k, layer.stride, layer.pad)  # f32 (B,P,CKK)
+        b, p, _ = cols.shape
+        cols_i = cols.astype(jnp.int32).reshape(b * p, ckk)
+        cols_i = jnp.pad(cols_i, ((0, 0), (0, kpad - ckk)))
+        # pad rows to the packing/gemm block grid
+        m = cols_i.shape[0]
+        mpad = (m + 63) // 64 * 64
+        cols_i = jnp.pad(cols_i, ((0, mpad - m), (0, 0)))
+        a_planes = bitpack.pack_unipolar(cols_i, abits)
+        acc = bitserial.bitserial_gemm(
+            a_planes, w_packed, k=kpad, unipolar=unipolar, schedule=schedule
+        )[:m]
+        out = acc.reshape(b, p, layer.cout).transpose(0, 2, 1)
+        return (out.reshape(b, layer.cout, layer.ho, layer.wo),)
+
+    return fwd
+
+
+def pack_weights_unipolar(w: Array, wbits: int) -> Array:
+    """Offline weight packing helper (not part of the runtime graph)."""
+    return bitpack.pack_unipolar(w, wbits)

@@ -1,0 +1,111 @@
+"""Shared workload definitions — the paper's Table III and GEMM sweeps.
+
+This is the single python-side source of truth for the evaluated workloads;
+``aot.py`` embeds it into ``artifacts/manifest.json`` so the rust coordinator
+uses identical geometry (rust re-derives MACs and cross-checks, see
+``operators::conv`` tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    """One ResNet-18 convolution layer (paper Table III)."""
+
+    name: str
+    b: int
+    cin: int
+    cout: int
+    h: int
+    w: int
+    k: int
+    stride: int
+    pad: int
+
+    @property
+    def ho(self) -> int:
+        """Real tensor output height (standard conv arithmetic)."""
+        return (self.h + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def wo(self) -> int:
+        return (self.w + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def ho_eq3(self) -> int:
+        """Paper eq. (3): h_out = (h_in + 2p)/s — *without* the kernel-extent
+        term.  Table III's MAC column is computed with this (verified: C2 =
+        58*58*64*64*9 = 124,010,496), so all performance numbers in the paper
+        use it; we keep it for MAC accounting and use ``ho`` for tensors."""
+        return (self.h + 2 * self.pad) // self.stride
+
+    @property
+    def wo_eq3(self) -> int:
+        return (self.w + 2 * self.pad) // self.stride
+
+    @property
+    def macs(self) -> int:
+        """Paper eq. (4) with eq. (3) output sizes — matches Table III."""
+        return (
+            self.b * self.ho_eq3 * self.wo_eq3 * self.cin * self.cout
+            * self.k * self.k
+        )
+
+    @property
+    def macs_exact(self) -> int:
+        """MACs actually executed by the real output geometry."""
+        return self.b * self.ho * self.wo * self.cin * self.cout * self.k * self.k
+
+
+# Paper Table III: ResNet-18 layers C2..C11 (C1 excluded: too shallow for
+# bit packing and quantization-sensitive, per §III-C2).
+RESNET18_LAYERS = [
+    ConvLayer("C2", 1, 64, 64, 56, 56, 3, 1, 1),
+    ConvLayer("C3", 1, 64, 128, 56, 56, 3, 2, 1),
+    ConvLayer("C4", 1, 64, 128, 56, 56, 1, 2, 0),
+    ConvLayer("C5", 1, 128, 128, 28, 28, 3, 1, 1),
+    ConvLayer("C6", 1, 128, 256, 28, 28, 3, 2, 1),
+    ConvLayer("C7", 1, 128, 256, 28, 28, 1, 2, 0),
+    ConvLayer("C8", 1, 256, 256, 14, 14, 3, 1, 1),
+    ConvLayer("C9", 1, 256, 512, 14, 14, 3, 2, 1),
+    ConvLayer("C10", 1, 256, 512, 14, 14, 1, 2, 0),
+    ConvLayer("C11", 1, 512, 512, 7, 7, 3, 1, 1),
+]
+
+# Paper Table III column "MACs" — used as a cross-check in tests.
+PAPER_MACS = {
+    "C2": 124_010_496,
+    "C3": 62_005_248,
+    "C4": 6_422_528,
+    "C5": 132_710_400,
+    "C6": 66_355_200,
+    "C7": 6_422_528,
+    "C8": 150_994_944,
+    "C9": 75_497_472,
+    "C10": 6_422_528,
+    "C11": 191_102_976,
+}
+
+# GEMM sweep of Tables IV/V (AOT artifacts cover these; the native rust
+# operators extend the sweep to the finer Fig 1/9 grid).
+GEMM_SIZES = [32, 128, 256, 512, 1024]
+
+# Schedule variants emitted per GEMM size so the rust tuner has a real
+# artifact-backed measurement space (AutoTVM analog over codegen variants).
+GEMM_VARIANT_SIZES = [128, 256]
+GEMM_VARIANTS = [
+    (8, 8, 8),
+    (32, 32, 32),
+    (64, 64, 64),
+    (128, 128, 128),
+    (64, 128, 128),
+    (128, 64, 32),
+]
+
+# Bit-serial configurations (paper Figs 4-8): bits x {unipolar, bipolar}.
+BITSERIAL_BITS = [1, 2, 4, 8]
+BITSERIAL_GEMM_SIZES = [128, 256, 512]
+QNN_GEMM_SIZES = [128, 256, 512]

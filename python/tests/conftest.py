@@ -1,0 +1,6 @@
+"""Make `import compile.*` work regardless of pytest invocation directory."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

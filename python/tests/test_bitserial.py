@@ -1,0 +1,156 @@
+"""Bit-packing + bit-serial GEMM kernels: oracles, identities, properties."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_array_equal
+
+from compile.kernels import bitpack, bitserial, ref
+
+
+def rand_uint(shape, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << bits, size=shape).astype(np.int32)
+
+
+def rand_signs(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 2, size=shape) * 2 - 1).astype(np.int32)
+
+
+class TestPackUnipolar:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 8])
+    def test_roundtrip(self, bits):
+        v = rand_uint((16, 64), bits, seed=bits)
+        planes = bitpack.pack_unipolar(v, bits)
+        assert planes.shape == (bits, 16, 2)
+        assert planes.dtype == jnp.uint32
+        assert_array_equal(ref.unpack_unipolar(planes), v)
+
+    def test_matches_ref_pack(self):
+        v = rand_uint((8, 96), 3, seed=7)
+        assert_array_equal(bitpack.pack_unipolar(v, 3), ref.pack_unipolar(v, 3))
+
+    def test_bad_k_raises(self):
+        with pytest.raises(ValueError):
+            bitpack.pack_unipolar(np.zeros((4, 33), np.int32), 1)
+
+    def test_all_ones_packs_to_full_words(self):
+        v = np.full((4, 64), 1, np.int32)
+        planes = np.asarray(bitpack.pack_unipolar(v, 1))
+        assert np.all(planes == 0xFFFFFFFF)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bits=st.integers(1, 8),
+        rows=st.sampled_from([1, 2, 8]),
+        kw=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_roundtrip(self, bits, rows, kw, seed):
+        v = rand_uint((rows * 8, kw * 32), bits, seed)
+        planes = bitpack.pack_unipolar(v, bits, schedule=bitpack.PackSchedule(8))
+        assert_array_equal(ref.unpack_unipolar(planes), v)
+
+
+class TestPackBipolar:
+    def test_matches_ref(self):
+        s = rand_signs((2, 8, 64), seed=3)
+        assert_array_equal(bitpack.pack_bipolar(s), ref.pack_bipolar(s))
+
+    def test_all_plus_one(self):
+        s = np.ones((1, 4, 32), np.int32)
+        assert np.all(np.asarray(bitpack.pack_bipolar(s)) == 0xFFFFFFFF)
+
+    def test_all_minus_one(self):
+        s = -np.ones((1, 4, 32), np.int32)
+        assert np.all(np.asarray(bitpack.pack_bipolar(s)) == 0)
+
+
+class TestBitserialGemmUnipolar:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 8])
+    def test_vs_integer_matmul(self, bits):
+        m = n = 16
+        k = 64
+        a = rand_uint((m, k), bits, seed=bits)
+        w = rand_uint((n, k), bits, seed=bits + 100)
+        ap = bitpack.pack_unipolar(a, bits)
+        wp = bitpack.pack_unipolar(w, bits)
+        out = bitserial.bitserial_gemm(ap, wp, k=k, unipolar=True,
+                                       schedule=bitserial.BitserialSchedule(8, 8))
+        expect = a.astype(np.int64) @ w.T.astype(np.int64)
+        assert_array_equal(np.asarray(out, np.int64), expect)
+
+    def test_mixed_precision_a2_w1(self):
+        m, n, k = 8, 8, 32
+        a = rand_uint((m, k), 2, seed=1)
+        w = rand_uint((n, k), 1, seed=2)
+        out = bitserial.bitserial_gemm(
+            bitpack.pack_unipolar(a, 2), bitpack.pack_unipolar(w, 1), k=k,
+            unipolar=True, schedule=bitserial.BitserialSchedule(8, 8),
+        )
+        assert_array_equal(np.asarray(out), a @ w.T)
+
+    def test_matches_ref_oracle(self):
+        m, n, k = 16, 16, 96
+        a, w = rand_uint((m, k), 3, 5), rand_uint((n, k), 3, 6)
+        ap, wp = bitpack.pack_unipolar(a, 3), bitpack.pack_unipolar(w, 3)
+        out = bitserial.bitserial_gemm(ap, wp, k=k, unipolar=True,
+                                       schedule=bitserial.BitserialSchedule(16, 16))
+        assert_array_equal(np.asarray(out), np.asarray(ref.bitserial_gemm_unipolar(ap, wp)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        abits=st.integers(1, 4),
+        wbits=st.integers(1, 4),
+        kw=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_vs_matmul(self, abits, wbits, kw, seed):
+        m = n = 8
+        k = kw * 32
+        a = rand_uint((m, k), abits, seed)
+        w = rand_uint((n, k), wbits, seed + 1)
+        out = bitserial.bitserial_gemm(
+            bitpack.pack_unipolar(a, abits), bitpack.pack_unipolar(w, wbits),
+            k=k, unipolar=True, schedule=bitserial.BitserialSchedule(8, 8),
+        )
+        assert_array_equal(np.asarray(out, np.int64), a.astype(np.int64) @ w.T.astype(np.int64))
+
+
+class TestBitserialGemmBipolar:
+    def test_single_bit_hamming_identity(self):
+        # bipolar 1-bit dot == K - 2*hamming_distance
+        m = n = 8
+        k = 64
+        sa = rand_signs((1, m, k), 11)
+        sw = rand_signs((1, n, k), 12)
+        out = bitserial.bitserial_gemm(
+            bitpack.pack_bipolar(sa), bitpack.pack_bipolar(sw), k=k,
+            unipolar=False, schedule=bitserial.BitserialSchedule(8, 8),
+        )
+        va, vw = ref.bipolar_values(sa), ref.bipolar_values(sw)
+        assert_array_equal(np.asarray(out), va @ vw.T)
+
+    @pytest.mark.parametrize("bits", [1, 2, 4])
+    def test_multibit_vs_materialized_values(self, bits):
+        m = n = 16
+        k = 32
+        sa = rand_signs((bits, m, k), bits + 20)
+        sw = rand_signs((bits, n, k), bits + 30)
+        out = bitserial.bitserial_gemm(
+            bitpack.pack_bipolar(sa), bitpack.pack_bipolar(sw), k=k,
+            unipolar=False, schedule=bitserial.BitserialSchedule(8, 8),
+        )
+        va, vw = ref.bipolar_values(sa), ref.bipolar_values(sw)
+        assert_array_equal(np.asarray(out), va @ vw.T)
+
+    def test_matches_ref_oracle(self):
+        m, n, k = 8, 8, 64
+        sa, sw = rand_signs((2, m, k), 41), rand_signs((2, n, k), 42)
+        ap, wp = bitpack.pack_bipolar(sa), bitpack.pack_bipolar(sw)
+        out = bitserial.bitserial_gemm(ap, wp, k=k, unipolar=False,
+                                       schedule=bitserial.BitserialSchedule(8, 8))
+        assert_array_equal(np.asarray(out), np.asarray(ref.bitserial_gemm_bipolar(ap, wp, k)))

@@ -1,0 +1,119 @@
+"""Pallas conv2d spatial-pack + im2col kernels vs lax.conv oracle."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile import workloads
+from compile.kernels import conv2d, ref
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestConvGeometry:
+    @pytest.mark.parametrize("layer", workloads.RESNET18_LAYERS, ids=lambda l: l.name)
+    def test_macs_match_paper_table3(self, layer):
+        assert layer.macs == workloads.PAPER_MACS[layer.name]
+
+    def test_out_size_eq3(self):
+        # eq.(3) with floor semantics: 56 -> 28 at s=2,k=3,p=1
+        assert ref.conv_out_size(56, 3, 2, 1) == 28
+        assert ref.conv_out_size(56, 1, 2, 0) == 28
+        assert ref.conv_out_size(7, 3, 1, 1) == 7
+
+
+class TestConvSpatialPack:
+    @pytest.mark.parametrize(
+        "cin,cout,h,k,stride,pad",
+        [
+            (8, 16, 14, 3, 1, 1),
+            (8, 16, 14, 3, 2, 1),
+            (8, 16, 14, 1, 1, 0),
+            (8, 16, 14, 1, 2, 0),
+            (4, 8, 9, 3, 1, 1),  # odd size -> ho padding path
+            (4, 8, 8, 5, 1, 2),  # larger kernel
+            (3, 4, 12, 3, 3, 1),  # stride 3
+        ],
+    )
+    def test_vs_oracle(self, cin, cout, h, k, stride, pad):
+        x = rand((2, cin, h, h), 1)
+        w = rand((cout, cin, k, k), 2)
+        out = conv2d.conv2d_nchw(
+            x, w, stride, pad, schedule=conv2d.ConvSchedule(4, 2)
+        )
+        assert_allclose(out, ref.conv2d(x, w, stride, pad), rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bco,brow", [(4, 1), (8, 2), (16, 4), (16, 8)])
+    def test_schedule_grid(self, bco, brow):
+        x = rand((1, 8, 16, 16), 3)
+        w = rand((16, 8, 3, 3), 4)
+        out = conv2d.conv2d_nchw(x, w, 1, 1, schedule=conv2d.ConvSchedule(bco, brow))
+        assert_allclose(out, ref.conv2d(x, w, 1, 1), rtol=RTOL, atol=ATOL)
+
+    def test_relu_fused(self):
+        x = rand((1, 4, 8, 8), 5)
+        w = rand((8, 4, 3, 3), 6)
+        out = conv2d.conv2d_nchw(x, w, 1, 1, schedule=conv2d.ConvSchedule(4, 2), relu=True)
+        assert_allclose(out, ref.conv2d_relu(x, w, 1, 1), rtol=RTOL, atol=ATOL)
+        assert np.all(np.asarray(out) >= 0.0)
+
+    @pytest.mark.parametrize("lname", ["C4", "C8", "C11"])
+    def test_resnet_layers_small_subset(self, lname):
+        layer = next(l for l in workloads.RESNET18_LAYERS if l.name == lname)
+        x = rand((1, layer.cin, layer.h, layer.w), 7)
+        w = rand((layer.cout, layer.cin, layer.k, layer.k), 8)
+        out = conv2d.conv2d_nchw(
+            x, w, layer.stride, layer.pad, schedule=conv2d.TUNED_CONV_SCHEDULE
+        )
+        expect = ref.conv2d(x, w, layer.stride, layer.pad)
+        assert out.shape == (1, layer.cout, layer.ho, layer.wo)
+        assert_allclose(out, expect, rtol=RTOL, atol=ATOL * 10)
+
+    def test_bad_bco_raises(self):
+        x = rand((1, 4, 8, 8), 9)
+        w = rand((6, 4, 3, 3), 10)
+        with pytest.raises(ValueError):
+            conv2d.conv2d_nchw(x, w, 1, 1, schedule=conv2d.ConvSchedule(4, 2))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        cin=st.sampled_from([2, 4, 8]),
+        coutm=st.integers(1, 3),
+        h=st.integers(6, 18),
+        k=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_geometry(self, cin, coutm, h, k, stride, seed):
+        pad = k // 2
+        cout = 4 * coutm
+        x = rand((1, cin, h, h), seed)
+        w = rand((cout, cin, k, k), seed + 1)
+        out = conv2d.conv2d_nchw(x, w, stride, pad, schedule=conv2d.ConvSchedule(4, 2))
+        assert_allclose(out, ref.conv2d(x, w, stride, pad), rtol=RTOL, atol=ATOL * 10)
+
+
+class TestIm2col:
+    @pytest.mark.parametrize(
+        "k,stride,pad", [(3, 1, 1), (3, 2, 1), (1, 1, 0), (1, 2, 0), (5, 1, 2)]
+    )
+    def test_vs_oracle(self, k, stride, pad):
+        x = rand((2, 4, 12, 12), 11)
+        out = conv2d.im2col(x, k, stride, pad, brow=2)
+        assert_allclose(out, ref.im2col(x, k, k, stride, pad), rtol=RTOL, atol=ATOL)
+
+    def test_conv_via_im2col_matches_conv(self):
+        x = rand((1, 4, 10, 10), 12)
+        w = rand((8, 4, 3, 3), 13)
+        cols = np.asarray(conv2d.im2col(x, 3, 1, 1, brow=2))  # (1, P, 36)
+        wmat = w.reshape(8, -1).T
+        out = (cols[0] @ wmat).T.reshape(1, 8, 10, 10)
+        assert_allclose(out, ref.conv2d(x, w, 1, 1), rtol=RTOL, atol=ATOL * 10)

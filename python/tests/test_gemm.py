@@ -1,0 +1,106 @@
+"""Pallas GEMM/dense kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import gemm, ref
+
+RTOL = 2e-5
+ATOL = 1e-5
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestGemm:
+    @pytest.mark.parametrize("n", [8, 32, 64, 128])
+    def test_square_tuned(self, n):
+        x, w = rand((n, n), 1), rand((n, n), 2)
+        out = gemm.gemm(x, w, schedule=gemm.TUNED_SCHEDULE)
+        assert_allclose(out, ref.gemm(x, w), rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("n", [8, 32, 64])
+    def test_square_naive(self, n):
+        x, w = rand((n, n), 3), rand((n, n), 4)
+        out = gemm.gemm(x, w, schedule=gemm.NAIVE_SCHEDULE)
+        assert_allclose(out, ref.gemm(x, w), rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize(
+        "m,k,n", [(16, 32, 64), (64, 32, 16), (8, 128, 8), (128, 8, 32)]
+    )
+    def test_rectangular(self, m, k, n):
+        x, w = rand((m, k), 5), rand((k, n), 6)
+        out = gemm.gemm(x, w, schedule=gemm.GemmSchedule(8, 8, 8))
+        assert_allclose(out, ref.gemm(x, w), rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (32, 8, 16), (64, 64, 64)])
+    def test_schedule_grid(self, bm, bn, bk):
+        n = 64
+        x, w = rand((n, n), 7), rand((n, n), 8)
+        out = gemm.gemm(x, w, schedule=gemm.GemmSchedule(bm, bn, bk))
+        assert_allclose(out, ref.gemm(x, w), rtol=RTOL, atol=ATOL)
+
+    def test_non_dividing_schedule_raises(self):
+        x, w = rand((48, 48), 9), rand((48, 48), 10)
+        with pytest.raises(ValueError):
+            gemm.gemm(x, w, schedule=gemm.GemmSchedule(32, 32, 32))
+
+    def test_identity(self):
+        n = 32
+        x = rand((n, n), 11)
+        out = gemm.gemm(x, np.eye(n, dtype=np.float32), schedule=gemm.GemmSchedule(8, 8, 8))
+        assert_allclose(out, x, rtol=RTOL, atol=ATOL)
+
+    def test_zeros(self):
+        n = 32
+        out = gemm.gemm(
+            np.zeros((n, n), np.float32), rand((n, n), 12),
+            schedule=gemm.GemmSchedule(16, 16, 16),
+        )
+        assert np.all(np.asarray(out) == 0.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        bm=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, mi, ki, ni, bm, seed):
+        m, k, n = mi * bm, ki * bm, ni * bm
+        x, w = rand((m, k), seed), rand((k, n), seed + 1)
+        out = gemm.gemm(x, w, schedule=gemm.GemmSchedule(bm, bm, bm))
+        assert_allclose(out, ref.gemm(x, w), rtol=RTOL, atol=ATOL * 10)
+
+    def test_vmem_bytes_model(self):
+        s = gemm.GemmSchedule(128, 128, 128)
+        assert s.vmem_bytes() == 3 * 128 * 128 * 4
+
+
+class TestDense:
+    @pytest.mark.parametrize("n", [32, 64, 128])
+    def test_dense_relu(self, n):
+        x, w, b = rand((n, n), 20), rand((n, n), 21), rand((n,), 22)
+        out = gemm.dense(x, w, b, schedule=gemm.GemmSchedule(32, 32, 32))
+        assert_allclose(out, ref.dense(x, w, b), rtol=RTOL, atol=ATOL)
+
+    def test_dense_no_relu_matches_affine(self):
+        n = 64
+        x, w, b = rand((n, n), 23), rand((n, n), 24), rand((n,), 25)
+        out = gemm.dense(x, w, b, relu=False, schedule=gemm.GemmSchedule(32, 32, 32))
+        assert_allclose(out, ref.gemm(x, w) + b, rtol=RTOL, atol=ATOL)
+
+    def test_relu_clamps_negatives(self):
+        n = 32
+        x, w = rand((n, n), 26), rand((n, n), 27)
+        b = np.full((n,), -1e6, np.float32)
+        out = gemm.dense(x, w, b, schedule=gemm.GemmSchedule(16, 16, 16))
+        assert np.all(np.asarray(out) == 0.0)

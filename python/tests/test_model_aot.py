@@ -1,0 +1,118 @@
+"""L2 model graphs + AOT machinery: shapes, checksum protocol, lowering."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile import aot, model, workloads
+from compile.kernels import bitpack, bitserial, conv2d, gemm, ref
+
+
+class TestSplitMix:
+    def test_known_vector(self):
+        # SplitMix64(seed=0) first outputs — cross-checked against the rust
+        # implementation (util::rng tests use the same constants).
+        z = aot.splitmix64_stream(0, 3)
+        assert z[0] == np.uint64(0xE220A8397B1DCDAF)
+        assert z[1] == np.uint64(0x6E789E6AA1B965F4)
+        assert z[2] == np.uint64(0x06C45D188009454F)
+
+    def test_f32_range(self):
+        v = aot.gen_input(42, (1000,), "f32")
+        assert v.dtype == np.float32
+        assert v.min() >= -1.0 and v.max() < 1.0
+
+    def test_i8_range(self):
+        v = aot.gen_input(42, (1000,), "i8")
+        assert v.min() >= -7 and v.max() <= 7
+
+    def test_unipolar_range(self):
+        v = aot.gen_input(42, (1000,), "i32u3")
+        assert v.min() >= 0 and v.max() < 8
+
+    def test_deterministic(self):
+        a = aot.gen_input(7, (64, 64), "f32")
+        b = aot.gen_input(7, (64, 64), "f32")
+        assert_array_equal(a, b)
+
+
+class TestModelGraphs:
+    def test_gemm_net(self):
+        fn = model.gemm_net(gemm.GemmSchedule(16, 16, 16))
+        x = aot.gen_input(1, (32, 32), "f32")
+        w = aot.gen_input(2, (32, 32), "f32")
+        (out,) = fn(x, w)
+        assert_allclose(out, ref.gemm(x, w), rtol=2e-5, atol=1e-5)
+
+    def test_conv_net_matches_oracle(self):
+        layer = workloads.RESNET18_LAYERS[9]  # C11: 512x512x7x7
+        # shrink to keep the test fast but keep geometry class (k=3,s=1,p=1)
+        small = workloads.ConvLayer("t", 1, 8, 8, 7, 7, 3, 1, 1)
+        fn = model.conv_net(small, conv2d.ConvSchedule(4, 1))
+        x = aot.gen_input(3, (1, 8, 7, 7), "f32")
+        w = aot.gen_input(4, (8, 8, 3, 3), "f32")
+        (out,) = fn(x, w)
+        assert_allclose(out, ref.conv2d(x, w, 1, 1), rtol=2e-4, atol=2e-4)
+        assert layer.macs == workloads.PAPER_MACS["C11"]
+
+    def test_conv_im2col_net_matches_direct(self):
+        small = workloads.ConvLayer("t", 1, 4, 8, 8, 8, 3, 1, 1)
+        fn = model.conv_im2col_net(small, gemm.GemmSchedule(16, 16, 16))
+        x = aot.gen_input(5, (1, 4, 8, 8), "f32")
+        w = aot.gen_input(6, (8, 4, 3, 3), "f32")
+        (out,) = fn(x, w)
+        assert_allclose(out, ref.conv2d(x, w, 1, 1), rtol=2e-4, atol=2e-4)
+
+    def test_bitserial_net_runtime_pack(self):
+        k = 64
+        fn = model.bitserial_gemm_net(k, 2, 2, True, bitserial.BitserialSchedule(8, 8))
+        a = aot.gen_input(7, (16, k), "i32u2")
+        w = aot.gen_input(8, (16, k), "i32u2")
+        wp = bitpack.pack_unipolar(w, 2)
+        (out,) = fn(a, wp)
+        assert_array_equal(
+            np.asarray(out, np.int64),
+            np.asarray(a, np.int64) @ np.asarray(w, np.int64).T,
+        )
+
+    def test_bitserial_conv_net_matches_int_conv(self):
+        layer = workloads.ConvLayer("t", 1, 4, 8, 8, 8, 3, 1, 1)
+        bits = 2
+        fn = model.bitserial_conv_net(layer, bits, bits, True,
+                                      bitserial.BitserialSchedule(64, 8))
+        x = aot.gen_input(9, (1, 4, 8, 8), f"i32u{bits}")
+        wfull = aot.gen_input(10, (8, 4 * 9), f"i32u{bits}")
+        ckk, kpad = 36, 64
+        wpad = np.pad(np.asarray(wfull), ((0, 0), (0, kpad - ckk)))
+        wp = bitpack.pack_unipolar(wpad, bits)
+        (out,) = fn(x, wp)
+        # oracle: integer conv with the same (c, dy, dx) weight layout
+        w4 = np.asarray(wfull).reshape(8, 4, 3, 3)
+        expect = ref.qnn_conv2d(
+            np.asarray(x, np.int8), w4.astype(np.int8), 1, 1
+        )
+        assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+class TestAotCatalog:
+    def test_catalog_names_unique(self):
+        arts = aot.catalog()
+        names = [a.name for a in arts]
+        assert len(names) == len(set(names))
+
+    def test_catalog_covers_paper_experiments(self):
+        kinds = {a.meta["kind"] for a in aot.catalog()}
+        assert {
+            "gemm", "gemm_variant", "dense", "conv", "conv_im2col",
+            "qnn_gemm", "qnn_conv", "bitserial_gemm", "bitserial_conv",
+        } <= kinds
+
+    def test_quick_catalog_is_small(self):
+        assert len(aot.catalog(quick=True)) <= 6
+
+    def test_lower_and_execute_quick_artifact(self, tmp_path):
+        art = aot.catalog(quick=True)[0]
+        entry = art.build(tmp_path, seed_base=123, execute=True)
+        hlo = (tmp_path / entry["file"]).read_text()
+        assert "HloModule" in hlo
+        assert entry["outputs"][0]["checksum"] != 0.0

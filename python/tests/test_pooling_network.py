@@ -1,0 +1,91 @@
+"""Pooling/residual kernels + the composed ResNet-18 graph vs oracles."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import network
+from compile.kernels import pooling, ref
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestMaxpool:
+    @pytest.mark.parametrize("k,stride,pad", [(2, 2, 0), (3, 2, 1), (3, 1, 1)])
+    def test_vs_oracle(self, k, stride, pad):
+        x = rand((2, 8, 12, 12), 1)
+        out = pooling.maxpool2d(x, k, stride, pad, bc=4)
+        assert_allclose(out, ref.maxpool2d(x, k, stride, pad), rtol=0, atol=0)
+
+    def test_resnet_stem_geometry(self):
+        # 56 -> 28 with k=3, s=2, p=1 (the stem maxpool at 112-input scale)
+        x = rand((1, 4, 56, 56), 2)
+        out = pooling.maxpool2d(x, 3, 2, 1, bc=4)
+        assert out.shape == (1, 4, 28, 28)
+
+    def test_negative_inputs_pad_correctly(self):
+        # all-negative input: -inf padding must not leak into outputs
+        x = -np.abs(rand((1, 4, 6, 6), 3)) - 1.0
+        out = np.asarray(pooling.maxpool2d(x, 3, 2, 1, bc=4))
+        assert np.all(np.isfinite(out))
+        assert_allclose(out, ref.maxpool2d(x, 3, 2, 1))
+
+
+class TestGlobalAvgPool:
+    def test_vs_oracle(self):
+        x = rand((3, 16, 7, 7), 4)
+        out = pooling.global_avgpool(x, bc=8)
+        assert_allclose(out, ref.global_avgpool(x), rtol=1e-6, atol=1e-6)
+
+    def test_constant_input(self):
+        x = np.full((1, 8, 5, 5), 2.5, np.float32)
+        out = np.asarray(pooling.global_avgpool(x, bc=8))
+        assert_allclose(out, 2.5)
+
+
+class TestResidual:
+    def test_vs_oracle_relu(self):
+        x, y = rand((2, 8, 6, 6), 5), rand((2, 8, 6, 6), 6)
+        out = pooling.residual_add(x, y, relu=True, bc=4)
+        assert_allclose(out, ref.residual_add(x, y, True))
+        assert np.all(np.asarray(out) >= 0)
+
+    def test_no_relu(self):
+        x, y = rand((1, 4, 4, 4), 7), rand((1, 4, 4, 4), 8)
+        out = pooling.residual_add(x, y, relu=False, bc=4)
+        assert_allclose(out, x + y)
+
+
+class TestResnet18Graph:
+    def test_block_structure_matches_torchvision(self):
+        blocks = network.resnet18_blocks()
+        assert len(blocks) == 8
+        assert blocks[0] == network.BlockSpec(64, 64, 1)
+        assert blocks[2] == network.BlockSpec(64, 128, 2)
+        assert [b.cout for b in blocks] == [64, 64, 128, 128, 256, 256, 512, 512]
+        # downsamples exactly at the three stage transitions
+        assert [b.has_downsample for b in blocks] == [
+            False, False, True, False, True, False, True, False,
+        ]
+
+    def test_forward_matches_reference_small_input(self):
+        # 32x32 input keeps interpret-mode runtime tractable while passing
+        # through every block (final feature map 1x1)
+        params = network.init_params(key=0, classes=10)
+        x = rand((1, 3, 32, 32), 9) * 0.5
+        logits = network.forward(x, params)
+        expect = network.reference_forward(x, params)
+        assert logits.shape == (1, 10)
+        assert_allclose(np.asarray(logits), np.asarray(expect), rtol=1e-3, atol=1e-3)
+
+    def test_forward_batch(self):
+        params = network.init_params(key=1, classes=4)
+        x = rand((2, 3, 32, 32), 10) * 0.5
+        logits = np.asarray(network.forward(x, params))
+        assert logits.shape == (2, 4)
+        # batch elements are independent
+        single = np.asarray(network.forward(x[:1], params))
+        assert_allclose(logits[0], single[0], rtol=1e-4, atol=1e-4)

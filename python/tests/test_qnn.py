@@ -1,0 +1,88 @@
+"""QNN int8 GEMM/conv kernels vs oracles."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_array_equal
+
+from compile import workloads
+from compile.kernels import gemm as gemm_mod
+from compile.kernels import conv2d as conv2d_mod
+from compile.kernels import qnn, ref
+
+
+def rand_i8(shape, seed=0, lo=-7, hi=8):
+    rng = np.random.default_rng(seed)
+    return rng.integers(lo, hi, size=shape).astype(np.int8)
+
+
+class TestQnnGemm:
+    @pytest.mark.parametrize("n", [8, 32, 64, 128])
+    def test_vs_oracle(self, n):
+        x, w = rand_i8((n, n), 1), rand_i8((n, n), 2)
+        out = qnn.qnn_gemm(x, w, schedule=gemm_mod.GemmSchedule(8, 8, 8))
+        assert_array_equal(np.asarray(out), np.asarray(ref.qnn_gemm(x, w)))
+
+    def test_full_range_no_overflow(self):
+        n = 64
+        x = rand_i8((n, n), 3, -128, 128)
+        w = rand_i8((n, n), 4, -128, 128)
+        out = qnn.qnn_gemm(x, w, schedule=gemm_mod.GemmSchedule(32, 32, 32))
+        expect = x.astype(np.int64) @ w.astype(np.int64)
+        assert np.abs(expect).max() < 2**31
+        assert_array_equal(np.asarray(out, np.int64), expect)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mi=st.integers(1, 3), ki=st.integers(1, 3), ni=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, mi, ki, ni, seed):
+        m, k, n = mi * 16, ki * 16, ni * 16
+        x, w = rand_i8((m, k), seed), rand_i8((k, n), seed + 1)
+        out = qnn.qnn_gemm(x, w, schedule=gemm_mod.GemmSchedule(16, 16, 16))
+        assert_array_equal(np.asarray(out), np.asarray(ref.qnn_gemm(x, w)))
+
+
+class TestRequantize:
+    def test_matches_oracle(self):
+        n = 32
+        x, w = rand_i8((n, n), 5), rand_i8((n, n), 6)
+        acc = np.asarray(ref.qnn_gemm(x, w), np.int32)
+        out = np.asarray(qnn.requantize(acc, scale=0.05, zp=3, block=16), np.int32)
+        expect = np.asarray(ref.qnn_gemm_requant(x, w, 0.05, 3), np.int32)
+        # XLA may fuse mul+add into an FMA in one lowering and not the other,
+        # flipping exact-half ties — allow 1 ULP on a small fraction.
+        diff = np.abs(out - expect)
+        assert diff.max() <= 1
+        assert (diff == 0).mean() > 0.98
+
+    def test_saturates(self):
+        acc = np.array([[10_000_000, -10_000_000]], np.int32)
+        out = np.asarray(qnn.requantize(acc, scale=1.0, zp=0, block=1))
+        assert out.tolist() == [[127, -128]]
+
+
+class TestQnnConv:
+    @pytest.mark.parametrize(
+        "cin,cout,h,k,stride,pad",
+        [(4, 8, 10, 3, 1, 1), (4, 8, 10, 3, 2, 1), (4, 8, 10, 1, 2, 0), (8, 16, 9, 3, 1, 1)],
+    )
+    def test_vs_oracle(self, cin, cout, h, k, stride, pad):
+        x = rand_i8((1, cin, h, h), 7)
+        w = rand_i8((cout, cin, k, k), 8)
+        out = qnn.qnn_conv2d_nchw(x, w, stride, pad, schedule=conv2d_mod.ConvSchedule(4, 2))
+        assert_array_equal(np.asarray(out), np.asarray(ref.qnn_conv2d(x, w, stride, pad)))
+
+    def test_resnet_c11_geometry(self):
+        layer = next(l for l in workloads.RESNET18_LAYERS if l.name == "C11")
+        x = rand_i8((1, layer.cin, layer.h, layer.w), 9)
+        w = rand_i8((layer.cout, layer.cin, layer.k, layer.k), 10)
+        out = qnn.qnn_conv2d_nchw(
+            x, w, layer.stride, layer.pad, schedule=conv2d_mod.TUNED_CONV_SCHEDULE
+        )
+        assert out.shape == (1, layer.cout, layer.ho, layer.wo)
+        assert_array_equal(
+            np.asarray(out), np.asarray(ref.qnn_conv2d(x, w, layer.stride, layer.pad))
+        )

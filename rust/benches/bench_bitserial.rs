@@ -1,0 +1,117 @@
+//! bench_bitserial — regenerates Figs 4 & 5 (bit-serial GEMM performance
+//! over size + eq. (5) required bandwidth) and measures the host-native
+//! popcount GEMM including the runtime packing step.
+//!
+//! Run: `cargo bench --bench bench_bitserial`
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::operators::bitserial;
+use cachebound::operators::Tensor;
+use cachebound::report;
+use cachebound::util::bench::{measure, report_line, BenchConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("== bench_bitserial: Figs 4 & 5 ==\n");
+
+    let mut pipeline = Pipeline::new(PipelineConfig {
+        tune_trials: 8,
+        skip_native: true,
+        ..Default::default()
+    });
+    for profile in ["a53", "a72"] {
+        let (f, csv4, csv5) = report::fig4_fig5(&mut pipeline, profile).unwrap();
+        println!("-- {profile}: bit-serial GEMM GOP/s by (bits, N) — bipolar --");
+        print!("{:>6}", "N\\bits");
+        for b in [1, 2, 4, 8] {
+            print!("{b:>10}");
+        }
+        println!();
+        for &n in &[128usize, 512, 2048, 8192] {
+            print!("{n:>6}");
+            for b in [1usize, 2, 4, 8] {
+                let g = f
+                    .points
+                    .iter()
+                    .find(|(bb, uni, nn, _, _)| *bb == b && !*uni && *nn == n)
+                    .map(|(_, _, _, g, _)| *g)
+                    .unwrap_or(f64::NAN);
+                print!("{g:>10.1}");
+            }
+            println!();
+        }
+        let max_bw = f.points.iter().map(|(.., bw)| *bw).fold(0.0, f64::max);
+        println!(
+            "  max required bandwidth {:.0} MiB/s vs L1 {:.0} MiB/s -> {}\n",
+            max_bw / (1 << 20) as f64,
+            f.l1_bw / (1 << 20) as f64,
+            if max_bw < f.l1_bw { "NOT cache-bound (paper Fig 5)" } else { "cache-bound!" }
+        );
+        csv4.write(format!("results/bench_bitserial_fig4_{profile}.csv")).unwrap();
+        csv5.write(format!("results/bench_bitserial_fig5_{profile}.csv")).unwrap();
+    }
+
+    // ablation: packing overhead (the paper's §VI open question — "the
+    // overhead of bit packing and access to packed data").  Compare the
+    // prepacked vs runtime-pack AOT artifacts through PJRT, and the native
+    // operator with packing inside vs outside the timed region.
+    println!("== ablation: activation-packing overhead ==");
+    if let Ok(mut reg) = cachebound::runtime::Registry::open("artifacts") {
+        let cfg = BenchConfig::quick();
+        let pairs = [
+            ("gemm_bs_uni_a2w2_n256_prepacked", "gemm_bs_uni_a2w2_n256_runtime_pack"),
+        ];
+        for (pre, rt) in pairs {
+            if reg.manifest.by_name(pre).is_some() && reg.manifest.by_name(rt).is_some() {
+                let mp = reg.measure(pre, &cfg).unwrap();
+                let mr = reg.measure(rt, &cfg).unwrap();
+                println!(
+                    "  PJRT 2-bit n256: prepacked {:.3} ms vs runtime-pack {:.3} ms ({:+.1}% packing overhead)",
+                    mp.seconds.median * 1e3,
+                    mr.seconds.median * 1e3,
+                    (mr.seconds.median / mp.seconds.median - 1.0) * 100.0
+                );
+            }
+        }
+    }
+    {
+        let cfg = BenchConfig::quick();
+        let (n, bits) = (256usize, 2usize);
+        let a = Tensor::rand_unipolar(&[n, n], bits as u32, 7);
+        let w = Tensor::rand_unipolar(&[n, n], bits as u32, 8);
+        let wp = bitserial::pack_unipolar(&w, bits);
+        let ap_pre = bitserial::pack_unipolar(&a, bits);
+        let m_pre = measure(&cfg, || bitserial::gemm_unipolar(&ap_pre, &wp));
+        let m_rt = measure(&cfg, || {
+            let ap = bitserial::pack_unipolar(&a, bits);
+            bitserial::gemm_unipolar(&ap, &wp)
+        });
+        println!(
+            "  native 2-bit n256: prepacked {:.3} ms vs runtime-pack {:.3} ms ({:+.1}% packing overhead)\n",
+            m_pre.seconds.median * 1e3,
+            m_rt.seconds.median * 1e3,
+            (m_rt.seconds.median / m_pre.seconds.median - 1.0) * 100.0
+        );
+    }
+
+    // host-native popcount GEMM incl. runtime activation packing
+    println!("== host-native bit-serial GEMM (packing + popcount) ==");
+    let cfg = BenchConfig::quick();
+    let sizes: &[usize] = if quick { &[128] } else { &[128, 256] };
+    for &n in sizes {
+        for bits in [1usize, 2, 4] {
+            let a = Tensor::rand_unipolar(&[n, n], bits as u32, 7);
+            let w = Tensor::rand_unipolar(&[n, n], bits as u32, 8);
+            let wp = bitserial::pack_unipolar(&w, bits); // weights pre-packed (§V-A)
+            let macs = (n as f64).powi(3);
+            let m = measure(&cfg, || {
+                let ap = bitserial::pack_unipolar(&a, bits); // runtime packing
+                bitserial::gemm_unipolar(&ap, &wp)
+            });
+            println!(
+                "{}",
+                report_line(&format!("bs uni {bits}b n{n} (pack+gemm)"), &m, Some(2.0 * macs))
+            );
+        }
+    }
+}

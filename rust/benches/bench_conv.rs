@@ -1,0 +1,59 @@
+//! bench_conv — regenerates Figs 2 & 3 (ResNet-18 conv layer times and
+//! GFLOP/s vs hardware bounds) plus host-native conv measurements.
+//!
+//! Run: `cargo bench --bench bench_conv`
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::operators::conv::{self, ConvSchedule};
+use cachebound::operators::workloads::layer_by_name;
+use cachebound::operators::Tensor;
+use cachebound::report;
+use cachebound::util::bench::{measure, report_line, BenchConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("== bench_conv: Figs 2 & 3 ==\n");
+
+    let mut pipeline = Pipeline::new(PipelineConfig {
+        tune_trials: if quick { 8 } else { 32 },
+        skip_native: true,
+        ..Default::default()
+    });
+    for profile in ["a53", "a72"] {
+        let (f, csv) = report::fig2_fig3(&mut pipeline, profile).unwrap();
+        println!("-- {profile}: layers sorted by simulated GFLOP/s (Fig 3 order) --");
+        for (name, gf) in &f.sorted_perf {
+            let i = f.layers.iter().position(|l| l == name).unwrap();
+            let b = &f.bounds[i];
+            println!(
+                "  {name:<5} {gf:7.2} GFLOP/s   t={:9.3} ms  (L1 line {:7.3} ms, compute {:7.3} ms)",
+                f.measured_s[i] * 1e3,
+                b.l1_read_s * 1e3,
+                b.compute_s * 1e3
+            );
+        }
+        csv.write(format!("results/bench_conv_{profile}.csv")).unwrap();
+        println!();
+    }
+
+    // host-native spatial-pack on a scaled-down C5-class layer
+    println!("== host-native conv (spatial-pack vs im2col vs naive) ==");
+    let cfg = BenchConfig::quick();
+    let l = layer_by_name("C5").unwrap();
+    let scale = if quick { 4 } else { 2 };
+    let (cin, cout) = (l.cin / scale, l.cout / scale);
+    let x = Tensor::rand_f32(&[1, cin, l.h, l.w], 1);
+    let w = Tensor::rand_f32(&[cout, cin, l.k, l.k], 2);
+    let macs = (l.ho() * l.wo() * cin * cout * l.k * l.k) as f64;
+    let m = measure(&cfg, || {
+        conv::spatial_pack(&x, &w, l.stride, l.pad, ConvSchedule::default_tuned())
+    });
+    println!("{}", report_line("spatial_pack C5/4", &m, Some(2.0 * macs)));
+    let m = measure(&cfg, || conv::im2col_conv(&x, &w, l.stride, l.pad));
+    println!("{}", report_line("im2col_conv  C5/4", &m, Some(2.0 * macs)));
+    if quick {
+        return;
+    }
+    let m = measure(&cfg, || conv::naive(&x, &w, l.stride, l.pad));
+    println!("{}", report_line("naive_conv   C5/4", &m, Some(2.0 * macs)));
+}

@@ -1,0 +1,71 @@
+//! bench_gemm — regenerates Tables IV & V (GEMM float32 GFLOP/s) plus the
+//! native-operator host measurements and the PJRT artifact timings.
+//!
+//! Run: `cargo bench --bench bench_gemm`
+//!
+//! Output: one block per profile with the paper's five sizes and columns
+//! (openBLAS-analog / naive / tuned / autotuned / theoretical peak), a
+//! host-native section, and (if `make artifacts` ran) the artifact section.
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::operators::gemm::{self, GemmSchedule};
+use cachebound::operators::Tensor;
+use cachebound::report;
+use cachebound::runtime::Registry;
+use cachebound::util::bench::{measure, report_line, BenchConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("== bench_gemm: Tables IV & V ==\n");
+
+    // --- simulated tables (the ARM substitution) ---------------------------
+    let mut pipeline = Pipeline::new(PipelineConfig {
+        tune_trials: if quick { 12 } else { 48 },
+        skip_native: true,
+        ..Default::default()
+    });
+    let sizes: &[usize] = if quick { &[32, 128, 256] } else { &[32, 128, 256, 512, 1024] };
+    for profile in ["a53", "a72"] {
+        let (t, csv, _) = report::gemm_table(&mut pipeline, profile, sizes).unwrap();
+        println!("{}", t.to_markdown());
+        csv.write(format!("results/bench_gemm_table_{profile}.csv")).unwrap();
+    }
+
+    // --- host-native operators (real wallclock on this machine) ------------
+    println!("== host-native GEMM (blocked vs tiled vs naive) ==");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let native_sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256] };
+    for &n in native_sizes {
+        let a = Tensor::rand_f32(&[n, n], 1);
+        let b = Tensor::rand_f32(&[n, n], 2);
+        let flops = 2.0 * (n as f64).powi(3);
+        let m = measure(&cfg, || gemm::blocked(&a, &b));
+        println!("{}", report_line(&format!("native blocked n{n}"), &m, Some(flops)));
+        let m = measure(&cfg, || gemm::tiled(&a, &b, GemmSchedule::new(64, 64, 64, 4)));
+        println!("{}", report_line(&format!("native tiled   n{n}"), &m, Some(flops)));
+        if n <= 128 {
+            let m = measure(&cfg, || gemm::naive(&a, &b));
+            println!("{}", report_line(&format!("native naive   n{n}"), &m, Some(flops)));
+        }
+    }
+
+    // --- PJRT artifacts (the Pallas codegen path) ---------------------------
+    println!("\n== PJRT artifacts (interpret-mode Pallas; structural timings) ==");
+    match Registry::open("artifacts") {
+        Ok(mut reg) => {
+            for name in ["gemm_f32_tuned_n128", "gemm_f32_tuned_n256", "gemm_f32_naive_n128"] {
+                if reg.manifest.by_name(name).is_none() {
+                    continue;
+                }
+                match reg.measure(name, &BenchConfig::quick()) {
+                    Ok(m) => {
+                        let macs = reg.manifest.by_name(name).unwrap().macs as f64;
+                        println!("{}", report_line(name, &m, Some(2.0 * macs)));
+                    }
+                    Err(e) => println!("{name}: error {e:#}"),
+                }
+            }
+        }
+        Err(e) => println!("(skipped: {e:#})"),
+    }
+}

@@ -1,0 +1,40 @@
+//! bench_membw — regenerates Tables I & II: the bandwidth survey.
+//!
+//! Prints the calibrated ARM numbers (the paper's measurements) next to a
+//! real RAMspeed-style sweep of this host, plus the host FMA peak vs the
+//! eq. (1) prediction for the ARM parts.
+//!
+//! Run: `cargo bench --bench bench_membw`
+
+use cachebound::hw::builtin_profiles;
+use cachebound::membench;
+use cachebound::report;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("== bench_membw: Tables I & II ==\n");
+
+    let host = if quick { None } else { Some(membench::bandwidth_sweep(&[])) };
+    for profile in builtin_profiles() {
+        let (t, csv) = report::bandwidth_table(&profile, host.as_deref());
+        println!("{}", t.to_markdown());
+        csv.write(format!("results/bench_membw_{}.csv", profile.cpu.name)).unwrap();
+    }
+
+    println!("== computational peak (paper §III-B1) ==");
+    for profile in builtin_profiles() {
+        let cpu = &profile.cpu;
+        println!(
+            "  {:<12} eq.(1) theoretical: {:5.1} GFLOP/s f32  ({:5.1} int8-OPs)",
+            cpu.name,
+            cpu.peak_flops(32) / 1e9,
+            cpu.peak_flops(8) / 1e9
+        );
+    }
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let r = membench::measure_peak(threads, if quick { 0.2 } else { 1.0 });
+    println!(
+        "  {:<12} measured FMA peak:  {:5.1} GFLOP/s ({} threads)",
+        "host", r.flops_per_sec / 1e9, threads
+    );
+}

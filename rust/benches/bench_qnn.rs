@@ -1,0 +1,71 @@
+//! bench_qnn — regenerates Figs 6, 7 & 8 (quantized conv speedups over
+//! float32, required bandwidth, absolute GFLOP/s) and measures host-native
+//! int8 operators against their float32 counterparts.
+//!
+//! Run: `cargo bench --bench bench_qnn`
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::operators::{conv, gemm, qnn, Tensor};
+use cachebound::report;
+use cachebound::util::bench::{measure, report_line, BenchConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("== bench_qnn: Figs 6, 7 & 8 ==\n");
+
+    let mut pipeline = Pipeline::new(PipelineConfig {
+        tune_trials: 8,
+        skip_native: true,
+        ..Default::default()
+    });
+    for profile in ["a53", "a72"] {
+        let (f, csv6, csv7, csv8) = report::fig6_fig7_fig8(&mut pipeline, profile).unwrap();
+        println!("-- {profile}: speedup over float32 (Fig 6) --");
+        println!(
+            "  {:<5} {:>6} {:>8} {:>8} {:>8} {:>8}",
+            "layer", "qnn8", "bs1", "bs2", "bs4", "bs8"
+        );
+        for r in &f.rows {
+            println!(
+                "  {:<5} {:>6.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+                r.layer,
+                r.speedup_qnn(),
+                r.speedup_bits(1, true).unwrap_or(f64::NAN),
+                r.speedup_bits(2, true).unwrap_or(f64::NAN),
+                r.speedup_bits(4, true).unwrap_or(f64::NAN),
+                r.speedup_bits(8, true).unwrap_or(f64::NAN),
+            );
+        }
+        csv6.write(format!("results/bench_qnn_fig6_{profile}.csv")).unwrap();
+        csv7.write(format!("results/bench_qnn_fig7_{profile}.csv")).unwrap();
+        csv8.write(format!("results/bench_qnn_fig8_{profile}.csv")).unwrap();
+        println!();
+    }
+
+    // host-native int8 vs f32
+    println!("== host-native int8 vs float32 ==");
+    let cfg = BenchConfig::quick();
+    let n = if quick { 96 } else { 192 };
+    let flops = 2.0 * (n as f64).powi(3);
+    let af = Tensor::<f32>::rand_f32(&[n, n], 1);
+    let bf = Tensor::<f32>::rand_f32(&[n, n], 2);
+    let m = measure(&cfg, || gemm::blocked(&af, &bf));
+    println!("{}", report_line(&format!("f32 blocked gemm n{n}"), &m, Some(flops)));
+    let ai = Tensor::<i8>::rand_i8(&[n, n], 1);
+    let bi = Tensor::<i8>::rand_i8(&[n, n], 2);
+    let m = measure(&cfg, || qnn::gemm_blocked(&ai, &bi));
+    println!("{}", report_line(&format!("i8  blocked gemm n{n}"), &m, Some(flops)));
+
+    let (cin, cout, h) = (16usize, 16usize, 28usize);
+    let xf = Tensor::<f32>::rand_f32(&[1, cin, h, h], 3);
+    let wf = Tensor::<f32>::rand_f32(&[cout, cin, 3, 3], 4);
+    let cmacs = (h * h * cin * cout * 9) as f64;
+    let m = measure(&cfg, || {
+        conv::spatial_pack(&xf, &wf, 1, 1, conv::ConvSchedule::default_tuned())
+    });
+    println!("{}", report_line("f32 spatial conv 16x16x28", &m, Some(2.0 * cmacs)));
+    let xi = Tensor::<i8>::rand_i8(&[1, cin, h, h], 3);
+    let wi = Tensor::<i8>::rand_i8(&[cout, cin, 3, 3], 4);
+    let m = measure(&cfg, || qnn::conv2d(&xi, &wi, 1, 1));
+    println!("{}", report_line("i8  conv 16x16x28", &m, Some(2.0 * cmacs)));
+}

@@ -1,0 +1,109 @@
+//! bench_sim — performance of the framework's own hot paths: the cache
+//! simulator replay rate, the analytic traffic model, the GBT cost model
+//! and the end-to-end Fig-1 pipeline.  These are the L3 §Perf targets in
+//! EXPERIMENTS.md (the coordinator must never be the bottleneck).
+//!
+//! Run: `cargo bench --bench bench_sim`
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::hw::profile_by_name;
+use cachebound::operators::gemm::GemmSchedule;
+use cachebound::sim::cache::{AccessKind, SetAssocCache};
+use cachebound::sim::hierarchy::Hierarchy;
+use cachebound::sim::trace;
+use cachebound::sim::traffic::TrafficModel;
+use cachebound::tuner::gbt::Gbt;
+use cachebound::util::bench::{measure, report_line, BenchConfig};
+use cachebound::util::rng::Xoshiro256;
+
+fn main() {
+    let cfg = BenchConfig::quick();
+    println!("== bench_sim: framework hot paths ==\n");
+    let cpu = profile_by_name("a53").unwrap().cpu;
+
+    // raw cache access rate
+    let mut cache = SetAssocCache::new(&cpu.l1);
+    let mut rng = Xoshiro256::new(1);
+    let addrs: Vec<u64> = (0..100_000).map(|_| rng.below(1 << 20)).collect();
+    let m = measure(&cfg, || {
+        let mut h = 0u64;
+        for &a in &addrs {
+            if cache.access(a, AccessKind::Read).hit {
+                h += 1;
+            }
+        }
+        h
+    });
+    println!(
+        "{}   ({:.1} M accesses/s)",
+        report_line("cache access x100k", &m, None),
+        0.1 / m.seconds.median
+    );
+
+    // full-hierarchy GEMM trace replay (N=96: ~1M accesses)
+    let m = measure(&cfg, || {
+        let mut h = Hierarchy::new(&cpu);
+        trace::replay_gemm(&mut h, 96, 96, 96, GemmSchedule::new(32, 32, 32, 4), 4);
+        h.counts.accesses
+    });
+    let accesses = {
+        let mut h = Hierarchy::new(&cpu);
+        trace::replay_gemm(&mut h, 96, 96, 96, GemmSchedule::new(32, 32, 32, 4), 4);
+        h.counts.accesses as f64
+    };
+    println!(
+        "{}   ({:.1} M accesses/s)",
+        report_line("gemm trace replay n96", &m, None),
+        accesses / m.seconds.median / 1e6
+    );
+
+    // analytic traffic model (must be ~ns: it runs inside tuner loops)
+    let tm = TrafficModel::new(&cpu);
+    let m = measure(&cfg, || tm.gemm(1024, 1024, 1024, GemmSchedule::new(64, 64, 64, 4), 4));
+    println!("{}", report_line("analytic traffic model", &m, None));
+
+    // full timing model
+    let m = measure(&cfg, || {
+        cachebound::sim::timing::simulate_gemm_time(
+            &cpu,
+            1024,
+            1024,
+            1024,
+            GemmSchedule::new(64, 64, 64, 4),
+            32,
+        )
+    });
+    println!("{}", report_line("simulate_gemm_time", &m, None));
+
+    // GBT fit + rank (the tuner's per-batch cost)
+    let mut rng = Xoshiro256::new(2);
+    let xs: Vec<Vec<f64>> = (0..256).map(|_| (0..8).map(|_| rng.f64()).collect()).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>() + rng.f64() * 0.1).collect();
+    let m = measure(&cfg, || Gbt::fit(&xs, &ys, 40, 3, 0.3));
+    println!("{}", report_line("gbt fit 256x8 x40 trees", &m, None));
+    let model = Gbt::fit(&xs, &ys, 40, 3, 0.3);
+    let cands: Vec<usize> = (0..xs.len()).collect();
+    let m = measure(&cfg, || {
+        let mut r = Xoshiro256::new(3);
+        model.rank(&cands, |i| xs[i].clone(), &mut r, 0.05)
+    });
+    println!("{}", report_line("gbt rank 256 candidates", &m, None));
+
+    // end-to-end fig1 pipeline (the report hot path)
+    let m = measure(
+        &BenchConfig {
+            samples: 3,
+            ..BenchConfig::quick()
+        },
+        || {
+            let mut p = Pipeline::new(PipelineConfig {
+                n_workers: 2,
+                tune_trials: 8,
+                skip_native: true,
+                native_max_n: 0,
+            });
+            cachebound::report::fig1(&mut p, "a53").unwrap().0.best_bound
+        },
+    );
+    println!("{}", report_line("fig1 end-to-end pipeline", &m, None));
+}

@@ -1,0 +1,106 @@
+//! Hardware bound lines (Figs 1–3).
+//!
+//! For a workload of `MACs` multiply-accumulates with `d`-byte operands the
+//! paper draws four lines:
+//!
+//! * compute: `t = 2·MACs / p_peak` (eq. 1/2)
+//! * L1/L2/RAM read: `t = d·MACs / bw_level` (one read per MAC, §IV-B)
+
+use crate::hw::{CpuSpec, MemLevel};
+
+/// The four bound times for one workload (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoundSet {
+    pub macs: u64,
+    pub compute_s: f64,
+    pub l1_read_s: f64,
+    pub l2_read_s: f64,
+    pub ram_read_s: f64,
+}
+
+impl BoundSet {
+    /// The minimum feasible execution time under all bounds.
+    pub fn floor_s(&self) -> f64 {
+        self.compute_s
+            .max(0.0)
+            .max(self.l1_read_s.min(self.l2_read_s).min(self.ram_read_s) * 0.0)
+            .max(self.compute_s)
+    }
+
+    /// Performance (FLOP/s) implied by a bound time.
+    pub fn perf_at(&self, t: f64) -> f64 {
+        2.0 * self.macs as f64 / t
+    }
+
+    /// The bound line for a specific level.
+    pub fn read_s(&self, level: MemLevel) -> f64 {
+        match level {
+            MemLevel::L1 => self.l1_read_s,
+            MemLevel::L2 => self.l2_read_s,
+            MemLevel::Ram => self.ram_read_s,
+        }
+    }
+}
+
+/// Bounds for an arbitrary MAC workload with `operand_bytes`-wide reads.
+pub fn workload_bounds(cpu: &CpuSpec, macs: u64, operand_bytes: f64, elem_bits: usize) -> BoundSet {
+    let flops = 2.0 * macs as f64;
+    let bytes = macs as f64 * operand_bytes;
+    BoundSet {
+        macs,
+        compute_s: flops / cpu.peak_flops(elem_bits),
+        l1_read_s: bytes / cpu.read_bw_bytes(MemLevel::L1),
+        l2_read_s: bytes / cpu.read_bw_bytes(MemLevel::L2),
+        ram_read_s: bytes / cpu.read_bw_bytes(MemLevel::Ram),
+    }
+}
+
+/// GEMM bounds for an N×N×N float32 problem — the Fig 1 lines.
+pub fn gemm_bounds(cpu: &CpuSpec, n: usize) -> BoundSet {
+    workload_bounds(cpu, (n as u64).pow(3), 4.0, 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    #[test]
+    fn fig1_l1_line_implies_7_5_gflops_on_a53() {
+        // L1-read bound performance on A53: 2·bw/4 = 7.53 GFLOP/s
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let b = gemm_bounds(&cpu, 512);
+        let perf = b.perf_at(b.l1_read_s);
+        assert!((perf - 7.53e9).abs() < 0.05e9, "{perf:.3e}");
+    }
+
+    #[test]
+    fn bounds_are_ordered() {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let b = gemm_bounds(&cpu, 256);
+        assert!(b.l1_read_s < b.l2_read_s);
+        assert!(b.l2_read_s < b.ram_read_s);
+        // on both parts compute is faster than even L1 reads (the paper's
+        // central observation: fp units outpace the caches)
+        assert!(b.compute_s < b.l1_read_s);
+    }
+
+    #[test]
+    fn bounds_scale_cubically() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let b1 = gemm_bounds(&cpu, 128);
+        let b2 = gemm_bounds(&cpu, 256);
+        assert!((b2.l1_read_s / b1.l1_read_s - 8.0).abs() < 1e-9);
+        assert!((b2.compute_s / b1.compute_s - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantized_bounds_shrink_with_operand_size() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let f32b = workload_bounds(&cpu, 1 << 24, 4.0, 32);
+        let i8b = workload_bounds(&cpu, 1 << 24, 1.0, 8);
+        assert!((f32b.l1_read_s / i8b.l1_read_s - 4.0).abs() < 1e-9);
+        // int8 also has 4x the SIMD lanes -> 4x lower compute bound
+        assert!((f32b.compute_s / i8b.compute_s - 4.0).abs() < 1e-9);
+    }
+}

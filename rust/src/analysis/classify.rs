@@ -1,0 +1,164 @@
+//! Boundedness classification + bound-line correlation (§IV-B, Fig 1).
+//!
+//! The paper argues GEMM is L1-cache-bound by observing measured times
+//! tracking the L1-read line in the log-log plot.  `correlate_bounds` makes
+//! that quantitative: Pearson correlation between `log(t_measured)` and
+//! `log(t_bound)` across a size sweep, plus the median ratio t/t_bound
+//! (≈1 and flat ⇒ that bound explains the data).
+
+use crate::hw::MemLevel;
+use crate::util::stats;
+
+use super::bounds::BoundSet;
+
+/// Which bound best explains a single measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundClass {
+    Compute,
+    CacheRead(MemLevel),
+    /// Slower than every bound by a wide margin (overhead-dominated).
+    Overhead,
+}
+
+impl BoundClass {
+    pub fn name(&self) -> String {
+        match self {
+            BoundClass::Compute => "compute".into(),
+            BoundClass::CacheRead(l) => format!("{}-read", l.name()),
+            BoundClass::Overhead => "overhead".into(),
+        }
+    }
+}
+
+/// Classify one measurement against its bound set.
+///
+/// A bound can only bind if the measurement does not beat it (no operator
+/// runs faster than a hardware limit; we allow 10% measurement noise).
+/// Among the bounds the measurement respects, the *largest* is the binding
+/// constraint; if the measurement exceeds even that by more than `slack`
+/// (default 2.0), no bound explains it — it is overhead-dominated (the
+/// paper's small-matrix regime).
+pub fn classify(measured_s: f64, b: &BoundSet, slack: f64) -> BoundClass {
+    let candidates = [
+        (b.compute_s, BoundClass::Compute),
+        (b.l1_read_s, BoundClass::CacheRead(MemLevel::L1)),
+        (b.l2_read_s, BoundClass::CacheRead(MemLevel::L2)),
+        (b.ram_read_s, BoundClass::CacheRead(MemLevel::Ram)),
+    ];
+    let mut best: Option<(f64, BoundClass)> = None;
+    for (t, class) in candidates {
+        if measured_s >= t * 0.9 {
+            match best {
+                Some((bt, _)) if bt >= t => {}
+                _ => best = Some((t, class)),
+            }
+        }
+    }
+    match best {
+        Some((t, class)) if measured_s <= t * slack => class,
+        _ => BoundClass::Overhead,
+    }
+}
+
+/// Correlation of a measured sweep against each bound line.
+#[derive(Clone, Debug)]
+pub struct CorrelationReport {
+    /// (bound name, Pearson r in log-log space, median t_measured/t_bound)
+    pub entries: Vec<(String, f64, f64)>,
+    /// The bound with ratio closest to 1 among high-correlation entries.
+    pub best: String,
+}
+
+/// Correlate measured times with each bound across a sweep.
+pub fn correlate_bounds(measured: &[f64], bound_sets: &[BoundSet]) -> CorrelationReport {
+    assert_eq!(measured.len(), bound_sets.len());
+    assert!(measured.len() >= 3, "need >= 3 points to correlate");
+    let lines: [(&str, Box<dyn Fn(&BoundSet) -> f64>); 4] = [
+        ("compute", Box::new(|b: &BoundSet| b.compute_s)),
+        ("L1-read", Box::new(|b: &BoundSet| b.l1_read_s)),
+        ("L2-read", Box::new(|b: &BoundSet| b.l2_read_s)),
+        ("RAM-read", Box::new(|b: &BoundSet| b.ram_read_s)),
+    ];
+    let mut entries = Vec::new();
+    for (name, f) in &lines {
+        let bounds: Vec<f64> = bound_sets.iter().map(|b| f(b)).collect();
+        let logm: Vec<f64> = measured.iter().map(|x| x.ln()).collect();
+        let logb: Vec<f64> = bounds.iter().map(|x| x.ln()).collect();
+        let r = stats::pearson(&logm, &logb);
+        let mut ratios: Vec<f64> = measured
+            .iter()
+            .zip(&bounds)
+            .map(|(m, b)| m / b)
+            .collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = stats::percentile_sorted(&ratios, 50.0);
+        entries.push((name.to_string(), r, med));
+    }
+    // best: among entries with r > 0.95, ratio closest to 1 from above
+    let best = entries
+        .iter()
+        .filter(|(_, r, ratio)| *r > 0.95 && *ratio >= 0.5)
+        .min_by(|a, b| {
+            (a.2 - 1.0)
+                .abs()
+                .partial_cmp(&(b.2 - 1.0).abs())
+                .unwrap()
+        })
+        .map(|(n, _, _)| n.clone())
+        .unwrap_or_else(|| "none".into());
+    CorrelationReport { entries, best }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bounds::gemm_bounds;
+    use crate::hw::profile_by_name;
+
+    #[test]
+    fn classify_l1_bound_measurement() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let b = gemm_bounds(&cpu, 512);
+        // measured at 1.4x the L1 line (paper's tuned regime)
+        let class = classify(b.l1_read_s * 1.4, &b, 2.0);
+        assert_eq!(class, BoundClass::CacheRead(MemLevel::L1));
+    }
+
+    #[test]
+    fn classify_compute_bound_measurement() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let b = gemm_bounds(&cpu, 512);
+        let class = classify(b.compute_s * 1.1, &b, 2.0);
+        assert_eq!(class, BoundClass::Compute);
+    }
+
+    #[test]
+    fn classify_overhead_when_far_beyond_all() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let b = gemm_bounds(&cpu, 32);
+        let class = classify(b.ram_read_s * 50.0, &b, 2.0);
+        assert_eq!(class, BoundClass::Overhead);
+    }
+
+    #[test]
+    fn correlation_identifies_l1_line() {
+        // synthetic "measured" data lying 1.3x above the L1 line — the
+        // paper's Fig 1 situation — must be attributed to L1-read.
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let ns = [100usize, 200, 400, 800];
+        let bounds: Vec<_> = ns.iter().map(|&n| gemm_bounds(&cpu, n)).collect();
+        let measured: Vec<f64> = bounds.iter().map(|b| b.l1_read_s * 1.3).collect();
+        let rep = correlate_bounds(&measured, &bounds);
+        assert_eq!(rep.best, "L1-read", "{:?}", rep.entries);
+    }
+
+    #[test]
+    fn correlation_identifies_compute_when_at_peak() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let ns = [100usize, 200, 400, 800];
+        let bounds: Vec<_> = ns.iter().map(|&n| gemm_bounds(&cpu, n)).collect();
+        let measured: Vec<f64> = bounds.iter().map(|b| b.compute_s * 1.05).collect();
+        let rep = correlate_bounds(&measured, &bounds);
+        assert_eq!(rep.best, "compute");
+    }
+}

@@ -1,0 +1,20 @@
+//! The cache-bound analytical model — the paper's core contribution (§IV-B).
+//!
+//! * [`bounds`] — the hardware bound lines of Figs 1–3: theoretical compute
+//!   time and the time to read `d·MACs` bytes from L1/L2/RAM.
+//! * [`required_bw`] — eq. (5): the bandwidth an operator would need to
+//!   sustain its measured performance under one-read-per-MAC (Figs 5 & 7).
+//! * [`classify`] — given a measured time and the bounds, decide which
+//!   resource the operator is bound by and how strongly measured times
+//!   correlate with each bound across a sweep (the quantitative version of
+//!   "execution time strongly correlates with the L1 cache boundary").
+
+pub mod bounds;
+pub mod classify;
+pub mod refined;
+pub mod required_bw;
+
+pub use bounds::{gemm_bounds, workload_bounds, BoundSet};
+pub use classify::{classify, correlate_bounds, BoundClass, CorrelationReport};
+pub use refined::{compare_conv, compare_gemm, packing_fraction, ModelComparison};
+pub use required_bw::{required_bandwidth, RequiredBw};

@@ -1,0 +1,96 @@
+//! Required bandwidth — paper eq. (5), Figs 5 & 7.
+//!
+//! Given a measured performance `p` (FLOP/s) and per-MAC operand width `d`
+//! bytes, the cache-bound model says sustaining `p` needs
+//!
+//! ```text
+//! bw_req = m·d / t = p·d / 2        (one read of d bytes per MAC)
+//! ```
+//!
+//! Comparing `bw_req` to the measured level bandwidths answers "could this
+//! operator be cache-bound?": float32 operators sit *at* the L1 line
+//! (bound); quantized operators sit far below it (not bound — §V-B/C).
+
+use crate::hw::{CpuSpec, MemLevel};
+
+/// eq. (5) evaluation for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct RequiredBw {
+    /// Measured performance in FLOP/s.
+    pub perf: f64,
+    /// Operand bytes per MAC (4 f32, 1 int8, bits/8 bit-serial).
+    pub d: f64,
+    /// Required bandwidth in bytes/s.
+    pub bw_req: f64,
+}
+
+/// Compute eq. (5).
+pub fn required_bandwidth(perf_flops: f64, d_bytes: f64) -> RequiredBw {
+    RequiredBw {
+        perf: perf_flops,
+        d: d_bytes,
+        bw_req: perf_flops * d_bytes / 2.0,
+    }
+}
+
+impl RequiredBw {
+    /// Fraction of a level's measured read bandwidth this would consume.
+    pub fn utilization(&self, cpu: &CpuSpec, level: MemLevel) -> f64 {
+        self.bw_req / cpu.read_bw_bytes(level)
+    }
+
+    /// Is the requirement satisfiable by the given level (≤ its bandwidth)?
+    pub fn feasible_at(&self, cpu: &CpuSpec, level: MemLevel) -> bool {
+        self.utilization(cpu, level) <= 1.0
+    }
+}
+
+/// Operand width for a bit-serial operator (d = bits/8), eq. (5) usage in
+/// Figs 5/7 where the paper plots per-bit-width requirements.
+pub fn bitserial_d(bits: u32) -> f64 {
+    bits as f64 / 8.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    #[test]
+    fn f32_at_l1_bound_uses_exactly_l1_bw() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let l1 = cpu.read_bw_bytes(MemLevel::L1);
+        // performance exactly at the L1-read bound: p = 2·bw/4
+        let p = 2.0 * l1 / 4.0;
+        let r = required_bandwidth(p, 4.0);
+        assert!((r.bw_req - l1).abs() < 1.0);
+        assert!((r.utilization(&cpu, MemLevel::L1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bitserial_requirement_far_below_l1() {
+        // Fig 5: even fast bit-serial GEMM needs less than L1 provides
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        // generous 100 GOP/s at 1 bit: d = 0.125 B/MAC
+        let r = required_bandwidth(100e9, bitserial_d(1));
+        assert!(r.feasible_at(&cpu, MemLevel::L1));
+        assert!(r.utilization(&cpu, MemLevel::L1) < 0.25);
+    }
+
+    #[test]
+    fn requirement_scales_linearly_with_bits() {
+        let r1 = required_bandwidth(10e9, bitserial_d(1));
+        let r4 = required_bandwidth(10e9, bitserial_d(4));
+        assert!((r4.bw_req / r1.bw_req - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_tables_iv_numbers_are_l1_infeasible_at_peak() {
+        // the peak 38.4 GFLOP/s would need 76.8 GB/s from L1 — 5x beyond
+        // the measured 14.4 GiB/s: the paper's explanation for the gap.
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let r = required_bandwidth(cpu.peak_flops(32), 4.0);
+        assert!(!r.feasible_at(&cpu, MemLevel::L1));
+        assert!(r.utilization(&cpu, MemLevel::L1) > 4.0);
+    }
+}

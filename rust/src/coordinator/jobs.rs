@@ -1,0 +1,296 @@
+//! Experiment job definitions.
+//!
+//! A [`Job`] is one self-contained measurement/evaluation unit.  CPU-pure
+//! jobs (`Sim*`, `Native*`, `Tune*`, `Membench`) may run on any worker
+//! thread; `Artifact*` jobs touch the PJRT client and are routed to the
+//! leader thread by the pool (the routing invariant is property-tested).
+
+use crate::hw::CpuSpec;
+use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::ConvLayer;
+
+/// What to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobSpec {
+    /// Analytic-simulator GEMM timing on a calibrated profile.
+    SimGemm {
+        cpu: CpuSpec,
+        n: usize,
+        schedule: GemmSchedule,
+        elem_bits: usize,
+    },
+    /// Analytic-simulator conv timing.
+    SimConv {
+        cpu: CpuSpec,
+        layer: ConvLayer,
+        schedule: ConvSchedule,
+        elem_bits: usize,
+    },
+    /// Analytic-simulator bit-serial GEMM timing.
+    SimBitserial {
+        cpu: CpuSpec,
+        n: usize,
+        abits: usize,
+        wbits: usize,
+        unipolar: bool,
+    },
+    /// Host-wallclock native GEMM timing.
+    NativeGemm {
+        n: usize,
+        schedule: GemmSchedule,
+        variant: NativeGemmVariant,
+    },
+    /// Tune a GEMM schedule on the simulator for a profile.
+    TuneSimGemm {
+        cpu: CpuSpec,
+        n: usize,
+        n_trials: usize,
+        use_gbt: bool,
+    },
+    /// Tune a conv schedule on the simulator.
+    TuneSimConv {
+        cpu: CpuSpec,
+        layer: ConvLayer,
+        n_trials: usize,
+        use_gbt: bool,
+    },
+    /// Validate an AOT artifact's numerics (leader-only).
+    ArtifactValidate { name: String },
+    /// Time an AOT artifact (leader-only).
+    ArtifactMeasure { name: String },
+}
+
+/// Which native GEMM implementation a `NativeGemm` job runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeGemmVariant {
+    Naive,
+    Tiled,
+    Blocked,
+}
+
+impl JobSpec {
+    /// Jobs that must run on the leader (PJRT client is not Send).
+    pub fn leader_only(&self) -> bool {
+        matches!(self, JobSpec::ArtifactValidate { .. } | JobSpec::ArtifactMeasure { .. })
+    }
+
+    /// Stable identifier used as the result key.
+    pub fn key(&self) -> String {
+        match self {
+            JobSpec::SimGemm { cpu, n, schedule, elem_bits } => format!(
+                "sim_gemm/{}/n{}/b{}x{}x{}u{}/e{}",
+                cpu.name, n, schedule.bm, schedule.bn, schedule.bk, schedule.unroll, elem_bits
+            ),
+            JobSpec::SimConv { cpu, layer, schedule, elem_bits } => format!(
+                "sim_conv/{}/{}/co{}r{}/e{}",
+                cpu.name, layer.name, schedule.bco, schedule.brow, elem_bits
+            ),
+            JobSpec::SimBitserial { cpu, n, abits, wbits, unipolar } => format!(
+                "sim_bs/{}/n{}/a{}w{}/{}",
+                cpu.name,
+                n,
+                abits,
+                wbits,
+                if *unipolar { "uni" } else { "bi" }
+            ),
+            JobSpec::NativeGemm { n, schedule, variant } => format!(
+                "native_gemm/{variant:?}/n{}/b{}x{}x{}u{}",
+                n, schedule.bm, schedule.bn, schedule.bk, schedule.unroll
+            ),
+            JobSpec::TuneSimGemm { cpu, n, n_trials, use_gbt } => {
+                format!("tune_gemm/{}/n{}/t{}/gbt{}", cpu.name, n, n_trials, use_gbt)
+            }
+            JobSpec::TuneSimConv { cpu, layer, n_trials, use_gbt } => {
+                format!("tune_conv/{}/{}/t{}/gbt{}", cpu.name, layer.name, n_trials, use_gbt)
+            }
+            JobSpec::ArtifactValidate { name } => format!("validate/{name}"),
+            JobSpec::ArtifactMeasure { name } => format!("measure/{name}"),
+        }
+    }
+}
+
+/// A queued job with its sequence number.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+}
+
+/// What a job produced.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    /// A timing in seconds (+ optional bound name from the simulator).
+    Seconds { secs: f64, bound: Option<String> },
+    /// Tuning outcome.
+    Tuned {
+        best_seconds: f64,
+        best_desc: String,
+        trials: usize,
+        space: usize,
+    },
+    /// Validation outcome.
+    Validated { passed: bool, detail: String },
+    /// Job failed.
+    Failed { error: String },
+}
+
+impl JobOutput {
+    pub fn seconds(&self) -> Option<f64> {
+        match self {
+            JobOutput::Seconds { secs, .. } => Some(*secs),
+            JobOutput::Tuned { best_seconds, .. } => Some(*best_seconds),
+            _ => None,
+        }
+    }
+
+    pub fn is_failure(&self) -> bool {
+        matches!(self, JobOutput::Failed { .. })
+    }
+}
+
+/// Execute a CPU-pure job (everything except `Artifact*`).
+pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
+    use crate::sim::timing;
+    match spec {
+        JobSpec::SimGemm { cpu, n, schedule, elem_bits } => {
+            let tb = timing::simulate_gemm_time(cpu, *n, *n, *n, *schedule, *elem_bits);
+            JobOutput::Seconds {
+                secs: tb.total_s,
+                bound: Some(tb.bound.name().to_string()),
+            }
+        }
+        JobSpec::SimConv { cpu, layer, schedule, elem_bits } => {
+            let tb = timing::simulate_conv_time(cpu, layer, *schedule, *elem_bits);
+            JobOutput::Seconds {
+                secs: tb.total_s,
+                bound: Some(tb.bound.name().to_string()),
+            }
+        }
+        JobSpec::SimBitserial { cpu, n, abits, wbits, unipolar } => {
+            let tb =
+                timing::simulate_bitserial_gemm_time(cpu, *n, *n, *n, *abits, *wbits, *unipolar);
+            JobOutput::Seconds {
+                secs: tb.total_s,
+                bound: Some(tb.bound.name().to_string()),
+            }
+        }
+        JobSpec::NativeGemm { n, schedule, variant } => {
+            let a = crate::operators::Tensor::rand_f32(&[*n, *n], 11);
+            let b = crate::operators::Tensor::rand_f32(&[*n, *n], 12);
+            let cfg = crate::util::bench::BenchConfig::quick();
+            let m = crate::util::bench::measure(&cfg, || match variant {
+                NativeGemmVariant::Naive => crate::operators::gemm::naive(&a, &b),
+                NativeGemmVariant::Tiled => crate::operators::gemm::tiled(&a, &b, *schedule),
+                NativeGemmVariant::Blocked => crate::operators::gemm::blocked(&a, &b),
+            });
+            JobOutput::Seconds {
+                secs: m.seconds.median,
+                bound: None,
+            }
+        }
+        JobSpec::TuneSimGemm { cpu, n, n_trials, use_gbt } => {
+            let space = crate::tuner::GemmSpace::new(cpu, *n, *n, *n);
+            let mut target = crate::tuner::SimGemmTarget::square(cpu, *n);
+            let kind = if *use_gbt {
+                crate::tuner::TunerKind::Gbt
+            } else {
+                crate::tuner::TunerKind::Random
+            };
+            match crate::tuner::tune(&crate::tuner::Tuner::new(kind, *n_trials), &space, &mut target)
+            {
+                Ok(res) => JobOutput::Tuned {
+                    best_seconds: res.best_seconds,
+                    best_desc: format!("{:?}", res.best_config),
+                    trials: res.trials.len(),
+                    space: res.space_size,
+                },
+                Err(e) => JobOutput::Failed { error: e.to_string() },
+            }
+        }
+        JobSpec::TuneSimConv { cpu, layer, n_trials, use_gbt } => {
+            let space = crate::tuner::ConvSpace::new(cpu, *layer);
+            let mut target = crate::tuner::SimConvTarget {
+                cpu: cpu.clone(),
+                layer: *layer,
+                elem_bits: 32,
+            };
+            let kind = if *use_gbt {
+                crate::tuner::TunerKind::Gbt
+            } else {
+                crate::tuner::TunerKind::Random
+            };
+            match crate::tuner::tune(&crate::tuner::Tuner::new(kind, *n_trials), &space, &mut target)
+            {
+                Ok(res) => JobOutput::Tuned {
+                    best_seconds: res.best_seconds,
+                    best_desc: format!("{:?}", res.best_config),
+                    trials: res.trials.len(),
+                    space: res.space_size,
+                },
+                Err(e) => JobOutput::Failed { error: e.to_string() },
+            }
+        }
+        JobSpec::ArtifactValidate { .. } | JobSpec::ArtifactMeasure { .. } => JobOutput::Failed {
+            error: "artifact jobs must run on the leader".into(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    #[test]
+    fn keys_are_unique_and_stable() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let a = JobSpec::SimGemm {
+            cpu: cpu.clone(),
+            n: 128,
+            schedule: GemmSchedule::new(64, 64, 64, 4),
+            elem_bits: 32,
+        };
+        let b = JobSpec::SimGemm {
+            cpu,
+            n: 256,
+            schedule: GemmSchedule::new(64, 64, 64, 4),
+            elem_bits: 32,
+        };
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.key(), a.clone().key());
+    }
+
+    #[test]
+    fn leader_routing_flag() {
+        let v = JobSpec::ArtifactValidate { name: "x".into() };
+        assert!(v.leader_only());
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let s = JobSpec::SimGemm {
+            cpu,
+            n: 64,
+            schedule: GemmSchedule::naive(),
+            elem_bits: 32,
+        };
+        assert!(!s.leader_only());
+    }
+
+    #[test]
+    fn cpu_job_produces_seconds() {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let out = run_cpu_job(&JobSpec::SimGemm {
+            cpu,
+            n: 128,
+            schedule: GemmSchedule::new(64, 64, 64, 4),
+            elem_bits: 32,
+        });
+        assert!(out.seconds().unwrap() > 0.0);
+        assert!(!out.is_failure());
+    }
+
+    #[test]
+    fn artifact_job_on_worker_fails_loudly() {
+        let out = run_cpu_job(&JobSpec::ArtifactValidate { name: "x".into() });
+        assert!(out.is_failure());
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 coordinator: experiment orchestration.
+//!
+//! The paper's methodology is a large grid of measurements (two boards ×
+//! {GEMM sweep, 10 conv layers} × {f32, int8, 8 bit-serial variants} ×
+//! {naive, tuned, blas} plus tuning runs).  The coordinator turns that grid
+//! into [`jobs`], runs CPU-pure jobs on a [`pool`] of worker threads
+//! (simulator evaluations, native-operator timings, tuning), keeps
+//! PJRT-bound jobs on the leader thread (the `xla` client is not `Send`),
+//! and collects everything into a [`results`] store that the [`report`]
+//! layer renders into the paper's tables and figures.
+
+pub mod jobs;
+pub mod pipeline;
+pub mod pool;
+pub mod results;
+pub mod server;
+
+pub use jobs::{Job, JobOutput, JobSpec};
+pub use pipeline::{Pipeline, PipelineConfig};
+pub use pool::WorkerPool;
+pub use results::{ResultKey, ResultStore, ResultValue};
+pub use server::{BatchPolicy, Request, Response, Server};

@@ -1,0 +1,293 @@
+//! The experiment pipeline: paper table/figure → job set → results.
+//!
+//! `Pipeline` owns the worker pool, the (optional) artifact registry and
+//! the result store, and exposes one method per paper experiment.  Each
+//! method is idempotent: results land in the store under stable keys and
+//! are reused by later calls (e.g. fig9 reuses the gemm-table sweeps).
+
+use anyhow::Result;
+
+use crate::hw::{profile_by_name, CpuSpec};
+use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::{self, ConvLayer};
+use crate::runtime::Registry;
+
+use super::jobs::{Job, JobSpec, NativeGemmVariant};
+use super::pool::WorkerPool;
+use super::results::ResultStore;
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub n_workers: usize,
+    /// Tuning trials per workload.
+    pub tune_trials: usize,
+    /// Skip host-wallclock native measurements (fast mode).
+    pub skip_native: bool,
+    /// Cap native GEMM sizes (naive native is O(N^3) scalar on the host).
+    pub native_max_n: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            n_workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            tune_trials: 64,
+            skip_native: false,
+            native_max_n: 256,
+        }
+    }
+}
+
+/// The tuned schedule the simulator sweeps use when tuning is skipped.
+pub fn default_tuned_schedule() -> GemmSchedule {
+    GemmSchedule::new(64, 64, 64, 4)
+}
+
+pub fn default_conv_schedule() -> ConvSchedule {
+    ConvSchedule::new(32, 4)
+}
+
+pub struct Pipeline {
+    pub config: PipelineConfig,
+    pub pool: WorkerPool,
+    pub store: ResultStore,
+    pub registry: Option<Registry>,
+}
+
+impl Pipeline {
+    pub fn new(config: PipelineConfig) -> Self {
+        Pipeline {
+            pool: WorkerPool::new(config.n_workers),
+            config,
+            store: ResultStore::new(),
+            registry: None,
+        }
+    }
+
+    /// Attach the AOT artifact registry (enables `Artifact*` jobs).
+    pub fn with_registry(mut self, registry: Registry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    fn run_jobs(&mut self, specs: Vec<JobSpec>) {
+        let jobs: Vec<Job> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| Job { id: i as u64, spec })
+            .collect();
+        let completed = self.pool.run(jobs, self.registry.as_mut());
+        self.store.ingest(&completed);
+    }
+
+    fn profile(&self, name: &str) -> Result<CpuSpec> {
+        Ok(profile_by_name(name)?.cpu)
+    }
+
+    /// Tables IV/V: the GEMM sweep for one profile — naive/tuned simulator
+    /// times plus (optionally) native host measurements.
+    pub fn gemm_table(&mut self, profile: &str, sizes: &[usize]) -> Result<()> {
+        let cpu = self.profile(profile)?;
+        let mut specs = Vec::new();
+        for &n in sizes {
+            specs.push(JobSpec::SimGemm {
+                cpu: cpu.clone(),
+                n,
+                schedule: GemmSchedule::naive(),
+                elem_bits: 32,
+            });
+            specs.push(JobSpec::SimGemm {
+                cpu: cpu.clone(),
+                n,
+                schedule: default_tuned_schedule(),
+                elem_bits: 32,
+            });
+            // tuned via the auto-tuner (the paper's actual methodology)
+            specs.push(JobSpec::TuneSimGemm {
+                cpu: cpu.clone(),
+                n,
+                n_trials: self.config.tune_trials,
+                use_gbt: true,
+            });
+            if !self.config.skip_native && n <= self.config.native_max_n {
+                for variant in [
+                    NativeGemmVariant::Naive,
+                    NativeGemmVariant::Tiled,
+                    NativeGemmVariant::Blocked,
+                ] {
+                    specs.push(JobSpec::NativeGemm {
+                        n,
+                        schedule: default_tuned_schedule(),
+                        variant,
+                    });
+                }
+            }
+        }
+        self.run_jobs(specs);
+        Ok(())
+    }
+
+    /// Figs 2/3: ResNet-18 conv layers for one profile, f32.
+    pub fn conv_layers(&mut self, profile: &str) -> Result<Vec<ConvLayer>> {
+        let cpu = self.profile(profile)?;
+        let layers = workloads::resnet18_layers();
+        let mut specs = Vec::new();
+        for l in &layers {
+            specs.push(JobSpec::SimConv {
+                cpu: cpu.clone(),
+                layer: *l,
+                schedule: default_conv_schedule(),
+                elem_bits: 32,
+            });
+            specs.push(JobSpec::TuneSimConv {
+                cpu: cpu.clone(),
+                layer: *l,
+                n_trials: self.config.tune_trials,
+                use_gbt: true,
+            });
+        }
+        self.run_jobs(specs);
+        Ok(layers)
+    }
+
+    /// Figs 6/7/8: quantized conv layers (QNN int8 + bit-serial 1..8).
+    pub fn quantized_conv(&mut self, profile: &str, bits: &[usize]) -> Result<()> {
+        let cpu = self.profile(profile)?;
+        let layers = workloads::resnet18_layers();
+        let mut specs = Vec::new();
+        for l in &layers {
+            // int8 QNN: same schedule, quarter operand width
+            specs.push(JobSpec::SimConv {
+                cpu: cpu.clone(),
+                layer: *l,
+                schedule: default_conv_schedule(),
+                elem_bits: 8,
+            });
+            // bit-serial via im2col'd GEMM geometry: M = ho*wo, N = cout,
+            // K = cin*k*k (NHWC packing, §V-C)
+            for &b in bits {
+                for unipolar in [true, false] {
+                    specs.push(JobSpec::SimBitserial {
+                        cpu: cpu.clone(),
+                        n: bitserial_equiv_n(l),
+                        abits: b,
+                        wbits: b,
+                        unipolar,
+                    });
+                }
+            }
+        }
+        self.run_jobs(specs);
+        Ok(())
+    }
+
+    /// Figs 4/5: bit-serial GEMM size sweep.
+    pub fn bitserial_gemm_sweep(
+        &mut self,
+        profile: &str,
+        sizes: &[usize],
+        bits: &[usize],
+    ) -> Result<()> {
+        let cpu = self.profile(profile)?;
+        let mut specs = Vec::new();
+        for &n in sizes {
+            for &b in bits {
+                for unipolar in [true, false] {
+                    specs.push(JobSpec::SimBitserial {
+                        cpu: cpu.clone(),
+                        n,
+                        abits: b,
+                        wbits: b,
+                        unipolar,
+                    });
+                }
+            }
+        }
+        self.run_jobs(specs);
+        Ok(())
+    }
+
+    /// Validate every artifact in the manifest through PJRT.
+    pub fn validate_artifacts(&mut self) -> Result<Vec<(String, bool)>> {
+        let names = match &self.registry {
+            Some(r) => r.names(None),
+            None => return Ok(Vec::new()),
+        };
+        let specs: Vec<JobSpec> = names
+            .iter()
+            .map(|n| JobSpec::ArtifactValidate { name: n.clone() })
+            .collect();
+        self.run_jobs(specs);
+        Ok(names
+            .into_iter()
+            .map(|n| {
+                let passed = self
+                    .store
+                    .get(&format!("validate/{n}"))
+                    .and_then(|v| v.passed)
+                    .unwrap_or(false);
+                (n, passed)
+            })
+            .collect())
+    }
+}
+
+/// The equivalent square-GEMM size for a conv layer's bit-serial im2col
+/// contraction (geometric mean of M=ho·wo, N=cout, K=cin·k²).
+pub fn bitserial_equiv_n(l: &ConvLayer) -> usize {
+    let m = (l.ho() * l.wo()) as f64;
+    let n = l.cout as f64;
+    let k = (l.cin * l.k * l.k) as f64;
+    (m * n * k).powf(1.0 / 3.0).round() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config() -> PipelineConfig {
+        PipelineConfig {
+            n_workers: 2,
+            tune_trials: 8,
+            skip_native: true,
+            native_max_n: 0,
+        }
+    }
+
+    #[test]
+    fn gemm_table_populates_store() {
+        let mut p = Pipeline::new(quick_config());
+        p.gemm_table("a53", &[64, 128]).unwrap();
+        // naive + tuned sim results for both sizes
+        assert!(p.store.seconds("sim_gemm/cortex-a53/n64/b8x8x8u1/e32").is_some());
+        assert!(p.store.seconds("sim_gemm/cortex-a53/n128/b64x64x64u4/e32").is_some());
+        assert!(!p.store.by_prefix("tune_gemm/").is_empty());
+    }
+
+    #[test]
+    fn conv_layers_cover_table_iii() {
+        let mut p = Pipeline::new(quick_config());
+        let layers = p.conv_layers("a72").unwrap();
+        assert_eq!(layers.len(), 10);
+        assert_eq!(p.store.by_prefix("sim_conv/cortex-a72/").len(), 10);
+    }
+
+    #[test]
+    fn quantized_conv_produces_bitserial_keys() {
+        let mut p = Pipeline::new(quick_config());
+        p.quantized_conv("a53", &[1, 2]).unwrap();
+        assert!(!p.store.by_prefix("sim_bs/").is_empty());
+        // int8 conv entries
+        assert_eq!(p.store.by_prefix("sim_conv/cortex-a53/").iter()
+            .filter(|(k, _)| k.ends_with("/e8")).count(), 10);
+    }
+
+    #[test]
+    fn equiv_n_is_plausible() {
+        let c2 = workloads::layer_by_name("C2").unwrap();
+        let n = bitserial_equiv_n(&c2);
+        assert!(n > 100 && n < 2000, "{n}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Worker pool: leader/worker job routing over std channels.
+//!
+//! CPU-pure jobs fan out to `n_workers` threads; `leader_only` jobs (PJRT)
+//! stay on the calling thread and are interleaved with result collection.
+//! Invariants (property-tested in `rust/tests/proptests.rs`):
+//!
+//! * every submitted job produces exactly one result, failure or not;
+//! * leader-only jobs never execute on a worker thread;
+//! * results preserve job ids (no cross-wiring under concurrency).
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::runtime::Registry;
+use crate::util::bench::BenchConfig;
+
+use super::jobs::{run_cpu_job, Job, JobOutput, JobSpec};
+
+/// A completed job.
+#[derive(Clone, Debug)]
+pub struct Completed {
+    pub id: u64,
+    pub key: String,
+    pub output: JobOutput,
+    /// Thread label that executed the job ("leader" or "worker-<i>").
+    pub executed_on: String,
+}
+
+/// Fixed-size worker pool.
+pub struct WorkerPool {
+    pub n_workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(n_workers: usize) -> Self {
+        WorkerPool {
+            n_workers: n_workers.max(1),
+        }
+    }
+
+    /// Run a batch of jobs to completion.  `registry` (PJRT) is used by the
+    /// leader for `leader_only` jobs; pass `None` to fail those gracefully.
+    pub fn run(&self, jobs: Vec<Job>, mut registry: Option<&mut Registry>) -> Vec<Completed> {
+        let (leader_jobs, worker_jobs): (Vec<Job>, Vec<Job>) =
+            jobs.into_iter().partition(|j| j.spec.leader_only());
+
+        // spawn workers over a shared channel
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = std::sync::Arc::new(std::sync::Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<Completed>();
+        let mut handles = Vec::new();
+        for w in 0..self.n_workers {
+            let rx = job_rx.clone();
+            let tx = res_tx.clone();
+            handles.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        let output = run_cpu_job(&job.spec);
+                        let _ = tx.send(Completed {
+                            id: job.id,
+                            key: job.spec.key(),
+                            output,
+                            executed_on: format!("worker-{w}"),
+                        });
+                    }
+                    Err(_) => break, // channel closed: drain done
+                }
+            }));
+        }
+        drop(res_tx);
+
+        let n_worker_jobs = worker_jobs.len();
+        for job in worker_jobs {
+            job_tx.send(job).expect("worker channel open");
+        }
+        drop(job_tx);
+
+        // leader executes PJRT jobs while workers chew
+        let mut completed = Vec::new();
+        for job in leader_jobs {
+            let output = Self::run_leader_job(&job.spec, registry.as_deref_mut());
+            completed.push(Completed {
+                id: job.id,
+                key: job.spec.key(),
+                output,
+                executed_on: "leader".into(),
+            });
+        }
+
+        for _ in 0..n_worker_jobs {
+            completed.push(res_rx.recv().expect("worker result"));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        completed
+    }
+
+    fn run_leader_job(spec: &JobSpec, registry: Option<&mut Registry>) -> JobOutput {
+        let Some(registry) = registry else {
+            return JobOutput::Failed {
+                error: "no artifact registry available (run `make artifacts`)".into(),
+            };
+        };
+        match spec {
+            JobSpec::ArtifactValidate { name } => match registry.validate(name) {
+                Ok(v) => JobOutput::Validated {
+                    passed: v.passed,
+                    detail: format!("{:?}", v.details),
+                },
+                Err(e) => JobOutput::Failed { error: e.to_string() },
+            },
+            JobSpec::ArtifactMeasure { name } => {
+                match registry.measure(name, &BenchConfig::quick()) {
+                    Ok(m) => JobOutput::Seconds {
+                        secs: m.seconds.median,
+                        bound: None,
+                    },
+                    Err(e) => JobOutput::Failed { error: e.to_string() },
+                }
+            }
+            other => run_cpu_job(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::operators::gemm::GemmSchedule;
+
+    fn sim_job(id: u64, n: usize) -> Job {
+        Job {
+            id,
+            spec: JobSpec::SimGemm {
+                cpu: profile_by_name("a53").unwrap().cpu,
+                n,
+                schedule: GemmSchedule::new(64, 64, 64, 4),
+                elem_bits: 32,
+            },
+        }
+    }
+
+    #[test]
+    fn all_jobs_complete_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<Job> = (0..20).map(|i| sim_job(i, 64 + (i as usize % 4) * 32)).collect();
+        let done = pool.run(jobs, None);
+        assert_eq!(done.len(), 20);
+        let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn leader_jobs_fail_gracefully_without_registry() {
+        let pool = WorkerPool::new(2);
+        let jobs = vec![Job {
+            id: 0,
+            spec: JobSpec::ArtifactValidate { name: "nope".into() },
+        }];
+        let done = pool.run(jobs, None);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].output.is_failure());
+        assert_eq!(done[0].executed_on, "leader");
+    }
+
+    #[test]
+    fn cpu_jobs_run_on_workers() {
+        let pool = WorkerPool::new(2);
+        let done = pool.run(vec![sim_job(7, 64)], None);
+        assert!(done[0].executed_on.starts_with("worker-"));
+    }
+}

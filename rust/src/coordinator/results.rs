@@ -1,0 +1,195 @@
+//! Result store: keyed measurement results + JSON/CSV persistence.
+//!
+//! Every experiment result lands here under its job key; the report layer
+//! queries by prefix, and `save`/`load` persist runs under `results/` so
+//! expensive sweeps (native timings, tuning) are reusable across commands.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// A result key (the job key, e.g. "sim_gemm/cortex-a53/n128/b64x64x64u4/e32").
+pub type ResultKey = String;
+
+/// A stored value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultValue {
+    pub seconds: Option<f64>,
+    pub bound: Option<String>,
+    pub passed: Option<bool>,
+    pub detail: Option<String>,
+}
+
+impl ResultValue {
+    pub fn seconds(secs: f64) -> Self {
+        ResultValue {
+            seconds: Some(secs),
+            bound: None,
+            passed: None,
+            detail: None,
+        }
+    }
+}
+
+/// The store.
+#[derive(Clone, Debug, Default)]
+pub struct ResultStore {
+    map: BTreeMap<ResultKey, ResultValue>,
+}
+
+impl ResultStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: ResultValue) {
+        self.map.insert(key.into(), value);
+    }
+
+    /// Ingest a batch of completed jobs.
+    pub fn ingest(&mut self, completed: &[super::pool::Completed]) {
+        for c in completed {
+            let v = match &c.output {
+                super::jobs::JobOutput::Seconds { secs, bound } => ResultValue {
+                    seconds: Some(*secs),
+                    bound: bound.clone(),
+                    passed: None,
+                    detail: None,
+                },
+                super::jobs::JobOutput::Tuned { best_seconds, best_desc, trials, space } => {
+                    ResultValue {
+                        seconds: Some(*best_seconds),
+                        bound: None,
+                        passed: None,
+                        detail: Some(format!("{best_desc} ({trials}/{space} trials)")),
+                    }
+                }
+                super::jobs::JobOutput::Validated { passed, detail } => ResultValue {
+                    seconds: None,
+                    bound: None,
+                    passed: Some(*passed),
+                    detail: Some(detail.clone()),
+                },
+                super::jobs::JobOutput::Failed { error } => ResultValue {
+                    seconds: None,
+                    bound: None,
+                    passed: Some(false),
+                    detail: Some(error.clone()),
+                },
+            };
+            self.insert(c.key.clone(), v);
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ResultValue> {
+        self.map.get(key)
+    }
+
+    pub fn seconds(&self, key: &str) -> Option<f64> {
+        self.map.get(key).and_then(|v| v.seconds)
+    }
+
+    /// All entries whose key starts with `prefix`.
+    pub fn by_prefix(&self, prefix: &str) -> Vec<(&str, &ResultValue)> {
+        self.map
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Persist to JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut entries = BTreeMap::new();
+        for (k, v) in &self.map {
+            let mut obj = BTreeMap::new();
+            if let Some(s) = v.seconds {
+                obj.insert("seconds".to_string(), Value::Num(s));
+            }
+            if let Some(b) = &v.bound {
+                obj.insert("bound".to_string(), Value::Str(b.clone()));
+            }
+            if let Some(p) = v.passed {
+                obj.insert("passed".to_string(), Value::Bool(p));
+            }
+            if let Some(d) = &v.detail {
+                obj.insert("detail".to_string(), Value::Str(d.clone()));
+            }
+            entries.insert(k.clone(), Value::Obj(obj));
+        }
+        fs::write(path, json::to_string_pretty(&Value::Obj(entries)))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load from JSON written by `save`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(path.as_ref())?;
+        let v = json::parse(&text)?;
+        let mut store = ResultStore::new();
+        for (k, entry) in v.as_obj()? {
+            store.insert(
+                k.clone(),
+                ResultValue {
+                    seconds: entry.get("seconds").and_then(|x| x.as_f64().ok()),
+                    bound: entry.get("bound").and_then(|x| x.as_str().ok()).map(String::from),
+                    passed: entry.get("passed").and_then(|x| x.as_bool().ok()),
+                    detail: entry.get("detail").and_then(|x| x.as_str().ok()).map(String::from),
+                },
+            );
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_query_prefix() {
+        let mut s = ResultStore::new();
+        s.insert("sim_gemm/a53/n128", ResultValue::seconds(1.0));
+        s.insert("sim_gemm/a53/n256", ResultValue::seconds(2.0));
+        s.insert("sim_conv/a53/C2", ResultValue::seconds(3.0));
+        assert_eq!(s.by_prefix("sim_gemm/").len(), 2);
+        assert_eq!(s.seconds("sim_conv/a53/C2"), Some(3.0));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut s = ResultStore::new();
+        s.insert("a/b", ResultValue::seconds(0.25));
+        s.insert(
+            "c/d",
+            ResultValue {
+                seconds: None,
+                bound: Some("L1-read".into()),
+                passed: Some(true),
+                detail: Some("ok".into()),
+            },
+        );
+        let path = std::env::temp_dir().join("cachebound_results_test/r.json");
+        s.save(&path).unwrap();
+        let loaded = ResultStore::load(&path).unwrap();
+        assert_eq!(loaded.seconds("a/b"), Some(0.25));
+        assert_eq!(loaded.get("c/d").unwrap().bound.as_deref(), Some("L1-read"));
+        let _ = fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -1,0 +1,14 @@
+//! Hardware model: processor + memory-hierarchy specifications.
+//!
+//! Encodes the paper's §III-B target-architecture description: eq. (1)
+//! theoretical peak performance and the measured bandwidths of Tables I
+//! and II.  Profiles for the two evaluated parts (ARM Cortex-A53 on
+//! BCM2837, Cortex-A72 on BCM2711) are built in; arbitrary profiles load
+//! from JSON (see `profiles/*.json`) so the framework generalizes beyond
+//! the paper's boards.
+
+mod profile;
+mod spec;
+
+pub use profile::{builtin_profiles, load_profile, profile_by_name};
+pub use spec::{CacheLevelSpec, CpuSpec, MemLevel, MemoryspecError, Mibs, ProfileSpec};

@@ -1,0 +1,241 @@
+//! Built-in hardware profiles + JSON profile loading.
+//!
+//! The built-ins encode the paper's measured numbers (Tables I & II) and the
+//! published cache geometry of the two SoCs.  A profile JSON file overrides
+//! any subset — see `rust/profiles/cortex_a53.json` for the schema.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+use super::spec::{CacheLevelSpec, CpuSpec, ProfileSpec};
+
+/// ARM Cortex-A53 (Broadcom BCM2837, Raspberry Pi 3B) — paper Table I.
+pub fn cortex_a53() -> ProfileSpec {
+    ProfileSpec {
+        cpu: CpuSpec {
+            name: "cortex-a53".into(),
+            soc: "Broadcom BCM2837 (Raspberry Pi 3B)".into(),
+            frequency_hz: 1.2e9,
+            cores: 4,
+            flop_per_instr: 2.0, // fused multiply-accumulate
+            instr_per_cycle: 1.0, // one NEON VMLA per cycle (§III-B1)
+            simd_bits: 128,
+            l1: CacheLevelSpec {
+                size_bytes: 16 * 1024, // 16 KB L1D (§III-B2)
+                line_bytes: 64,
+                associativity: 4,
+                read_bw: 14_363.0,  // Table I
+                write_bw: 23_703.0, // Table I
+                latency_cycles: 3,
+            },
+            l2: CacheLevelSpec {
+                size_bytes: 512 * 1024, // 512 KB shared (§III-B2)
+                line_bytes: 64,
+                associativity: 16,
+                read_bw: 7_039.0,  // Table I
+                write_bw: 3_467.0, // Table I
+                latency_cycles: 15,
+            },
+            ram_read_bw: 2_040.0,  // Table I
+            ram_write_bw: 1_600.0, // Table I
+            ram_latency_cycles: 120,
+            thread_overhead_s: 6e-6, // calibrated: Table IV N=32 rows
+            fma_latency_cycles: 4.0, // Cortex-A53 NEON FMA latency
+        },
+        provenance: "paper Tables I (measured) + ARM TRM geometry".into(),
+    }
+}
+
+/// ARM Cortex-A72 (Broadcom BCM2711, Raspberry Pi 4B) — paper Table II.
+pub fn cortex_a72() -> ProfileSpec {
+    ProfileSpec {
+        cpu: CpuSpec {
+            name: "cortex-a72".into(),
+            soc: "Broadcom BCM2711 (Raspberry Pi 4B)".into(),
+            frequency_hz: 1.5e9,
+            cores: 4,
+            flop_per_instr: 2.0,
+            instr_per_cycle: 1.0,
+            simd_bits: 128,
+            l1: CacheLevelSpec {
+                size_bytes: 32 * 1024, // 32 KB L1D (§III-B2)
+                line_bytes: 64,
+                associativity: 2,
+                read_bw: 45_733.0,  // Table II
+                write_bw: 30_423.0, // Table II
+                latency_cycles: 4,
+            },
+            l2: CacheLevelSpec {
+                size_bytes: 1024 * 1024, // 1 MB shared (§III-B2)
+                line_bytes: 64,
+                associativity: 16,
+                read_bw: 12_934.0, // Table II
+                write_bw: 7_407.0, // Table II
+                latency_cycles: 21,
+            },
+            ram_read_bw: 3_661.0,  // Table II
+            ram_write_bw: 2_984.0, // Table II
+            ram_latency_cycles: 150,
+            thread_overhead_s: 3e-6, // calibrated: Table V N=32 rows
+            fma_latency_cycles: 4.0, // Cortex-A72 NEON FMA latency
+        },
+        provenance: "paper Table II (measured) + ARM TRM geometry".into(),
+    }
+}
+
+/// All built-in profiles.
+pub fn builtin_profiles() -> Vec<ProfileSpec> {
+    vec![cortex_a53(), cortex_a72()]
+}
+
+/// Look up a built-in profile by name ("a53", "cortex-a72", ...).
+pub fn profile_by_name(name: &str) -> Result<ProfileSpec> {
+    let norm = name.to_ascii_lowercase();
+    builtin_profiles()
+        .into_iter()
+        .find(|p| {
+            p.cpu.name == norm
+                || p.cpu.name.replace("cortex-", "") == norm
+                || p.cpu.name.replace('-', "") == norm.replace('-', "")
+        })
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown profile '{name}' (built-ins: {})",
+                builtin_profiles()
+                    .iter()
+                    .map(|p| p.cpu.name.clone())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+/// Load a profile from a JSON file; unspecified fields default from the
+/// named `base` profile (or A53 if absent).
+pub fn load_profile(path: impl AsRef<Path>) -> Result<ProfileSpec> {
+    let path = path.as_ref();
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading profile {}", path.display()))?;
+    let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+    let base_name = v.get("base").map(|b| b.as_str()).transpose()?.unwrap_or("cortex-a53");
+    let mut p = profile_by_name(base_name)?;
+    p.provenance = format!("{} (base {})", path.display(), base_name);
+
+    if let Some(x) = v.get("name") {
+        p.cpu.name = x.as_str()?.to_string();
+    }
+    if let Some(x) = v.get("soc") {
+        p.cpu.soc = x.as_str()?.to_string();
+    }
+    if let Some(x) = v.get("frequency_hz") {
+        p.cpu.frequency_hz = x.as_f64()?;
+    }
+    if let Some(x) = v.get("cores") {
+        p.cpu.cores = x.as_usize()?;
+    }
+    if let Some(x) = v.get("flop_per_instr") {
+        p.cpu.flop_per_instr = x.as_f64()?;
+    }
+    if let Some(x) = v.get("instr_per_cycle") {
+        p.cpu.instr_per_cycle = x.as_f64()?;
+    }
+    if let Some(x) = v.get("simd_bits") {
+        p.cpu.simd_bits = x.as_usize()?;
+    }
+    if let Some(l1) = v.get("l1") {
+        patch_level(&mut p.cpu.l1, l1)?;
+    }
+    if let Some(l2) = v.get("l2") {
+        patch_level(&mut p.cpu.l2, l2)?;
+    }
+    if let Some(ram) = v.get("ram") {
+        if let Some(x) = ram.get("read_bw_mibs") {
+            p.cpu.ram_read_bw = x.as_f64()?;
+        }
+        if let Some(x) = ram.get("write_bw_mibs") {
+            p.cpu.ram_write_bw = x.as_f64()?;
+        }
+        if let Some(x) = ram.get("latency_cycles") {
+            p.cpu.ram_latency_cycles = x.as_u64()?;
+        }
+    }
+    Ok(p)
+}
+
+fn patch_level(lvl: &mut CacheLevelSpec, v: &Value) -> Result<()> {
+    if let Some(x) = v.get("size_bytes") {
+        lvl.size_bytes = x.as_usize()?;
+    }
+    if let Some(x) = v.get("line_bytes") {
+        lvl.line_bytes = x.as_usize()?;
+    }
+    if let Some(x) = v.get("associativity") {
+        lvl.associativity = x.as_usize()?;
+    }
+    if let Some(x) = v.get("read_bw_mibs") {
+        lvl.read_bw = x.as_f64()?;
+    }
+    if let Some(x) = v.get("write_bw_mibs") {
+        lvl.write_bw = x.as_f64()?;
+    }
+    if let Some(x) = v.get("latency_cycles") {
+        lvl.latency_cycles = x.as_u64()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_alias() {
+        assert_eq!(profile_by_name("a53").unwrap().cpu.name, "cortex-a53");
+        assert_eq!(profile_by_name("cortex-a72").unwrap().cpu.name, "cortex-a72");
+        assert_eq!(profile_by_name("A72").unwrap().cpu.name, "cortex-a72");
+        assert!(profile_by_name("m1").is_err());
+    }
+
+    #[test]
+    fn table_i_and_ii_bandwidths() {
+        let a53 = cortex_a53().cpu;
+        assert_eq!(a53.l1.read_bw, 14_363.0);
+        assert_eq!(a53.l2.read_bw, 7_039.0);
+        assert_eq!(a53.ram_read_bw, 2_040.0);
+        let a72 = cortex_a72().cpu;
+        assert_eq!(a72.l1.read_bw, 45_733.0);
+        assert_eq!(a72.l2.read_bw, 12_934.0);
+        assert_eq!(a72.ram_read_bw, 3_661.0);
+    }
+
+    #[test]
+    fn json_override_roundtrip() {
+        let dir = std::env::temp_dir().join("cachebound_profile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("custom.json");
+        std::fs::write(
+            &path,
+            r#"{
+  "base": "cortex-a72",
+  "name": "a72-overclock",
+  "frequency_hz": 2.0e9,
+  "l1": {"read_bw_mibs": 60000},
+  "ram": {"read_bw_mibs": 4000}
+}"#,
+        )
+        .unwrap();
+        let p = load_profile(&path).unwrap();
+        assert_eq!(p.cpu.name, "a72-overclock");
+        assert_eq!(p.cpu.frequency_hz, 2.0e9);
+        assert_eq!(p.cpu.l1.read_bw, 60_000.0);
+        assert_eq!(p.cpu.ram_read_bw, 4_000.0);
+        // untouched fields inherit from the base
+        assert_eq!(p.cpu.l2.read_bw, 12_934.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

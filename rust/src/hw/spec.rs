@@ -1,0 +1,207 @@
+//! Processor and memory-hierarchy specification types.
+
+use thiserror::Error;
+
+/// Bandwidth in MiB/s — the unit of the paper's Tables I & II.
+pub type Mibs = f64;
+
+pub const MIB: f64 = 1024.0 * 1024.0;
+
+#[derive(Debug, Error)]
+pub enum MemoryspecError {
+    #[error("unknown memory level {0}")]
+    UnknownLevel(String),
+}
+
+/// Which level of the hierarchy a number refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Ram,
+}
+
+impl MemLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemLevel::L1 => "L1",
+            MemLevel::L2 => "L2",
+            MemLevel::Ram => "RAM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, MemoryspecError> {
+        match s.to_ascii_uppercase().as_str() {
+            "L1" => Ok(MemLevel::L1),
+            "L2" => Ok(MemLevel::L2),
+            "RAM" | "DRAM" | "MEM" => Ok(MemLevel::Ram),
+            other => Err(MemoryspecError::UnknownLevel(other.into())),
+        }
+    }
+
+    pub const ALL: [MemLevel; 3] = [MemLevel::L1, MemLevel::L2, MemLevel::Ram];
+}
+
+/// One cache level: geometry for the simulator + measured bandwidths for
+/// the analytical cache-bound model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheLevelSpec {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub associativity: usize,
+    /// Measured read bandwidth (all cores), paper Tables I & II.
+    pub read_bw: Mibs,
+    /// Measured write bandwidth (all cores).
+    pub write_bw: Mibs,
+    /// Load-to-use latency in cycles (for the simulator's latency model).
+    pub latency_cycles: u64,
+}
+
+impl CacheLevelSpec {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.associativity)
+    }
+}
+
+/// A full processor profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpuSpec {
+    pub name: String,
+    /// e.g. "BCM2837 (Raspberry Pi 3)"
+    pub soc: String,
+    pub frequency_hz: f64,
+    pub cores: usize,
+    /// FLOPs per instruction (2 for a fused MAC).
+    pub flop_per_instr: f64,
+    /// Instructions issued per cycle for the MAC pipeline (1 NEON VMLA).
+    pub instr_per_cycle: f64,
+    /// SIMD width in bits (NEON = 128).
+    pub simd_bits: usize,
+    pub l1: CacheLevelSpec,
+    pub l2: CacheLevelSpec,
+    /// RAM bandwidths + latency (size/assoc unused).
+    pub ram_read_bw: Mibs,
+    pub ram_write_bw: Mibs,
+    pub ram_latency_cycles: u64,
+    /// Fixed per-invocation multi-thread fork/join overhead in seconds —
+    /// the paper's "overhead of multi-threading [that] is dominating for
+    /// small matrices" (§IV-A); calibrated from the N=32 rows of
+    /// Tables IV/V.
+    pub thread_overhead_s: f64,
+    /// Latency (cycles) of one FMA — bounds non-pipelined scalar chains,
+    /// the compute model of unvectorized ("naive") schedules.
+    pub fma_latency_cycles: f64,
+}
+
+impl CpuSpec {
+    /// SIMD lanes for a given element width.
+    pub fn simd_lanes(&self, elem_bits: usize) -> f64 {
+        self.simd_bits as f64 / elem_bits as f64
+    }
+
+    /// Paper eq. (1): theoretical peak
+    /// `p = f · cores · FLOP/instr · instr/cycle · SIMD_lanes` (FLOP/s),
+    /// for `elem_bits`-wide elements (32 for float32 → NEON lanes = 4).
+    pub fn peak_flops(&self, elem_bits: usize) -> f64 {
+        self.frequency_hz
+            * self.cores as f64
+            * self.flop_per_instr
+            * self.instr_per_cycle
+            * self.simd_lanes(elem_bits)
+    }
+
+    /// Single-core peak (used for the multi-threading-overhead analysis of
+    /// the small-matrix regime in Tables IV/V).
+    pub fn peak_flops_single_core(&self, elem_bits: usize) -> f64 {
+        self.peak_flops(elem_bits) / self.cores as f64
+    }
+
+    /// Read bandwidth of a hierarchy level in bytes/s.
+    pub fn read_bw_bytes(&self, level: MemLevel) -> f64 {
+        let mibs = match level {
+            MemLevel::L1 => self.l1.read_bw,
+            MemLevel::L2 => self.l2.read_bw,
+            MemLevel::Ram => self.ram_read_bw,
+        };
+        mibs * MIB
+    }
+
+    /// Write bandwidth of a hierarchy level in bytes/s.
+    pub fn write_bw_bytes(&self, level: MemLevel) -> f64 {
+        let mibs = match level {
+            MemLevel::L1 => self.l1.write_bw,
+            MemLevel::L2 => self.l2.write_bw,
+            MemLevel::Ram => self.ram_write_bw,
+        };
+        mibs * MIB
+    }
+
+    pub fn cache(&self, level: MemLevel) -> Option<&CacheLevelSpec> {
+        match level {
+            MemLevel::L1 => Some(&self.l1),
+            MemLevel::L2 => Some(&self.l2),
+            MemLevel::Ram => None,
+        }
+    }
+}
+
+/// Profile wrapper with provenance for reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileSpec {
+    pub cpu: CpuSpec,
+    /// Where the numbers came from ("paper Table I", "host-measured", path).
+    pub provenance: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile::{cortex_a53, cortex_a72};
+
+    #[test]
+    fn eq1_peak_matches_paper_a53() {
+        // §III-B1: 38.4 GFLOP/s for A53 @ 1.2 GHz, 4 cores, NEON 128-bit
+        let p = cortex_a53().cpu.peak_flops(32);
+        assert!((p - 38.4e9).abs() < 1e6, "A53 peak {p}");
+    }
+
+    #[test]
+    fn eq1_peak_matches_paper_a72() {
+        // §III-B1: 48.0 GFLOP/s for A72 @ 1.5 GHz
+        let p = cortex_a72().cpu.peak_flops(32);
+        assert!((p - 48.0e9).abs() < 1e6, "A72 peak {p}");
+    }
+
+    #[test]
+    fn simd_lanes_scale_with_precision() {
+        let cpu = cortex_a53().cpu;
+        assert_eq!(cpu.simd_lanes(32), 4.0);
+        assert_eq!(cpu.simd_lanes(8), 16.0);
+        // peak for int8 is 4x the float32 peak under the same issue model
+        assert!((cpu.peak_flops(8) - 4.0 * cpu.peak_flops(32)).abs() < 1.0);
+    }
+
+    #[test]
+    fn cache_geometry_consistent() {
+        let a53 = cortex_a53().cpu;
+        // 16 KB, 4-way, 64B lines -> 64 sets
+        assert_eq!(a53.l1.sets(), 64);
+        let a72 = cortex_a72().cpu;
+        // 32 KB, 2-way, 64B lines -> 256 sets
+        assert_eq!(a72.l1.sets(), 256);
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        let a53 = cortex_a53().cpu;
+        assert!((a53.read_bw_bytes(MemLevel::L1) - 14363.0 * MIB).abs() < 1.0);
+        assert!((a53.read_bw_bytes(MemLevel::Ram) - 2040.0 * MIB).abs() < 1.0);
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(MemLevel::parse("l1").unwrap(), MemLevel::L1);
+        assert_eq!(MemLevel::parse("DRAM").unwrap(), MemLevel::Ram);
+        assert!(MemLevel::parse("L3").is_err());
+    }
+}

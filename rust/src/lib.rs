@@ -1,0 +1,31 @@
+//! # cachebound
+//!
+//! A full reproduction of *"Understanding Cache Boundness of ML Operators
+//! on ARM Processors"* (Klein, Gratl, Mücke, Fröning — CS.AR 2021) as a
+//! three-layer Rust + JAX + Pallas framework:
+//!
+//! * **L3 (this crate)** — the measurement-and-analysis coordinator: hardware
+//!   models, a cache-hierarchy simulator, native operators, an AutoTVM-style
+//!   auto-tuner, the cache-bound analytical model, and report generators
+//!   that regenerate every table and figure of the paper.
+//! * **L2 (`python/compile/model.py`)** — JAX single-operator networks,
+//!   lowered ahead-of-time to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled GEMM,
+//!   spatial-pack conv, bit-packing, bit-serial GEMM, QNN int8).
+//!
+//! Python runs only at build time (`make artifacts`); the `runtime` module
+//! loads the artifacts through PJRT and executes them from Rust.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod hw;
+pub mod membench;
+pub mod operators;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tuner;
+pub mod util;

@@ -1,0 +1,385 @@
+//! `cachebound` — CLI for the cache-boundness reproduction.
+//!
+//! One subcommand per paper artifact plus utilities:
+//!
+//! ```text
+//! cachebound profiles                     list hardware profiles
+//! cachebound membench [--quick]           host bandwidth sweep (Tables I/II analog)
+//! cachebound peak [--threads N]           host FMA peak (eq. 1 verification)
+//! cachebound table1|table2 [--host]       bandwidth tables (calibrated [+ host])
+//! cachebound table4|table5                GEMM performance tables
+//! cachebound fig1..fig9 [--profile P]     figure data series (CSV under results/)
+//! cachebound validate                     run every AOT artifact through PJRT
+//! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
+//! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::hw::{builtin_profiles, profile_by_name};
+use cachebound::membench;
+use cachebound::report;
+use cachebound::runtime::Registry;
+use cachebound::tuner;
+use cachebound::util::table::{fmt_gflops, fmt_mibs};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--flag value` / `--flag` parser.
+struct Opts {
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(name) = args[i].strip_prefix("--") {
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            }
+            i += 1;
+        }
+        Opts { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn profile(&self, default: &str) -> String {
+        self.get("profile").unwrap_or(default).to_string()
+    }
+}
+
+fn pipeline_from(opts: &Opts) -> Result<Pipeline> {
+    let mut cfg = PipelineConfig {
+        skip_native: opts.has("skip-native"),
+        ..PipelineConfig::default()
+    };
+    cfg.tune_trials = opts.usize("trials", cfg.tune_trials)?;
+    let mut p = Pipeline::new(cfg);
+    if !opts.has("no-artifacts") {
+        if let Ok(reg) = Registry::open(artifacts_dir(opts)) {
+            p = p.with_registry(reg);
+        }
+    }
+    Ok(p)
+}
+
+fn artifacts_dir(opts: &Opts) -> String {
+    opts.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn results_dir(opts: &Opts) -> String {
+    opts.get("out").unwrap_or("results").to_string()
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let opts = Opts::parse(&args[1.min(args.len())..]);
+    match cmd {
+        "profiles" => cmd_profiles(),
+        "membench" => cmd_membench(&opts),
+        "peak" => cmd_peak(&opts),
+        "table1" => cmd_bandwidth_table(&opts, "a53"),
+        "table2" => cmd_bandwidth_table(&opts, "a72"),
+        "table4" => cmd_gemm_table(&opts, "a53"),
+        "table5" => cmd_gemm_table(&opts, "a72"),
+        "fig1" => cmd_fig1(&opts),
+        "fig2" | "fig3" => cmd_fig23(&opts),
+        "fig4" | "fig5" => cmd_fig45(&opts),
+        "fig6" | "fig7" | "fig8" => cmd_fig678(&opts),
+        "fig9" => cmd_fig9(&opts),
+        "validate" => cmd_validate(&opts),
+        "tune" => cmd_tune(&opts),
+        "report-all" => cmd_report_all(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `cachebound help`"),
+    }
+}
+
+const HELP: &str = "cachebound — reproduction of 'Understanding Cache Boundness of ML Operators on ARM Processors'
+
+commands:
+  profiles                    list hardware profiles (Cortex-A53, Cortex-A72)
+  membench [--quick]          host bandwidth sweep (RAMspeed analog)
+  peak [--threads N]          host FMA peak benchmark (arm-peak analog)
+  table1|table2 [--host]      Tables I/II: memory bandwidths
+  table4|table5 [--trials T]  Tables IV/V: GEMM float32 GFLOP/s
+  fig1 [--profile P]          time-vs-size + hardware bounds (GEMM)
+  fig2|fig3 [--profile P]     ResNet-18 conv times / sorted GFLOP/s
+  fig4|fig5 [--profile P]     bit-serial GEMM perf / required bandwidth
+  fig6|fig7|fig8 [--profile P] quantized conv speedups / bw / GFLOP/s
+  fig9 [--profile P]          GEMM GFLOP/s over size (tuned/naive/blas)
+  validate [--artifacts DIR]  execute every AOT artifact via PJRT, check checksums
+  tune --n N [--profile P] [--tuner gbt|random] [--trials T]
+  report-all [--out DIR]      regenerate every table & figure, write CSVs
+
+common flags: --profile a53|a72  --out DIR  --artifacts DIR  --skip-native";
+
+fn cmd_profiles() -> Result<()> {
+    for p in builtin_profiles() {
+        let c = &p.cpu;
+        println!(
+            "{:<12} {}  {:.1} GHz x{}  SIMD {}b  L1 {}KB  L2 {}KB  peak(f32) {} GFLOP/s  [{}]",
+            c.name,
+            c.soc,
+            c.frequency_hz / 1e9,
+            c.cores,
+            c.simd_bits,
+            c.l1.size_bytes / 1024,
+            c.l2.size_bytes / 1024,
+            fmt_gflops(c.peak_flops(32)),
+            p.provenance,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_membench(opts: &Opts) -> Result<()> {
+    println!("host bandwidth sweep (RAMspeed analog; paper §III-B2)...");
+    let extra: Vec<usize> = if opts.has("quick") {
+        vec![]
+    } else {
+        vec![64 << 10, 1 << 20, 4 << 20]
+    };
+    let pts = membench::bandwidth_sweep(&extra);
+    println!("{:>12} {:>14} {:>14}", "block", "read MiB/s", "write MiB/s");
+    for p in &pts {
+        println!(
+            "{:>12} {:>14} {:>14}",
+            format!("{} KB", p.block_bytes / 1024),
+            fmt_mibs(p.read_bw),
+            fmt_mibs(p.write_bw)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_peak(opts: &Opts) -> Result<()> {
+    let threads = opts.usize(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    )?;
+    println!("host FMA peak ({threads} threads; paper §III-B1 arm-peak analog)...");
+    let r = membench::measure_peak(threads, 1.0);
+    println!("measured: {} GFLOP/s over {:.2}s", fmt_gflops(r.flops_per_sec), r.seconds);
+    Ok(())
+}
+
+fn cmd_bandwidth_table(opts: &Opts, profile: &str) -> Result<()> {
+    let p = profile_by_name(profile)?;
+    let host = if opts.has("host") {
+        Some(membench::bandwidth_sweep(&[]))
+    } else {
+        None
+    };
+    let (t, csv) = report::bandwidth_table(&p, host.as_deref());
+    println!("{}", t.to_markdown());
+    let path = format!("{}/table_{}_bandwidth.csv", results_dir(opts), p.cpu.name);
+    csv.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_gemm_table(opts: &Opts, profile: &str) -> Result<()> {
+    let mut pipeline = pipeline_from(opts)?;
+    let sizes = [32, 128, 256, 512, 1024];
+    let (t, csv, _) = report::gemm_table(&mut pipeline, profile, &sizes)?;
+    println!("{}", t.to_markdown());
+    let path = format!("{}/table_gemm_{}.csv", results_dir(opts), profile);
+    csv.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_fig1(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a53");
+    let mut pipeline = pipeline_from(opts)?;
+    let (f, csv) = report::fig1(&mut pipeline, &profile)?;
+    let path = format!("{}/fig1_{}.csv", results_dir(opts), profile);
+    csv.write(&path)?;
+    println!("Fig 1 ({profile}): tuned GEMM best explained by **{}** bound", f.best_bound);
+    println!("(paper: {})", report::paper::expectations::FIG1);
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_fig23(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a53");
+    let mut pipeline = pipeline_from(opts)?;
+    let (f, csv) = report::fig2_fig3(&mut pipeline, &profile)?;
+    let path = format!("{}/fig2_fig3_{}.csv", results_dir(opts), profile);
+    csv.write(&path)?;
+    println!("Fig 3 ({profile}) — layers by GFLOP/s (desc):");
+    for (name, gf) in &f.sorted_perf {
+        println!("  {name:<5} {gf:7.2} GFLOP/s");
+    }
+    println!("(paper: {})", report::paper::expectations::FIG3);
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_fig45(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a72");
+    let mut pipeline = pipeline_from(opts)?;
+    let (f, csv4, csv5) = report::fig4_fig5(&mut pipeline, &profile)?;
+    let p4 = format!("{}/fig4_{}.csv", results_dir(opts), profile);
+    let p5 = format!("{}/fig5_{}.csv", results_dir(opts), profile);
+    csv4.write(&p4)?;
+    csv5.write(&p5)?;
+    let below = f.points.iter().filter(|(.., bw)| *bw < f.l1_bw).count();
+    println!(
+        "Fig 4/5 ({profile}): {} points; {}/{} required-bw points below the L1 line",
+        f.points.len(),
+        below,
+        f.points.len()
+    );
+    println!("(paper: {})", report::paper::expectations::FIG5);
+    println!("wrote {p4}\nwrote {p5}");
+    Ok(())
+}
+
+fn cmd_fig678(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a72");
+    let mut pipeline = pipeline_from(opts)?;
+    let (f, csv6, csv7, csv8) = report::fig6_fig7_fig8(&mut pipeline, &profile)?;
+    let p6 = format!("{}/fig6_{}.csv", results_dir(opts), profile);
+    let p7 = format!("{}/fig7_{}.csv", results_dir(opts), profile);
+    let p8 = format!("{}/fig8_{}.csv", results_dir(opts), profile);
+    csv6.write(&p6)?;
+    csv7.write(&p7)?;
+    csv8.write(&p8)?;
+    println!("Fig 6 ({profile}) — speedup over float32:");
+    println!("  {:<5} {:>6} {:>8} {:>8} {:>8} {:>8}", "layer", "qnn8", "bs1", "bs2", "bs4", "bs8");
+    for r in &f.rows {
+        println!(
+            "  {:<5} {:>6.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            r.layer,
+            r.speedup_qnn(),
+            r.speedup_bits(1, true).unwrap_or(f64::NAN),
+            r.speedup_bits(2, true).unwrap_or(f64::NAN),
+            r.speedup_bits(4, true).unwrap_or(f64::NAN),
+            r.speedup_bits(8, true).unwrap_or(f64::NAN),
+        );
+    }
+    println!("(paper: {})", report::paper::expectations::FIG6);
+    println!("wrote {p6}\nwrote {p7}\nwrote {p8}");
+    Ok(())
+}
+
+fn cmd_fig9(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a72");
+    let mut pipeline = pipeline_from(opts)?;
+    let (f, csv) = report::fig9(&mut pipeline, &profile)?;
+    let path = format!("{}/fig9_{}.csv", results_dir(opts), profile);
+    csv.write(&path)?;
+    println!(
+        "Fig 9 ({profile}): tuned tops out at {:.2} GFLOP/s vs theoretical {:.1}",
+        f.tuned_gflops.iter().cloned().fold(0.0, f64::max),
+        f.peak_gflops
+    );
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_validate(opts: &Opts) -> Result<()> {
+    let mut pipeline = pipeline_from(opts)?;
+    if pipeline.registry.is_none() {
+        bail!("artifacts not found — run `make artifacts` first");
+    }
+    let results = pipeline.validate_artifacts()?;
+    let mut failed = 0;
+    for (name, passed) in &results {
+        println!("{} {}", if *passed { "PASS" } else { "FAIL" }, name);
+        if !passed {
+            failed += 1;
+        }
+    }
+    println!("{}/{} artifacts validated", results.len() - failed, results.len());
+    if failed > 0 {
+        bail!("{failed} artifacts failed validation");
+    }
+    Ok(())
+}
+
+fn cmd_tune(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a53");
+    let n = opts.usize("n", 256)?;
+    let trials = opts.usize("trials", 64)?;
+    let kind = match opts.get("tuner").unwrap_or("gbt") {
+        "gbt" | "xgb" => tuner::TunerKind::Gbt,
+        "random" => tuner::TunerKind::Random,
+        other => return Err(anyhow!("unknown tuner '{other}'")),
+    };
+    let cpu = profile_by_name(&profile)?.cpu;
+    let space = tuner::GemmSpace::new(&cpu, n, n, n);
+    let mut target = tuner::SimGemmTarget::square(&cpu, n);
+    println!(
+        "tuning GEMM N={n} on {} ({:?}, {} trials, space {})...",
+        cpu.name,
+        kind,
+        trials,
+        tuner::SearchSpace::len(&space)
+    );
+    let res = tuner::tune(&tuner::Tuner::new(kind, trials), &space, &mut target)?;
+    let gflops = 2.0 * (n as f64).powi(3) / res.best_seconds / 1e9;
+    println!(
+        "best: {:?} -> {:.3} ms ({} GFLOP/s)",
+        res.best_config,
+        res.best_seconds * 1e3,
+        fmt_gflops(gflops * 1e9)
+    );
+    Ok(())
+}
+
+fn cmd_report_all(opts: &Opts) -> Result<()> {
+    let out = results_dir(opts);
+    println!("regenerating every table and figure into {out}/ ...\n");
+    for profile in ["a53", "a72"] {
+        cmd_bandwidth_table(opts, profile)?;
+        cmd_gemm_table(opts, profile)?;
+    }
+    for (f, p) in [
+        (cmd_fig1 as fn(&Opts) -> Result<()>, "fig1"),
+        (cmd_fig23, "fig2/3"),
+        (cmd_fig45, "fig4/5"),
+        (cmd_fig678, "fig6/7/8"),
+        (cmd_fig9, "fig9"),
+    ] {
+        println!("--- {p} ---");
+        f(opts)?;
+    }
+    println!("\nreport-all complete; CSVs in {out}/");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Block-size bandwidth sweep — the RAMspeed-SMP analog (§III-B2).
+//!
+//! For each block size, a buffer is swept repeatedly: read (sum-reduce,
+//! defeating DCE) and write (pattern fill).  Small blocks stay resident in
+//! L1/L2 after the first sweep, so the measured rate is that level's
+//! bandwidth; 16 MB blocks overflow both caches and measure RAM — exactly
+//! the paper's method (4 KB → L1, 256 KB → L2, 16 MB → RAM).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One measured point of the sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct BwPoint {
+    pub block_bytes: usize,
+    pub read_bw: f64,  // bytes/s
+    pub write_bw: f64, // bytes/s
+}
+
+/// The paper's three probe sizes.
+pub const PAPER_BLOCKS: [usize; 3] = [4 * 1024, 256 * 1024, 16 * 1024 * 1024];
+
+/// Measure read+write bandwidth for one block size.
+///
+/// `total_bytes` is the amount of traffic per timed sample (the paper used
+/// 1–8 GB per pass; we default to enough for stable numbers but far less
+/// wall time).
+pub fn measure_block(block_bytes: usize, total_bytes: usize, samples: usize) -> BwPoint {
+    let n = block_bytes / 8; // u64 lanes
+    let mut buf: Vec<u64> = (0..n as u64).collect();
+    let sweeps = (total_bytes / block_bytes).max(1);
+
+    // warmup: bring resident
+    let mut sink = 0u64;
+    for _ in 0..2 {
+        sink = read_sweep(&buf, sink);
+    }
+
+    let mut read_rates = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..sweeps {
+            // thread `sink` through every call: the loop body depends on
+            // the previous iteration, so LICM cannot hoist the (pure)
+            // sweep out of the loop and fold `sweeps` reads into one.
+            sink = read_sweep(&buf, sink);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        read_rates.push((block_bytes * sweeps) as f64 / dt);
+    }
+
+    let mut write_rates = Vec::with_capacity(samples);
+    for s in 0..samples {
+        let t0 = Instant::now();
+        for i in 0..sweeps {
+            write_sweep(&mut buf, (s * sweeps + i) as u64);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        write_rates.push((block_bytes * sweeps) as f64 / dt);
+    }
+    std::hint::black_box(sink);
+    std::hint::black_box(&buf);
+
+    BwPoint {
+        block_bytes,
+        read_bw: Summary::of(&read_rates).median,
+        write_bw: Summary::of(&write_rates).median,
+    }
+}
+
+/// Sum-reduce the buffer with 4 independent accumulator chains so the loop
+/// is bound by load throughput, not the add latency chain.
+#[inline(never)]
+fn read_sweep(buf: &[u64], salt: u64) -> u64 {
+    let mut a = salt;
+    let mut b = 0u64;
+    let mut c = 0u64;
+    let mut d = 0u64;
+    let chunks = buf.chunks_exact(4);
+    let rem = chunks.remainder();
+    for q in chunks {
+        a = a.wrapping_add(q[0]);
+        b = b.wrapping_add(q[1]);
+        c = c.wrapping_add(q[2]);
+        d = d.wrapping_add(q[3]);
+    }
+    for &x in rem {
+        a = a.wrapping_add(x);
+    }
+    a.wrapping_add(b).wrapping_add(c).wrapping_add(d)
+}
+
+/// Fill with a sweep-dependent pattern (prevents the store stream from
+/// being elided; plain `memset`-able patterns can be optimized).
+#[inline(never)]
+fn write_sweep(buf: &mut [u64], salt: u64) {
+    let mut v = salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for x in buf.iter_mut() {
+        *x = v;
+        v = v.wrapping_add(0x5851_F42D_4C95_7F2D);
+    }
+}
+
+/// Sweep the paper's three block sizes (plus optional extras) and return
+/// the measured points in order.
+pub fn bandwidth_sweep(extra_blocks: &[usize]) -> Vec<BwPoint> {
+    let mut blocks: Vec<usize> = PAPER_BLOCKS.to_vec();
+    blocks.extend_from_slice(extra_blocks);
+    blocks.sort();
+    blocks.dedup();
+    blocks
+        .into_iter()
+        .map(|b| {
+            // scale traffic per sample: small blocks need many sweeps
+            let total = (b * 64).clamp(8 << 20, 256 << 20);
+            measure_block(b, total, 5)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_bandwidth() {
+        let p = measure_block(4 * 1024, 1 << 20, 3);
+        assert!(p.read_bw > 1e8, "read {:.2e}", p.read_bw); // >100 MB/s sanity
+        assert!(p.write_bw > 1e8);
+    }
+
+    #[test]
+    fn l1_blocks_faster_than_ram_blocks() {
+        // the cache hierarchy must be visible: 4KB resident sweeps beat 32MB.
+        // Only meaningful when optimized — a debug read loop is
+        // compute-bound and hides the memory system entirely.
+        if cfg!(debug_assertions) {
+            return;
+        }
+        let l1 = measure_block(4 * 1024, 8 << 20, 3);
+        let ram = measure_block(32 << 20, 64 << 20, 3);
+        assert!(
+            l1.read_bw > 1.2 * ram.read_bw,
+            "L1 {:.2e} vs RAM {:.2e}",
+            l1.read_bw,
+            ram.read_bw
+        );
+    }
+
+    #[test]
+    fn sweep_returns_sorted_points() {
+        let pts = bandwidth_sweep(&[]);
+        assert_eq!(pts.len(), 3);
+        assert!(pts.windows(2).all(|w| w[0].block_bytes < w[1].block_bytes));
+    }
+}

@@ -1,0 +1,13 @@
+//! Host micro-benchmarks: memory bandwidth (RAMspeed analog, Tables I & II)
+//! and computational peak (the paper's `arm-peak` VMLA benchmark analog).
+//!
+//! These measure the *host* CPU the same way the paper measured its ARM
+//! boards — block-size sweeps for per-level bandwidth, an FMA-saturating
+//! register kernel for peak — so EXPERIMENTS.md can report the identical
+//! experiment on this machine next to the paper's calibrated numbers.
+
+pub mod bandwidth;
+pub mod peak;
+
+pub use bandwidth::{bandwidth_sweep, measure_block, BwPoint};
+pub use peak::{measure_peak, PeakResult};

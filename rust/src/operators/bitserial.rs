@@ -1,0 +1,317 @@
+//! Bit-serial operators: packing + popcount GEMM/conv (paper §V).
+//!
+//! Implements the TVM/BISMO bit-serial scheme the paper measures: operands
+//! are decomposed into bit-planes packed 32-per-u32 along the reduction
+//! axis; a dot product is a serial loop over plane pairs of vectorized
+//! `AND`/`XOR` + `popcount` words.  Complexity scales with
+//! `abits × wbits` (quadratic in the bit width, §V-C) while the fetched
+//! data volume scales linearly — the asymmetry behind Fig 6/7.
+//!
+//! Conventions match `python/compile/kernels/{bitpack,bitserial}.py`:
+//! * unipolar: value = Σ 2^b·plane_b, plane_b ∈ {0,1};
+//!   dot = Σ_{i,j} 2^{i+j}·popcount(a_i & w_j)
+//! * bipolar: plane signs s_b ∈ {-1,+1} encoded bit=1 ⇒ +1;
+//!   per-pair dot = K − 2·popcount(a_i ^ w_j)
+
+use super::tensor::Tensor;
+
+pub const LANES: usize = 32;
+
+/// Packed bit-plane matrix: `planes[b]` is row-major (rows × kw) u32 where
+/// kw = K/32; bit `t` of word `w` is position `w*32 + t` of the row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packed {
+    pub bits: usize,
+    pub rows: usize,
+    /// packed words per row
+    pub kw: usize,
+    /// unpacked reduction length
+    pub k: usize,
+    /// (bits, rows, kw) flattened
+    pub data: Vec<u32>,
+}
+
+impl Packed {
+    #[inline]
+    pub fn plane(&self, b: usize) -> &[u32] {
+        &self.data[b * self.rows * self.kw..(b + 1) * self.rows * self.kw]
+    }
+
+    #[inline]
+    pub fn row(&self, b: usize, r: usize) -> &[u32] {
+        let base = (b * self.rows + r) * self.kw;
+        &self.data[base..base + self.kw]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Pack unipolar values (rows × K, entries < 2^bits) into bit-planes.
+/// K must be a multiple of 32 (callers zero-pad; zeros are exact).
+pub fn pack_unipolar(v: &Tensor<i32>, bits: usize) -> Packed {
+    let (rows, k) = (v.shape[0], v.shape[1]);
+    assert_eq!(k % LANES, 0, "K={k} must be a multiple of 32");
+    let kw = k / LANES;
+    let mut data = vec![0u32; bits * rows * kw];
+    for b in 0..bits {
+        let plane = &mut data[b * rows * kw..(b + 1) * rows * kw];
+        for r in 0..rows {
+            for w in 0..kw {
+                let mut word = 0u32;
+                for t in 0..LANES {
+                    let val = v.data[r * k + w * LANES + t];
+                    debug_assert!(val >= 0 && (val as u32) < (1 << bits).max(2));
+                    word |= (((val >> b) & 1) as u32) << t;
+                }
+                plane[r * kw + w] = word;
+            }
+        }
+    }
+    Packed { bits, rows, kw, k, data }
+}
+
+/// Pack bipolar sign planes (bits × rows × K, entries ∈ {-1,+1}).
+pub fn pack_bipolar(signs: &Tensor<i32>, bits: usize) -> Packed {
+    let (b2, rows, k) = (signs.shape[0], signs.shape[1], signs.shape[2]);
+    assert_eq!(b2, bits);
+    assert_eq!(k % LANES, 0);
+    let kw = k / LANES;
+    let mut data = vec![0u32; bits * rows * kw];
+    for b in 0..bits {
+        for r in 0..rows {
+            for w in 0..kw {
+                let mut word = 0u32;
+                for t in 0..LANES {
+                    let s = signs.data[(b * rows + r) * k + w * LANES + t];
+                    debug_assert!(s == 1 || s == -1);
+                    if s == 1 {
+                        word |= 1 << t;
+                    }
+                }
+                data[(b * rows + r) * kw + w] = word;
+            }
+        }
+    }
+    Packed { bits, rows, kw, k, data }
+}
+
+/// Unpack unipolar planes back to integers (inverse of `pack_unipolar`).
+pub fn unpack_unipolar(p: &Packed) -> Tensor<i32> {
+    let mut out = Tensor::zeros(&[p.rows, p.k]);
+    for b in 0..p.bits {
+        for r in 0..p.rows {
+            for w in 0..p.kw {
+                let word = p.row(b, r)[w];
+                for t in 0..LANES {
+                    out.data[r * p.k + w * LANES + t] |= (((word >> t) & 1) as i32) << b;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bit-serial GEMM, unipolar: A (M×K as planes) · Wᵀ (N×K as planes) → i32 M×N.
+pub fn gemm_unipolar(a: &Packed, w: &Packed) -> Tensor<i32> {
+    assert_eq!(a.kw, w.kw, "packed K mismatch");
+    let (m, n, kw) = (a.rows, w.rows, a.kw);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..a.bits {
+        for j in 0..w.bits {
+            let shift = i + j;
+            let ap = a.plane(i);
+            let wp = w.plane(j);
+            for r in 0..m {
+                let arow = &ap[r * kw..(r + 1) * kw];
+                let orow = &mut out.data[r * n..(r + 1) * n];
+                for c in 0..n {
+                    let wrow = &wp[c * kw..(c + 1) * kw];
+                    let mut pc = 0u32;
+                    for (x, y) in arow.iter().zip(wrow) {
+                        pc += (x & y).count_ones();
+                    }
+                    orow[c] += (pc as i32) << shift;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bit-serial GEMM, bipolar: per plane pair `K - 2·popcount(xor)`.
+pub fn gemm_bipolar(a: &Packed, w: &Packed) -> Tensor<i32> {
+    assert_eq!(a.kw, w.kw, "packed K mismatch");
+    assert_eq!(a.k, w.k);
+    let (m, n, kw, k) = (a.rows, w.rows, a.kw, a.k as i32);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..a.bits {
+        for j in 0..w.bits {
+            let shift = i + j;
+            let ap = a.plane(i);
+            let wp = w.plane(j);
+            for r in 0..m {
+                let arow = &ap[r * kw..(r + 1) * kw];
+                let orow = &mut out.data[r * n..(r + 1) * n];
+                for c in 0..n {
+                    let wrow = &wp[c * kw..(c + 1) * kw];
+                    let mut pc = 0u32;
+                    for (x, y) in arow.iter().zip(wrow) {
+                        pc += (x ^ y).count_ones();
+                    }
+                    orow[c] += (k - 2 * pc as i32) << shift;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Materialize bipolar sign planes into integer values (for oracles).
+pub fn bipolar_values(signs: &Tensor<i32>) -> Tensor<i32> {
+    let (bits, rows, k) = (signs.shape[0], signs.shape[1], signs.shape[2]);
+    let mut out = Tensor::zeros(&[rows, k]);
+    for b in 0..bits {
+        for r in 0..rows {
+            for t in 0..k {
+                out.data[r * k + t] += signs.data[(b * rows + r) * k + t] << b;
+            }
+        }
+    }
+    out
+}
+
+/// Data volume fetched per output under the paper's eq. (5) model:
+/// `d` bytes per MAC where d = bits/8 per operand element.
+pub fn bytes_per_mac(bits: usize) -> f64 {
+    bits as f64 / 8.0
+}
+
+/// Plane-pair multiplier: bit-serial computational complexity is
+/// `abits × wbits` popcount-MACs per logical MAC (quadratic, §V-C).
+pub fn complexity_factor(abits: usize, wbits: usize) -> f64 {
+    (abits * wbits) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unipolar_pair(m: usize, n: usize, k: usize, bits: usize, seed: u64) -> (Tensor<i32>, Tensor<i32>) {
+        (
+            Tensor::rand_unipolar(&[m, k], bits as u32, seed),
+            Tensor::rand_unipolar(&[n, k], bits as u32, seed + 1),
+        )
+    }
+
+    fn int_matmul_nt(a: &Tensor<i32>, b: &Tensor<i32>) -> Tensor<i32> {
+        // A (M×K) · B (N×K)ᵀ
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[0];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for t in 0..k {
+                    acc += a.data[i * k + t] as i64 * b.data[j * k + t] as i64;
+                }
+                out.data[i * n + j] = acc as i32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for bits in [1, 2, 4, 8] {
+            let v = Tensor::rand_unipolar(&[8, 96], bits as u32, bits as u64);
+            let p = pack_unipolar(&v, bits);
+            assert_eq!(unpack_unipolar(&p), v, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn unipolar_gemm_matches_integer_matmul() {
+        for bits in [1, 2, 4, 8] {
+            let (a, w) = unipolar_pair(8, 8, 64, bits, 100 + bits as u64);
+            let out = gemm_unipolar(&pack_unipolar(&a, bits), &pack_unipolar(&w, bits));
+            assert_eq!(out, int_matmul_nt(&a, &w), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_unipolar() {
+        let a = Tensor::rand_unipolar(&[4, 32], 3, 7);
+        let w = Tensor::rand_unipolar(&[6, 32], 1, 8);
+        let out = gemm_unipolar(&pack_unipolar(&a, 3), &pack_unipolar(&w, 1));
+        assert_eq!(out, int_matmul_nt(&a, &w));
+    }
+
+    #[test]
+    fn bipolar_single_bit_hamming_identity() {
+        // 1-bit bipolar dot = K − 2·hamming
+        let mk = |seed: u64| {
+            let u = Tensor::rand_unipolar(&[1, 4, 64], 1, seed);
+            Tensor::from_vec(&[1, 4, 64], u.data.iter().map(|&x| x * 2 - 1).collect())
+        };
+        let sa = mk(21);
+        let sw = mk(22);
+        let out = gemm_bipolar(&pack_bipolar(&sa, 1), &pack_bipolar(&sw, 1));
+        let va = bipolar_values(&sa);
+        let vw = bipolar_values(&sw);
+        assert_eq!(out, int_matmul_nt(&va, &vw));
+    }
+
+    #[test]
+    fn bipolar_multibit_matches_values() {
+        for bits in [2, 4] {
+            let mk = |seed: u64| {
+                let u = Tensor::rand_unipolar(&[bits, 8, 32], 1, seed);
+                Tensor::from_vec(
+                    &[bits, 8, 32],
+                    u.data.iter().map(|&x| x * 2 - 1).collect(),
+                )
+            };
+            let sa = mk(31 + bits as u64);
+            let sw = mk(41 + bits as u64);
+            let out = gemm_bipolar(&pack_bipolar(&sa, bits), &pack_bipolar(&sw, bits));
+            assert_eq!(out, int_matmul_nt(&bipolar_values(&sa), &bipolar_values(&sw)));
+        }
+    }
+
+    #[test]
+    fn zero_padding_is_exact_for_unipolar() {
+        // padding K with zeros must not change the result
+        let a = Tensor::rand_unipolar(&[4, 32], 2, 51);
+        let w = Tensor::rand_unipolar(&[4, 32], 2, 52);
+        let expect = int_matmul_nt(&a, &w);
+        let pad = |t: &Tensor<i32>| {
+            let mut d = Vec::new();
+            for r in 0..t.shape[0] {
+                d.extend_from_slice(&t.data[r * 32..(r + 1) * 32]);
+                d.extend_from_slice(&[0; 32]);
+            }
+            Tensor::from_vec(&[t.shape[0], 64], d)
+        };
+        let out = gemm_unipolar(&pack_unipolar(&pad(&a), 2), &pack_unipolar(&pad(&w), 2));
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn complexity_and_bytes_models() {
+        assert_eq!(complexity_factor(2, 2), 4.0);
+        assert_eq!(complexity_factor(8, 8), 64.0);
+        assert_eq!(bytes_per_mac(1), 0.125);
+        assert_eq!(bytes_per_mac(8), 1.0);
+    }
+
+    #[test]
+    fn packed_accessors() {
+        let v = Tensor::rand_unipolar(&[4, 64], 2, 61);
+        let p = pack_unipolar(&v, 2);
+        assert_eq!(p.plane(0).len(), 4 * 2);
+        assert_eq!(p.row(1, 3).len(), 2);
+        assert_eq!(p.bytes(), 2 * 4 * 2 * 4);
+    }
+}

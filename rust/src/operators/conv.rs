@@ -1,0 +1,319 @@
+//! Convolution operators: naive, spatial-pack (schedule-parameterized) and
+//! im2col+GEMM — the paper's §III-C2 / §IV-C operator family (NCHW).
+//!
+//! `spatial_pack` mirrors TVM's ARM `conv2d spatial pack` schedule the paper
+//! measures: output tiled (channel-block × row-block), weight tap loop
+//! unrolled, innermost width loop contiguous for SIMD.  Its
+//! [`ConvSchedule`] is the tuner's conv search space and corresponds 1:1 to
+//! the Pallas `ConvSchedule` in `python/compile/kernels/conv2d.py`.
+
+use super::tensor::Tensor;
+use super::workloads::ConvLayer;
+
+/// Schedule knobs for the spatial-pack conv.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvSchedule {
+    /// Output-channel block.
+    pub bco: usize,
+    /// Output-row block.
+    pub brow: usize,
+}
+
+impl ConvSchedule {
+    pub fn new(bco: usize, brow: usize) -> Self {
+        ConvSchedule { bco, brow }
+    }
+
+    pub fn naive() -> Self {
+        ConvSchedule::new(1, 1)
+    }
+
+    pub fn default_tuned() -> Self {
+        ConvSchedule::new(32, 4)
+    }
+
+    pub fn clamp(&self, cout: usize, ho: usize) -> ConvSchedule {
+        ConvSchedule {
+            bco: self.bco.min(cout).max(1),
+            brow: self.brow.min(ho).max(1),
+        }
+    }
+
+    /// Working-set bytes for one tile (weights panel + input rows + output
+    /// rows) — compared against cache capacity by the analysis layer.
+    pub fn working_set_bytes(&self, l: &ConvLayer, elem_bytes: usize) -> usize {
+        let in_rows = (self.brow - 1) * l.stride + l.k;
+        let in_cols = (l.wo() - 1) * l.stride + l.k;
+        self.bco * l.cin * l.k * l.k * elem_bytes
+            + l.cin * in_rows * in_cols * elem_bytes
+            + self.bco * self.brow * l.wo() * 4
+    }
+}
+
+/// Zero-pad an NCHW image (batch handled per-image by the callers).
+pub fn pad_nchw(x: &Tensor<f32>, pad: usize) -> Tensor<f32> {
+    if pad == 0 {
+        return x.clone();
+    }
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut out = Tensor::zeros(&[b, c, hp, wp]);
+    for bi in 0..b {
+        for ci in 0..c {
+            for y in 0..h {
+                let src = ((bi * c + ci) * h + y) * w;
+                let dst = ((bi * c + ci) * hp + y + pad) * wp + pad;
+                out.data[dst..dst + w].copy_from_slice(&x.data[src..src + w]);
+            }
+        }
+    }
+    out
+}
+
+/// Naive direct convolution — 7 nested loops, no blocking.
+/// x: (B, cin, H, W), w: (cout, cin, k, k) -> (B, cout, ho, wo).
+pub fn naive(x: &Tensor<f32>, w: &Tensor<f32>, stride: usize, pad: usize) -> Tensor<f32> {
+    let (b, cin, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cin2, k, _) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, cin2);
+    let xp = pad_nchw(x, pad);
+    let (hp, wp) = (xp.shape[2], xp.shape[3]);
+    let ho = (hp - k) / stride + 1;
+    let wo = (wp - k) / stride + 1;
+    let mut out = Tensor::zeros(&[b, cout, ho, wo]);
+    for bi in 0..b {
+        for co in 0..cout {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ci in 0..cin {
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                let iy = oy * stride + dy;
+                                let ix = ox * stride + dx;
+                                acc += xp.data[xp.at4(bi, ci, iy, ix)]
+                                    * w.data[w.at4(co, ci, dy, dx)];
+                            }
+                        }
+                    }
+                    let idx = out.at4(bi, co, oy, ox);
+                    out.data[idx] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Spatial-pack convolution (TVM ARM schedule analog).
+///
+/// Loop nest: (co-block, row-block) tiles — then per tile, taps (dy, dx)
+/// unrolled outermost so each tap is a dense `cin × (brow·wo)` MAC sweep
+/// with the innermost `ox` loop contiguous in memory (SIMD-friendly), and
+/// the weight tap scalar held in a register — the paper's §IV-B model of
+/// "one operand resident, one streamed".
+pub fn spatial_pack(
+    x: &Tensor<f32>,
+    w: &Tensor<f32>,
+    stride: usize,
+    pad: usize,
+    s: ConvSchedule,
+) -> Tensor<f32> {
+    let (b, cin, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cin2, k, _) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, cin2);
+    let xp = pad_nchw(x, pad);
+    let (hp, wp) = (xp.shape[2], xp.shape[3]);
+    let ho = (hp - k) / stride + 1;
+    let wo = (wp - k) / stride + 1;
+    let s = s.clamp(cout, ho);
+    let mut out = Tensor::zeros(&[b, cout, ho, wo]);
+
+    for bi in 0..b {
+        for co0 in (0..cout).step_by(s.bco) {
+            let co1 = (co0 + s.bco).min(cout);
+            for r0 in (0..ho).step_by(s.brow) {
+                let r1 = (r0 + s.brow).min(ho);
+                for co in co0..co1 {
+                    for ci in 0..cin {
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                let tap = w.data[w.at4(co, ci, dy, dx)];
+                                if tap == 0.0 {
+                                    continue;
+                                }
+                                for oy in r0..r1 {
+                                    let iy = oy * stride + dy;
+                                    let xrow = ((bi * cin + ci) * hp + iy) * wp + dx;
+                                    let orow = ((bi * cout + co) * ho + oy) * wo;
+                                    if stride == 1 {
+                                        let xs = &xp.data[xrow..xrow + wo];
+                                        let os = &mut out.data[orow..orow + wo];
+                                        for (o, xv) in os.iter_mut().zip(xs) {
+                                            *o += tap * xv;
+                                        }
+                                    } else {
+                                        for ox in 0..wo {
+                                            out.data[orow + ox] +=
+                                                tap * xp.data[xrow + ox * stride];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// IM2COL: (B, cin, H, W) -> (B, ho·wo, cin·k·k), column order (c, dy, dx)
+/// — matches `ref.im2col` / the Pallas kernel.
+pub fn im2col(x: &Tensor<f32>, k: usize, stride: usize, pad: usize) -> Tensor<f32> {
+    let (b, cin, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let xp = pad_nchw(x, pad);
+    let (hp, wp) = (xp.shape[2], xp.shape[3]);
+    let ho = (hp - k) / stride + 1;
+    let wo = (wp - k) / stride + 1;
+    let p = ho * wo;
+    let ckk = cin * k * k;
+    let mut out = Tensor::zeros(&[b, p, ckk]);
+    for bi in 0..b {
+        for ci in 0..cin {
+            for dy in 0..k {
+                for dx in 0..k {
+                    let col = (ci * k + dy) * k + dx;
+                    for oy in 0..ho {
+                        for ox in 0..wo {
+                            let iy = oy * stride + dy;
+                            let ix = ox * stride + dx;
+                            out.data[(bi * p + oy * wo + ox) * ckk + col] =
+                                xp.data[xp.at4(bi, ci, iy, ix)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convolution via im2col + blocked GEMM (the paper's IM2COL variant).
+pub fn im2col_conv(x: &Tensor<f32>, w: &Tensor<f32>, stride: usize, pad: usize) -> Tensor<f32> {
+    let (b, _cin, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cin, k, _) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let cols = im2col(x, k, stride, pad); // (B, P, CKK)
+    let p = cols.shape[1];
+    let ckk = cin * k * k;
+    // weight matrix (CKK, cout)
+    let mut wmat = Tensor::zeros(&[ckk, cout]);
+    for co in 0..cout {
+        for idx in 0..ckk {
+            wmat.data[idx * cout + co] = w.data[co * ckk + idx];
+        }
+    }
+    let ho_wo = p;
+    let mut out = Tensor::zeros(&[b, cout, ho_wo]);
+    for bi in 0..b {
+        let colmat = Tensor::from_vec(&[p, ckk], cols.data[bi * p * ckk..(bi + 1) * p * ckk].to_vec());
+        let prod = super::gemm::blocked(&colmat, &wmat); // (P, cout)
+        for co in 0..cout {
+            for pp in 0..p {
+                out.data[(bi * cout + co) * ho_wo + pp] = prod.data[pp * cout + co];
+            }
+        }
+    }
+    // reshape (B, cout, P) -> (B, cout, ho, wo)
+    let hp = x.shape[2] + 2 * pad;
+    let ho = (hp - k) / stride + 1;
+    let wo = (x.shape[3] + 2 * pad - k) / stride + 1;
+    Tensor::from_vec(&[b, cout, ho, wo], out.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::tensor::max_abs_diff;
+    use crate::operators::workloads::layer_by_name;
+
+    fn conv_pair(cin: usize, cout: usize, h: usize, k: usize, seed: u64) -> (Tensor<f32>, Tensor<f32>) {
+        (
+            Tensor::rand_f32(&[1, cin, h, h], seed),
+            Tensor::rand_f32(&[cout, cin, k, k], seed + 1),
+        )
+    }
+
+    #[test]
+    fn spatial_pack_matches_naive() {
+        for (cin, cout, h, k, stride, pad) in [
+            (4, 8, 10, 3, 1, 1),
+            (4, 8, 10, 3, 2, 1),
+            (4, 8, 10, 1, 1, 0),
+            (4, 8, 10, 1, 2, 0),
+            (3, 5, 9, 3, 3, 1),
+            (2, 4, 7, 5, 1, 2),
+        ] {
+            let (x, w) = conv_pair(cin, cout, h, k, (cin * h + k) as u64);
+            let c0 = naive(&x, &w, stride, pad);
+            let c1 = spatial_pack(&x, &w, stride, pad, ConvSchedule::new(4, 2));
+            assert_eq!(c0.shape, c1.shape);
+            assert!(max_abs_diff(&c0, &c1) < 1e-4, "k={k} s={stride} p={pad}");
+        }
+    }
+
+    #[test]
+    fn im2col_conv_matches_naive() {
+        for (cin, cout, h, k, stride, pad) in
+            [(4, 8, 10, 3, 1, 1), (4, 8, 10, 3, 2, 1), (4, 8, 10, 1, 2, 0)]
+        {
+            let (x, w) = conv_pair(cin, cout, h, k, (h * k + cout) as u64);
+            let c0 = naive(&x, &w, stride, pad);
+            let c1 = im2col_conv(&x, &w, stride, pad);
+            assert_eq!(c0.shape, c1.shape);
+            assert!(max_abs_diff(&c0, &c1) < 1e-3, "k={k} s={stride}");
+        }
+    }
+
+    #[test]
+    fn schedule_grid_agrees() {
+        let (x, w) = conv_pair(8, 16, 12, 3, 77);
+        let c0 = naive(&x, &w, 1, 1);
+        for bco in [1, 4, 16] {
+            for brow in [1, 3, 12] {
+                let c1 = spatial_pack(&x, &w, 1, 1, ConvSchedule::new(bco, brow));
+                assert!(max_abs_diff(&c0, &c1) < 1e-4, "bco={bco} brow={brow}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_gt_one() {
+        let x = Tensor::rand_f32(&[3, 4, 8, 8], 31);
+        let w = Tensor::rand_f32(&[8, 4, 3, 3], 32);
+        let c0 = naive(&x, &w, 1, 1);
+        let c1 = spatial_pack(&x, &w, 1, 1, ConvSchedule::default_tuned());
+        assert!(max_abs_diff(&c0, &c1) < 1e-4);
+    }
+
+    #[test]
+    fn resnet_layer_geometry() {
+        let l = layer_by_name("C11").unwrap();
+        let x = Tensor::rand_f32(&[1, l.cin, l.h, l.w], 41);
+        let w = Tensor::rand_f32(&[l.cout, l.cin, l.k, l.k], 42);
+        let out = spatial_pack(&x, &w, l.stride, l.pad, ConvSchedule::default_tuned());
+        assert_eq!(out.shape, vec![1, l.cout, l.ho(), l.wo()]);
+    }
+
+    #[test]
+    fn pad_roundtrip_zero() {
+        let x = Tensor::rand_f32(&[1, 2, 4, 4], 50);
+        let same = pad_nchw(&x, 0);
+        assert_eq!(same, x);
+        let p = pad_nchw(&x, 2);
+        assert_eq!(p.shape, vec![1, 2, 8, 8]);
+        // corners are zero
+        assert_eq!(p.data[0], 0.0);
+    }
+}

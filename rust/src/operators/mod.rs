@@ -1,0 +1,26 @@
+//! Native operator implementations — the measured workloads of the paper.
+//!
+//! These are the Rust-side analogs of the TVM-generated / openBLAS operators
+//! the paper benchmarks.  Each operator family provides:
+//!
+//! * a **naive** reference implementation (the "TVM naive" column),
+//! * a **schedule-parameterized** implementation the tuner searches over
+//!   (the "TVM tuned" column; tiling factors = the schedule space),
+//! * a **hand-tuned blocked** implementation (the "openBLAS" column),
+//! * MAC/byte accounting matching the paper's eqs. (2)–(5), and
+//! * a memory-trace generator feeding the `sim` cache simulator — the
+//!   stand-in for running on real ARM silicon.
+//!
+//! All operators are validated against each other and (transitively, via
+//! the AOT checksum protocol) against the pure-jnp oracles in
+//! `python/compile/kernels/ref.py`.
+
+pub mod bitserial;
+pub mod conv;
+pub mod gemm;
+pub mod qnn;
+pub mod tensor;
+pub mod workloads;
+
+pub use tensor::Tensor;
+pub use workloads::{resnet18_layers, ConvLayer};

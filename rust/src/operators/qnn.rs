@@ -1,0 +1,218 @@
+//! QNN int8 operators: GEMM + conv with int32 accumulation (paper §V).
+//!
+//! The "8-bit QNN" baseline of Figs 6–8: same loop nests as the float32
+//! operators but with 1-byte operands — isolating the 4× data-volume
+//! reduction the cache-bound model predicts speedup from.  NCHW layout,
+//! which the paper credits for QNN's robustness on small images vs the
+//! bit-serial NHWC operators.
+
+use super::tensor::Tensor;
+
+/// Naive int8 GEMM: (M,K) × (K,N) → i32 (M,N).
+pub fn gemm_naive(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += a.data[i * k + t] as i32 * b.data[t * n + j] as i32;
+            }
+            c.data[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Blocked int8 GEMM with i16-pair friendly inner loop (register tiled the
+/// same way as `gemm::blocked`, letting LLVM use pmaddubsw-style patterns
+/// where available).
+pub fn gemm_blocked(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i32> {
+    const MR: usize = 4;
+    const NR: usize = 16;
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i0 in (0..m).step_by(MR) {
+        let i1 = (i0 + MR).min(m);
+        for j0 in (0..n).step_by(NR) {
+            let j1 = (j0 + NR).min(n);
+            if i1 - i0 == MR && j1 - j0 == NR {
+                let mut acc = [[0i32; NR]; MR];
+                for kk in 0..k {
+                    let brow = &b.data[kk * n + j0..kk * n + j1];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let av = a.data[(i0 + r) * k + kk] as i32;
+                        for (x, &bv) in accr.iter_mut().zip(brow) {
+                            *x += av * bv as i32;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    c.data[(i0 + r) * n + j0..(i0 + r) * n + j1].copy_from_slice(accr);
+                }
+            } else {
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        let mut acc = 0i32;
+                        for kk in 0..k {
+                            acc += a.data[i * k + kk] as i32 * b.data[kk * n + j] as i32;
+                        }
+                        c.data[i * n + j] = acc;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Affine requantization: i32 accumulator → i8 with round-to-nearest-even
+/// (matches `jnp.round`) and saturation.
+pub fn requantize(acc: &Tensor<i32>, scale: f32, zp: i32) -> Tensor<i8> {
+    let data = acc
+        .data
+        .iter()
+        .map(|&x| {
+            let v = x as f32 * scale + zp as f32;
+            let r = round_half_even(v);
+            r.clamp(-128.0, 127.0) as i8
+        })
+        .collect();
+    Tensor {
+        shape: acc.shape.clone(),
+        data,
+    }
+}
+
+fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let down = x.trunc();
+        let up = down + x.signum();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+/// int8 NCHW padded copy.
+pub fn pad_nchw_i8(x: &Tensor<i8>, pad: usize) -> Tensor<i8> {
+    if pad == 0 {
+        return x.clone();
+    }
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut out = Tensor::zeros(&[b, c, hp, wp]);
+    for bi in 0..b {
+        for ci in 0..c {
+            for y in 0..h {
+                let src = ((bi * c + ci) * h + y) * w;
+                let dst = ((bi * c + ci) * hp + y + pad) * wp + pad;
+                out.data[dst..dst + w].copy_from_slice(&x.data[src..src + w]);
+            }
+        }
+    }
+    out
+}
+
+/// int8 spatial-pack convolution with i32 accumulation — the QNN conv.
+/// x: (B, cin, H, W) i8, w: (cout, cin, k, k) i8 → (B, cout, ho, wo) i32.
+pub fn conv2d(x: &Tensor<i8>, w: &Tensor<i8>, stride: usize, pad: usize) -> Tensor<i32> {
+    let (b, cin, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, cin2, k, _) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, cin2);
+    let xp = pad_nchw_i8(x, pad);
+    let (hp, wp) = (xp.shape[2], xp.shape[3]);
+    let ho = (hp - k) / stride + 1;
+    let wo = (wp - k) / stride + 1;
+    let mut out: Tensor<i32> = Tensor::zeros(&[b, cout, ho, wo]);
+    for bi in 0..b {
+        for co in 0..cout {
+            for ci in 0..cin {
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let tap = w.data[((co * cin + ci) * k + dy) * k + dx] as i32;
+                        if tap == 0 {
+                            continue;
+                        }
+                        for oy in 0..ho {
+                            let iy = oy * stride + dy;
+                            let xbase = ((bi * cin + ci) * hp + iy) * wp + dx;
+                            let obase = ((bi * cout + co) * ho + oy) * wo;
+                            for ox in 0..wo {
+                                out.data[obase + ox] +=
+                                    tap * xp.data[xbase + ox * stride] as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_matches_naive() {
+        for (m, k, n) in [(8, 8, 8), (17, 33, 65), (64, 64, 64)] {
+            let a = Tensor::rand_i8(&[m, k], (m + k) as u64);
+            let b = Tensor::rand_i8(&[k, n], (k + n) as u64);
+            assert_eq!(gemm_naive(&a, &b), gemm_blocked(&a, &b), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn conv_matches_float_reference_structure() {
+        // cross-check against the float conv on the same integer data
+        let x8 = Tensor::rand_i8(&[1, 4, 8, 8], 9);
+        let w8 = Tensor::rand_i8(&[8, 4, 3, 3], 10);
+        let xf = Tensor::from_vec(&x8.shape.clone(), x8.data.iter().map(|&v| v as f32).collect());
+        let wf = Tensor::from_vec(&w8.shape.clone(), w8.data.iter().map(|&v| v as f32).collect());
+        let ci = conv2d(&x8, &w8, 1, 1);
+        let cf = crate::operators::conv::naive(&xf, &wf, 1, 1);
+        for (a, b) in ci.data.iter().zip(&cf.data) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn conv_strided() {
+        let x8 = Tensor::rand_i8(&[1, 3, 9, 9], 11);
+        let w8 = Tensor::rand_i8(&[4, 3, 3, 3], 12);
+        let out = conv2d(&x8, &w8, 2, 1);
+        assert_eq!(out.shape, vec![1, 4, 5, 5]);
+    }
+
+    #[test]
+    fn requantize_saturates_and_rounds() {
+        let acc = Tensor::from_vec(&[1, 4], vec![10_000_000, -10_000_000, 10, -10]);
+        let q = requantize(&acc, 1.0, 0);
+        assert_eq!(q.data, vec![127, -128, 10, -10]);
+        // ties round to even
+        let acc = Tensor::from_vec(&[1, 2], vec![5, 15]);
+        let q = requantize(&acc, 0.1, 0); // 0.5, 1.5
+        assert_eq!(q.data, vec![0, 2]);
+    }
+
+    #[test]
+    fn full_range_no_overflow() {
+        let m = 32;
+        let a = Tensor::from_vec(&[m, m], vec![-128i8; m * m]);
+        let b = Tensor::from_vec(&[m, m], vec![-128i8; m * m]);
+        let c = gemm_blocked(&a, &b);
+        assert!(c.data.iter().all(|&x| x == 128 * 128 * m as i32));
+    }
+}

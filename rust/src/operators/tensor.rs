@@ -1,0 +1,184 @@
+//! Minimal dense tensor: row-major storage + deterministic fills.
+//!
+//! Deliberately tiny — the operators own their loop nests (that *is* the
+//! experiment), so this type only handles storage, shape bookkeeping and
+//! the SplitMix64 deterministic fills shared with the AOT protocol.
+
+use crate::util::rng::stream_at;
+
+/// Row-major dense tensor over a flat `Vec<T>`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat index for a 2-D tensor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 2);
+        i * self.shape[1] + j
+    }
+
+    /// Flat index for a 4-D tensor (e.g. NCHW).
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+}
+
+impl Tensor<f32> {
+    /// SplitMix64 fill in [-1, 1) — bit-identical to `aot.gen_input(.., "f32")`.
+    pub fn rand_f32(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n as u64)
+            .map(|i| {
+                let z = stream_at(seed, i);
+                (((z >> 40) as f64 / (1u64 << 24) as f64) * 2.0 - 1.0) as f32
+            })
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+}
+
+impl Tensor<i8> {
+    /// SplitMix64 fill in [-7, 7] — matches `aot.gen_input(.., "i8")`.
+    pub fn rand_i8(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n as u64)
+            .map(|i| (((stream_at(seed, i) >> 40) % 15) as i64 - 7) as i8)
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+}
+
+impl Tensor<i32> {
+    /// Unipolar activations in [0, 2^bits) — matches `aot.gen_input(.., "i32u<bits>")`.
+    pub fn rand_unipolar(shape: &[usize], bits: u32, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n as u64)
+            .map(|i| ((stream_at(seed, i) >> 40) % (1u64 << bits)) as i32)
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+}
+
+impl Tensor<u32> {
+    /// Full-entropy u32 fill — matches `aot.gen_input(.., "u32")`.
+    pub fn rand_u32(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n as u64)
+            .map(|i| (stream_at(seed, i) >> 32) as u32)
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+}
+
+/// Max |a-b| over two equal-shape f32 tensors.
+pub fn max_abs_diff(a: &Tensor<f32>, b: &Tensor<f32>) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative Frobenius error ||a-b|| / ||b||.
+pub fn rel_fro_err(a: &Tensor<f32>, b: &Tensor<f32>) -> f64 {
+    assert_eq!(a.shape, b.shape);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let t = Tensor::<f32>::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.at2(1, 2), 5);
+        let t4 = Tensor::<f32>::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t4.at4(1, 2, 3, 4), ((1 * 3 + 2) * 4 + 3) * 5 + 4);
+    }
+
+    #[test]
+    fn rand_f32_matches_protocol_range() {
+        let t = Tensor::<f32>::rand_f32(&[64, 64], 42);
+        assert!(t.data.iter().all(|x| (-1.0..1.0).contains(x)));
+        // deterministic
+        let t2 = Tensor::<f32>::rand_f32(&[64, 64], 42);
+        assert_eq!(t, t2);
+        // different seeds differ
+        let t3 = Tensor::<f32>::rand_f32(&[64, 64], 43);
+        assert_ne!(t, t3);
+    }
+
+    #[test]
+    fn rand_i8_range() {
+        let t = Tensor::<i8>::rand_i8(&[1000], 7);
+        assert!(t.data.iter().all(|&x| (-7..=7).contains(&x)));
+    }
+
+    #[test]
+    fn rand_unipolar_range() {
+        let t = Tensor::<i32>::rand_unipolar(&[1000], 3, 9);
+        assert!(t.data.iter().all(|&x| (0..8).contains(&x)));
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5f32, 2.0]);
+        assert_eq!(max_abs_diff(&a, &b), 0.5);
+        assert!(rel_fro_err(&a, &a) == 0.0);
+    }
+}

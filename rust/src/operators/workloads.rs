@@ -1,0 +1,157 @@
+//! Workload definitions — paper Table III and the GEMM sweeps.
+//!
+//! Mirrors `python/compile/workloads.py`; the integration tests cross-check
+//! this table against the `workloads` section of `artifacts/manifest.json`
+//! so the two languages can never drift apart.
+
+/// One ResNet-18 convolution layer (paper Table III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: &'static str,
+    pub b: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvLayer {
+    /// Real tensor output height (standard conv arithmetic).
+    pub fn ho(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn wo(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Paper eq. (3): `h_out = (h_in + 2p)/s` — no kernel-extent term.
+    /// Table III's MAC column uses this (C2: 58·58·64·64·9 = 124,010,496),
+    /// so every performance/bandwidth number in the paper does too.
+    pub fn ho_eq3(&self) -> usize {
+        (self.h + 2 * self.pad) / self.stride
+    }
+
+    pub fn wo_eq3(&self) -> usize {
+        (self.w + 2 * self.pad) / self.stride
+    }
+
+    /// Paper eq. (4) MACs with eq. (3) output sizes — matches Table III.
+    pub fn macs(&self) -> u64 {
+        (self.b * self.ho_eq3() * self.wo_eq3() * self.cin * self.cout * self.k * self.k)
+            as u64
+    }
+
+    /// MACs actually executed with the real output geometry.
+    pub fn macs_exact(&self) -> u64 {
+        (self.b * self.ho() * self.wo() * self.cin * self.cout * self.k * self.k) as u64
+    }
+
+    /// Bytes read under the paper's one-read-per-MAC model for an element
+    /// size of `bytes_per_elem` (4 for f32 — the `4·MACs` of Fig 1/2).
+    pub fn model_bytes_read(&self, bytes_per_elem: f64) -> f64 {
+        self.macs() as f64 * bytes_per_elem
+    }
+}
+
+/// Paper Table III: ResNet-18 layers C2..C11 (C1 excluded per §III-C2).
+pub fn resnet18_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer { name: "C2", b: 1, cin: 64, cout: 64, h: 56, w: 56, k: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "C3", b: 1, cin: 64, cout: 128, h: 56, w: 56, k: 3, stride: 2, pad: 1 },
+        ConvLayer { name: "C4", b: 1, cin: 64, cout: 128, h: 56, w: 56, k: 1, stride: 2, pad: 0 },
+        ConvLayer { name: "C5", b: 1, cin: 128, cout: 128, h: 28, w: 28, k: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "C6", b: 1, cin: 128, cout: 256, h: 28, w: 28, k: 3, stride: 2, pad: 1 },
+        ConvLayer { name: "C7", b: 1, cin: 128, cout: 256, h: 28, w: 28, k: 1, stride: 2, pad: 0 },
+        ConvLayer { name: "C8", b: 1, cin: 256, cout: 256, h: 14, w: 14, k: 3, stride: 1, pad: 1 },
+        ConvLayer { name: "C9", b: 1, cin: 256, cout: 512, h: 14, w: 14, k: 3, stride: 2, pad: 1 },
+        ConvLayer { name: "C10", b: 1, cin: 256, cout: 512, h: 14, w: 14, k: 1, stride: 2, pad: 0 },
+        ConvLayer { name: "C11", b: 1, cin: 512, cout: 512, h: 7, w: 7, k: 3, stride: 1, pad: 1 },
+    ]
+}
+
+/// Look up a layer by its Table III name.
+pub fn layer_by_name(name: &str) -> Option<ConvLayer> {
+    resnet18_layers().into_iter().find(|l| l.name.eq_ignore_ascii_case(name))
+}
+
+/// The GEMM sizes of Tables IV/V.
+pub const GEMM_TABLE_SIZES: [usize; 5] = [32, 128, 256, 512, 1024];
+
+/// The finer sweep used for Figs 1 & 9 (log-spaced).
+pub fn gemm_sweep_sizes() -> Vec<usize> {
+    vec![16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024]
+}
+
+/// Bit widths evaluated for bit-serial operators (Figs 4-8).
+pub const BITSERIAL_BITS: [u32; 4] = [1, 2, 4, 8];
+
+/// GEMM MACs (eq. 2): N^3 for square matrices.
+pub fn gemm_macs(n: usize) -> u64 {
+    (n as u64).pow(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table III MAC column, verbatim.
+    const PAPER_MACS: [(&str, u64); 10] = [
+        ("C2", 124_010_496),
+        ("C3", 62_005_248),
+        ("C4", 6_422_528),
+        ("C5", 132_710_400),
+        ("C6", 66_355_200),
+        ("C7", 6_422_528),
+        ("C8", 150_994_944),
+        ("C9", 75_497_472),
+        ("C10", 6_422_528),
+        ("C11", 191_102_976),
+    ];
+
+    #[test]
+    fn macs_match_paper_table_iii() {
+        for (name, expect) in PAPER_MACS {
+            let l = layer_by_name(name).unwrap();
+            assert_eq!(l.macs(), expect, "layer {name}");
+        }
+    }
+
+    #[test]
+    fn real_geometry_is_sane() {
+        let c2 = layer_by_name("C2").unwrap();
+        assert_eq!((c2.ho(), c2.wo()), (56, 56));
+        let c3 = layer_by_name("C3").unwrap();
+        assert_eq!((c3.ho(), c3.wo()), (28, 28));
+        let c4 = layer_by_name("C4").unwrap();
+        assert_eq!((c4.ho(), c4.wo()), (28, 28));
+        let c11 = layer_by_name("C11").unwrap();
+        assert_eq!((c11.ho(), c11.wo()), (7, 7));
+    }
+
+    #[test]
+    fn eq3_vs_exact_differ_only_for_padded_3x3() {
+        // 1x1 stride-2 layers: eq. (3) and exact agree
+        for name in ["C4", "C7", "C10"] {
+            let l = layer_by_name(name).unwrap();
+            assert_eq!(l.macs(), l.macs_exact(), "{name}");
+        }
+        // 3x3 layers over-count by the padding ring
+        let c2 = layer_by_name("C2").unwrap();
+        assert!(c2.macs() > c2.macs_exact());
+    }
+
+    #[test]
+    fn model_bytes_is_4x_macs_for_f32() {
+        let c5 = layer_by_name("C5").unwrap();
+        assert_eq!(c5.model_bytes_read(4.0), c5.macs() as f64 * 4.0);
+    }
+
+    #[test]
+    fn gemm_macs_cubic() {
+        assert_eq!(gemm_macs(128), 128u64.pow(3));
+    }
+}

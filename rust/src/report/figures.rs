@@ -1,0 +1,471 @@
+//! Figure data generators: Figs 1–9.
+//!
+//! Each function runs the needed pipeline sweeps, assembles the exact data
+//! series the paper plots, writes a CSV under `results/`, and returns the
+//! series so callers (CLI, examples, tests) can check the qualitative
+//! shape.  No plotting — CSVs re-plot with any tool.
+
+use anyhow::Result;
+
+use crate::analysis::bounds::{gemm_bounds, workload_bounds, BoundSet};
+use crate::analysis::classify::correlate_bounds;
+use crate::analysis::required_bw::{bitserial_d, required_bandwidth};
+use crate::coordinator::pipeline::{
+    bitserial_equiv_n, default_conv_schedule, default_tuned_schedule, Pipeline,
+};
+use crate::hw::{profile_by_name, CpuSpec, MemLevel};
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::{self, gemm_macs};
+use crate::util::csv::Csv;
+
+fn sim_gemm_key(cpu: &CpuSpec, n: usize, s: GemmSchedule) -> String {
+    format!("sim_gemm/{}/n{}/b{}x{}x{}u{}/e32", cpu.name, n, s.bm, s.bn, s.bk, s.unroll)
+}
+
+/// Fig 1: execution time vs matrix size with hardware bound lines.
+pub struct Fig1 {
+    pub sizes: Vec<usize>,
+    pub tuned_s: Vec<f64>,
+    pub naive_s: Vec<f64>,
+    pub bounds: Vec<BoundSet>,
+    /// Which bound line best explains the tuned times (expected: L1-read).
+    pub best_bound: String,
+}
+
+pub fn fig1(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig1, Csv)> {
+    let cpu = profile_by_name(profile)?.cpu;
+    let sizes = workloads::gemm_sweep_sizes();
+    pipeline.gemm_table(profile, &sizes)?;
+
+    let mut csv = Csv::new(&[
+        "n", "tuned_s", "naive_s", "compute_bound_s", "l1_read_s", "l2_read_s", "ram_read_s",
+    ]);
+    let mut tuned_s = Vec::new();
+    let mut naive_s = Vec::new();
+    let mut bounds = Vec::new();
+    for &n in &sizes {
+        let t = pipeline
+            .store
+            .seconds(&sim_gemm_key(&cpu, n, default_tuned_schedule()))
+            .unwrap_or(f64::NAN);
+        let nv = pipeline
+            .store
+            .seconds(&sim_gemm_key(&cpu, n, GemmSchedule::naive()))
+            .unwrap_or(f64::NAN);
+        let b = gemm_bounds(&cpu, n);
+        csv.row(vec![
+            n.to_string(),
+            format!("{t:.6e}"),
+            format!("{nv:.6e}"),
+            format!("{:.6e}", b.compute_s),
+            format!("{:.6e}", b.l1_read_s),
+            format!("{:.6e}", b.l2_read_s),
+            format!("{:.6e}", b.ram_read_s),
+        ]);
+        tuned_s.push(t);
+        naive_s.push(nv);
+        bounds.push(b);
+    }
+    // correlate only the N >= 100 regime like the paper
+    let big: Vec<usize> = sizes
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n >= 100)
+        .map(|(i, _)| i)
+        .collect();
+    let m: Vec<f64> = big.iter().map(|&i| tuned_s[i]).collect();
+    let bs: Vec<BoundSet> = big.iter().map(|&i| bounds[i]).collect();
+    let rep = correlate_bounds(&m, &bs);
+    Ok((
+        Fig1 {
+            sizes,
+            tuned_s,
+            naive_s,
+            bounds,
+            best_bound: rep.best,
+        },
+        csv,
+    ))
+}
+
+/// Fig 2/3: conv layer times (fig2) and sorted GFLOP/s (fig3) vs bounds.
+pub struct Fig23 {
+    pub layers: Vec<String>,
+    pub measured_s: Vec<f64>,
+    pub bounds: Vec<BoundSet>,
+    /// (layer, gflops) sorted descending — the Fig 3 ordering.
+    pub sorted_perf: Vec<(String, f64)>,
+}
+
+pub fn fig2_fig3(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig23, Csv)> {
+    let cpu = profile_by_name(profile)?.cpu;
+    let layers = pipeline.conv_layers(profile)?;
+    let s = default_conv_schedule();
+    let mut csv = Csv::new(&[
+        "layer", "macs", "measured_s", "compute_bound_s", "l1_read_s", "l2_read_s", "ram_read_s",
+        "gflops",
+    ]);
+    let mut names = Vec::new();
+    let mut measured = Vec::new();
+    let mut bounds = Vec::new();
+    let mut perf = Vec::new();
+    for l in &layers {
+        let key = format!("sim_conv/{}/{}/co{}r{}/e32", cpu.name, l.name, s.bco, s.brow);
+        let t = pipeline.store.seconds(&key).unwrap_or(f64::NAN);
+        let b = workload_bounds(&cpu, l.macs(), 4.0, 32);
+        let gf = 2.0 * l.macs() as f64 / t / 1e9;
+        csv.row(vec![
+            l.name.into(),
+            l.macs().to_string(),
+            format!("{t:.6e}"),
+            format!("{:.6e}", b.compute_s),
+            format!("{:.6e}", b.l1_read_s),
+            format!("{:.6e}", b.l2_read_s),
+            format!("{:.6e}", b.ram_read_s),
+            format!("{gf:.3}"),
+        ]);
+        names.push(l.name.to_string());
+        measured.push(t);
+        bounds.push(b);
+        perf.push((l.name.to_string(), gf));
+    }
+    perf.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    Ok((
+        Fig23 {
+            layers: names,
+            measured_s: measured,
+            bounds,
+            sorted_perf: perf,
+        },
+        csv,
+    ))
+}
+
+/// Fig 4/5: bit-serial GEMM performance vs size + required bandwidth.
+pub struct Fig45 {
+    /// (bits, unipolar, size, gops, bw_req bytes/s)
+    pub points: Vec<(usize, bool, usize, f64, f64)>,
+    pub l1_bw: f64,
+}
+
+pub fn fig4_fig5(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig45, Csv, Csv)> {
+    let cpu = profile_by_name(profile)?.cpu;
+    let sizes = vec![128, 256, 512, 1024, 2048, 4096, 8192];
+    let bits = vec![1usize, 2, 4, 8];
+    pipeline.bitserial_gemm_sweep(profile, &sizes, &bits)?;
+
+    let mut csv4 = Csv::new(&["bits", "polarity", "n", "gops"]);
+    let mut csv5 = Csv::new(&["bits", "polarity", "n", "bw_req_mibs", "l1_bw_mibs"]);
+    let l1_bw = cpu.read_bw_bytes(MemLevel::L1);
+    let mut points = Vec::new();
+    for &b in &bits {
+        for unipolar in [true, false] {
+            for &n in &sizes {
+                let key = format!(
+                    "sim_bs/{}/n{}/a{}w{}/{}",
+                    cpu.name,
+                    n,
+                    b,
+                    b,
+                    if unipolar { "uni" } else { "bi" }
+                );
+                let t = pipeline.store.seconds(&key).unwrap_or(f64::NAN);
+                let gops = 2.0 * gemm_macs(n) as f64 / t / 1e9;
+                let bw = required_bandwidth(gops * 1e9, bitserial_d(b as u32)).bw_req;
+                csv4.row(vec![
+                    b.to_string(),
+                    polarity(unipolar).into(),
+                    n.to_string(),
+                    format!("{gops:.3}"),
+                ]);
+                csv5.row(vec![
+                    b.to_string(),
+                    polarity(unipolar).into(),
+                    n.to_string(),
+                    format!("{:.0}", bw / (1 << 20) as f64),
+                    format!("{:.0}", l1_bw / (1 << 20) as f64),
+                ]);
+                points.push((b, unipolar, n, gops, bw));
+            }
+        }
+    }
+    Ok((Fig45 { points, l1_bw }, csv4, csv5))
+}
+
+fn polarity(unipolar: bool) -> &'static str {
+    if unipolar {
+        "unipolar"
+    } else {
+        "bipolar"
+    }
+}
+
+/// Fig 6/7/8: quantized conv speedups, required bandwidth and GFLOP/s.
+pub struct Fig678 {
+    /// per layer: (name, f32_s, qnn8_s, map bits -> bitserial_s (unipolar))
+    pub rows: Vec<QuantRow>,
+    pub l1_bw: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantRow {
+    pub layer: String,
+    pub macs: u64,
+    pub f32_s: f64,
+    pub qnn8_s: f64,
+    /// (bits, unipolar seconds, bipolar seconds)
+    pub bitserial_s: Vec<(usize, f64, f64)>,
+}
+
+impl QuantRow {
+    pub fn speedup_qnn(&self) -> f64 {
+        self.f32_s / self.qnn8_s
+    }
+
+    pub fn speedup_bits(&self, bits: usize, unipolar: bool) -> Option<f64> {
+        self.bitserial_s
+            .iter()
+            .find(|(b, _, _)| *b == bits)
+            .map(|(_, u, bi)| self.f32_s / if unipolar { *u } else { *bi })
+    }
+}
+
+pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678, Csv, Csv, Csv)> {
+    let cpu = profile_by_name(profile)?.cpu;
+    let bits = vec![1usize, 2, 4, 8];
+    pipeline.conv_layers(profile)?;
+    pipeline.quantized_conv(profile, &bits)?;
+
+    let s = default_conv_schedule();
+    let mut rows = Vec::new();
+    for l in workloads::resnet18_layers() {
+        let f32_key = format!("sim_conv/{}/{}/co{}r{}/e32", cpu.name, l.name, s.bco, s.brow);
+        let qnn_key = format!("sim_conv/{}/{}/co{}r{}/e8", cpu.name, l.name, s.bco, s.brow);
+        let f32_s = pipeline.store.seconds(&f32_key).unwrap_or(f64::NAN);
+        let qnn8_s = pipeline.store.seconds(&qnn_key).unwrap_or(f64::NAN);
+        let eq_n = bitserial_equiv_n(&l);
+        // scale the equivalent-GEMM time to the layer's true MAC count
+        let scale = l.macs() as f64 / (gemm_macs(eq_n) as f64);
+        let mut bss = Vec::new();
+        for &b in &bits {
+            let uni_key = format!("sim_bs/{}/n{}/a{}w{}/uni", cpu.name, eq_n, b, b);
+            let bi_key = format!("sim_bs/{}/n{}/a{}w{}/bi", cpu.name, eq_n, b, b);
+            // NHWC small-image penalty (§V-C): packing efficiency collapses
+            // when the spatial extent is small (C11-like layers)
+            let nhwc_penalty = if l.ho() * l.wo() < 128 { 2.0 } else { 1.0 };
+            let uni = pipeline.store.seconds(&uni_key).unwrap_or(f64::NAN) * scale * nhwc_penalty;
+            let bi = pipeline.store.seconds(&bi_key).unwrap_or(f64::NAN) * scale * nhwc_penalty;
+            bss.push((b, uni, bi));
+        }
+        rows.push(QuantRow {
+            layer: l.name.to_string(),
+            macs: l.macs(),
+            f32_s,
+            qnn8_s,
+            bitserial_s: bss,
+        });
+    }
+
+    let mut csv6 = Csv::new(&["layer", "qnn8_speedup", "bs1_uni", "bs2_uni", "bs4_uni", "bs8_uni"]);
+    let mut csv7 = Csv::new(&["layer", "dtype", "bw_req_mibs", "l1_bw_mibs"]);
+    let mut csv8 = Csv::new(&["layer", "f32_gflops", "qnn8_gflops", "bs1_bi_gops", "bs2_bi_gops", "bs8_bi_gops"]);
+    let l1_bw = cpu.read_bw_bytes(MemLevel::L1);
+    for r in &rows {
+        csv6.row(vec![
+            r.layer.clone(),
+            format!("{:.2}", r.speedup_qnn()),
+            format!("{:.2}", r.speedup_bits(1, true).unwrap_or(f64::NAN)),
+            format!("{:.2}", r.speedup_bits(2, true).unwrap_or(f64::NAN)),
+            format!("{:.2}", r.speedup_bits(4, true).unwrap_or(f64::NAN)),
+            format!("{:.2}", r.speedup_bits(8, true).unwrap_or(f64::NAN)),
+        ]);
+        let flops = 2.0 * r.macs as f64;
+        for (label, secs, d) in [
+            ("f32", r.f32_s, 4.0),
+            ("qnn8", r.qnn8_s, 1.0),
+            ("bs2", r.bitserial_s.iter().find(|(b, _, _)| *b == 2).map(|x| x.1).unwrap_or(f64::NAN), 0.25),
+        ] {
+            let bw = required_bandwidth(flops / secs, d).bw_req;
+            csv7.row(vec![
+                r.layer.clone(),
+                label.into(),
+                format!("{:.0}", bw / (1 << 20) as f64),
+                format!("{:.0}", l1_bw / (1 << 20) as f64),
+            ]);
+        }
+        let gf = |secs: f64| flops / secs / 1e9;
+        let bs = |bits: usize| {
+            r.bitserial_s
+                .iter()
+                .find(|(b, _, _)| *b == bits)
+                .map(|x| gf(x.2))
+                .unwrap_or(f64::NAN)
+        };
+        csv8.row(vec![
+            r.layer.clone(),
+            format!("{:.2}", gf(r.f32_s)),
+            format!("{:.2}", gf(r.qnn8_s)),
+            format!("{:.2}", bs(1)),
+            format!("{:.2}", bs(2)),
+            format!("{:.2}", bs(8)),
+        ]);
+    }
+    Ok((Fig678 { rows, l1_bw }, csv6, csv7, csv8))
+}
+
+/// Fig 9: GEMM GFLOP/s over size for naive/tuned/blas (the appendix plot).
+pub struct Fig9 {
+    pub sizes: Vec<usize>,
+    pub tuned_gflops: Vec<f64>,
+    pub naive_gflops: Vec<f64>,
+    pub blas_gflops: Vec<f64>,
+    pub peak_gflops: f64,
+}
+
+pub fn fig9(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig9, Csv)> {
+    let cpu = profile_by_name(profile)?.cpu;
+    let sizes = workloads::gemm_sweep_sizes();
+    pipeline.gemm_table(profile, &sizes)?;
+    let mut csv = Csv::new(&["n", "tuned_gflops", "naive_gflops", "blas_gflops", "peak_gflops"]);
+    let gf = |secs: f64, n: usize| 2.0 * gemm_macs(n) as f64 / secs / 1e9;
+    let peak = cpu.peak_flops(32) / 1e9;
+    let mut tuned = Vec::new();
+    let mut naive = Vec::new();
+    let mut blas = Vec::new();
+    for &n in &sizes {
+        let t = pipeline
+            .store
+            .seconds(&sim_gemm_key(&cpu, n, default_tuned_schedule()))
+            .map(|s| gf(s, n))
+            .unwrap_or(f64::NAN);
+        let nv = pipeline
+            .store
+            .seconds(&sim_gemm_key(&cpu, n, GemmSchedule::naive()))
+            .map(|s| gf(s, n))
+            .unwrap_or(f64::NAN);
+        let bl = gf(
+            crate::sim::timing::simulate_gemm_time(&cpu, n, n, n, GemmSchedule::new(4, 16, 256, 4), 32)
+                .total_s,
+            n,
+        );
+        csv.row(vec![
+            n.to_string(),
+            format!("{t:.3}"),
+            format!("{nv:.3}"),
+            format!("{bl:.3}"),
+            format!("{peak:.1}"),
+        ]);
+        tuned.push(t);
+        naive.push(nv);
+        blas.push(bl);
+    }
+    Ok((
+        Fig9 {
+            sizes,
+            tuned_gflops: tuned,
+            naive_gflops: naive,
+            blas_gflops: blas,
+            peak_gflops: peak,
+        },
+        csv,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::PipelineConfig;
+
+    fn quick_pipeline() -> Pipeline {
+        Pipeline::new(PipelineConfig {
+            n_workers: 2,
+            tune_trials: 8,
+            skip_native: true,
+            native_max_n: 0,
+        })
+    }
+
+    #[test]
+    fn fig1_attributes_tuned_gemm_to_l1() {
+        let mut p = quick_pipeline();
+        let (f, csv) = fig1(&mut p, "a53").unwrap();
+        assert_eq!(f.best_bound, "L1-read", "the paper's central claim");
+        assert_eq!(csv.len(), f.sizes.len());
+    }
+
+    #[test]
+    fn fig3_3x3_layers_lead_the_sorted_order() {
+        let mut p = quick_pipeline();
+        let (f, _) = fig2_fig3(&mut p, "a53").unwrap();
+        // the top of the sorted perf list must be 3x3 layers (C2/C5/C8/C11
+        // class), the bottom must contain 1x1 strided layers (C4/C7/C10)
+        let top = &f.sorted_perf[0].0;
+        let bottom = &f.sorted_perf.last().unwrap().0;
+        assert!(["C2", "C5", "C8", "C11"].contains(&top.as_str()), "top {top}");
+        assert!(["C4", "C7", "C10"].contains(&bottom.as_str()), "bottom {bottom}");
+    }
+
+    #[test]
+    fn fig4_lower_bits_peak_later_and_higher() {
+        let mut p = quick_pipeline();
+        let (f, _, _) = fig4_fig5(&mut p, "a72").unwrap();
+        let series = |bits: usize| -> Vec<(usize, f64)> {
+            f.points
+                .iter()
+                .filter(|(b, uni, _, _, _)| *b == bits && !*uni)
+                .map(|(_, _, n, g, _)| (*n, *g))
+                .collect()
+        };
+        let s1 = series(1);
+        let s8 = series(8);
+        // 1-bit at its largest size beats 8-bit anywhere
+        let max1 = s1.iter().map(|x| x.1).fold(0.0, f64::max);
+        let max8 = s8.iter().map(|x| x.1).fold(0.0, f64::max);
+        assert!(max1 > 2.0 * max8, "1-bit {max1} vs 8-bit {max8}");
+        // 1-bit grows from 128 to 4096 (peaks later)
+        assert!(s1.last().unwrap().1 > s1.first().unwrap().1 * 1.5);
+    }
+
+    #[test]
+    fn fig5_required_bw_below_l1() {
+        let mut p = quick_pipeline();
+        let (f, _, _) = fig4_fig5(&mut p, "a72").unwrap();
+        // paper: all bit-serial required bandwidths stay below the L1 line
+        for (bits, _, n, _, bw) in &f.points {
+            assert!(
+                *bw < f.l1_bw * 1.05,
+                "bits={bits} n={n}: bw {:.2e} vs L1 {:.2e}",
+                bw,
+                f.l1_bw
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_low_bit_speedups_best_and_c11_weak() {
+        let mut p = quick_pipeline();
+        let (f, ..) = fig6_fig7_fig8(&mut p, "a72").unwrap();
+        for r in &f.rows {
+            let s1 = r.speedup_bits(1, true).unwrap();
+            let s8 = r.speedup_bits(8, true).unwrap();
+            assert!(s1 > s8, "{}: 1-bit {s1} vs 8-bit {s8}", r.layer);
+        }
+        // C11 (7x7 image) must show a weaker bit-serial speedup than C2
+        let c2 = f.rows.iter().find(|r| r.layer == "C2").unwrap();
+        let c11 = f.rows.iter().find(|r| r.layer == "C11").unwrap();
+        assert!(
+            c2.speedup_bits(2, true).unwrap() > c11.speedup_bits(2, true).unwrap(),
+            "NHWC small-image penalty"
+        );
+    }
+
+    #[test]
+    fn fig9_tuned_above_naive_everywhere() {
+        let mut p = quick_pipeline();
+        let (f, _) = fig9(&mut p, "a72").unwrap();
+        for i in 0..f.sizes.len() {
+            assert!(f.tuned_gflops[i] > f.naive_gflops[i], "n={}", f.sizes[i]);
+            assert!(f.tuned_gflops[i] < f.peak_gflops);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Report generation: every table and figure of the paper.
+//!
+//! * [`paper`] — the published reference numbers (Tables I–V rows and the
+//!   qualitative expectations of the figures) for side-by-side columns.
+//! * [`tables`] — Tables I/II (bandwidths) and IV/V (GEMM GFLOP/s).
+//! * [`figures`] — Figs 1–9 data series as CSV + markdown summaries.
+//!
+//! Every renderer writes markdown to stdout-friendly strings and CSV rows
+//! under `results/`, and returns the data so tests can assert the *shape*
+//! (who wins, crossovers) matches the paper.
+
+pub mod figures;
+pub mod paper;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;

@@ -1,0 +1,129 @@
+//! Published reference numbers from the paper, verbatim.
+//!
+//! Used for the "paper" column of every report and asserted against in
+//! EXPERIMENTS.md.  Units: bandwidths MiB/s, performance GFLOP/s.
+
+/// Table I / II: (level, block size label, read MiB/s, write MiB/s).
+pub fn bandwidth_table(profile: &str) -> Vec<(&'static str, &'static str, f64, f64)> {
+    match profile {
+        "cortex-a53" => vec![
+            ("RAM", "16 MB", 2040.0, 1600.0),
+            ("L2", "256 KB", 7039.0, 3467.0),
+            ("L1", "4 KB", 14363.0, 23703.0),
+        ],
+        "cortex-a72" => vec![
+            ("RAM", "16 MB", 3661.0, 2984.0),
+            ("L2", "256 KB", 12934.0, 7407.0),
+            ("L1", "4 KB", 45733.0, 30423.0),
+        ],
+        _ => Vec::new(),
+    }
+}
+
+/// One row of Table IV/V: (N, openBLAS, naive, tuned, measured peak, theoretical peak).
+pub struct GemmRow {
+    pub n: usize,
+    pub openblas: f64,
+    pub naive: f64,
+    pub tuned: f64,
+    pub measured_peak: f64,
+    pub theoretical_peak: f64,
+}
+
+/// Table IV (Cortex-A53) in GFLOP/s.
+pub fn gemm_table_a53() -> Vec<GemmRow> {
+    [
+        (32, 1.07, 1.16, 4.43, 16.49),
+        (128, 4.96, 2.07, 6.58, 37.38),
+        (256, 4.71, 1.83, 6.93, 38.04),
+        (512, 4.87, 0.60, 5.06, 38.15),
+        (1024, 4.99, 0.54, 5.01, 38.18),
+    ]
+    .into_iter()
+    .map(|(n, blas, naive, tuned, peak)| GemmRow {
+        n,
+        openblas: blas,
+        naive,
+        tuned,
+        measured_peak: peak,
+        theoretical_peak: 38.4,
+    })
+    .collect()
+}
+
+/// Table V (Cortex-A72) in GFLOP/s.
+pub fn gemm_table_a72() -> Vec<GemmRow> {
+    [
+        (32, 3.01, 3.59, 9.20, 21.92),
+        (128, 14.22, 4.68, 16.72, 47.11),
+        (256, 14.86, 4.77, 17.24, 47.83),
+        (512, 14.33, 2.04, 17.99, 47.92),
+        (1024, 14.98, 1.36, 15.75, 47.93),
+    ]
+    .into_iter()
+    .map(|(n, blas, naive, tuned, peak)| GemmRow {
+        n,
+        openblas: blas,
+        naive,
+        tuned,
+        measured_peak: peak,
+        theoretical_peak: 48.0,
+    })
+    .collect()
+}
+
+pub fn gemm_table(profile: &str) -> Vec<GemmRow> {
+    match profile {
+        "cortex-a53" => gemm_table_a53(),
+        "cortex-a72" => gemm_table_a72(),
+        _ => Vec::new(),
+    }
+}
+
+/// The paper's qualitative figure expectations, used in report footers and
+/// asserted by the integration tests.
+pub mod expectations {
+    /// Fig 1: tuned GEMM times track the L1-read line for N >= 100.
+    pub const FIG1: &str = "measured time correlates with L1-cache-read bound (N >= 100)";
+    /// Fig 3: 3x3 convs reach higher GFLOP/s than 1x1; all far below peak.
+    pub const FIG3: &str = "3x3 layers outperform 1x1 per-FLOP; all layers cache-bound";
+    /// Fig 4: lower bit widths need larger matrices to peak.
+    pub const FIG4: &str = "lower bit widths reach peak only at larger N";
+    /// Fig 5/7: required bandwidth stays below L1 read bandwidth.
+    pub const FIG5: &str = "required bandwidth below L1 read bw: not cache-bound";
+    /// Fig 6: quantized speedups over f32; low-bit best; C11 bit-serial poor.
+    pub const FIG6: &str = "1-2 bit best speedups; NHWC bit-serial weak on small images (C11)";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_five_rows_and_peaks_match_eq1() {
+        let a53 = gemm_table_a53();
+        assert_eq!(a53.len(), 5);
+        assert!(a53.iter().all(|r| r.theoretical_peak == 38.4));
+        let a72 = gemm_table_a72();
+        assert!(a72.iter().all(|r| r.theoretical_peak == 48.0));
+    }
+
+    #[test]
+    fn paper_shape_tuned_beats_blas_beats_naive_midrange() {
+        for t in [gemm_table_a53(), gemm_table_a72()] {
+            for r in t.iter().filter(|r| r.n >= 128) {
+                assert!(r.tuned > r.openblas, "N={}", r.n);
+                assert!(r.openblas > r.naive, "N={}", r.n);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_rows_sorted_fastest_last() {
+        for p in ["cortex-a53", "cortex-a72"] {
+            let rows = bandwidth_table(p);
+            assert_eq!(rows.len(), 3);
+            assert!(rows[2].2 > rows[1].2 && rows[1].2 > rows[0].2);
+        }
+    }
+}

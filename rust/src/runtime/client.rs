@@ -1,0 +1,120 @@
+//! The PJRT execution wrapper.
+//!
+//! Owns one `PjRtClient` (CPU) and compiles HLO-text artifacts into loaded
+//! executables.  HLO *text* is the interchange format: jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `python/compile/aot.py`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Result of one artifact execution.
+pub struct RunOutput {
+    /// Flattened outputs (the AOT side lowers with `return_tuple=True`,
+    /// so a single result tuple is decomposed here).
+    pub outputs: Vec<Literal>,
+    /// Wall time of the `execute` call (host→device transfers included,
+    /// like the paper's TVM operator timings which include input copies).
+    pub seconds: f64,
+}
+
+/// A PJRT CPU runtime.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client (one per process is plenty).
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file into a loaded executable.
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>) -> Result<PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute with literal inputs, unwrap the result tuple, time the call.
+    pub fn run(&self, exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<RunOutput> {
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(inputs)?;
+        let buffers = &result[0];
+        let mut outputs = Vec::with_capacity(buffers.len());
+        for buf in buffers {
+            outputs.push(buf.to_literal_sync()?);
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        // return_tuple=True wraps everything in a 1-tuple
+        if outputs.len() == 1 {
+            if let Ok(parts) = outputs.pop().unwrap().to_tuple() {
+                outputs = parts;
+            }
+        }
+        Ok(RunOutput { outputs, seconds })
+    }
+
+    /// Execute `iters` times for timing (first call excluded by the
+    /// caller's warmup); returns per-iteration seconds.
+    pub fn time(&self, exe: &PjRtLoadedExecutable, inputs: &[Literal], iters: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        for _ in 0..iters.max(1) {
+            let result = exe.execute::<Literal>(inputs)?;
+            std::hint::black_box(&result);
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full round-trip tests live in rust/tests/runtime_artifacts.rs (they
+    // need `make artifacts`); here we only exercise client creation and a
+    // tiny inline HLO module.
+    const TINY_HLO: &str = r#"
+HloModule tiny.1
+
+ENTRY main.4 {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  add = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(add)
+}
+"#;
+
+    #[test]
+    fn client_and_inline_hlo_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let dir = std::env::temp_dir().join("cachebound_client_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.hlo.txt");
+        std::fs::write(&path, TINY_HLO).unwrap();
+        let exe = rt.compile_hlo_file(&path).unwrap();
+        let x = Literal::vec1(&[1f32, 2., 3., 4.]);
+        let y = Literal::vec1(&[10f32, 20., 30., 40.]);
+        let out = rt.run(&exe, &[x, y]).unwrap();
+        assert_eq!(out.outputs.len(), 1);
+        assert_eq!(out.outputs[0].to_vec::<f32>().unwrap(), vec![11f32, 22., 33., 44.]);
+        assert!(out.seconds > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,135 @@
+//! Deterministic artifact-input regeneration (the rust half of the
+//! SplitMix64 protocol defined in `python/compile/aot.py::gen_input`).
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use crate::util::rng::stream_at;
+
+use super::manifest::InputSpec;
+
+/// Materialize one input tensor as an XLA literal, bit-identical to what
+/// the AOT compiler used when recording the output checksums.
+pub fn generate_literal(spec: &InputSpec) -> Result<Literal> {
+    let n = spec.elements();
+    match parse_dtype(&spec.dtype)? {
+        Dtype::F32 => {
+            let data: Vec<f32> = (0..n as u64)
+                .map(|i| {
+                    let z = stream_at(spec.seed, i);
+                    (((z >> 40) as f64 / (1u64 << 24) as f64) * 2.0 - 1.0) as f32
+                })
+                .collect();
+            literal_from(ElementType::F32, &spec.shape, bytes_of(&data))
+        }
+        Dtype::I8 => {
+            let data: Vec<i8> = (0..n as u64)
+                .map(|i| (((stream_at(spec.seed, i) >> 40) % 15) as i64 - 7) as i8)
+                .collect();
+            literal_from(ElementType::S8, &spec.shape, bytes_of(&data))
+        }
+        Dtype::U32 => {
+            let data: Vec<u32> = (0..n as u64)
+                .map(|i| (stream_at(spec.seed, i) >> 32) as u32)
+                .collect();
+            literal_from(ElementType::U32, &spec.shape, bytes_of(&data))
+        }
+        Dtype::I32Unipolar(bits) => {
+            let data: Vec<i32> = (0..n as u64)
+                .map(|i| ((stream_at(spec.seed, i) >> 40) % (1u64 << bits)) as i32)
+                .collect();
+            literal_from(ElementType::S32, &spec.shape, bytes_of(&data))
+        }
+    }
+}
+
+/// Checksum of a result literal — must use f64 accumulation in the same
+/// element order as `aot.checksum` (row-major flat sum; addition is
+/// reassociated there too, so float sums agree to ~1e-3 relative).
+pub fn literal_checksum(lit: &Literal) -> Result<f64> {
+    let shape = lit.shape()?;
+    let prim = lit.element_type()?;
+    Ok(match prim {
+        ElementType::F32 => lit.to_vec::<f32>()?.iter().map(|&x| x as f64).sum(),
+        ElementType::S32 => lit.to_vec::<i32>()?.iter().map(|&x| x as f64).sum(),
+        ElementType::S8 => lit.to_vec::<i8>()?.iter().map(|&x| x as f64).sum(),
+        ElementType::U32 => lit.to_vec::<u32>()?.iter().map(|&x| x as f64).sum(),
+        other => bail!("unsupported output element type {other:?} (shape {shape:?})"),
+    })
+}
+
+enum Dtype {
+    F32,
+    I8,
+    U32,
+    I32Unipolar(u32),
+}
+
+fn parse_dtype(d: &str) -> Result<Dtype> {
+    if d == "f32" {
+        Ok(Dtype::F32)
+    } else if d == "i8" {
+        Ok(Dtype::I8)
+    } else if d == "u32" {
+        Ok(Dtype::U32)
+    } else if let Some(bits) = d.strip_prefix("i32u") {
+        Ok(Dtype::I32Unipolar(bits.parse()?))
+    } else {
+        bail!("unknown dtype spec '{d}'")
+    }
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn literal_from(ty: ElementType, shape: &[usize], bytes: &[u8]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(ty, shape, bytes)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: &str, seed: u64) -> InputSpec {
+        InputSpec {
+            shape: shape.to_vec(),
+            dtype: dtype.into(),
+            seed,
+        }
+    }
+
+    #[test]
+    fn f32_literal_matches_tensor_fill() {
+        let s = spec(&[8, 8], "f32", 42);
+        let lit = generate_literal(&s).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        let t = crate::operators::Tensor::<f32>::rand_f32(&[8, 8], 42);
+        assert_eq!(v, t.data);
+    }
+
+    #[test]
+    fn i8_and_u32_and_unipolar() {
+        let lit = generate_literal(&spec(&[100], "i8", 7)).unwrap();
+        let v = lit.to_vec::<i8>().unwrap();
+        assert!(v.iter().all(|&x| (-7..=7).contains(&x)));
+
+        let lit = generate_literal(&spec(&[100], "u32", 7)).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap().len(), 100);
+
+        let lit = generate_literal(&spec(&[100], "i32u3", 7)).unwrap();
+        let v = lit.to_vec::<i32>().unwrap();
+        assert!(v.iter().all(|&x| (0..8).contains(&x)));
+    }
+
+    #[test]
+    fn checksum_of_known_literal() {
+        let lit = Literal::vec1(&[1.5f32, 2.5, -1.0]);
+        assert_eq!(literal_checksum(&lit).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        assert!(generate_literal(&spec(&[2], "f64", 0)).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! `artifacts/manifest.json` parsing.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! contract between the build path and the runtime: file names, input
+//! shapes/dtypes/seeds, output checksums (the cross-language numerics
+//! test), and the workload grid (which the integration tests cross-check
+//! against `operators::workloads`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One input tensor: shape, dtype spec ("f32" | "i8" | "u32" | "i32u<bits>"),
+/// and the SplitMix64 seed for regeneration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub seed: u64,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One expected output: shape, numpy dtype name, checksum + exactness.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub checksum: f64,
+    pub exact: bool,
+}
+
+/// One lowered operator variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<OutputSpec>,
+    /// "gemm" | "conv" | "qnn_gemm" | "bitserial_gemm" | ...
+    pub kind: String,
+    /// MACs of the underlying workload (paper accounting).
+    pub macs: u64,
+    /// Raw metadata object for kind-specific fields (n, layer, bits, block).
+    pub meta: Value,
+}
+
+impl ArtifactSpec {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.macs as f64
+    }
+
+    /// Kind-specific metadata accessors.
+    pub fn meta_u64(&self, key: &str) -> Option<u64> {
+        self.meta.get(key).and_then(|v| v.as_u64().ok())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// (name, macs) pairs of the ResNet-18 workload grid for cross-checks.
+    pub resnet_macs: Vec<(String, u64)>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut artifacts = Vec::new();
+        for a in v.req("artifacts")?.as_arr()? {
+            let mut inputs = Vec::new();
+            for i in a.req("inputs")?.as_arr()? {
+                inputs.push(InputSpec {
+                    shape: i
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: i.req("dtype")?.as_str()?.to_string(),
+                    seed: i.req("seed")?.as_u64()?,
+                });
+            }
+            let mut outputs = Vec::new();
+            if let Some(outs) = a.get("outputs") {
+                for o in outs.as_arr()? {
+                    outputs.push(OutputSpec {
+                        shape: o
+                            .req("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|x| x.as_usize())
+                            .collect::<Result<_>>()?,
+                        dtype: o.req("dtype")?.as_str()?.to_string(),
+                        checksum: o.req("checksum")?.as_f64()?,
+                        exact: o.req("exact")?.as_bool()?,
+                    });
+                }
+            }
+            let meta = a.req("meta")?.clone();
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                inputs,
+                outputs,
+                kind: meta.req("kind")?.as_str()?.to_string(),
+                macs: meta.req("macs")?.as_u64()?,
+                meta,
+            });
+        }
+
+        let mut resnet_macs = Vec::new();
+        if let Some(w) = v.get("workloads") {
+            if let Some(layers) = w.get("resnet18_layers") {
+                for l in layers.as_arr()? {
+                    resnet_macs.push((
+                        l.req("name")?.as_str()?.to_string(),
+                        l.req("macs")?.as_u64()?,
+                    ));
+                }
+            }
+        }
+
+        Ok(Manifest { dir, artifacts, resnet_macs })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tiny_manifest(dir: &Path) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(
+            dir.join("manifest.json"),
+            r#"{
+ "version": 1,
+ "workloads": {"resnet18_layers": [{"name": "C2", "macs": 124010496}]},
+ "artifacts": [
+  {"name": "gemm_f32_tuned_n32", "file": "gemm_f32_tuned_n32.hlo.txt",
+   "inputs": [{"shape": [32, 32], "dtype": "f32", "seed": 99}],
+   "outputs": [{"shape": [32, 32], "dtype": "float32", "checksum": 1.5, "exact": false}],
+   "meta": {"kind": "gemm", "macs": 32768, "n": 32}}
+ ]
+}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("cachebound_manifest_test");
+        write_tiny_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.by_name("gemm_f32_tuned_n32").unwrap();
+        assert_eq!(a.kind, "gemm");
+        assert_eq!(a.macs, 32_768);
+        assert_eq!(a.inputs[0].shape, vec![32, 32]);
+        assert_eq!(a.inputs[0].seed, 99);
+        assert_eq!(a.outputs[0].checksum, 1.5);
+        assert_eq!(a.meta_u64("n"), Some(32));
+        assert_eq!(m.resnet_macs[0], ("C2".to_string(), 124_010_496));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

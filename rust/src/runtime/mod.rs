@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from Rust.
+//!
+//! This is the deployment half of the three-layer architecture: python/jax
+//! lowered every operator variant to `artifacts/*.hlo.txt` at build time
+//! (`make artifacts`); this module compiles them on the PJRT CPU client and
+//! runs them on the request path with **no python anywhere**.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (inputs, seeds,
+//!   expected output checksums, workload metadata).
+//! * [`inputs`] — regenerates each artifact's inputs bit-identically from
+//!   the SplitMix64 protocol shared with `aot.py`.
+//! * [`client`] — the `xla`-crate wrapper: HLO text → `XlaComputation` →
+//!   compiled executable → timed execution.
+//! * [`registry`] — an executable cache keyed by artifact name, compiling
+//!   lazily and exposing checksum validation + timing entry points.
+
+pub mod client;
+pub mod inputs;
+pub mod manifest;
+pub mod registry;
+
+pub use client::{RunOutput, Runtime};
+pub use manifest::{ArtifactSpec, InputSpec, Manifest, OutputSpec};
+pub use registry::Registry;

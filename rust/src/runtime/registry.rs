@@ -1,0 +1,157 @@
+//! Executable registry: lazy compile-once cache over the manifest.
+//!
+//! The coordinator asks the registry to validate or time artifacts by
+//! name; compiled executables and generated inputs are cached so sweeps
+//! over the same artifact (tuning, benches) pay compilation exactly once.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::util::bench::{BenchConfig, Measurement};
+use crate::util::stats::Summary;
+
+use super::client::Runtime;
+use super::inputs::{generate_literal, literal_checksum};
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Outcome of validating one artifact against its manifest checksums.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub name: String,
+    pub passed: bool,
+    /// (expected, actual, relative error) per output.
+    pub details: Vec<(f64, f64, f64)>,
+}
+
+pub struct Registry {
+    pub manifest: Manifest,
+    runtime: Runtime,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    input_cache: HashMap<String, Vec<Literal>>,
+}
+
+impl Registry {
+    pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Registry {
+            manifest: Manifest::load(artifacts_dir)?,
+            runtime: Runtime::cpu()?,
+            executables: HashMap::new(),
+            input_cache: HashMap::new(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn spec(&self, name: &str) -> Result<ArtifactSpec> {
+        self.manifest
+            .by_name(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Compile (or fetch cached) an executable.
+    pub fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self.spec(name)?;
+            let exe = self
+                .runtime
+                .compile_hlo_file(self.manifest.hlo_path(&spec))
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Generate (or fetch cached) the protocol inputs for an artifact.
+    pub fn inputs(&mut self, name: &str) -> Result<&[Literal]> {
+        if !self.input_cache.contains_key(name) {
+            let spec = self.spec(name)?;
+            let lits = spec
+                .inputs
+                .iter()
+                .map(generate_literal)
+                .collect::<Result<Vec<_>>>()?;
+            self.input_cache.insert(name.to_string(), lits);
+        }
+        Ok(&self.input_cache[name])
+    }
+
+    /// Execute once and compare output checksums with the manifest
+    /// (exact for integer outputs, 1e-3 relative for floats — different
+    /// XLA builds on the two sides).
+    pub fn validate(&mut self, name: &str) -> Result<Validation> {
+        let spec = self.spec(name)?;
+        self.executable(name)?;
+        self.inputs(name)?;
+        let exe = &self.executables[name];
+        let inputs = &self.input_cache[name];
+        let out = self.runtime.run(exe, inputs)?;
+        if out.outputs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: output arity {} != manifest {}",
+                out.outputs.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut details = Vec::new();
+        let mut passed = true;
+        for (lit, expect) in out.outputs.iter().zip(&spec.outputs) {
+            let actual = literal_checksum(lit)?;
+            let denom = expect.checksum.abs().max(1.0);
+            let rel = (actual - expect.checksum).abs() / denom;
+            let ok = if expect.exact { actual == expect.checksum } else { rel < 1e-3 };
+            passed &= ok;
+            details.push((expect.checksum, actual, rel));
+        }
+        Ok(Validation {
+            name: name.to_string(),
+            passed,
+            details,
+        })
+    }
+
+    /// Execute an artifact once on its protocol inputs.
+    pub fn run_protocol(&mut self, name: &str) -> Result<super::client::RunOutput> {
+        self.executable(name)?;
+        self.inputs(name)?;
+        let exe = &self.executables[name];
+        let inputs = &self.input_cache[name];
+        self.runtime.run(exe, inputs)
+    }
+
+    /// Time an artifact with the bench harness protocol.
+    pub fn measure(&mut self, name: &str, cfg: &BenchConfig) -> Result<Measurement> {
+        self.executable(name)?;
+        self.inputs(name)?;
+        let exe = &self.executables[name];
+        let inputs = &self.input_cache[name];
+        // warmup
+        let _ = self.runtime.run(exe, inputs)?;
+        let one = self.runtime.time(exe, inputs, 1)?;
+        let iters = ((cfg.target_sample_time.as_secs_f64() / one.max(1e-9)).ceil() as usize)
+            .clamp(1, 1 << 16);
+        let mut samples = Vec::with_capacity(cfg.samples);
+        for _ in 0..cfg.samples {
+            samples.push(self.runtime.time(exe, inputs, iters)?);
+        }
+        Ok(Measurement {
+            seconds: Summary::of(&samples),
+            iters_per_sample: iters as u64,
+            total_iters: (iters * cfg.samples) as u64,
+        })
+    }
+
+    /// Names of all artifacts, optionally filtered by kind.
+    pub fn names(&self, kind: Option<&str>) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| kind.is_none_or(|k| a.kind == k))
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}

@@ -1,0 +1,154 @@
+//! Two-level cache hierarchy (L1 → L2 → RAM) with per-level byte accounting.
+//!
+//! Replays an access stream and reports how many bytes were *served* by each
+//! level — the quantity the bandwidth roofline of `timing` consumes.  An
+//! element access that hits L1 is served by L1; an L1 miss that hits L2
+//! transfers one line L2→L1; an L2 miss transfers one line RAM→L2.
+//! Writebacks add write traffic at the receiving level.
+
+use crate::hw::CpuSpec;
+
+use super::cache::{AccessKind, SetAssocCache};
+
+/// Per-level served-byte and transfer counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LevelCounts {
+    /// Element bytes requested by the core (every access touches L1).
+    pub l1_bytes: u64,
+    /// Line bytes transferred L2 → L1 (L1 misses).
+    pub l2_bytes: u64,
+    /// Line bytes transferred RAM → L2 (L2 misses).
+    pub ram_bytes: u64,
+    /// Line bytes written back L1 → L2.
+    pub wb_l2_bytes: u64,
+    /// Line bytes written back L2 → RAM.
+    pub wb_ram_bytes: u64,
+    pub accesses: u64,
+}
+
+pub struct Hierarchy {
+    pub l1: SetAssocCache,
+    pub l2: SetAssocCache,
+    pub counts: LevelCounts,
+}
+
+impl Hierarchy {
+    pub fn new(cpu: &CpuSpec) -> Self {
+        Hierarchy {
+            l1: SetAssocCache::new(&cpu.l1),
+            l2: SetAssocCache::new(&cpu.l2),
+            counts: LevelCounts::default(),
+        }
+    }
+
+    /// One element access of `bytes` (1, 4, ...) at `addr`.
+    pub fn access(&mut self, addr: u64, bytes: u32, kind: AccessKind) {
+        self.counts.accesses += 1;
+        self.counts.l1_bytes += bytes as u64;
+        let l1_line = self.l1.line_bytes() as u64;
+        let l2_line = self.l2.line_bytes() as u64;
+
+        let r1 = self.l1.access(addr, kind);
+        if r1.hit {
+            return;
+        }
+        // L1 miss: line fill from L2
+        self.counts.l2_bytes += l1_line;
+        if r1.writeback {
+            self.counts.wb_l2_bytes += l1_line;
+            // dirty line lands in L2 (write-back cache absorbs it; modelled
+            // as an L2 write access at the victim address — approximated by
+            // the same address' line; traffic counted above)
+        }
+        let r2 = self.l2.access(addr, AccessKind::Read);
+        if !r2.hit {
+            self.counts.ram_bytes += l2_line;
+        }
+        if r2.writeback {
+            self.counts.wb_ram_bytes += l2_line;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.l1.reset();
+        self.l2.reset();
+        self.counts = LevelCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    #[test]
+    fn streaming_touches_all_levels() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        // stream 4 MB (beyond L2): every line misses both caches
+        let n = 4 * 1024 * 1024 / 4;
+        for i in 0..n as u64 {
+            h.access(i * 4, 4, AccessKind::Read);
+        }
+        assert_eq!(h.counts.l1_bytes, 4 * 1024 * 1024);
+        // one 64B line per 16 accesses from L2 and RAM
+        assert_eq!(h.counts.l2_bytes, 4 * 1024 * 1024);
+        assert_eq!(h.counts.ram_bytes, 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn l1_resident_working_set_stays_in_l1() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        // 8 KB working set (half of L1), swept 10 times
+        let elems = 8 * 1024 / 4;
+        for _ in 0..10 {
+            for i in 0..elems as u64 {
+                h.access(i * 4, 4, AccessKind::Read);
+            }
+        }
+        // only the first sweep misses
+        assert_eq!(h.counts.l2_bytes, 8 * 1024);
+        assert_eq!(h.counts.ram_bytes, 8 * 1024);
+        let total = h.counts.l1_bytes;
+        assert_eq!(total, 10 * 8 * 1024);
+    }
+
+    #[test]
+    fn l2_resident_working_set_misses_l1_hits_l2() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        // 128 KB (beyond 16KB L1, within 512KB L2), swept 4 times
+        let elems = 128 * 1024 / 4;
+        for _ in 0..4 {
+            for i in 0..elems as u64 {
+                h.access(i * 4, 4, AccessKind::Read);
+            }
+        }
+        // every sweep refills L1 from L2; only first sweep hits RAM
+        assert_eq!(h.counts.l2_bytes, 4 * 128 * 1024);
+        assert_eq!(h.counts.ram_bytes, 128 * 1024);
+    }
+
+    #[test]
+    fn writes_generate_writebacks() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        // dirty 64 KB (4x L1), then stream another 64 KB of writes:
+        // dirty L1 victims must be written back to L2.
+        let elems = 64 * 1024 / 4;
+        for i in 0..elems as u64 {
+            h.access(i * 4, 4, AccessKind::Write);
+        }
+        assert!(h.counts.wb_l2_bytes > 0, "expected L1 writebacks");
+    }
+
+    #[test]
+    fn reset_zeroes_counts() {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        h.access(0, 4, AccessKind::Read);
+        h.reset();
+        assert_eq!(h.counts, LevelCounts::default());
+    }
+}

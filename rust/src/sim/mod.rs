@@ -1,0 +1,29 @@
+//! Cache-hierarchy simulator — the stand-in for the paper's ARM boards.
+//!
+//! The reproduction has no Cortex-A53/A72 silicon, so "running on ARM" is
+//! replaced by two cooperating models, both parameterized by an
+//! [`crate::hw::CpuSpec`] calibrated to the paper's Tables I & II:
+//!
+//! * [`cache`] / [`hierarchy`]: a **trace-driven set-associative LRU
+//!   simulator**.  Operator loop nests emit address traces ([`trace`]) that
+//!   are replayed through L1→L2→RAM, producing per-level hit/byte counts.
+//!   Exact, but O(accesses) — used directly for small/medium workloads and
+//!   to *validate* the analytic model.
+//! * [`traffic`]: an **analytic blocked-traffic model** that computes the
+//!   same per-level byte counts in O(1) from the schedule's blocking
+//!   structure — used for the large workloads of Tables IV/V.
+//!
+//! [`timing`] turns per-level bytes into execution time via the paper's
+//! bandwidth roofline: `t = max(t_compute, bytes_lvl / bw_lvl)` over levels
+//! — exactly the bound lines of Figs 1–3.
+
+pub mod cache;
+pub mod hierarchy;
+pub mod timing;
+pub mod trace;
+pub mod traffic;
+
+pub use cache::{AccessKind, CacheStats, SetAssocCache};
+pub use hierarchy::{Hierarchy, LevelCounts};
+pub use timing::{simulate_operator_time, TimeBreakdown};
+pub use traffic::TrafficModel;

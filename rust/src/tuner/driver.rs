@@ -1,0 +1,196 @@
+//! The tune loop: propose → measure → update cost model → repeat.
+//!
+//! Mirrors AutoTVM's driver.  `TunerKind::Random` samples the space without
+//! replacement (the paper's fallback for bit-serial operators);
+//! `TunerKind::Gbt` retrains the boosted-tree cost model every batch and
+//! proposes the top-ranked unvisited configs (the XGBTuner).
+
+use anyhow::Result;
+
+use crate::util::rng::Xoshiro256;
+
+use super::gbt::Gbt;
+use super::measure::MeasureTarget;
+use super::space::SearchSpace;
+
+/// Tuner selection (§III-A: XGB for regular dtypes, random for bit-serial).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerKind {
+    Random,
+    Gbt,
+}
+
+/// One measured trial.
+#[derive(Clone, Debug)]
+pub struct Trial<C> {
+    pub index: usize,
+    pub config: C,
+    pub seconds: f64,
+}
+
+/// Result of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult<C> {
+    pub best_config: C,
+    pub best_seconds: f64,
+    pub trials: Vec<Trial<C>>,
+    pub space_size: usize,
+}
+
+impl<C: Copy> TuneResult<C> {
+    /// Best-so-far curve (for ablation plots: tuner quality over trials).
+    pub fn best_curve(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.trials
+            .iter()
+            .map(|t| {
+                best = best.min(t.seconds);
+                best
+            })
+            .collect()
+    }
+}
+
+/// Tuning driver.
+pub struct Tuner {
+    pub kind: TunerKind,
+    pub n_trials: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Tuner {
+    pub fn new(kind: TunerKind, n_trials: usize) -> Self {
+        Tuner {
+            kind,
+            n_trials,
+            batch: 8,
+            seed: 0xCAFE,
+        }
+    }
+}
+
+/// Run the tune loop over `space` measuring on `target`.
+pub fn tune<S, T>(tuner: &Tuner, space: &S, target: &mut T) -> Result<TuneResult<S::Config>>
+where
+    S: SearchSpace,
+    T: MeasureTarget<Config = S::Config>,
+{
+    assert!(!space.is_empty(), "empty search space");
+    let mut rng = Xoshiro256::new(tuner.seed);
+    let mut unvisited: Vec<usize> = (0..space.len()).collect();
+    rng.shuffle(&mut unvisited);
+    let budget = tuner.n_trials.min(space.len());
+
+    let mut trials: Vec<Trial<S::Config>> = Vec::with_capacity(budget);
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+
+    while trials.len() < budget {
+        let take = tuner.batch.min(budget - trials.len());
+        let picks: Vec<usize> = match tuner.kind {
+            TunerKind::Random => unvisited.drain(..take.min(unvisited.len())).collect(),
+            TunerKind::Gbt => {
+                if ys.len() < tuner.batch {
+                    // cold start: random batch
+                    unvisited.drain(..take.min(unvisited.len())).collect()
+                } else {
+                    let model = Gbt::fit(&xs, &ys, 40, 3, 0.3);
+                    let order =
+                        model.rank(&unvisited, |i| space.features(i), &mut rng, 0.05);
+                    let picked: Vec<usize> = order.into_iter().take(take).collect();
+                    unvisited.retain(|i| !picked.contains(i));
+                    picked
+                }
+            }
+        };
+        if picks.is_empty() {
+            break;
+        }
+        for idx in picks {
+            let config = space.config(idx);
+            let seconds = target.measure(config)?;
+            xs.push(space.features(idx));
+            // model log-time: spans decades, matches the ranking objective
+            ys.push(seconds.max(1e-12).ln());
+            trials.push(Trial { index: idx, config, seconds });
+        }
+    }
+
+    let best = trials
+        .iter()
+        .min_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap())
+        .expect("at least one trial");
+    Ok(TuneResult {
+        best_config: best.config,
+        best_seconds: best.seconds,
+        trials: trials.clone(),
+        space_size: space.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::tuner::measure::SimGemmTarget;
+    use crate::tuner::space::GemmSpace;
+    use crate::operators::gemm::GemmSchedule;
+
+    #[test]
+    fn random_tuner_finds_decent_config() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let space = GemmSpace::new(&cpu, 256, 256, 256);
+        let mut target = SimGemmTarget::square(&cpu, 256);
+        let res = tune(&Tuner::new(TunerKind::Random, 64), &space, &mut target).unwrap();
+        assert_eq!(res.trials.len(), 64);
+        // must beat the naive schedule
+        let naive = target.measure(GemmSchedule::naive()).unwrap();
+        assert!(res.best_seconds < naive, "{} vs naive {}", res.best_seconds, naive);
+    }
+
+    #[test]
+    fn gbt_tuner_converges_faster_than_random() {
+        // with the same trial budget, the model tuner's best should be at
+        // least as good as random's (both on the deterministic simulator)
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let space = GemmSpace::new(&cpu, 512, 512, 512);
+        let budget = 48;
+
+        let mut t1 = SimGemmTarget::square(&cpu, 512);
+        let r_rand = tune(&Tuner::new(TunerKind::Random, budget), &space, &mut t1).unwrap();
+        let mut t2 = SimGemmTarget::square(&cpu, 512);
+        let r_gbt = tune(&Tuner::new(TunerKind::Gbt, budget), &space, &mut t2).unwrap();
+
+        assert!(
+            r_gbt.best_seconds <= r_rand.best_seconds * 1.05,
+            "gbt {} vs random {}",
+            r_gbt.best_seconds,
+            r_rand.best_seconds
+        );
+    }
+
+    #[test]
+    fn best_curve_is_monotone() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let space = GemmSpace::new(&cpu, 128, 128, 128);
+        let mut target = SimGemmTarget::square(&cpu, 128);
+        let res = tune(&Tuner::new(TunerKind::Random, 32), &space, &mut target).unwrap();
+        let curve = res.best_curve();
+        assert!(curve.windows(2).all(|w| w[1] <= w[0]));
+    }
+
+    #[test]
+    fn trial_budget_capped_by_space() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let layer = crate::operators::workloads::layer_by_name("C11").unwrap();
+        let space = crate::tuner::space::ConvSpace::new(&cpu, layer);
+        let mut target = crate::tuner::measure::SimConvTarget {
+            cpu: cpu.clone(),
+            layer,
+            elem_bits: 32,
+        };
+        let res = tune(&Tuner::new(TunerKind::Random, 10_000), &space, &mut target).unwrap();
+        assert_eq!(res.trials.len(), space.len());
+    }
+}

@@ -1,0 +1,189 @@
+//! Measurement targets for the tune loop.
+//!
+//! AutoTVM measures candidate schedules on the device.  Our "devices":
+//!
+//! * [`NativeGemmTarget`] — run the schedule-parameterized native operator
+//!   on the host and time it (real measurements, host CPU);
+//! * [`SimGemmTarget`] / [`SimConvTarget`] — evaluate the ARM-calibrated
+//!   analytic simulator (instant; the A53/A72 stand-in);
+//! * [`ArtifactGemmTarget`] — execute real AOT codegen variants through
+//!   PJRT (only sizes with variant artifacts; see `workloads.GEMM_VARIANTS`).
+
+use anyhow::Result;
+
+use crate::hw::CpuSpec;
+use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::{self, GemmSchedule};
+use crate::operators::workloads::ConvLayer;
+use crate::operators::Tensor;
+use crate::sim::timing;
+use crate::util::bench::{measure, BenchConfig};
+
+/// Anything the tuner can measure: seconds for one config (lower = better).
+pub trait MeasureTarget {
+    type Config: Copy;
+
+    fn measure(&mut self, config: Self::Config) -> Result<f64>;
+
+    /// A human-readable label for logs.
+    fn label(&self) -> String;
+}
+
+/// Host-wallclock measurement of the native tiled GEMM.
+pub struct NativeGemmTarget {
+    pub a: Tensor<f32>,
+    pub b: Tensor<f32>,
+    pub cfg: BenchConfig,
+}
+
+impl NativeGemmTarget {
+    pub fn square(n: usize, seed: u64) -> Self {
+        NativeGemmTarget {
+            a: Tensor::rand_f32(&[n, n], seed),
+            b: Tensor::rand_f32(&[n, n], seed + 1),
+            cfg: BenchConfig::quick(),
+        }
+    }
+}
+
+impl MeasureTarget for NativeGemmTarget {
+    type Config = GemmSchedule;
+
+    fn measure(&mut self, config: GemmSchedule) -> Result<f64> {
+        let m = measure(&self.cfg, || gemm::tiled(&self.a, &self.b, config));
+        Ok(m.seconds.median)
+    }
+
+    fn label(&self) -> String {
+        format!("native-gemm {}x{}", self.a.shape[0], self.b.shape[1])
+    }
+}
+
+/// Simulator-backed GEMM target (the ARM boards).
+pub struct SimGemmTarget {
+    pub cpu: CpuSpec,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub elem_bits: usize,
+}
+
+impl SimGemmTarget {
+    pub fn square(cpu: &CpuSpec, n: usize) -> Self {
+        SimGemmTarget {
+            cpu: cpu.clone(),
+            m: n,
+            n,
+            k: n,
+            elem_bits: 32,
+        }
+    }
+}
+
+impl MeasureTarget for SimGemmTarget {
+    type Config = GemmSchedule;
+
+    fn measure(&mut self, config: GemmSchedule) -> Result<f64> {
+        Ok(timing::simulate_gemm_time(&self.cpu, self.m, self.n, self.k, config, self.elem_bits)
+            .total_s)
+    }
+
+    fn label(&self) -> String {
+        format!("sim-gemm {}x{}x{} on {}", self.m, self.n, self.k, self.cpu.name)
+    }
+}
+
+/// Simulator-backed conv target.
+pub struct SimConvTarget {
+    pub cpu: CpuSpec,
+    pub layer: ConvLayer,
+    pub elem_bits: usize,
+}
+
+impl MeasureTarget for SimConvTarget {
+    type Config = ConvSchedule;
+
+    fn measure(&mut self, config: ConvSchedule) -> Result<f64> {
+        Ok(timing::simulate_conv_time(&self.cpu, &self.layer, config, self.elem_bits).total_s)
+    }
+
+    fn label(&self) -> String {
+        format!("sim-conv {} on {}", self.layer.name, self.cpu.name)
+    }
+}
+
+/// Real-codegen target: artifact variants executed through PJRT.
+/// The schedule grid is fixed at AOT time (`workloads.GEMM_VARIANTS`).
+pub struct ArtifactGemmTarget<'r> {
+    pub registry: &'r mut crate::runtime::Registry,
+    pub n: usize,
+    pub cfg: BenchConfig,
+}
+
+impl ArtifactGemmTarget<'_> {
+    /// The artifact name for a variant block, if it was AOT-compiled.
+    pub fn artifact_name(&self, s: GemmSchedule) -> String {
+        format!("gemm_f32_var_n{}_b{}x{}x{}", self.n, s.bm, s.bn, s.bk)
+    }
+
+    pub fn available(&self, s: GemmSchedule) -> bool {
+        self.registry.manifest.by_name(&self.artifact_name(s)).is_some()
+    }
+}
+
+impl MeasureTarget for ArtifactGemmTarget<'_> {
+    type Config = GemmSchedule;
+
+    fn measure(&mut self, config: GemmSchedule) -> Result<f64> {
+        let name = self.artifact_name(config);
+        let m = self.registry.measure(&name, &self.cfg)?;
+        Ok(m.seconds.median)
+    }
+
+    fn label(&self) -> String {
+        format!("artifact-gemm n{}", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::operators::workloads::layer_by_name;
+
+    #[test]
+    fn sim_target_is_deterministic() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut t = SimGemmTarget::square(&cpu, 256);
+        let s = GemmSchedule::new(64, 64, 64, 4);
+        assert_eq!(t.measure(s).unwrap(), t.measure(s).unwrap());
+    }
+
+    #[test]
+    fn sim_target_prefers_vectorizable() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut t = SimGemmTarget::square(&cpu, 256);
+        let bad = t.measure(GemmSchedule::naive()).unwrap();
+        let good = t.measure(GemmSchedule::new(64, 64, 64, 4)).unwrap();
+        assert!(good < bad);
+    }
+
+    #[test]
+    fn native_target_runs() {
+        let mut t = NativeGemmTarget::square(48, 7);
+        let s = t.measure(GemmSchedule::new(16, 16, 16, 4)).unwrap();
+        assert!(s > 0.0);
+        assert!(t.label().contains("48"));
+    }
+
+    #[test]
+    fn conv_target_runs() {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let mut t = SimConvTarget {
+            cpu,
+            layer: layer_by_name("C8").unwrap(),
+            elem_bits: 32,
+        };
+        assert!(t.measure(ConvSchedule::new(16, 7)).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Auto-tuning — the AutoTVM analog (§III-A).
+//!
+//! The paper tunes every operator with AutoTVM: a parameterized schedule
+//! space, a measurement loop, and either the XGBoost cost-model tuner
+//! (regular dtypes) or the random tuner (bit-serial operators, whose space
+//! is too constrained for the model to matter — §III-A).  This module
+//! reproduces that machinery:
+//!
+//! * [`space`] — schedule search spaces (tiling factors, unroll) with
+//!   feature extraction for the cost model;
+//! * [`measure`] — measurement targets: native operators (host wallclock),
+//!   the cache simulator (ARM-calibrated), and AOT artifact variants
+//!   (real codegen through PJRT);
+//! * [`gbt`] — gradient-boosted regression trees: the XGBTuner stand-in;
+//! * [`driver`] — the tune loop: propose → measure → update → best.
+
+pub mod driver;
+pub mod gbt;
+pub mod measure;
+pub mod space;
+
+pub use driver::{tune, TuneResult, Tuner, TunerKind};
+pub use measure::{ArtifactGemmTarget, MeasureTarget, NativeGemmTarget, SimConvTarget, SimGemmTarget};
+pub use space::{ConvSpace, Feature, GemmSpace, SearchSpace};

@@ -1,0 +1,212 @@
+//! Schedule search spaces + feature extraction.
+//!
+//! A space enumerates concrete schedule configs (the AutoTVM "knobs") and
+//! converts each to a feature vector for the cost model.  Features are the
+//! knobs themselves plus derived cache-pressure terms (working-set / cache
+//! ratios) — the same kind of hand-engineered features AutoTVM's XGBoost
+//! tuner consumes.
+
+use crate::hw::CpuSpec;
+use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::ConvLayer;
+
+/// Feature vector for the cost model.
+pub type Feature = Vec<f64>;
+
+/// A search space over schedule configs of type `C`.
+pub trait SearchSpace {
+    type Config: Copy + std::fmt::Debug;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn config(&self, idx: usize) -> Self::Config;
+
+    /// Feature vector of config `idx` for the cost model.
+    fn features(&self, idx: usize) -> Feature;
+}
+
+/// Powers of two ≤ `cap` starting at `lo`.
+fn pow2s(lo: usize, cap: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut x = lo;
+    while x <= cap {
+        v.push(x);
+        x *= 2;
+    }
+    v
+}
+
+/// GEMM schedule space for an `m × n × k` problem on `cpu`.
+#[derive(Clone, Debug)]
+pub struct GemmSpace {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub cpu: CpuSpec,
+    bms: Vec<usize>,
+    bns: Vec<usize>,
+    bks: Vec<usize>,
+    unrolls: Vec<usize>,
+}
+
+impl GemmSpace {
+    pub fn new(cpu: &CpuSpec, m: usize, n: usize, k: usize) -> Self {
+        GemmSpace {
+            m,
+            n,
+            k,
+            cpu: cpu.clone(),
+            bms: pow2s(4, m.min(256)),
+            bns: pow2s(4, n.min(256)),
+            bks: pow2s(4, k.min(256)),
+            unrolls: vec![1, 2, 4, 8],
+        }
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.bms.len(), self.bns.len(), self.bks.len(), self.unrolls.len())
+    }
+}
+
+impl SearchSpace for GemmSpace {
+    type Config = GemmSchedule;
+
+    fn len(&self) -> usize {
+        let (a, b, c, d) = self.dims();
+        a * b * c * d
+    }
+
+    fn config(&self, idx: usize) -> GemmSchedule {
+        let (a, b, c, _d) = self.dims();
+        let bm = self.bms[idx % a];
+        let bn = self.bns[(idx / a) % b];
+        let bk = self.bks[(idx / (a * b)) % c];
+        let unroll = self.unrolls[(idx / (a * b * c)) % self.unrolls.len()];
+        GemmSchedule::new(bm, bn, bk, unroll)
+    }
+
+    fn features(&self, idx: usize) -> Feature {
+        let s = self.config(idx);
+        let ws = s.working_set_bytes(4) as f64;
+        let lanes = self.cpu.simd_lanes(32);
+        vec![
+            (s.bm as f64).log2(),
+            (s.bn as f64).log2(),
+            (s.bk as f64).log2(),
+            s.unroll as f64,
+            ws / self.cpu.l1.size_bytes as f64,
+            ws / self.cpu.l2.size_bytes as f64,
+            if (s.bn as f64) >= lanes && s.unroll >= 2 { 1.0 } else { 0.0 },
+            (s.bm * s.bn) as f64 / 4096.0, // accumulator tile pressure
+        ]
+    }
+}
+
+/// Conv schedule space for a layer.
+#[derive(Clone, Debug)]
+pub struct ConvSpace {
+    pub layer: ConvLayer,
+    pub cpu: CpuSpec,
+    bcos: Vec<usize>,
+    brows: Vec<usize>,
+}
+
+impl ConvSpace {
+    pub fn new(cpu: &CpuSpec, layer: ConvLayer) -> Self {
+        let mut bcos = pow2s(1, layer.cout.min(128));
+        if !bcos.contains(&layer.cout) && layer.cout <= 128 {
+            bcos.push(layer.cout);
+        }
+        let brows: Vec<usize> = [1usize, 2, 4, 7, 8, 14, 16, 28]
+            .iter()
+            .copied()
+            .filter(|&r| r <= layer.ho())
+            .collect();
+        ConvSpace {
+            layer,
+            cpu: cpu.clone(),
+            bcos,
+            brows,
+        }
+    }
+}
+
+impl SearchSpace for ConvSpace {
+    type Config = ConvSchedule;
+
+    fn len(&self) -> usize {
+        self.bcos.len() * self.brows.len()
+    }
+
+    fn config(&self, idx: usize) -> ConvSchedule {
+        let bco = self.bcos[idx % self.bcos.len()];
+        let brow = self.brows[(idx / self.bcos.len()) % self.brows.len()];
+        ConvSchedule::new(bco, brow)
+    }
+
+    fn features(&self, idx: usize) -> Feature {
+        let s = self.config(idx);
+        let ws = s.working_set_bytes(&self.layer, 4) as f64;
+        vec![
+            (s.bco as f64).log2(),
+            s.brow as f64,
+            ws / self.cpu.l1.size_bytes as f64,
+            ws / self.cpu.l2.size_bytes as f64,
+            (self.layer.wo() * s.brow) as f64 / 64.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::operators::workloads::layer_by_name;
+
+    #[test]
+    fn gemm_space_enumerates_unique_configs() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let sp = GemmSpace::new(&cpu, 128, 128, 128);
+        assert!(sp.len() > 100, "space size {}", sp.len());
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..sp.len() {
+            assert!(seen.insert(format!("{:?}", sp.config(i))), "dup at {i}");
+        }
+    }
+
+    #[test]
+    fn gemm_features_dimension_is_stable() {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let sp = GemmSpace::new(&cpu, 64, 64, 64);
+        let d = sp.features(0).len();
+        for i in 0..sp.len() {
+            assert_eq!(sp.features(i).len(), d);
+        }
+    }
+
+    #[test]
+    fn conv_space_respects_layer_geometry() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let layer = layer_by_name("C11").unwrap(); // ho = 7
+        let sp = ConvSpace::new(&cpu, layer);
+        for i in 0..sp.len() {
+            let c = sp.config(i);
+            assert!(c.brow <= 7, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn bitserial_like_space_is_small() {
+        // the paper notes the bit-serial space is "highly restricted";
+        // conv spaces here are naturally small too
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let layer = layer_by_name("C11").unwrap();
+        let sp = ConvSpace::new(&cpu, layer);
+        assert!(sp.len() < 64, "{}", sp.len());
+    }
+}

@@ -1,0 +1,172 @@
+//! Measurement harness — the criterion stand-in used by `cargo bench`
+//! targets and by the tuner's measurement loop.
+//!
+//! Protocol (mirrors AutoTVM's measure step): warm up until the operator is
+//! in steady state, then collect `samples` timed runs of `iters_per_sample`
+//! iterations each and summarize.  `iters_per_sample` auto-calibrates so one
+//! sample lasts ≳ `target_sample_time`, keeping timer overhead negligible
+//! for microsecond-scale operators (the paper's small-matrix regime).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Configuration for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub target_sample_time: Duration,
+    /// Hard cap on total time spent in one `measure` call.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            samples: 15,
+            target_sample_time: Duration::from_millis(20),
+            max_total: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for tuner inner loops (hundreds of configs).
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(10),
+            samples: 5,
+            target_sample_time: Duration::from_millis(5),
+            max_total: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of one measurement: per-iteration seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub seconds: Summary,
+    pub iters_per_sample: u64,
+    pub total_iters: u64,
+}
+
+impl Measurement {
+    /// Throughput in FLOP/s given the per-iteration FLOP count (2·MACs).
+    pub fn flops(&self, flop_per_iter: f64) -> f64 {
+        flop_per_iter / self.seconds.median
+    }
+}
+
+/// Measure a closure.  The closure should perform one full operator run and
+/// return a value that depends on the computation (to defeat DCE); we fold
+/// it into a black-box sink.
+pub fn measure<T, F: FnMut() -> T>(cfg: &BenchConfig, mut f: F) -> Measurement {
+    let started = Instant::now();
+
+    // Warmup + calibration of iters_per_sample.
+    let mut one = Duration::ZERO;
+    let mut warm_iters = 0u64;
+    while started.elapsed() < cfg.warmup || warm_iters < 2 {
+        let t0 = Instant::now();
+        sink(f());
+        one = t0.elapsed();
+        warm_iters += 1;
+        if started.elapsed() > cfg.max_total / 4 {
+            break;
+        }
+    }
+    let iters = if one >= cfg.target_sample_time {
+        1
+    } else {
+        let est = (cfg.target_sample_time.as_secs_f64() / one.as_secs_f64().max(1e-9))
+            .ceil() as u64;
+        est.clamp(1, 1 << 22)
+    };
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let mut total_iters = 0u64;
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink(f());
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        samples.push(dt);
+        total_iters += iters;
+        if started.elapsed() > cfg.max_total {
+            break;
+        }
+    }
+    Measurement {
+        seconds: Summary::of(&samples),
+        iters_per_sample: iters,
+        total_iters,
+    }
+}
+
+/// Opaque sink: prevents the optimizer from deleting the measured work.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One bench-report line in the style `name  median  (min … max)  unit/s`.
+pub fn report_line(name: &str, m: &Measurement, flop_per_iter: Option<f64>) -> String {
+    let s = &m.seconds;
+    let mut line = format!(
+        "{name:<44} {:>12}  ({} … {})",
+        super::table::fmt_time(s.median),
+        super::table::fmt_time(s.min),
+        super::table::fmt_time(s.max),
+    );
+    if let Some(fl) = flop_per_iter {
+        line.push_str(&format!("  {:>9} GFLOP/s", super::table::fmt_gflops(fl / s.median)));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            target_sample_time: Duration::from_micros(200),
+            max_total: Duration::from_secs(1),
+        };
+        let mut acc = 0u64;
+        let m = measure(&cfg, || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc)
+        });
+        assert!(m.seconds.median > 0.0);
+        assert!(m.total_iters > 0);
+    }
+
+    #[test]
+    fn flops_inverse_to_time() {
+        let m = Measurement {
+            seconds: Summary::of(&[0.5, 0.5, 0.5]),
+            iters_per_sample: 1,
+            total_iters: 3,
+        };
+        assert!((m.flops(1e9) - 2e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn report_line_contains_name_and_rate() {
+        let m = Measurement {
+            seconds: Summary::of(&[1e-3]),
+            iters_per_sample: 1,
+            total_iters: 1,
+        };
+        let line = report_line("gemm_n128", &m, Some(2.0 * 128f64.powi(3)));
+        assert!(line.contains("gemm_n128"));
+        assert!(line.contains("GFLOP/s"));
+    }
+}

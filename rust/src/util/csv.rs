@@ -1,0 +1,102 @@
+//! Tiny CSV writer — result series under `results/` are CSV so they can be
+//! re-plotted with any external tool (the repo has no plotting deps).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A CSV document under construction.
+#[derive(Clone, Debug, Default)]
+pub struct Csv {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(headers: &[&str]) -> Self {
+        Csv {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "csv row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.headers));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&escape_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+            .with_context(|| format!("writing csv {}", path.display()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into(), "plain".into()]);
+        c.row(vec!["2".into(), "has,comma".into()]);
+        c.row(vec!["3".into(), "has\"quote".into()]);
+        let s = c.to_string();
+        assert_eq!(
+            s,
+            "a,b\n1,plain\n2,\"has,comma\"\n3,\"has\"\"quote\"\n"
+        );
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cachebound_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&["x"]);
+        c.row(vec!["42".into()]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n42\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

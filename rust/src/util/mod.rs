@@ -1,0 +1,13 @@
+//! Dependency-free substrates: RNG, JSON, stats, tables, CSV, timing.
+//!
+//! The build environment is fully offline, so the framework ships its own
+//! minimal versions of what would normally be `rand`, `serde_json`,
+//! `criterion` and friends.  Each submodule is small, tested, and used
+//! across the coordinator, tuner, simulator and report layers.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

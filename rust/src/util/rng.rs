@@ -1,0 +1,164 @@
+//! SplitMix64 + xoshiro256** PRNGs.
+//!
+//! `SplitMix64` doubles as the **cross-language input protocol**: the AOT
+//! compiler (`python/compile/aot.py`) generates every artifact input as
+//! `mix(seed + (i+1)*GOLDEN)` and records output checksums in the manifest;
+//! `runtime::inputs` regenerates bit-identical tensors here.  Do not change
+//! the constants without changing both sides.
+
+/// The golden-ratio increment of SplitMix64.
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Finalizer of SplitMix64: a single avalanche of the state.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Element `i` (0-based) of the SplitMix64 stream for `seed` — matches
+/// `aot.splitmix64_stream(seed, n)[i]` exactly.
+#[inline]
+pub fn stream_at(seed: u64, i: u64) -> u64 {
+    mix(seed.wrapping_add(GOLDEN.wrapping_mul(i + 1)))
+}
+
+/// Sequential SplitMix64 generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        mix(self.state)
+    }
+}
+
+/// xoshiro256** — the workhorse RNG for tuning, workload generation and
+/// property tests (better equidistribution than SplitMix64 for long runs).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift (unbiased enough for
+    /// tuning/test purposes; n is always tiny here).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    #[inline]
+    pub fn f32_sym(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_vectors() {
+        // Same vectors asserted in python/tests/test_model_aot.py — the
+        // cross-language contract.
+        assert_eq!(stream_at(0, 0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(stream_at(0, 1), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(stream_at(0, 2), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn sequential_matches_indexed() {
+        let mut sm = SplitMix64::new(12345);
+        for i in 0..64 {
+            assert_eq!(sm.next_u64(), stream_at(12345, i));
+        }
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic_and_not_constant() {
+        let mut a = Xoshiro256::new(7);
+        let mut b = Xoshiro256::new(7);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Xoshiro256::new(3);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(11);
+        let mut v: Vec<u32> = (0..32).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+    }
+}

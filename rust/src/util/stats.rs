@@ -1,0 +1,152 @@
+//! Summary statistics for measurement runs.
+//!
+//! The paper reports single best-effort numbers; we keep full sample sets
+//! and report median + MAD (robust to scheduler noise on a shared host),
+//! plus min/mean/max for the bench harness output.
+
+/// Summary of a set of timing samples (seconds or any unit).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (scaled by 1.4826 for normal consistency).
+    pub mad: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile_sorted(&sorted, 50.0);
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0) * 1.4826;
+        Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            median,
+            mad,
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Pearson correlation of two equal-length series — used by the analysis
+/// layer to quantify "execution time strongly correlates with the L1 cache
+/// boundary" (paper §IV-B) instead of eyeballing the log-log plot.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Ordinary least squares in log-log space: returns (slope, intercept, r).
+/// Fig 1 is a log-log plot; time ~ c·N^slope, so slope≈3 for cubic scaling.
+pub fn loglog_fit(ns: &[f64], ts: &[f64]) -> (f64, f64, f64) {
+    let xs: Vec<f64> = ns.iter().map(|x| x.ln()).collect();
+    let ys: Vec<f64> = ts.iter().map(|x| x.ln()).collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(&ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let slope = num / den;
+    let intercept = my - slope * mx;
+    (slope, intercept, pearson(&xs, &ys))
+}
+
+/// Geometric mean — used for speedup aggregation across layers (Fig 6).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-12);
+        // median is robust to the outlier
+        assert!(s.median < s.mean);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglog_recovers_cubic() {
+        let ns = [32.0, 64.0, 128.0, 256.0, 512.0];
+        let ts: Vec<f64> = ns.iter().map(|n| 2e-9 * n * n * n).collect();
+        let (slope, _, r) = loglog_fit(&ns, &ts);
+        assert!((slope - 3.0).abs() < 1e-9, "slope {slope}");
+        assert!((r - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_of_constants() {
+        assert!((geomean(&[4.0, 4.0, 4.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

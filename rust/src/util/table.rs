@@ -1,0 +1,151 @@
+//! Markdown/ASCII table rendering for the paper's tables and figure data.
+//!
+//! Every `cachebound figN`/`tableN` command prints one of these and writes
+//! the same rows as CSV via `util::csv`.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub aligns: Vec<Align>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let widths = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push('|');
+        for (h, w) in self.headers.iter().zip(&widths) {
+            out.push_str(&format!(" {h:<w$} |"));
+        }
+        out.push_str("\n|");
+        for (a, w) in self.aligns.iter().zip(&widths) {
+            match a {
+                Align::Left => out.push_str(&format!("{:-<w$}--|", ":", w = w)),
+                Align::Right => out.push_str(&format!("-{:->w$}:|", "-", w = w)),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for ((c, w), a) in row.iter().zip(&widths).zip(&self.aligns) {
+                match a {
+                    Align::Left => out.push_str(&format!(" {c:<w$} |")),
+                    Align::Right => out.push_str(&format!(" {c:>w$} |")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        widths
+    }
+}
+
+/// Format seconds with an adaptive unit (the paper's plots span ns…s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a rate in GFLOP/s with paper-style precision.
+pub fn fmt_gflops(flops_per_sec: f64) -> String {
+    format!("{:.2}", flops_per_sec / 1e9)
+}
+
+/// Format bandwidth in MiB/s (the unit of paper Tables I & II).
+pub fn fmt_mibs(bytes_per_sec: f64) -> String {
+    format!("{:.0}", bytes_per_sec / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Demo", &["name", "value"]).align(&[Align::Left, Align::Right]);
+        t.row(vec!["alpha".into(), "1.5".into()]);
+        t.row(vec!["b".into(), "22".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| alpha |   1.5 |")); // value col right-aligned to width 5
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn time_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(3.2e-9), "3.2 ns");
+    }
+
+    #[test]
+    fn bandwidth_matches_paper_units() {
+        // Table I: 14363 MiB/s L1 read on A53
+        let bw = 14363.0 * 1024.0 * 1024.0;
+        assert_eq!(fmt_mibs(bw), "14363");
+    }
+}

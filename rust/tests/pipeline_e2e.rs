@@ -1,0 +1,80 @@
+//! End-to-end pipeline smoke: the full experiment grid on tiny budgets,
+//! including PJRT artifact jobs when `artifacts/` exists.
+
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::coordinator::{Job, JobSpec};
+use cachebound::runtime::Registry;
+
+fn tiny_config() -> PipelineConfig {
+    PipelineConfig {
+        n_workers: 2,
+        tune_trials: 6,
+        skip_native: true,
+        native_max_n: 0,
+    }
+}
+
+#[test]
+fn full_report_surface_runs_end_to_end() {
+    let mut p = Pipeline::new(tiny_config());
+    // every report entry point, in one pipeline, sharing the store
+    let (f1, _) = cachebound::report::fig1(&mut p, "a53").unwrap();
+    assert_eq!(f1.best_bound, "L1-read");
+    let (f23, _) = cachebound::report::fig2_fig3(&mut p, "a53").unwrap();
+    assert_eq!(f23.layers.len(), 10);
+    let (f45, _, _) = cachebound::report::fig4_fig5(&mut p, "a53").unwrap();
+    assert!(!f45.points.is_empty());
+    let (f678, ..) = cachebound::report::fig6_fig7_fig8(&mut p, "a53").unwrap();
+    assert_eq!(f678.rows.len(), 10);
+    let (f9, _) = cachebound::report::fig9(&mut p, "a53").unwrap();
+    assert_eq!(f9.sizes.len(), f9.tuned_gflops.len());
+    // the store accumulated everything without key collisions breaking it
+    assert!(p.store.len() > 100, "store has {} entries", p.store.len());
+}
+
+#[test]
+fn mixed_leader_worker_batch_with_registry() {
+    let Ok(reg) = Registry::open("artifacts") else {
+        eprintln!("skipping: no artifacts/");
+        return;
+    };
+    let mut p = Pipeline::new(tiny_config()).with_registry(reg);
+    let cpu = cachebound::hw::profile_by_name("a53").unwrap().cpu;
+    // interleave sim jobs (workers) and artifact jobs (leader)
+    let mut jobs = Vec::new();
+    for (i, n) in [64usize, 128].iter().enumerate() {
+        jobs.push(Job {
+            id: i as u64,
+            spec: JobSpec::SimGemm {
+                cpu: cpu.clone(),
+                n: *n,
+                schedule: cachebound::operators::gemm::GemmSchedule::new(64, 64, 64, 4),
+                elem_bits: 32,
+            },
+        });
+    }
+    jobs.push(Job {
+        id: 10,
+        spec: JobSpec::ArtifactValidate { name: "gemm_f32_tuned_n32".into() },
+    });
+    jobs.push(Job {
+        id: 11,
+        spec: JobSpec::ArtifactMeasure { name: "gemm_f32_tuned_n32".into() },
+    });
+    let completed = p.pool.run(jobs, p.registry.as_mut());
+    assert_eq!(completed.len(), 4);
+    for c in &completed {
+        assert!(!c.output.is_failure(), "{}: {:?}", c.key, c.output);
+    }
+}
+
+#[test]
+fn results_persist_and_reload() {
+    let mut p = Pipeline::new(tiny_config());
+    p.gemm_table("a72", &[64]).unwrap();
+    let path = std::env::temp_dir().join("cachebound_e2e_store.json");
+    p.store.save(&path).unwrap();
+    let loaded = cachebound::coordinator::ResultStore::load(&path).unwrap();
+    assert_eq!(loaded.len(), p.store.len());
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,320 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The environment is offline (no `proptest` crate), so this file carries a
+//! small self-contained harness: a seeded Xoshiro generator drives N random
+//! cases per property, and failures print the offending case for replay.
+
+use cachebound::coordinator::jobs::{Job, JobSpec};
+use cachebound::coordinator::pool::WorkerPool;
+use cachebound::hw::profile_by_name;
+use cachebound::operators::bitserial;
+use cachebound::operators::conv::{self, ConvSchedule};
+use cachebound::operators::gemm::{self, GemmSchedule};
+use cachebound::operators::tensor::max_abs_diff;
+use cachebound::operators::Tensor;
+use cachebound::sim::cache::{AccessKind, SetAssocCache};
+use cachebound::util::json;
+use cachebound::util::rng::Xoshiro256;
+
+/// Run `cases` random trials of `prop`, printing the case seed on failure.
+fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Xoshiro256)) {
+    for case in 0..cases {
+        let seed = 0xFEED_0000 + case as u64;
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cache_conservation_and_bounds() {
+    // hits + misses == accesses; evictions < misses; hit after touch.
+    forall("cache_conservation", 25, |rng| {
+        let spec = cachebound::hw::CacheLevelSpec {
+            size_bytes: 1024 << rng.below(3),
+            line_bytes: 32 << rng.below(2),
+            associativity: 1 + rng.below(4) as usize,
+            read_bw: 1.0,
+            write_bw: 1.0,
+            latency_cycles: 1,
+        };
+        // sets must be a power of two: size/(line*assoc)
+        if !(spec.size_bytes / (spec.line_bytes * spec.associativity)).is_power_of_two() {
+            return;
+        }
+        let mut c = SetAssocCache::new(&spec);
+        let accesses = 500 + rng.below(500);
+        for _ in 0..accesses {
+            let addr = rng.below(1 << 16);
+            let kind = if rng.below(4) == 0 { AccessKind::Write } else { AccessKind::Read };
+            c.access(addr, kind);
+        }
+        assert_eq!(c.stats.accesses(), accesses);
+        assert!(c.stats.evictions <= c.stats.misses());
+        assert!(c.stats.writebacks <= c.stats.evictions);
+        // immediate re-touch of the last address must hit
+        let addr = 4096;
+        c.access(addr, AccessKind::Read);
+        assert!(c.access(addr, AccessKind::Read).hit);
+    });
+}
+
+#[test]
+fn prop_cache_larger_is_never_worse() {
+    // For the same trace, doubling capacity (same line/assoc structure)
+    // cannot increase misses (LRU inclusion property for same-assoc).
+    forall("cache_monotone_capacity", 15, |rng| {
+        let line = 64;
+        let small = cachebound::hw::CacheLevelSpec {
+            size_bytes: 4096,
+            line_bytes: line,
+            associativity: 4096 / line, // fully associative -> LRU stack property
+            read_bw: 1.0,
+            write_bw: 1.0,
+            latency_cycles: 1,
+        };
+        let big = cachebound::hw::CacheLevelSpec {
+            size_bytes: 8192,
+            associativity: 8192 / line,
+            ..small
+        };
+        let mut cs = SetAssocCache::new(&small);
+        let mut cb = SetAssocCache::new(&big);
+        for _ in 0..2000 {
+            let addr = rng.below(1 << 14);
+            cs.access(addr, AccessKind::Read);
+            cb.access(addr, AccessKind::Read);
+        }
+        assert!(cb.stats.misses() <= cs.stats.misses());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Operator equivalences
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tiled_gemm_equals_naive() {
+    forall("tiled_gemm", 20, |rng| {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(40) as usize;
+        let a = Tensor::rand_f32(&[m, k], rng.next_u64());
+        let b = Tensor::rand_f32(&[k, n], rng.next_u64());
+        let s = GemmSchedule::new(
+            1 << rng.below(6),
+            1 << rng.below(6),
+            1 << rng.below(6),
+            1 + rng.below(8) as usize,
+        );
+        let c0 = gemm::naive(&a, &b);
+        let c1 = gemm::tiled(&a, &b, s);
+        assert!(max_abs_diff(&c0, &c1) < 1e-3, "m={m} k={k} n={n} {s:?}");
+    });
+}
+
+#[test]
+fn prop_spatial_pack_equals_naive_conv() {
+    forall("spatial_pack", 15, |rng| {
+        let cin = 1 + rng.below(6) as usize;
+        let cout = 1 + rng.below(8) as usize;
+        let h = 4 + rng.below(12) as usize;
+        let k = *rng.choose(&[1usize, 3]);
+        let stride = 1 + rng.below(2) as usize;
+        let pad = rng.below(k as u64 + 1) as usize;
+        if h + 2 * pad < k {
+            return;
+        }
+        let x = Tensor::rand_f32(&[1, cin, h, h], rng.next_u64());
+        let w = Tensor::rand_f32(&[cout, cin, k, k], rng.next_u64());
+        let s = ConvSchedule::new(1 + rng.below(8) as usize, 1 + rng.below(4) as usize);
+        let c0 = conv::naive(&x, &w, stride, pad);
+        let c1 = conv::spatial_pack(&x, &w, stride, pad, s);
+        assert!(
+            max_abs_diff(&c0, &c1) < 1e-3,
+            "cin={cin} cout={cout} h={h} k={k} s={stride} p={pad} {s:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_bitserial_pack_roundtrip_and_gemm() {
+    forall("bitserial", 20, |rng| {
+        let bits = 1 + rng.below(8) as usize;
+        let rows = 1 + rng.below(8) as usize;
+        let kw = 1 + rng.below(4) as usize;
+        let k = kw * 32;
+        let v = Tensor::rand_unipolar(&[rows, k], bits as u32, rng.next_u64());
+        let p = bitserial::pack_unipolar(&v, bits);
+        assert_eq!(bitserial::unpack_unipolar(&p), v);
+
+        // gemm against i64 reference
+        let w = Tensor::rand_unipolar(&[rows, k], bits as u32, rng.next_u64());
+        let wp = bitserial::pack_unipolar(&w, bits);
+        let out = bitserial::gemm_unipolar(&p, &wp);
+        for i in 0..rows {
+            for j in 0..rows {
+                let mut acc = 0i64;
+                for t in 0..k {
+                    acc += v.data[i * k + t] as i64 * w.data[j * k + t] as i64;
+                }
+                assert_eq!(out.data[i * rows + j] as i64, acc);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants (routing, batching, state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_completes_every_job_exactly_once() {
+    forall("pool_exactly_once", 8, |rng| {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let n_jobs = 1 + rng.below(24);
+        let jobs: Vec<Job> = (0..n_jobs)
+            .map(|id| Job {
+                id,
+                spec: if rng.below(5) == 0 {
+                    // leader-only jobs without a registry must fail but
+                    // still complete exactly once
+                    JobSpec::ArtifactValidate { name: format!("missing-{id}") }
+                } else {
+                    JobSpec::SimGemm {
+                        cpu: cpu.clone(),
+                        n: 32 << rng.below(3),
+                        schedule: GemmSchedule::new(
+                            8 << rng.below(4),
+                            8 << rng.below(4),
+                            8 << rng.below(4),
+                            1 + rng.below(4) as usize,
+                        ),
+                        elem_bits: 32,
+                    }
+                },
+            })
+            .collect();
+        let leader_ids: Vec<u64> =
+            jobs.iter().filter(|j| j.spec.leader_only()).map(|j| j.id).collect();
+        let pool = WorkerPool::new(1 + rng.below(4) as usize);
+        let done = pool.run(jobs, None);
+        assert_eq!(done.len(), n_jobs as usize);
+        let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n_jobs).collect::<Vec<_>>());
+        // routing invariant: leader-only jobs executed on the leader
+        for c in &done {
+            if leader_ids.contains(&c.id) {
+                assert_eq!(c.executed_on, "leader");
+            } else {
+                assert!(c.executed_on.starts_with("worker-"));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_result_store_ingest_is_keyed_correctly() {
+    forall("store_keys", 10, |rng| {
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let n_jobs = 1 + rng.below(16);
+        let jobs: Vec<Job> = (0..n_jobs)
+            .map(|id| Job {
+                id,
+                spec: JobSpec::SimGemm {
+                    cpu: cpu.clone(),
+                    n: 16 * (1 + id as usize), // unique n per job -> unique key
+                    schedule: GemmSchedule::new(64, 64, 64, 4),
+                    elem_bits: 32,
+                },
+            })
+            .collect();
+        let keys: Vec<String> = jobs.iter().map(|j| j.spec.key()).collect();
+        let pool = WorkerPool::new(2);
+        let done = pool.run(jobs, None);
+        let mut store = cachebound::coordinator::ResultStore::new();
+        store.ingest(&done);
+        assert_eq!(store.len(), n_jobs as usize);
+        for key in keys {
+            assert!(store.seconds(&key).is_some(), "missing {key}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip over random documents
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Xoshiro256, depth: usize) -> json::Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.below(2) == 0),
+            2 => {
+                // numbers the writer preserves exactly: moderate integers
+                // and dyadic fractions
+                let int = rng.below(1 << 40) as f64 - (1u64 << 39) as f64;
+                let frac = rng.below(16) as f64 / 16.0;
+                json::Value::Num(int + frac)
+            }
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                json::Value::Str(s)
+            }
+            4 => {
+                let len = rng.below(4) as usize;
+                json::Value::Arr((0..len).map(|_| random_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(4) as usize;
+                json::Value::Obj(
+                    (0..len)
+                        .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    forall("json_roundtrip", 50, |rng| {
+        let v = random_value(rng, 3);
+        let text = json::to_string_pretty(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("{e}: {text}"));
+        assert_eq!(back, v, "text: {text}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Timing-model sanity over random shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_simulated_time_positive_and_monotone_in_work() {
+    forall("timing_monotone", 20, |rng| {
+        let cpu = profile_by_name(*rng.choose(&["a53", "a72"])).unwrap().cpu;
+        let n = 32 << rng.below(4);
+        let s = GemmSchedule::new(
+            8 << rng.below(4),
+            8 << rng.below(4),
+            8 << rng.below(4),
+            1 + rng.below(8) as usize,
+        );
+        let t1 = cachebound::sim::timing::simulate_gemm_time(&cpu, n, n, n, s, 32).total_s;
+        let t2 = cachebound::sim::timing::simulate_gemm_time(&cpu, 2 * n, 2 * n, 2 * n, s, 32).total_s;
+        assert!(t1 > 0.0 && t2.is_finite());
+        assert!(t2 > t1, "8x work must take longer: {t1} vs {t2} (n={n}, {s:?})");
+    });
+}

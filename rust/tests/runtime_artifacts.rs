@@ -1,0 +1,187 @@
+//! Artifact runtime tests — require `make artifacts` to have run.
+//!
+//! Loads every HLO artifact through PJRT, checks the cross-language
+//! checksums, and cross-validates artifact outputs against the native
+//! operators on identical protocol inputs.  These are the tests proving
+//! all three layers compose: Pallas kernel → JAX graph → HLO text →
+//! PJRT executable → rust.
+
+use cachebound::operators::gemm;
+use cachebound::operators::Tensor;
+use cachebound::runtime::Registry;
+use cachebound::util::bench::BenchConfig;
+
+fn registry() -> Option<Registry> {
+    match Registry::open("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping artifact tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_artifact_validates() {
+    let Some(mut reg) = registry() else { return };
+    let names = reg.names(None);
+    assert!(names.len() >= 40, "expected the full catalog, got {}", names.len());
+    let mut failures = Vec::new();
+    for name in &names {
+        match reg.validate(name) {
+            Ok(v) if v.passed => {}
+            Ok(v) => failures.push(format!("{name}: checksum mismatch {:?}", v.details)),
+            Err(e) => failures.push(format!("{name}: {e:#}")),
+        }
+    }
+    assert!(failures.is_empty(), "{} failures:\n{}", failures.len(), failures.join("\n"));
+}
+
+#[test]
+fn gemm_artifact_matches_native_operator_elementwise() {
+    // The Pallas-tiled GEMM artifact and the native rust GEMM must produce
+    // the same numbers from the same SplitMix64 inputs.
+    let Some(mut reg) = registry() else { return };
+    let name = "gemm_f32_tuned_n128";
+    let spec = reg.manifest.by_name(name).expect("artifact present").clone();
+    let n = 128usize;
+
+    let out = reg.run_protocol(name).unwrap();
+    let artifact_result = out.outputs[0].to_vec::<f32>().unwrap();
+
+    let a = Tensor::<f32>::rand_f32(&[n, n], spec.inputs[0].seed);
+    let b = Tensor::<f32>::rand_f32(&[n, n], spec.inputs[1].seed);
+    let native = gemm::blocked(&a, &b);
+
+    let mut max_err = 0.0f32;
+    for (x, y) in artifact_result.iter().zip(&native.data) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 1e-2, "artifact vs native max err {max_err}");
+}
+
+#[test]
+fn qnn_artifact_is_bit_exact_with_native_int8() {
+    let Some(mut reg) = registry() else { return };
+    let name = "gemm_qnn8_n128";
+    let Some(spec) = reg.manifest.by_name(name).cloned() else {
+        eprintln!("skipping: {name} not in catalog");
+        return;
+    };
+    let n = 128usize;
+    let out = reg.run_protocol(name).unwrap();
+    let artifact_result = out.outputs[0].to_vec::<i32>().unwrap();
+
+    let a = Tensor::<i8>::rand_i8(&[n, n], spec.inputs[0].seed);
+    let b = Tensor::<i8>::rand_i8(&[n, n], spec.inputs[1].seed);
+    let native = cachebound::operators::qnn::gemm_blocked(&a, &b);
+    assert_eq!(artifact_result, native.data, "int8 GEMM must be bit-exact");
+}
+
+#[test]
+fn bitserial_artifact_matches_native_popcount_gemm() {
+    let Some(mut reg) = registry() else { return };
+    let name = "gemm_bs_uni_a2w2_n256_prepacked";
+    let Some(spec) = reg.manifest.by_name(name).cloned() else {
+        eprintln!("skipping: {name} not in catalog");
+        return;
+    };
+    let out = reg.run_protocol(name).unwrap();
+    let artifact_result = out.outputs[0].to_vec::<i32>().unwrap();
+
+    // reconstruct the packed operands and run the native bit-serial GEMM
+    let (bits, n, kw) = (2usize, 256usize, 8usize);
+    let mk = |seed: u64| {
+        let t = Tensor::<u32>::rand_u32(&[bits, n, kw], seed);
+        cachebound::operators::bitserial::Packed {
+            bits,
+            rows: n,
+            kw,
+            k: kw * 32,
+            data: t.data,
+        }
+    };
+    let ap = mk(spec.inputs[0].seed);
+    let wp = mk(spec.inputs[1].seed);
+    let native = cachebound::operators::bitserial::gemm_unipolar(&ap, &wp);
+    assert_eq!(artifact_result, native.data, "bit-serial GEMM must be bit-exact");
+}
+
+#[test]
+fn whole_network_artifact_runs_and_is_finite() {
+    // The composed ResNet-18 graph (stem + 8 residual blocks + head, every
+    // conv the spatial-pack Pallas kernel) must execute through PJRT and
+    // produce finite logits of the right shape.
+    let Some(mut reg) = registry() else { return };
+    let name = "resnet18_full_i32";
+    let Some(spec) = reg.manifest.by_name(name).cloned() else {
+        eprintln!("skipping: {name} absent");
+        return;
+    };
+    assert_eq!(spec.kind, "network");
+    let out = reg.run_protocol(name).unwrap();
+    let logits = out.outputs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), 10, "1x10 logits");
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // checksum already covered by every_artifact_validates; spot-check here
+    let sum: f64 = logits.iter().map(|&x| x as f64).sum();
+    let expect = spec.outputs[0].checksum;
+    assert!(
+        (sum - expect).abs() / expect.abs().max(1.0) < 1e-3,
+        "network checksum {sum} vs {expect}"
+    );
+}
+
+#[test]
+fn artifact_timing_is_measurable() {
+    let Some(mut reg) = registry() else { return };
+    let m = reg.measure("gemm_f32_tuned_n128", &BenchConfig::quick()).unwrap();
+    assert!(m.seconds.median > 0.0);
+    assert!(m.total_iters > 0);
+}
+
+#[test]
+fn schedule_variants_all_compute_the_same_product() {
+    // All AOT schedule variants of the same problem must agree: real
+    // codegen diversity, identical numerics (checksums are per-variant
+    // but inputs share seeds per artifact, so compare via validate()).
+    let Some(mut reg) = registry() else { return };
+    let variants = reg.names(Some("gemm_variant"));
+    if variants.is_empty() {
+        eprintln!("skipping: no variant artifacts");
+        return;
+    }
+    for name in &variants {
+        let v = reg.validate(name).unwrap();
+        assert!(v.passed, "{name} failed: {:?}", v.details);
+    }
+}
+
+#[test]
+fn conv_artifact_matches_native_spatial_pack() {
+    let Some(mut reg) = registry() else { return };
+    let name = "conv_f32_c11";
+    let Some(spec) = reg.manifest.by_name(name).cloned() else {
+        eprintln!("skipping: {name} absent");
+        return;
+    };
+    let out = reg.run_protocol(name).unwrap();
+    let artifact_result = out.outputs[0].to_vec::<f32>().unwrap();
+
+    let l = cachebound::operators::workloads::layer_by_name("C11").unwrap();
+    let x = Tensor::<f32>::rand_f32(&[1, l.cin, l.h, l.w], spec.inputs[0].seed);
+    let w = Tensor::<f32>::rand_f32(&[l.cout, l.cin, l.k, l.k], spec.inputs[1].seed);
+    let native = cachebound::operators::conv::spatial_pack(
+        &x,
+        &w,
+        l.stride,
+        l.pad,
+        cachebound::operators::conv::ConvSchedule::default_tuned(),
+    );
+    assert_eq!(artifact_result.len(), native.data.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in artifact_result.iter().zip(&native.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 5e-2, "conv artifact vs native max err {max_err}");
+}
