@@ -1,0 +1,29 @@
+# cachebound build entry points.
+#
+#   make artifacts   lower every operator variant to HLO text + manifest
+#                    (Python/JAX runs ONLY here — never on the request path)
+#   make build       release build of the Rust coordinator/CLI
+#   make test        Rust test suite
+#   make doc         rustdoc with warnings denied (CI parity)
+
+PYTHON ?= python3
+CARGO  ?= cargo
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts artifacts-quick build test doc
+
+artifacts:
+	$(PYTHON) python/compile/aot.py --out-dir $(ARTIFACTS_DIR)
+
+# tiny subset for smoke tests
+artifacts-quick:
+	$(PYTHON) python/compile/aot.py --out-dir $(ARTIFACTS_DIR) --quick
+
+build:
+	cd rust && $(CARGO) build --release
+
+test:
+	cd rust && $(CARGO) test -q
+
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps

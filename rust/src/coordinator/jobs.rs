@@ -59,6 +59,14 @@ pub enum JobSpec {
     ArtifactValidate { name: String },
     /// Time an AOT artifact (leader-only).
     ArtifactMeasure { name: String },
+    /// Run the synthetic serving mix through the sharded server (CPU-pure:
+    /// the synthetic executor serves native tiled GEMMs, no PJRT).
+    ServeMix {
+        workers: usize,
+        requests: usize,
+        seed: u64,
+        cache_entries: usize,
+    },
 }
 
 /// Which native GEMM implementation a `NativeGemm` job runs.
@@ -106,6 +114,9 @@ impl JobSpec {
             }
             JobSpec::ArtifactValidate { name } => format!("validate/{name}"),
             JobSpec::ArtifactMeasure { name } => format!("measure/{name}"),
+            JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
+                format!("serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}")
+            }
         }
     }
 }
@@ -131,6 +142,15 @@ pub enum JobOutput {
     },
     /// Validation outcome.
     Validated { passed: bool, detail: String },
+    /// Serving-run outcome (sharded server over the synthetic mix).
+    Served {
+        throughput_rps: f64,
+        p50_s: f64,
+        p99_s: f64,
+        completed: u64,
+        failed: u64,
+        cache_hits: u64,
+    },
     /// Job failed.
     Failed { error: String },
 }
@@ -231,6 +251,26 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 Err(e) => JobOutput::Failed { error: e.to_string() },
             }
         }
+        JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
+            use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
+            let out = ShardedServer::start(
+                ServeConfig::new(*workers).with_cache(*cache_entries),
+                |_w| Ok(SyntheticExecutor::new()),
+            )
+            .serve_stream(crate::operators::workloads::serving_requests(*requests, *seed));
+            let (p50, p99) = match out.metrics.latency_percentiles(&[50.0, 99.0]).as_deref() {
+                Some([p50, p99]) => (*p50, *p99),
+                _ => (0.0, 0.0),
+            };
+            JobOutput::Served {
+                throughput_rps: out.metrics.throughput(out.wall_seconds),
+                p50_s: p50,
+                p99_s: p99,
+                completed: out.metrics.completed,
+                failed: out.metrics.failed,
+                cache_hits: out.metrics.cache_hits,
+            }
+        }
         JobSpec::ArtifactValidate { .. } | JobSpec::ArtifactMeasure { .. } => JobOutput::Failed {
             error: "artifact jobs must run on the leader".into(),
         },
@@ -292,5 +332,20 @@ mod tests {
     fn artifact_job_on_worker_fails_loudly() {
         let out = run_cpu_job(&JobSpec::ArtifactValidate { name: "x".into() });
         assert!(out.is_failure());
+    }
+
+    #[test]
+    fn serve_mix_job_serves_and_reports() {
+        let spec = JobSpec::ServeMix { workers: 2, requests: 24, seed: 7, cache_entries: 16 };
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16");
+        let out = run_cpu_job(&spec);
+        match out {
+            JobOutput::Served { throughput_rps, completed, failed, .. } => {
+                assert_eq!(completed, 24);
+                assert_eq!(failed, 0);
+                assert!(throughput_rps > 0.0);
+            }
+            other => panic!("expected Served, got {other:?}"),
+        }
     }
 }

@@ -1,4 +1,4 @@
-//! The L3 coordinator: experiment orchestration.
+//! The L3 coordinator: experiment orchestration and serving.
 //!
 //! The paper's methodology is a large grid of measurements (two boards ×
 //! {GEMM sweep, 10 conv layers} × {f32, int8, 8 bit-serial variants} ×
@@ -8,15 +8,33 @@
 //! PJRT-bound jobs on the leader thread (the `xla` client is not `Send`),
 //! and collects everything into a [`results`] store that the [`report`]
 //! layer renders into the paper's tables and figures.
+//!
+//! The deployment face is [`server`]: the single-threaded reference
+//! [`Server`] and the sharded multi-worker [`ShardedServer`], which hashes
+//! requests to per-artifact [`shard`]s so each worker owns a disjoint,
+//! cache-resident slice of the artifact set.  Division of labor with the
+//! [`pool`]: the pool fans out *finite experiment batches* and routes
+//! PJRT-bound jobs to the leader; the sharded server runs *open-ended
+//! request streams* and sidesteps the leader bottleneck by giving every
+//! worker its own thread-confined executor.
+//!
+//! [`report`]: crate::report
+//! [`Server`]: server::Server
+//! [`ShardedServer`]: server::ShardedServer
 
 pub mod jobs;
 pub mod pipeline;
 pub mod pool;
 pub mod results;
 pub mod server;
+pub mod shard;
 
 pub use jobs::{Job, JobOutput, JobSpec};
 pub use pipeline::{Pipeline, PipelineConfig};
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
-pub use server::{BatchPolicy, Request, Response, Server};
+pub use server::{
+    BatchPolicy, Exec, Executor, Metrics, PjrtExecutor, Request, Response, ServeConfig,
+    ServeOutcome, Server, ShardedServer, SyntheticExecutor,
+};
+pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

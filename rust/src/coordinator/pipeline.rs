@@ -209,6 +209,31 @@ impl Pipeline {
         Ok(())
     }
 
+    /// Serving-throughput scaling sweep (EXPERIMENTS.md §Serving): one
+    /// `ServeMix` run per worker count over the identical request stream.
+    /// Runs on a *serial* pool — each job spawns its own sharded-server
+    /// worker threads, and concurrent servers would contend for cores and
+    /// corrupt the scaling measurement.
+    pub fn serve_scaling(&mut self, worker_counts: &[usize], requests: usize) -> Result<()> {
+        let specs: Vec<JobSpec> = worker_counts
+            .iter()
+            .map(|&w| JobSpec::ServeMix {
+                workers: w,
+                requests,
+                seed: 0xD15C,
+                cache_entries: 0,
+            })
+            .collect();
+        let jobs: Vec<Job> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| Job { id: i as u64, spec })
+            .collect();
+        let completed = WorkerPool::serial().run(jobs, None);
+        self.store.ingest(&completed);
+        Ok(())
+    }
+
     /// Validate every artifact in the manifest through PJRT.
     pub fn validate_artifacts(&mut self) -> Result<Vec<(String, bool)>> {
         let names = match &self.registry {
@@ -282,6 +307,19 @@ mod tests {
         // int8 conv entries
         assert_eq!(p.store.by_prefix("sim_conv/cortex-a53/").iter()
             .filter(|(k, _)| k.ends_with("/e8")).count(), 10);
+    }
+
+    #[test]
+    fn serve_scaling_populates_store() {
+        let mut p = Pipeline::new(quick_config());
+        p.serve_scaling(&[1, 2], 16).unwrap();
+        let rows = p.store.by_prefix("serve_mix/");
+        assert_eq!(rows.len(), 2);
+        for (k, v) in rows {
+            assert!(v.seconds.is_some(), "{k} missing p50");
+            assert_eq!(v.passed, Some(true), "{k} had failures");
+            assert!(v.detail.as_deref().unwrap().contains("req/s"));
+        }
     }
 
     #[test]

@@ -2,6 +2,10 @@
 //!
 //! CPU-pure jobs fan out to `n_workers` threads; `leader_only` jobs (PJRT)
 //! stay on the calling thread and are interleaved with result collection.
+//! This pool runs *finite experiment batches*; open-ended request streams
+//! are the sharded server's territory (`coordinator::server`), which trades
+//! the shared job channel for per-artifact shard ownership so executables
+//! stay cache-resident on one worker.
 //! Invariants (property-tested in `rust/tests/proptests.rs`):
 //!
 //! * every submitted job produces exactly one result, failure or not;
@@ -36,6 +40,13 @@ impl WorkerPool {
         WorkerPool {
             n_workers: n_workers.max(1),
         }
+    }
+
+    /// A one-worker pool.  Used for jobs that spawn their own thread pools
+    /// (e.g. `JobSpec::ServeMix`, which runs a whole sharded server) and
+    /// must therefore execute one at a time to avoid core contention.
+    pub fn serial() -> Self {
+        WorkerPool::new(1)
     }
 
     /// Run a batch of jobs to completion.  `registry` (PJRT) is used by the

@@ -68,6 +68,25 @@ impl ResultStore {
                         detail: Some(format!("{best_desc} ({trials}/{space} trials)")),
                     }
                 }
+                super::jobs::JobOutput::Served {
+                    throughput_rps,
+                    p50_s,
+                    p99_s,
+                    completed,
+                    failed,
+                    cache_hits,
+                } => ResultValue {
+                    // p50 end-to-end latency is the headline "seconds" of a
+                    // serving run; the rest rides in `detail`.
+                    seconds: Some(*p50_s),
+                    bound: None,
+                    passed: Some(*failed == 0),
+                    detail: Some(format!(
+                        "{throughput_rps:.1} req/s, p99 {:.3} ms, {completed} ok / {failed} \
+                         failed, {cache_hits} cache hits",
+                        p99_s * 1e3
+                    )),
+                },
                 super::jobs::JobOutput::Validated { passed, detail } => ResultValue {
                     seconds: None,
                     bound: None,

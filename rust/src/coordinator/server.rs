@@ -1,23 +1,61 @@
-//! Inference-serving loop: request queue → batcher → PJRT execution.
+//! Inference serving: admission queue → artifact shards → worker pool.
 //!
-//! The deployment face of the L3 coordinator: clients submit operator
-//! requests (by artifact name); the server groups consecutive requests to
-//! the same executable (compile-once batching — the useful batching axis
-//! for shape-static XLA executables), executes through the PJRT registry
-//! on the leader thread, and returns per-request latencies plus aggregate
-//! metrics.  Python is nowhere in this loop — the binary serves purely
-//! from `artifacts/`.
+//! The deployment face of the L3 coordinator, in two tiers:
 //!
-//! Invariants (tested): FIFO completion order per artifact, exactly one
-//! response per request, metrics totals match request counts.
+//! * [`Server`] — the original single-threaded leader loop (request queue →
+//!   compile-once batcher → PJRT execution).  Kept as the reference
+//!   implementation and the baseline that `bench_serve` scales against.
+//! * [`ShardedServer`] — the multi-worker serving core.  A front-end
+//!   admission queue hashes each request's artifact name to one of
+//!   `n_shards` queues ([`super::shard::shard_for`]); each worker owns the
+//!   disjoint set of shards `{s : s mod workers == w}`, so an artifact's
+//!   compiled executable, protocol inputs and response-cache entry live on
+//!   exactly one worker.  Workers batch consecutive same-artifact requests
+//!   (the compile-once batching axis that matters for shape-static XLA
+//!   executables), consult a per-worker LRU response cache for repeated
+//!   pure requests, and record per-shard latency histograms that roll up
+//!   into the aggregate [`Metrics`].
+//!
+//! Execution is abstracted behind [`Executor`] so the core is testable and
+//! benchmarkable without AOT artifacts: [`PjrtExecutor`] serves compiled
+//! HLO through the PJRT registry (constructed *inside* each worker thread —
+//! the PJRT client is not `Send`, only the parsed manifest is shared, via
+//! `Arc`), while [`SyntheticExecutor`] serves native tiled-GEMM workloads
+//! from `operators::workloads::serving_mix`.
+//!
+//! Invariants (tested in `rust/tests/serve_multiworker.rs`):
+//!
+//! * **per-artifact FIFO** — an artifact maps to one shard, a shard to one
+//!   worker, and each shard queue is drained front-to-back, so responses
+//!   for any given artifact are emitted in admission order even with many
+//!   workers and no global lock;
+//! * **exactly one response per request** — every admitted request is
+//!   answered (success, failure, or cache hit), and rejected requests are
+//!   answered at the front door;
+//! * **metrics totals** — `completed + failed == requests` in the
+//!   aggregate [`Metrics`], and the per-[`ShardMetrics`] sums equal the
+//!   aggregate minus admission-rejected requests (`Metrics::rejected`),
+//!   which never reach a shard;
+//! * **cache purity** — a cache hit returns a payload bit-identical to the
+//!   original execution, with `exec_seconds == 0` and `cached == true`.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::runtime::Registry;
-use crate::util::stats::Summary;
+use crate::operators::gemm::{self, GemmSchedule};
+use crate::operators::workloads;
+use crate::operators::Tensor;
+use crate::runtime::inputs::literal_checksum;
+use crate::runtime::{Manifest, Registry};
+use crate::util::lru::LruCache;
+use crate::util::stats::{percentile_sorted, Summary};
+
+use super::shard::{shard_for, ShardMetrics};
 
 /// One inference request.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -32,23 +70,42 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub artifact: String,
-    /// Execution wall time (excludes queueing).
+    /// Execution wall time (excludes queueing; 0 for cache hits).
     pub exec_seconds: f64,
     /// Total latency including queue wait.
     pub latency_seconds: f64,
     pub ok: bool,
     pub error: Option<String>,
+    /// Output checksum — the response payload.  Artifacts are pure
+    /// functions of their protocol inputs, so this is identical across
+    /// repeated requests (and bit-identical on cache hits).
+    pub payload: Option<f64>,
+    /// Served from the LRU response cache.
+    pub cached: bool,
+    /// Shard that owned the request (0 for the single-threaded [`Server`]).
+    pub shard: usize,
 }
 
 /// Aggregate serving metrics.
+///
+/// For the sharded server, totals equal the sums over `per_shard` (tested);
+/// the single-threaded [`Server`] leaves `per_shard` empty.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub requests: u64,
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    /// Responses served from the response cache (subset of `completed`).
+    pub cache_hits: u64,
+    /// Requests rejected at admission (unknown artifact under a catalog) —
+    /// a subset of `failed` that reaches no shard, so per-shard sums cover
+    /// `requests - rejected`.
+    pub rejected: u64,
     pub exec_seconds: Vec<f64>,
     pub latency_seconds: Vec<f64>,
+    /// Per-shard rollup (sharded server only).
+    pub per_shard: Vec<ShardMetrics>,
 }
 
 impl Metrics {
@@ -62,6 +119,27 @@ impl Metrics {
 
     pub fn throughput(&self, wall_seconds: f64) -> f64 {
         self.completed as f64 / wall_seconds.max(1e-12)
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.completed as f64
+        }
+    }
+
+    /// End-to-end latency percentiles (`ps` in `[0, 100]`; 100 = max),
+    /// sorting the sample set once for any number of percentiles.  `None`
+    /// when nothing completed.  The single rollup used by the CLI, the
+    /// `ServeMix` job and the serving bench.
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Option<Vec<f64>> {
+        if self.latency_seconds.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latency_seconds.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(ps.iter().map(|&p| percentile_sorted(&sorted, p)).collect())
     }
 }
 
@@ -78,7 +156,125 @@ impl Default for BatchPolicy {
     }
 }
 
-/// The server: single-threaded leader loop over a PJRT registry.
+// ---------------------------------------------------------------------------
+// Executors
+// ---------------------------------------------------------------------------
+
+/// Result of one artifact execution.
+#[derive(Clone, Copy, Debug)]
+pub struct Exec {
+    pub seconds: f64,
+    /// Output checksum (the pure-function response payload).
+    pub payload: f64,
+}
+
+/// Execution backend of the serving core.
+///
+/// An executor is created *inside* its worker thread (see
+/// [`ShardedServer::start`]) so implementations holding non-`Send` state —
+/// the PJRT client above all — work unchanged.
+pub trait Executor {
+    /// One-time per-batch warmup: compile the executable, materialize
+    /// inputs.  Paid before the batch's first execution so `execute` times
+    /// exclude cold-start cost.
+    fn prepare(&mut self, artifact: &str) -> Result<()>;
+
+    /// Execute `artifact` once on its protocol inputs.
+    fn execute(&mut self, artifact: &str) -> Result<Exec>;
+}
+
+/// PJRT-backed executor: serves compiled HLO artifacts via [`Registry`].
+pub struct PjrtExecutor {
+    registry: Registry,
+}
+
+impl PjrtExecutor {
+    pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(PjrtExecutor { registry: Registry::open(artifacts_dir)? })
+    }
+
+    /// Build from a manifest already parsed by the admission front-end —
+    /// the thread-safe handle sharing path: `Arc<Manifest>` crosses threads,
+    /// the PJRT client is created fresh per worker.
+    pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Self> {
+        Ok(PjrtExecutor { registry: Registry::with_manifest(manifest)? })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn prepare(&mut self, artifact: &str) -> Result<()> {
+        self.registry.executable(artifact)?;
+        self.registry.inputs(artifact)?;
+        Ok(())
+    }
+
+    fn execute(&mut self, artifact: &str) -> Result<Exec> {
+        let out = self.registry.run_protocol(artifact)?;
+        let mut payload = 0.0;
+        for lit in &out.outputs {
+            payload += literal_checksum(lit)?;
+        }
+        Ok(Exec { seconds: out.seconds, payload })
+    }
+}
+
+/// Artifact-free executor: serves the synthetic tiled-GEMM workloads named
+/// by [`workloads::synthetic_artifact`].  Inputs are generated
+/// deterministically per artifact (the compile-once analog: first request
+/// pays materialization), so payloads are bit-identical across runs,
+/// workers and worker counts — which is what the determinism and cache
+/// tests assert.
+pub struct SyntheticExecutor {
+    schedule: GemmSchedule,
+    inputs: HashMap<String, (Tensor<f32>, Tensor<f32>)>,
+}
+
+impl SyntheticExecutor {
+    pub fn new() -> Self {
+        SyntheticExecutor {
+            schedule: GemmSchedule::new(32, 32, 32, 4),
+            inputs: HashMap::new(),
+        }
+    }
+}
+
+impl Default for SyntheticExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for SyntheticExecutor {
+    fn prepare(&mut self, artifact: &str) -> Result<()> {
+        let n = workloads::synthetic_gemm_n(artifact)
+            .ok_or_else(|| anyhow!("'{artifact}' is not a synthetic serving artifact"))?;
+        if !self.inputs.contains_key(artifact) {
+            let a = Tensor::rand_f32(&[n, n], 0xA0 + n as u64);
+            let b = Tensor::rand_f32(&[n, n], 0xB0 + n as u64);
+            self.inputs.insert(artifact.to_string(), (a, b));
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, artifact: &str) -> Result<Exec> {
+        self.prepare(artifact)?;
+        let (a, b) = &self.inputs[artifact];
+        let t0 = Instant::now();
+        let c = gemm::tiled(a, b, self.schedule);
+        let seconds = t0.elapsed().as_secs_f64();
+        let payload = c.data.iter().map(|x| *x as f64).sum();
+        Ok(Exec { seconds, payload })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-threaded reference server
+// ---------------------------------------------------------------------------
+
+/// The original server: single-threaded leader loop over a PJRT registry.
+///
+/// Still the right tool when the PJRT client must stay on the leader and
+/// worker parallelism is unwanted; [`ShardedServer`] is the scaling path.
 pub struct Server {
     registry: Registry,
     policy: BatchPolicy,
@@ -141,6 +337,9 @@ impl Server {
                                 latency_seconds: latency,
                                 ok: true,
                                 error: None,
+                                payload: None,
+                                cached: false,
+                                shard: 0,
                             });
                         }
                         Err(e) => responses.push(self.fail(req, enq, e.to_string())),
@@ -164,12 +363,390 @@ impl Server {
             latency_seconds: enq.elapsed().as_secs_f64(),
             ok: false,
             error: Some(error),
+            payload: None,
+            cached: false,
+            shard: 0,
         }
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded multi-worker server
+// ---------------------------------------------------------------------------
+
+/// Configuration of the sharded serving core.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads.  Each owns the shards `{s : s mod workers == w}`.
+    pub workers: usize,
+    /// Shard count; 0 means auto (`4 × workers`).  More shards than workers
+    /// smooths load imbalance without breaking artifact affinity.
+    pub shards: usize,
+    /// Per-worker LRU response-cache entries; 0 disables caching.
+    pub cache_entries: usize,
+    pub batch: BatchPolicy,
+    /// Admission-time catalog: requests whose artifact is not in the
+    /// manifest are rejected at the front door without touching a worker.
+    /// Shared with `PjrtExecutor` workers via `Arc` — the one registry
+    /// handle that *is* thread-safe.
+    pub catalog: Option<Arc<Manifest>>,
+}
+
+impl ServeConfig {
+    pub fn new(workers: usize) -> Self {
+        ServeConfig {
+            workers: workers.max(1),
+            shards: 0,
+            cache_entries: 0,
+            batch: BatchPolicy::default(),
+            catalog: None,
+        }
+    }
+
+    pub fn with_cache(mut self, entries: usize) -> Self {
+        self.cache_entries = entries;
+        self
+    }
+
+    pub fn with_catalog(mut self, catalog: Arc<Manifest>) -> Self {
+        self.catalog = Some(catalog);
+        self
+    }
+
+    fn n_shards(&self) -> usize {
+        if self.shards == 0 {
+            self.workers * 4
+        } else {
+            self.shards.max(self.workers)
+        }
+    }
+}
+
+struct Envelope {
+    req: Request,
+    enqueued: Instant,
+    shard: usize,
+}
+
+/// Everything a finished serving run produced.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// Responses in completion order (per-artifact subsequences are in
+    /// admission order — the FIFO invariant).
+    pub responses: Vec<Response>,
+    pub metrics: Metrics,
+    /// Wall time from server start to drain completion.
+    pub wall_seconds: f64,
+}
+
+/// The sharded multi-worker serving core.  See the module docs for the
+/// design and invariants.
+pub struct ShardedServer {
+    n_shards: usize,
+    workers: usize,
+    catalog: Option<Arc<Manifest>>,
+    senders: Vec<mpsc::Sender<Envelope>>,
+    resp_rx: mpsc::Receiver<Response>,
+    handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
+    admitted: u64,
+    rejected: Vec<Response>,
+    started: Instant,
+}
+
+impl ShardedServer {
+    /// Spawn the worker pool.  `factory` runs once *inside* each worker
+    /// thread to build that worker's executor (PJRT clients are not `Send`,
+    /// so they must be born where they live); a factory error fails that
+    /// worker's requests cleanly instead of panicking.
+    pub fn start<E, F>(config: ServeConfig, factory: F) -> Self
+    where
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        let n_shards = config.n_shards();
+        let workers = config.workers;
+        let factory = Arc::new(factory);
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = mpsc::channel::<Envelope>();
+            senders.push(tx);
+            let resp_tx = resp_tx.clone();
+            let factory = factory.clone();
+            let batch = config.batch;
+            let cache_entries = config.cache_entries;
+            let handle = thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || worker_loop(w, rx, resp_tx, (*factory)(w), batch, cache_entries))
+                .expect("spawn serve worker");
+            handles.push(handle);
+        }
+        ShardedServer {
+            n_shards,
+            workers,
+            catalog: config.catalog,
+            senders,
+            resp_rx,
+            handles,
+            admitted: 0,
+            rejected: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Shard a request and hand it to the owning worker.  Unknown artifacts
+    /// (when a catalog is attached) are rejected here, producing their one
+    /// response without any worker round-trip.
+    pub fn submit(&mut self, req: Request) {
+        if let Some(cat) = &self.catalog {
+            if cat.by_name(&req.artifact).is_none() {
+                self.rejected.push(Response {
+                    id: req.id,
+                    artifact: req.artifact,
+                    exec_seconds: 0.0,
+                    latency_seconds: 0.0,
+                    ok: false,
+                    error: Some("artifact not in manifest (rejected at admission)".into()),
+                    payload: None,
+                    cached: false,
+                    shard: 0,
+                });
+                return;
+            }
+        }
+        let shard = shard_for(&req.artifact, self.n_shards);
+        let worker = shard % self.workers;
+        self.admitted += 1;
+        self.senders[worker]
+            .send(Envelope { req, enqueued: Instant::now(), shard })
+            .expect("serve worker alive");
+    }
+
+    /// Submit an entire request stream (ids assigned in stream order) and
+    /// drain to completion — the synchronous drive shared by the CLI, the
+    /// `ServeMix` job, the invariant tests and `bench_serve`.
+    pub fn serve_stream<I>(mut self, stream: I) -> ServeOutcome
+    where
+        I: IntoIterator<Item = String>,
+    {
+        for (id, artifact) in stream.into_iter().enumerate() {
+            self.submit(Request { id: id as u64, artifact });
+        }
+        self.finish()
+    }
+
+    /// Collect any responses already available, without blocking.
+    pub fn poll_responses(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Close admission, drain every in-flight request, join the workers and
+    /// roll per-shard metrics up into the aggregate [`Metrics`].
+    pub fn finish(self) -> ServeOutcome {
+        let ShardedServer {
+            senders,
+            resp_rx,
+            handles,
+            admitted,
+            rejected,
+            started,
+            ..
+        } = self;
+        drop(senders); // workers drain their queues and exit
+        let mut responses: Vec<Response> = resp_rx.iter().collect();
+        let mut per_shard: BTreeMap<usize, ShardMetrics> = BTreeMap::new();
+        for h in handles {
+            for sm in h.join().expect("serve worker panicked") {
+                per_shard
+                    .entry(sm.shard)
+                    .and_modify(|acc| acc.merge(&sm))
+                    .or_insert(sm);
+            }
+        }
+        let wall_seconds = started.elapsed().as_secs_f64();
+
+        let mut metrics = Metrics {
+            requests: admitted + rejected.len() as u64,
+            ..Metrics::default()
+        };
+        for r in &responses {
+            if r.ok {
+                metrics.completed += 1;
+                metrics.exec_seconds.push(r.exec_seconds);
+                metrics.latency_seconds.push(r.latency_seconds);
+                if r.cached {
+                    metrics.cache_hits += 1;
+                }
+            } else {
+                metrics.failed += 1;
+            }
+        }
+        metrics.failed += rejected.len() as u64;
+        metrics.rejected = rejected.len() as u64;
+        metrics.batches = per_shard.values().map(|s| s.batches).sum();
+        metrics.per_shard = per_shard.into_values().collect();
+        responses.extend(rejected);
+        ServeOutcome { responses, metrics, wall_seconds }
+    }
+}
+
+/// One worker: drains its envelope channel into per-shard FIFO queues and
+/// serves them batch-by-batch, oldest shard head first.
+fn worker_loop<E: Executor>(
+    worker: usize,
+    rx: mpsc::Receiver<Envelope>,
+    resp_tx: mpsc::Sender<Response>,
+    executor: Result<E>,
+    batch_policy: BatchPolicy,
+    cache_entries: usize,
+) -> Vec<ShardMetrics> {
+    let mut executor = executor;
+    let mut queues: BTreeMap<usize, VecDeque<Envelope>> = BTreeMap::new();
+    let mut metrics: BTreeMap<usize, ShardMetrics> = BTreeMap::new();
+    let mut cache: LruCache<String, f64> = LruCache::new(cache_entries);
+    let mut open = true;
+
+    loop {
+        let queued = queues.values().map(|q| q.len()).sum::<usize>();
+        if queued == 0 {
+            if !open {
+                break;
+            }
+            // idle: block for the next request (or channel close)
+            match rx.recv() {
+                Ok(env) => queues.entry(env.shard).or_default().push_back(env),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        // soak up whatever else has arrived, without blocking
+        while open {
+            match rx.try_recv() {
+                Ok(env) => queues.entry(env.shard).or_default().push_back(env),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        // serve one batch from the shard whose head request is oldest
+        let Some(shard) = queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q.front().unwrap().enqueued)
+            .map(|(s, _)| *s)
+        else {
+            continue;
+        };
+        let queue = queues.get_mut(&shard).unwrap();
+        let mut batch = vec![queue.pop_front().unwrap()];
+        while batch.len() < batch_policy.max_batch {
+            match queue.front() {
+                Some(next) if next.req.artifact == batch[0].req.artifact => {
+                    batch.push(queue.pop_front().unwrap());
+                }
+                _ => break,
+            }
+        }
+
+        let artifact = batch[0].req.artifact.clone();
+        let sm = metrics
+            .entry(shard)
+            .or_insert_with(|| ShardMetrics::new(shard, worker));
+        sm.batches += 1;
+        sm.requests += batch.len() as u64;
+
+        // skip executor warmup when the whole batch will hit the cache
+        let prep = if cache.contains(&artifact) {
+            Ok(())
+        } else {
+            match &mut executor {
+                Ok(ex) => ex.prepare(&artifact),
+                Err(e) => Err(anyhow!("executor unavailable: {e:#}")),
+            }
+        };
+
+        for env in batch {
+            let latency = env.enqueued.elapsed().as_secs_f64();
+            if let Some(&payload) = cache.get(&env.req.artifact) {
+                sm.completed += 1;
+                sm.cache_hits += 1;
+                sm.latency.record(latency);
+                let _ = resp_tx.send(Response {
+                    id: env.req.id,
+                    artifact: env.req.artifact,
+                    exec_seconds: 0.0,
+                    latency_seconds: latency,
+                    ok: true,
+                    error: None,
+                    payload: Some(payload),
+                    cached: true,
+                    shard,
+                });
+                continue;
+            }
+            let result = match (&mut executor, &prep) {
+                (Ok(ex), Ok(())) => ex.execute(&env.req.artifact),
+                (_, Err(e)) => Err(anyhow!("{e:#}")),
+                (Err(e), _) => Err(anyhow!("executor unavailable: {e:#}")),
+            };
+            match result {
+                Ok(exec) => {
+                    cache.put(env.req.artifact.clone(), exec.payload);
+                    let latency = env.enqueued.elapsed().as_secs_f64();
+                    sm.completed += 1;
+                    sm.latency.record(latency);
+                    let _ = resp_tx.send(Response {
+                        id: env.req.id,
+                        artifact: env.req.artifact,
+                        exec_seconds: exec.seconds,
+                        latency_seconds: latency,
+                        ok: true,
+                        error: None,
+                        payload: Some(exec.payload),
+                        cached: false,
+                        shard,
+                    });
+                }
+                Err(e) => {
+                    sm.failed += 1;
+                    let _ = resp_tx.send(Response {
+                        id: env.req.id,
+                        artifact: env.req.artifact,
+                        exec_seconds: 0.0,
+                        latency_seconds: env.enqueued.elapsed().as_secs_f64(),
+                        ok: false,
+                        error: Some(e.to_string()),
+                        payload: None,
+                        cached: false,
+                        shard,
+                    });
+                }
+            }
+        }
+    }
+    metrics.into_values().collect()
 }
 
 #[cfg(test)]
@@ -239,5 +816,62 @@ mod tests {
         for r in &resp {
             assert!(r.latency_seconds >= r.exec_seconds * 0.5);
         }
+    }
+
+    // -- sharded server unit tests (artifact-free; the full multi-worker
+    //    invariant suite lives in rust/tests/serve_multiworker.rs) --
+
+    fn synthetic_server(workers: usize, cache: usize) -> ShardedServer {
+        ShardedServer::start(ServeConfig::new(workers).with_cache(cache), |_w| {
+            Ok(SyntheticExecutor::new())
+        })
+    }
+
+    #[test]
+    fn sharded_serves_a_mixed_stream() {
+        let mut srv = synthetic_server(2, 0);
+        let names = workloads::serving_mix();
+        for id in 0..12u64 {
+            let artifact = names[id as usize % names.len()].artifact.clone();
+            srv.submit(Request { id, artifact });
+        }
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), 12);
+        assert!(out.responses.iter().all(|r| r.ok), "{:?}", out.responses);
+        assert_eq!(out.metrics.requests, 12);
+        assert_eq!(out.metrics.completed, 12);
+        assert!(out.metrics.batches >= 1);
+        assert!(out.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn sharded_unknown_artifact_fails_cleanly() {
+        let mut srv = synthetic_server(2, 8);
+        srv.submit(Request { id: 0, artifact: "no_such_synthetic".into() });
+        srv.submit(Request { id: 1, artifact: workloads::synthetic_artifact(32) });
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), 2);
+        let bad = out.responses.iter().find(|r| r.id == 0).unwrap();
+        assert!(!bad.ok);
+        assert!(bad.error.as_deref().unwrap().contains("synthetic"));
+        let good = out.responses.iter().find(|r| r.id == 1).unwrap();
+        assert!(good.ok);
+        assert_eq!(out.metrics.completed, 1);
+        assert_eq!(out.metrics.failed, 1);
+    }
+
+    #[test]
+    fn worker_factory_failure_fails_requests_not_process() {
+        let mut srv = ShardedServer::start(ServeConfig::new(2), |_w| {
+            Err::<SyntheticExecutor, _>(anyhow!("no backend on this host"))
+        });
+        for id in 0..4u64 {
+            srv.submit(Request { id, artifact: workloads::synthetic_artifact(32) });
+        }
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), 4);
+        assert!(out.responses.iter().all(|r| !r.ok));
+        assert_eq!(out.metrics.failed, 4);
+        assert!(out.responses[0].error.as_deref().unwrap().contains("no backend"));
     }
 }

@@ -1,0 +1,265 @@
+//! Shard primitives for the serving core: artifact→shard hashing and
+//! per-shard latency accounting.
+//!
+//! The sharded server ([`super::server::ShardedServer`]) keys every request
+//! by its artifact name.  [`shard_for`] maps a name to one of `n_shards`
+//! queues; each shard is owned by exactly one worker (shard id mod worker
+//! count), which gives the two properties the whole design rests on:
+//!
+//! * **cache affinity** — an artifact's compiled executable, inputs and
+//!   response cache live on one worker, so repeated requests stay hot in
+//!   that worker's caches (the L1-bandwidth-bound story of the paper,
+//!   applied at the serving layer);
+//! * **per-artifact FIFO without a global lock** — one owner means requests
+//!   for an artifact are executed in admission order with no cross-worker
+//!   coordination.
+//!
+//! [`LatencyHistogram`] is a log₂-bucketed histogram (nanoseconds up to
+//! ~2.3 minutes) cheap enough to update per request; [`ShardMetrics`]
+//! aggregates one shard's counters and histogram, and rolls up into the
+//! aggregate `Metrics` via [`ShardMetrics::merge`].
+
+use crate::util::rng::mix;
+
+/// Number of log₂ latency buckets: bucket `i` holds latencies in
+/// `[2^i, 2^(i+1))` nanoseconds; bucket 37 tops out at ~2.3 min.
+pub const HISTOGRAM_BUCKETS: usize = 38;
+
+/// Stable artifact→shard mapping: FNV-1a over the name, finished with a
+/// SplitMix64 avalanche, reduced by Lemire multiply-shift.  Deterministic
+/// across runs and platforms (no `RandomState`), well-spread for the short
+/// structured names artifacts use.
+pub fn shard_for(artifact: &str, n_shards: usize) -> usize {
+    debug_assert!(n_shards > 0);
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in artifact.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    ((mix(h) as u128 * n_shards as u128) >> 64) as usize
+}
+
+/// Log₂-bucketed latency histogram.
+///
+/// Percentiles are approximate (resolved to the geometric midpoint of the
+/// matching bucket), which is exactly the fidelity a serving dashboard
+/// needs; exact min/max/sum are kept alongside.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum_seconds: f64,
+    min_seconds: f64,
+    max_seconds: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum_seconds: 0.0,
+            min_seconds: f64::INFINITY,
+            max_seconds: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        let ns = (seconds * 1e9).max(1.0) as u64;
+        (63 - ns.leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket_of(seconds)] += 1;
+        self.count += 1;
+        self.sum_seconds += seconds;
+        self.min_seconds = self.min_seconds.min(seconds);
+        self.max_seconds = self.max_seconds.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_seconds / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min_seconds }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_seconds
+    }
+
+    /// Approximate percentile (`p` in `[0, 100]`) in seconds: the geometric
+    /// midpoint of the bucket containing the p-th sample, clamped to the
+    /// exact observed min/max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                let mid_ns = (1u64 << i) as f64 * 1.5;
+                return (mid_ns / 1e9).clamp(self.min_seconds, self.max_seconds);
+            }
+        }
+        self.max_seconds
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_seconds += other.sum_seconds;
+        if other.count > 0 {
+            self.min_seconds = self.min_seconds.min(other.min_seconds);
+            self.max_seconds = self.max_seconds.max(other.max_seconds);
+        }
+    }
+
+    /// Non-empty `(bucket_floor_seconds, count)` rows, for display.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| ((1u64 << i) as f64 / 1e9, n))
+            .collect()
+    }
+}
+
+/// Per-shard serving counters.
+///
+/// Invariant (tested in `rust/tests/serve_multiworker.rs`):
+/// `completed + failed == requests` once the server has been drained, and
+/// the sums over all shards equal the aggregate `Metrics` totals minus
+/// admission-rejected requests, which never reach a shard.
+#[derive(Clone, Debug, Default)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    /// Worker that owned this shard.
+    pub worker: usize,
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    /// Responses served from the LRU response cache (subset of `completed`).
+    pub cache_hits: u64,
+    /// End-to-end latency (queue wait + execution) of completed requests.
+    pub latency: LatencyHistogram,
+}
+
+impl ShardMetrics {
+    pub fn new(shard: usize, worker: usize) -> Self {
+        ShardMetrics {
+            shard,
+            worker,
+            ..Default::default()
+        }
+    }
+
+    /// Fold `other` (same shard id) into this record.
+    pub fn merge(&mut self, other: &ShardMetrics) {
+        debug_assert_eq!(self.shard, other.shard);
+        self.requests += other.requests;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.batches += other.batches;
+        self.cache_hits += other.cache_hits;
+        self.latency.merge(&other.latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_for_is_stable_and_in_range() {
+        for n in [1usize, 2, 7, 32] {
+            for name in ["gemm_f32_tuned_n32", "conv_qnn8_c11", "syn_gemm_n64", ""] {
+                let s = shard_for(name, n);
+                assert!(s < n, "{name} -> {s} of {n}");
+                assert_eq!(s, shard_for(name, n), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_for_spreads_names() {
+        let n_shards = 16;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            seen.insert(shard_for(&format!("artifact_{i}"), n_shards));
+        }
+        // 64 names over 16 shards must touch most shards
+        assert!(seen.len() >= 12, "only {} shards hit", seen.len());
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for us in [10.0f64, 20.0, 40.0, 80.0, 160.0, 320.0, 640.0, 1280.0] {
+            h.record(us * 1e-6);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.min() <= h.percentile(50.0));
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) <= h.max());
+        assert!((h.mean() - 2550e-6 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for i in 1..50 {
+            let s = i as f64 * 1e-5;
+            if i % 2 == 0 { a.record(s) } else { b.record(s) }
+            both.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.rows(), both.rows());
+        assert_eq!(a.percentile(90.0), both.percentile(90.0));
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+    }
+
+    #[test]
+    fn shard_metrics_merge_sums_counters() {
+        let mut m = ShardMetrics::new(3, 1);
+        m.requests = 5;
+        m.completed = 4;
+        m.failed = 1;
+        let mut n = ShardMetrics::new(3, 1);
+        n.requests = 2;
+        n.completed = 2;
+        n.cache_hits = 1;
+        m.merge(&n);
+        assert_eq!(m.requests, 7);
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.cache_hits, 1);
+    }
+}

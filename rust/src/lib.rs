@@ -6,8 +6,10 @@
 //!
 //! * **L3 (this crate)** — the measurement-and-analysis coordinator: hardware
 //!   models, a cache-hierarchy simulator, native operators, an AutoTVM-style
-//!   auto-tuner, the cache-bound analytical model, and report generators
-//!   that regenerate every table and figure of the paper.
+//!   auto-tuner, the cache-bound analytical model, report generators
+//!   that regenerate every table and figure of the paper, and a sharded
+//!   multi-worker serving core (`coordinator::server`) that keeps each
+//!   artifact's executable cache-resident on exactly one worker.
 //! * **L2 (`python/compile/model.py`)** — JAX single-operator networks,
 //!   lowered ahead-of-time to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled GEMM,
@@ -16,8 +18,10 @@
 //! Python runs only at build time (`make artifacts`); the `runtime` module
 //! loads the artifacts through PJRT and executes them from Rust.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See the repository `README.md` for the quickstart and CLI reference,
+//! `DESIGN.md` for the experiment index (which module reproduces which
+//! paper table/figure) and the serving-core design, and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
 
 pub mod analysis;
 pub mod coordinator;

@@ -10,21 +10,27 @@
 //! cachebound table4|table5                GEMM performance tables
 //! cachebound fig1..fig9 [--profile P]     figure data series (CSV under results/)
 //! cachebound validate                     run every AOT artifact through PJRT
+//! cachebound serve --workers N --cache-entries K   sharded multi-worker serving
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::coordinator::server::{
+    BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
+};
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
+use cachebound::operators::workloads;
 use cachebound::report;
-use cachebound::runtime::Registry;
+use cachebound::runtime::{Manifest, Registry};
 use cachebound::tuner;
-use cachebound::util::table::{fmt_gflops, fmt_mibs};
+use cachebound::util::table::{fmt_gflops, fmt_mibs, fmt_time, Align, Table};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -118,6 +124,7 @@ fn run(args: &[String]) -> Result<()> {
         "fig6" | "fig7" | "fig8" => cmd_fig678(&opts),
         "fig9" => cmd_fig9(&opts),
         "validate" => cmd_validate(&opts),
+        "serve" => cmd_serve(&opts),
         "tune" => cmd_tune(&opts),
         "report-all" => cmd_report_all(&opts),
         "help" | "--help" | "-h" => {
@@ -142,6 +149,11 @@ commands:
   fig6|fig7|fig8 [--profile P] quantized conv speedups / bw / GFLOP/s
   fig9 [--profile P]          GEMM GFLOP/s over size (tuned/naive/blas)
   validate [--artifacts DIR]  execute every AOT artifact via PJRT, check checksums
+  serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
+        [--max-batch B] [--shards M] [--synthetic]
+                              sharded multi-worker serving over AOT artifacts
+                              (falls back to the synthetic native-GEMM mix
+                              when artifacts/ is absent or --synthetic is set)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -329,6 +341,113 @@ fn cmd_validate(opts: &Opts) -> Result<()> {
     println!("{}/{} artifacts validated", results.len() - failed, results.len());
     if failed > 0 {
         bail!("{failed} artifacts failed validation");
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let workers = opts.usize("workers", 4)?;
+    let n_requests = opts.usize("requests", 256)?;
+    let seed = opts.usize("seed", 0xD15C)? as u64;
+    let mut cfg = ServeConfig::new(workers).with_cache(opts.usize("cache-entries", 64)?);
+    cfg.batch = BatchPolicy { max_batch: opts.usize("max-batch", 8)? };
+    cfg.shards = opts.usize("shards", 0)?;
+
+    // Fall back to the synthetic mix only when artifacts are genuinely
+    // absent; a present-but-broken manifest is a hard error, not a silent
+    // change of what gets measured.
+    let manifest = if opts.has("synthetic") {
+        None
+    } else {
+        let dir = artifacts_dir(opts);
+        if std::path::Path::new(&dir).join("manifest.json").exists() {
+            Some(Arc::new(Manifest::load(&dir)?))
+        } else {
+            println!("note: no {dir}/manifest.json — serving the synthetic native-GEMM mix");
+            None
+        }
+    };
+    let (outcome, mode) = match manifest {
+        Some(m) => {
+            let menu: Vec<(String, u32)> =
+                m.artifacts.iter().map(|a| (a.name.clone(), 1)).collect();
+            if menu.is_empty() {
+                bail!("manifest has no artifacts — run `make artifacts`");
+            }
+            let stream = workloads::bursty_requests(&menu, n_requests, seed);
+            cfg.catalog = Some(m.clone());
+            let exec_manifest = m.clone();
+            let srv = ShardedServer::start(cfg, move |_w| {
+                PjrtExecutor::with_manifest(exec_manifest.clone())
+            });
+            (srv.serve_stream(stream), "pjrt artifacts")
+        }
+        None => {
+            let stream = workloads::serving_requests(n_requests, seed);
+            let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+            (srv.serve_stream(stream), "synthetic native-GEMM mix")
+        }
+    };
+
+    let m = &outcome.metrics;
+    println!(
+        "served {}/{} requests in {:.2}s -> {:.1} req/s  ({workers} workers, {mode})",
+        m.completed,
+        m.requests,
+        outcome.wall_seconds,
+        m.throughput(outcome.wall_seconds),
+    );
+    println!(
+        "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at admission)",
+        m.batches,
+        m.cache_hits,
+        m.cache_hit_rate() * 100.0,
+        m.failed,
+        m.rejected
+    );
+    if let Some(p) = m.latency_percentiles(&[50.0, 95.0, 99.0, 100.0]) {
+        println!(
+            "latency p50 {}  p95 {}  p99 {}  max {}",
+            fmt_time(p[0]),
+            fmt_time(p[1]),
+            fmt_time(p[2]),
+            fmt_time(p[3]),
+        );
+    }
+
+    let mut table = Table::new(
+        "Per-shard serving metrics",
+        &["shard", "worker", "requests", "hits", "p50", "p99"],
+    )
+    .align(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for s in &m.per_shard {
+        table.row(vec![
+            s.shard.to_string(),
+            s.worker.to_string(),
+            s.requests.to_string(),
+            s.cache_hits.to_string(),
+            fmt_time(s.latency.percentile(50.0)),
+            fmt_time(s.latency.percentile(99.0)),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    if m.failed > 0 {
+        // surface the root cause, not just the count
+        if let Some(r) = outcome.responses.iter().find(|r| !r.ok) {
+            eprintln!(
+                "first failure ({}): {}",
+                r.artifact,
+                r.error.as_deref().unwrap_or("unknown error")
+            );
+        }
+        bail!("{} requests failed", m.failed);
     }
     Ok(())
 }

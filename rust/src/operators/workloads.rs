@@ -94,6 +94,98 @@ pub fn gemm_macs(n: usize) -> u64 {
     (n as u64).pow(3)
 }
 
+// ---------------------------------------------------------------------------
+// Synthetic serving mix (coordinator::server, bench_serve)
+// ---------------------------------------------------------------------------
+
+/// One entry of the synthetic serving mix: a native tiled-GEMM "model"
+/// with a traffic weight.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeItem {
+    /// Artifact name understood by `SyntheticExecutor` (`syn_gemm_n<N>`).
+    pub artifact: String,
+    /// Square GEMM size.
+    pub n: usize,
+    /// Relative traffic share (requests are drawn ∝ weight).
+    pub weight: u32,
+}
+
+/// GEMM sizes of the synthetic serving mix — small enough that a request
+/// is sub-millisecond-to-few-ms, matching the paper's cache-resident
+/// small-operator regime.
+pub const SERVING_GEMM_SIZES: [usize; 5] = [32, 48, 64, 96, 128];
+
+/// Artifact name for the synthetic square-GEMM "model" of size `n`.
+pub fn synthetic_artifact(n: usize) -> String {
+    format!("syn_gemm_n{n}")
+}
+
+/// Inverse of [`synthetic_artifact`]: `syn_gemm_n64` → `Some(64)`.
+pub fn synthetic_gemm_n(name: &str) -> Option<usize> {
+    let n: usize = name.strip_prefix("syn_gemm_n")?.parse().ok()?;
+    (n > 0 && n <= 4096).then_some(n)
+}
+
+/// The synthetic serving mix: small GEMMs dominate (real inference traffic
+/// skews toward the cheap, popular models), big ones are the tail.
+pub fn serving_mix() -> Vec<ServeItem> {
+    let weights = [8u32, 6, 4, 2, 1];
+    SERVING_GEMM_SIZES
+        .iter()
+        .zip(weights)
+        .map(|(&n, weight)| ServeItem {
+            artifact: synthetic_artifact(n),
+            n,
+            weight,
+        })
+        .collect()
+}
+
+/// A deterministic, bursty, weighted request stream over an arbitrary
+/// `(artifact, weight)` menu: models are drawn weight-proportionally, in
+/// runs of 1–4 consecutive requests (the batching-friendly arrival pattern
+/// of real serving traffic).  Identical `(menu, n_requests, seed)` always
+/// yields the identical stream — the reproducibility contract the serving
+/// tests and benches rely on.  This is the *single* arrival-model
+/// implementation: the CLI's artifact-menu path and [`serving_requests`]
+/// both route through it.
+pub fn bursty_requests(menu: &[(String, u32)], n_requests: usize, seed: u64) -> Vec<String> {
+    use crate::util::rng::Xoshiro256;
+    assert!(!menu.is_empty(), "empty serving menu");
+    let total_weight: u64 = menu.iter().map(|(_, w)| *w as u64).sum();
+    assert!(total_weight > 0, "all serving-menu weights are zero");
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::with_capacity(n_requests);
+    while out.len() < n_requests {
+        let mut ticket = rng.below(total_weight);
+        let (artifact, _) = menu
+            .iter()
+            .find(|(_, w)| {
+                if ticket < *w as u64 {
+                    true
+                } else {
+                    ticket -= *w as u64;
+                    false
+                }
+            })
+            .expect("ticket < total weight");
+        let burst = 1 + rng.below(4) as usize;
+        for _ in 0..burst.min(n_requests - out.len()) {
+            out.push(artifact.clone());
+        }
+    }
+    out
+}
+
+/// [`bursty_requests`] over the synthetic [`serving_mix`].
+pub fn serving_requests(n_requests: usize, seed: u64) -> Vec<String> {
+    let menu: Vec<(String, u32)> = serving_mix()
+        .into_iter()
+        .map(|m| (m.artifact, m.weight))
+        .collect();
+    bursty_requests(&menu, n_requests, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +245,30 @@ mod tests {
     #[test]
     fn gemm_macs_cubic() {
         assert_eq!(gemm_macs(128), 128u64.pow(3));
+    }
+
+    #[test]
+    fn synthetic_artifact_roundtrips() {
+        for item in serving_mix() {
+            assert_eq!(synthetic_gemm_n(&item.artifact), Some(item.n));
+        }
+        assert_eq!(synthetic_gemm_n("gemm_f32_tuned_n32"), None);
+        assert_eq!(synthetic_gemm_n("syn_gemm_n"), None);
+        assert_eq!(synthetic_gemm_n("syn_gemm_n0"), None);
+    }
+
+    #[test]
+    fn serving_requests_deterministic_and_weighted() {
+        let a = serving_requests(400, 42);
+        let b = serving_requests(400, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 400);
+        assert_ne!(a, serving_requests(400, 43));
+        // every name is valid and the heaviest item dominates the lightest
+        let count = |name: &str| a.iter().filter(|x| x.as_str() == name).count();
+        for name in &a {
+            assert!(synthetic_gemm_n(name).is_some(), "{name}");
+        }
+        assert!(count("syn_gemm_n32") > count("syn_gemm_n128"));
     }
 }

@@ -13,6 +13,13 @@
 //!   compiled executable → timed execution.
 //! * [`registry`] — an executable cache keyed by artifact name, compiling
 //!   lazily and exposing checksum validation + timing entry points.
+//!
+//! Threading contract: the manifest is plain data and is shared across
+//! threads as `Arc<Manifest>` (`Registry::with_manifest`); the PJRT client
+//! and everything compiled through it are **not** `Send` and must be
+//! created on the thread that uses them — the sharded server
+//! (`coordinator::server`) builds one `Registry` inside each worker thread
+//! for exactly this reason.
 
 pub mod client;
 pub mod inputs;

@@ -5,6 +5,7 @@
 //! over the same artifact (tuning, benches) pay compilation exactly once.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 use xla::{Literal, PjRtLoadedExecutable};
@@ -26,7 +27,12 @@ pub struct Validation {
 }
 
 pub struct Registry {
-    pub manifest: Manifest,
+    /// The parsed manifest.  Held through `Arc` so a serving front-end and
+    /// many per-worker registries can share one parse: the manifest is
+    /// plain data and thread-safe, while the PJRT client, executables and
+    /// input literals below are **not** `Send` and stay confined to the
+    /// thread that built this `Registry`.
+    pub manifest: Arc<Manifest>,
     runtime: Runtime,
     executables: HashMap<String, PjRtLoadedExecutable>,
     input_cache: HashMap<String, Vec<Literal>>,
@@ -34,8 +40,16 @@ pub struct Registry {
 
 impl Registry {
     pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::with_manifest(Arc::new(Manifest::load(artifacts_dir)?))
+    }
+
+    /// Build a registry around a manifest parsed elsewhere — the sharing
+    /// path for multi-worker serving: parse once on the admission thread,
+    /// hand each worker an `Arc`, and let every worker create its own PJRT
+    /// client where it lives.
+    pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Self> {
         Ok(Registry {
-            manifest: Manifest::load(artifacts_dir)?,
+            manifest,
             runtime: Runtime::cpu()?,
             executables: HashMap::new(),
             input_cache: HashMap::new(),
@@ -44,6 +58,11 @@ impl Registry {
 
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
+    }
+
+    /// A thread-safe handle to the manifest (see the field docs).
+    pub fn shared_manifest(&self) -> Arc<Manifest> {
+        self.manifest.clone()
     }
 
     fn spec(&self, name: &str) -> Result<ArtifactSpec> {

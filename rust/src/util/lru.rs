@@ -1,0 +1,127 @@
+//! A small least-recently-used cache.
+//!
+//! Used by the sharded serving core (`coordinator::server`) as the
+//! response cache for repeated pure requests: artifacts are shape-static
+//! and executed on fixed protocol inputs, so a response payload is a pure
+//! function of the artifact name and can be replayed without touching the
+//! executor.  Capacities are tiny (tens to hundreds of entries), so
+//! eviction does a linear minimum-stamp scan instead of maintaining an
+//! intrusive list — simpler, and never on a hot path.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// LRU cache with a fixed capacity.  A capacity of 0 disables the cache
+/// entirely (`get` always misses, `put` is a no-op).
+#[derive(Clone, Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    capacity: usize,
+    /// value + last-touch stamp.
+    map: HashMap<K, (V, u64)>,
+    clock: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity.min(1024)),
+            clock: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(key).map(|(v, stamp)| {
+            *stamp = clock;
+            &*v
+        })
+    }
+
+    /// Check membership without refreshing recency.
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert `key -> value`, evicting the least-recently-used entry if the
+    /// cache is full.  Returns the evicted key, if any.
+    pub fn put(&mut self, key: K, value: V) -> Option<K> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.clock += 1;
+        let fresh = !self.map.contains_key(&key);
+        self.map.insert(key, (value, self.clock));
+        if fresh && self.map.len() > self.capacity {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            self.map.remove(&victim);
+            return Some(victim);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss() {
+        let mut c = LruCache::new(2);
+        assert!(c.get(&"a").is_none());
+        c.put("a", 1);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        // touch "a" so "b" becomes LRU
+        assert_eq!(c.get(&"a"), Some(&1));
+        let evicted = c.put("c", 3);
+        assert_eq!(evicted, Some("b"));
+        assert!(c.get(&"b").is_none());
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"c"), Some(&3));
+    }
+
+    #[test]
+    fn reinsert_updates_without_evicting() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.put("a", 10), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = LruCache::new(0);
+        assert_eq!(c.put("a", 1), None);
+        assert!(c.get(&"a").is_none());
+        assert!(c.is_empty());
+    }
+}

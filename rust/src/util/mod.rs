@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod stats;
 pub mod table;

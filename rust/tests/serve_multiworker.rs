@@ -1,0 +1,223 @@
+//! Multi-worker serving invariants (DESIGN.md §Serving core).
+//!
+//! Everything here runs artifact-free through `SyntheticExecutor`, so the
+//! suite exercises the real sharding/batching/caching machinery on every
+//! host.  The invariants under test:
+//!
+//! 1. per-artifact FIFO completion order, with ≥ 4 workers;
+//! 2. exactly one response per request (including failures);
+//! 3. cache hits return bit-identical payloads with `exec_seconds == 0`;
+//! 4. aggregate metrics totals equal request counts and per-shard sums;
+//! 5. identical seeds reproduce identical payloads (deterministic stress).
+
+use std::collections::{BTreeMap, HashMap};
+
+use cachebound::coordinator::server::{
+    Request, Response, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
+};
+use cachebound::operators::workloads;
+
+fn serve(workers: usize, cache_entries: usize, stream: &[String]) -> ServeOutcome {
+    let cfg = ServeConfig::new(workers).with_cache(cache_entries);
+    ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+        .serve_stream(stream.iter().cloned())
+}
+
+/// Responses grouped per artifact, in the order they completed.
+fn per_artifact_ids(responses: &[Response]) -> HashMap<&str, Vec<u64>> {
+    let mut map: HashMap<&str, Vec<u64>> = HashMap::new();
+    for r in responses {
+        map.entry(r.artifact.as_str()).or_default().push(r.id);
+    }
+    map
+}
+
+#[test]
+fn per_artifact_fifo_under_four_workers() {
+    let stream = workloads::serving_requests(400, 0xF1F0);
+    let out = serve(4, 0, &stream);
+    assert_eq!(out.responses.len(), 400);
+    assert!(out.responses.iter().all(|r| r.ok));
+    // submission ids are monotone, so each artifact's completion-order id
+    // sequence must be strictly increasing — FIFO per artifact even though
+    // four workers completed them concurrently.
+    for (artifact, ids) in per_artifact_ids(&out.responses) {
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "FIFO violated for {artifact}: {ids:?}"
+        );
+    }
+}
+
+#[test]
+fn exactly_one_response_per_request() {
+    let stream = workloads::serving_requests(250, 0x0E0E);
+    let out = serve(4, 8, &stream);
+    let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(ids, (0..250).collect::<Vec<_>>(), "duplicated or dropped responses");
+}
+
+#[test]
+fn cache_hit_returns_identical_payload_with_zero_exec() {
+    // same artifact five times: first misses, the rest must hit
+    let artifact = workloads::synthetic_artifact(64);
+    let stream: Vec<String> = (0..5).map(|_| artifact.clone()).collect();
+    let out = serve(2, 16, &stream);
+    assert!(out.responses.iter().all(|r| r.ok));
+    let by_id: BTreeMap<u64, &Response> =
+        out.responses.iter().map(|r| (r.id, r)).collect();
+    let first = by_id[&0];
+    assert!(!first.cached, "first request cannot hit");
+    assert!(first.exec_seconds > 0.0);
+    let payload = first.payload.expect("payload");
+    for id in 1..5u64 {
+        let r = by_id[&id];
+        assert!(r.cached, "request {id} should be a cache hit");
+        assert_eq!(r.exec_seconds, 0.0, "cache hit must report zero exec time");
+        assert_eq!(r.payload, Some(payload), "cache hit payload must be identical");
+    }
+    assert_eq!(out.metrics.cache_hits, 4);
+    assert_eq!(out.metrics.completed, 5);
+}
+
+#[test]
+fn cache_disabled_never_hits() {
+    let artifact = workloads::synthetic_artifact(48);
+    let stream: Vec<String> = (0..6).map(|_| artifact.clone()).collect();
+    let out = serve(2, 0, &stream);
+    assert!(out.responses.iter().all(|r| r.ok && !r.cached));
+    assert_eq!(out.metrics.cache_hits, 0);
+    // still pure: payloads identical even when recomputed every time
+    let p0 = out.responses[0].payload.unwrap();
+    assert!(out.responses.iter().all(|r| r.payload == Some(p0)));
+}
+
+#[test]
+fn metrics_totals_equal_request_counts_and_shard_sums() {
+    let mut stream = workloads::serving_requests(300, 0x717A);
+    // sprinkle in some failures
+    for i in (0..300).step_by(50) {
+        stream[i] = "not_a_real_artifact".to_string();
+    }
+    let out = serve(4, 32, &stream);
+    let m = &out.metrics;
+    assert_eq!(m.requests, 300);
+    assert_eq!(m.completed + m.failed, m.requests);
+    assert_eq!(m.failed, 6);
+    assert_eq!(out.responses.len(), 300);
+
+    assert_eq!(m.rejected, 0, "no catalog attached, nothing rejected at admission");
+
+    // per-shard rollup must sum to the aggregate
+    let shard_requests: u64 = m.per_shard.iter().map(|s| s.requests).sum();
+    let shard_completed: u64 = m.per_shard.iter().map(|s| s.completed).sum();
+    let shard_failed: u64 = m.per_shard.iter().map(|s| s.failed).sum();
+    let shard_hits: u64 = m.per_shard.iter().map(|s| s.cache_hits).sum();
+    let shard_batches: u64 = m.per_shard.iter().map(|s| s.batches).sum();
+    let shard_latencies: u64 = m.per_shard.iter().map(|s| s.latency.count()).sum();
+    assert_eq!(shard_requests, m.requests);
+    assert_eq!(shard_completed, m.completed);
+    assert_eq!(shard_failed, m.failed);
+    assert_eq!(shard_hits, m.cache_hits);
+    assert_eq!(shard_batches, m.batches);
+    assert_eq!(shard_latencies, m.completed, "histograms record completed requests");
+
+    // each shard is owned by exactly one worker, and an artifact never
+    // appears on two shards
+    let mut artifact_shard: HashMap<&str, usize> = HashMap::new();
+    for r in &out.responses {
+        if let Some(prev) = artifact_shard.insert(r.artifact.as_str(), r.shard) {
+            assert_eq!(prev, r.shard, "artifact {} migrated shards", r.artifact);
+        }
+    }
+}
+
+#[test]
+fn rejected_at_admission_with_catalog_semantics() {
+    // without a catalog the unknown name reaches a worker and fails there;
+    // either way: one response, counted in failed
+    let stream = vec![
+        workloads::synthetic_artifact(32),
+        "bogus".to_string(),
+        workloads::synthetic_artifact(32),
+    ];
+    let out = serve(3, 4, &stream);
+    assert_eq!(out.responses.len(), 3);
+    assert_eq!(out.metrics.completed, 2);
+    assert_eq!(out.metrics.failed, 1);
+    let bad = out.responses.iter().find(|r| !r.ok).unwrap();
+    assert_eq!(bad.artifact, "bogus");
+    assert!(bad.error.is_some());
+}
+
+#[test]
+fn catalog_rejects_at_admission_and_metrics_reconcile() {
+    use std::sync::Arc;
+
+    use cachebound::runtime::{ArtifactSpec, Manifest};
+    use cachebound::util::json::Value;
+
+    let known = workloads::synthetic_artifact(32);
+    // minimal in-memory catalog: one known artifact, nothing on disk
+    let manifest = Manifest {
+        dir: "unused".into(),
+        artifacts: vec![ArtifactSpec {
+            name: known.clone(),
+            file: "unused.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+            kind: "gemm".into(),
+            macs: 0,
+            meta: Value::Obj(Default::default()),
+        }],
+        resnet_macs: vec![],
+    };
+    let cfg = ServeConfig::new(2).with_cache(4).with_catalog(Arc::new(manifest));
+    let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+    for (id, artifact) in
+        [known.clone(), "unknown_model".to_string(), known.clone()].into_iter().enumerate()
+    {
+        srv.submit(Request { id: id as u64, artifact });
+    }
+    let out = srv.finish();
+    let m = &out.metrics;
+    assert_eq!(out.responses.len(), 3, "rejections still produce their one response");
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.failed, 1);
+    let rej = out.responses.iter().find(|r| !r.ok).unwrap();
+    assert_eq!(rej.artifact, "unknown_model");
+    assert!(rej.error.as_deref().unwrap().contains("admission"));
+    // rejected requests never reach a worker: per-shard sums cover exactly
+    // the admitted requests
+    let shard_requests: u64 = m.per_shard.iter().map(|s| s.requests).sum();
+    assert_eq!(shard_requests, m.requests - m.rejected);
+}
+
+#[test]
+fn deterministic_seed_stress() {
+    // 2000 requests, 4 workers, deliberately tiny cache to force eviction
+    // churn; two runs with the same seed must agree on every payload, and
+    // a single-worker run must agree with the multi-worker runs.
+    let stream = workloads::serving_requests(2000, 0x5EED);
+    let a = serve(4, 2, &stream);
+    let b = serve(4, 2, &stream);
+    let c = serve(1, 2, &stream);
+    for out in [&a, &b, &c] {
+        assert_eq!(out.responses.len(), 2000);
+        assert!(out.responses.iter().all(|r| r.ok));
+        assert_eq!(out.metrics.completed, 2000);
+    }
+    let payloads = |o: &ServeOutcome| -> BTreeMap<u64, f64> {
+        o.responses.iter().map(|r| (r.id, r.payload.unwrap())).collect()
+    };
+    let (pa, pb, pc) = (payloads(&a), payloads(&b), payloads(&c));
+    assert_eq!(pa, pb, "same seed, same worker count must reproduce payloads");
+    assert_eq!(pa, pc, "worker count must not change payloads");
+    // FIFO also holds at stress volume
+    for (artifact, ids) in per_artifact_ids(&a.responses) {
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "FIFO violated for {artifact}");
+    }
+}
