@@ -4,21 +4,17 @@
 //!
 //! Run: `cargo bench --bench bench_bitserial`
 
-use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::bench::{bench_pipeline, native_line, quick_flag};
 use cachebound::operators::bitserial;
 use cachebound::operators::Tensor;
 use cachebound::report;
-use cachebound::util::bench::{measure, report_line, BenchConfig};
+use cachebound::util::bench::{measure, BenchConfig};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = quick_flag();
     println!("== bench_bitserial: Figs 4 & 5 ==\n");
 
-    let mut pipeline = Pipeline::new(PipelineConfig {
-        tune_trials: 8,
-        skip_native: true,
-        ..Default::default()
-    });
+    let mut pipeline = bench_pipeline(8);
     for profile in ["a53", "a72"] {
         let (f, csv4, csv5) = report::fig4_fig5(&mut pipeline, profile).unwrap();
         println!("-- {profile}: bit-serial GEMM GOP/s by (bits, N) — bipolar --");
@@ -104,14 +100,10 @@ fn main() {
             let w = Tensor::rand_unipolar(&[n, n], bits as u32, 8);
             let wp = bitserial::pack_unipolar(&w, bits); // weights pre-packed (§V-A)
             let macs = (n as f64).powi(3);
-            let m = measure(&cfg, || {
+            native_line(&format!("bs uni {bits}b n{n} (pack+gemm)"), &cfg, Some(2.0 * macs), || {
                 let ap = bitserial::pack_unipolar(&a, bits); // runtime packing
                 bitserial::gemm_unipolar(&ap, &wp)
             });
-            println!(
-                "{}",
-                report_line(&format!("bs uni {bits}b n{n} (pack+gemm)"), &m, Some(2.0 * macs))
-            );
         }
     }
 }

@@ -3,22 +3,18 @@
 //!
 //! Run: `cargo bench --bench bench_conv`
 
-use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::bench::{bench_pipeline, native_line, quick_flag};
 use cachebound::operators::conv::{self, ConvSchedule};
 use cachebound::operators::workloads::layer_by_name;
 use cachebound::operators::Tensor;
 use cachebound::report;
-use cachebound::util::bench::{measure, report_line, BenchConfig};
+use cachebound::util::bench::BenchConfig;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = quick_flag();
     println!("== bench_conv: Figs 2 & 3 ==\n");
 
-    let mut pipeline = Pipeline::new(PipelineConfig {
-        tune_trials: if quick { 8 } else { 32 },
-        skip_native: true,
-        ..Default::default()
-    });
+    let mut pipeline = bench_pipeline(if quick { 8 } else { 32 });
     for profile in ["a53", "a72"] {
         let (f, csv) = report::fig2_fig3(&mut pipeline, profile).unwrap();
         println!("-- {profile}: layers sorted by simulated GFLOP/s (Fig 3 order) --");
@@ -45,15 +41,16 @@ fn main() {
     let x = Tensor::rand_f32(&[1, cin, l.h, l.w], 1);
     let w = Tensor::rand_f32(&[cout, cin, l.k, l.k], 2);
     let macs = (l.ho() * l.wo() * cin * cout * l.k * l.k) as f64;
-    let m = measure(&cfg, || {
+    native_line("spatial_pack C5/4", &cfg, Some(2.0 * macs), || {
         conv::spatial_pack(&x, &w, l.stride, l.pad, ConvSchedule::default_tuned())
     });
-    println!("{}", report_line("spatial_pack C5/4", &m, Some(2.0 * macs)));
-    let m = measure(&cfg, || conv::im2col_conv(&x, &w, l.stride, l.pad));
-    println!("{}", report_line("im2col_conv  C5/4", &m, Some(2.0 * macs)));
+    native_line("im2col_conv  C5/4", &cfg, Some(2.0 * macs), || {
+        conv::im2col_conv(&x, &w, l.stride, l.pad)
+    });
     if quick {
         return;
     }
-    let m = measure(&cfg, || conv::naive(&x, &w, l.stride, l.pad));
-    println!("{}", report_line("naive_conv   C5/4", &m, Some(2.0 * macs)));
+    native_line("naive_conv   C5/4", &cfg, Some(2.0 * macs), || {
+        conv::naive(&x, &w, l.stride, l.pad)
+    });
 }

@@ -7,23 +7,19 @@
 //! (openBLAS-analog / naive / tuned / autotuned / theoretical peak), a
 //! host-native section, and (if `make artifacts` ran) the artifact section.
 
-use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::bench::{bench_pipeline, native_line, quick_flag};
 use cachebound::operators::gemm::{self, GemmSchedule};
 use cachebound::operators::Tensor;
 use cachebound::report;
 use cachebound::runtime::Registry;
-use cachebound::util::bench::{measure, report_line, BenchConfig};
+use cachebound::util::bench::{report_line, BenchConfig};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = quick_flag();
     println!("== bench_gemm: Tables IV & V ==\n");
 
     // --- simulated tables (the ARM substitution) ---------------------------
-    let mut pipeline = Pipeline::new(PipelineConfig {
-        tune_trials: if quick { 12 } else { 48 },
-        skip_native: true,
-        ..Default::default()
-    });
+    let mut pipeline = bench_pipeline(if quick { 12 } else { 48 });
     let sizes: &[usize] = if quick { &[32, 128, 256] } else { &[32, 128, 256, 512, 1024] };
     for profile in ["a53", "a72"] {
         let (t, csv, _) = report::gemm_table(&mut pipeline, profile, sizes).unwrap();
@@ -39,13 +35,16 @@ fn main() {
         let a = Tensor::rand_f32(&[n, n], 1);
         let b = Tensor::rand_f32(&[n, n], 2);
         let flops = 2.0 * (n as f64).powi(3);
-        let m = measure(&cfg, || gemm::blocked(&a, &b));
-        println!("{}", report_line(&format!("native blocked n{n}"), &m, Some(flops)));
-        let m = measure(&cfg, || gemm::tiled(&a, &b, GemmSchedule::new(64, 64, 64, 4)));
-        println!("{}", report_line(&format!("native tiled   n{n}"), &m, Some(flops)));
+        native_line(&format!("native blocked n{n}"), &cfg, Some(flops), || {
+            gemm::blocked(&a, &b)
+        });
+        native_line(&format!("native tiled   n{n}"), &cfg, Some(flops), || {
+            gemm::tiled(&a, &b, GemmSchedule::new(64, 64, 64, 4))
+        });
         if n <= 128 {
-            let m = measure(&cfg, || gemm::naive(&a, &b));
-            println!("{}", report_line(&format!("native naive   n{n}"), &m, Some(flops)));
+            native_line(&format!("native naive   n{n}"), &cfg, Some(flops), || {
+                gemm::naive(&a, &b)
+            });
         }
     }
 

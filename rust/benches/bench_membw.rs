@@ -6,12 +6,13 @@
 //!
 //! Run: `cargo bench --bench bench_membw`
 
+use cachebound::bench::quick_flag;
 use cachebound::hw::builtin_profiles;
 use cachebound::membench;
 use cachebound::report;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = quick_flag();
     println!("== bench_membw: Tables I & II ==\n");
 
     let host = if quick { None } else { Some(membench::bandwidth_sweep(&[])) };

@@ -4,20 +4,16 @@
 //!
 //! Run: `cargo bench --bench bench_qnn`
 
-use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+use cachebound::bench::{bench_pipeline, native_line, quick_flag};
 use cachebound::operators::{conv, gemm, qnn, Tensor};
 use cachebound::report;
-use cachebound::util::bench::{measure, report_line, BenchConfig};
+use cachebound::util::bench::BenchConfig;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = quick_flag();
     println!("== bench_qnn: Figs 6, 7 & 8 ==\n");
 
-    let mut pipeline = Pipeline::new(PipelineConfig {
-        tune_trials: 8,
-        skip_native: true,
-        ..Default::default()
-    });
+    let mut pipeline = bench_pipeline(8);
     for profile in ["a53", "a72"] {
         let (f, csv6, csv7, csv8) = report::fig6_fig7_fig8(&mut pipeline, profile).unwrap();
         println!("-- {profile}: speedup over float32 (Fig 6) --");
@@ -49,23 +45,25 @@ fn main() {
     let flops = 2.0 * (n as f64).powi(3);
     let af = Tensor::<f32>::rand_f32(&[n, n], 1);
     let bf = Tensor::<f32>::rand_f32(&[n, n], 2);
-    let m = measure(&cfg, || gemm::blocked(&af, &bf));
-    println!("{}", report_line(&format!("f32 blocked gemm n{n}"), &m, Some(flops)));
+    native_line(&format!("f32 blocked gemm n{n}"), &cfg, Some(flops), || {
+        gemm::blocked(&af, &bf)
+    });
     let ai = Tensor::<i8>::rand_i8(&[n, n], 1);
     let bi = Tensor::<i8>::rand_i8(&[n, n], 2);
-    let m = measure(&cfg, || qnn::gemm_blocked(&ai, &bi));
-    println!("{}", report_line(&format!("i8  blocked gemm n{n}"), &m, Some(flops)));
+    native_line(&format!("i8  blocked gemm n{n}"), &cfg, Some(flops), || {
+        qnn::gemm_blocked(&ai, &bi)
+    });
 
     let (cin, cout, h) = (16usize, 16usize, 28usize);
     let xf = Tensor::<f32>::rand_f32(&[1, cin, h, h], 3);
     let wf = Tensor::<f32>::rand_f32(&[cout, cin, 3, 3], 4);
     let cmacs = (h * h * cin * cout * 9) as f64;
-    let m = measure(&cfg, || {
+    native_line("f32 spatial conv 16x16x28", &cfg, Some(2.0 * cmacs), || {
         conv::spatial_pack(&xf, &wf, 1, 1, conv::ConvSchedule::default_tuned())
     });
-    println!("{}", report_line("f32 spatial conv 16x16x28", &m, Some(2.0 * cmacs)));
     let xi = Tensor::<i8>::rand_i8(&[1, cin, h, h], 3);
     let wi = Tensor::<i8>::rand_i8(&[cout, cin, 3, 3], 4);
-    let m = measure(&cfg, || qnn::conv2d(&xi, &wi, 1, 1));
-    println!("{}", report_line("i8  conv 16x16x28", &m, Some(2.0 * cmacs)));
+    native_line("i8  conv 16x16x28", &cfg, Some(2.0 * cmacs), || {
+        qnn::conv2d(&xi, &wi, 1, 1)
+    });
 }

@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo bench --bench bench_sim`
 
+use cachebound::bench::native_line;
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::hw::profile_by_name;
 use cachebound::operators::gemm::GemmSchedule;
@@ -59,11 +60,12 @@ fn main() {
 
     // analytic traffic model (must be ~ns: it runs inside tuner loops)
     let tm = TrafficModel::new(&cpu);
-    let m = measure(&cfg, || tm.gemm(1024, 1024, 1024, GemmSchedule::new(64, 64, 64, 4), 4));
-    println!("{}", report_line("analytic traffic model", &m, None));
+    native_line("analytic traffic model", &cfg, None, || {
+        tm.gemm(1024, 1024, 1024, GemmSchedule::new(64, 64, 64, 4), 4)
+    });
 
     // full timing model
-    let m = measure(&cfg, || {
+    native_line("simulate_gemm_time", &cfg, None, || {
         cachebound::sim::timing::simulate_gemm_time(
             &cpu,
             1024,
@@ -73,37 +75,33 @@ fn main() {
             32,
         )
     });
-    println!("{}", report_line("simulate_gemm_time", &m, None));
 
     // GBT fit + rank (the tuner's per-batch cost)
     let mut rng = Xoshiro256::new(2);
     let xs: Vec<Vec<f64>> = (0..256).map(|_| (0..8).map(|_| rng.f64()).collect()).collect();
     let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>() + rng.f64() * 0.1).collect();
-    let m = measure(&cfg, || Gbt::fit(&xs, &ys, 40, 3, 0.3));
-    println!("{}", report_line("gbt fit 256x8 x40 trees", &m, None));
+    native_line("gbt fit 256x8 x40 trees", &cfg, None, || {
+        Gbt::fit(&xs, &ys, 40, 3, 0.3)
+    });
     let model = Gbt::fit(&xs, &ys, 40, 3, 0.3);
     let cands: Vec<usize> = (0..xs.len()).collect();
-    let m = measure(&cfg, || {
+    native_line("gbt rank 256 candidates", &cfg, None, || {
         let mut r = Xoshiro256::new(3);
         model.rank(&cands, |i| xs[i].clone(), &mut r, 0.05)
     });
-    println!("{}", report_line("gbt rank 256 candidates", &m, None));
 
     // end-to-end fig1 pipeline (the report hot path)
-    let m = measure(
-        &BenchConfig {
-            samples: 3,
-            ..BenchConfig::quick()
-        },
-        || {
-            let mut p = Pipeline::new(PipelineConfig {
-                n_workers: 2,
-                tune_trials: 8,
-                skip_native: true,
-                native_max_n: 0,
-            });
-            cachebound::report::fig1(&mut p, "a53").unwrap().0.best_bound
-        },
-    );
-    println!("{}", report_line("fig1 end-to-end pipeline", &m, None));
+    let e2e_cfg = BenchConfig {
+        samples: 3,
+        ..BenchConfig::quick()
+    };
+    native_line("fig1 end-to-end pipeline", &e2e_cfg, None, || {
+        let mut p = Pipeline::new(PipelineConfig {
+            n_workers: 2,
+            tune_trials: 8,
+            skip_native: true,
+            native_max_n: 0,
+        });
+        cachebound::report::fig1(&mut p, "a53").unwrap().0.best_bound
+    });
 }

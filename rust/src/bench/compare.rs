@@ -1,0 +1,233 @@
+//! Diff two `BENCH.json` files and gate on regressions — the CI half of
+//! the measure/record split.
+//!
+//! Records are matched by their stable `key`; a workload whose measured
+//! time grew by more than `threshold_pct` percent is a regression.  The
+//! CLI (`cachebound bench compare a.json b.json`) exits non-zero when any
+//! regression survives, which is what the `bench-smoke` CI job gates on.
+//! Workloads only present on one side are reported but never fail the
+//! gate (grids legitimately grow and shrink across commits).
+
+use crate::util::table::{Align, Table};
+
+use super::record::BenchReport;
+
+/// Default regression threshold: percent slower than baseline that fails
+/// the gate.  Simulator sweeps are deterministic, so this headroom exists
+/// for intentional model recalibrations, not measurement noise.
+pub const DEFAULT_THRESHOLD_PCT: f64 = 10.0;
+
+/// One matched workload whose time moved.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delta {
+    pub key: String,
+    pub base_s: f64,
+    pub new_s: f64,
+    /// Percent change in measured time (positive = slower).
+    pub pct: f64,
+}
+
+/// Outcome of comparing a new run against a baseline.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub threshold_pct: f64,
+    /// Matched workloads slower than baseline by more than the threshold.
+    pub regressions: Vec<Delta>,
+    /// Matched workloads faster than baseline by more than the threshold.
+    pub improvements: Vec<Delta>,
+    /// Matched workloads within the threshold either way.
+    pub unchanged: usize,
+    /// Baseline keys absent from the new run.
+    pub missing: Vec<String>,
+    /// New-run keys absent from the baseline.
+    pub added: Vec<String>,
+}
+
+impl CompareReport {
+    /// The gate: true when no matched workload regressed past the
+    /// threshold.  An empty intersection passes (first run against a
+    /// fresh baseline).
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Matched workload count.
+    pub fn matched(&self) -> usize {
+        self.regressions.len() + self.improvements.len() + self.unchanged
+    }
+
+    /// Human-readable summary (markdown table of movers + one-line verdict).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.matched() == 0 {
+            out.push_str(
+                "no overlapping workloads between baseline and new run — nothing to gate\n",
+            );
+        }
+        if !self.regressions.is_empty() || !self.improvements.is_empty() {
+            let mut t = Table::new(
+                format!("Workloads moved more than {:.0}%", self.threshold_pct),
+                &["workload", "baseline", "new", "change"],
+            )
+            .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+            for d in self.regressions.iter().chain(&self.improvements) {
+                t.row(vec![
+                    d.key.clone(),
+                    format!("{:.3e} s", d.base_s),
+                    format!("{:.3e} s", d.new_s),
+                    format!("{:+.1}%", d.pct),
+                ]);
+            }
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        if !self.missing.is_empty() {
+            out.push_str(&format!(
+                "missing from new run ({}): {}\n",
+                self.missing.len(),
+                self.missing.join(", ")
+            ));
+        }
+        if !self.added.is_empty() {
+            out.push_str(&format!("new workloads ({})\n", self.added.len()));
+        }
+        out.push_str(&format!(
+            "{} matched, {} regressed, {} improved, {} unchanged (threshold {:.0}%)\n",
+            self.matched(),
+            self.regressions.len(),
+            self.improvements.len(),
+            self.unchanged,
+            self.threshold_pct,
+        ));
+        out
+    }
+}
+
+/// Compare `new` against `base` at `threshold_pct`.
+pub fn compare(base: &BenchReport, new: &BenchReport, threshold_pct: f64) -> CompareReport {
+    assert!(threshold_pct >= 0.0, "threshold must be non-negative");
+    let mut regressions = Vec::new();
+    let mut improvements = Vec::new();
+    let mut missing = Vec::new();
+    let mut unchanged = 0usize;
+    for b in &base.records {
+        let Some(n) = new.get(&b.key) else {
+            missing.push(b.key.clone());
+            continue;
+        };
+        let pct = (n.measured_s / b.measured_s - 1.0) * 100.0;
+        let d = Delta {
+            key: b.key.clone(),
+            base_s: b.measured_s,
+            new_s: n.measured_s,
+            pct,
+        };
+        if pct > threshold_pct {
+            regressions.push(d);
+        } else if pct < -threshold_pct {
+            improvements.push(d);
+        } else {
+            unchanged += 1;
+        }
+    }
+    let added = new
+        .records
+        .iter()
+        .filter(|r| base.get(&r.key).is_none())
+        .map(|r| r.key.clone())
+        .collect();
+    // worst regression first — the headline of the CI failure
+    regressions.sort_by(|a, b| b.pct.partial_cmp(&a.pct).unwrap());
+    improvements.sort_by(|a, b| a.pct.partial_cmp(&b.pct).unwrap());
+    CompareReport {
+        threshold_pct,
+        regressions,
+        improvements,
+        unchanged,
+        missing,
+        added,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::SCHEMA_VERSION;
+    use crate::bench::sweep::{run_sweep, SweepConfig};
+    use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+
+    fn quick_report() -> BenchReport {
+        let mut p = Pipeline::new(PipelineConfig {
+            n_workers: 2,
+            tune_trials: 4,
+            skip_native: true,
+            native_max_n: 0,
+        });
+        let cfg = SweepConfig {
+            profiles: vec!["a53".into()],
+            quick: true,
+            synthetic: true,
+        };
+        run_sweep(&mut p, &cfg).unwrap()
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = quick_report();
+        let c = compare(&r, &r, DEFAULT_THRESHOLD_PCT);
+        assert!(c.passed());
+        assert_eq!(c.matched(), r.records.len());
+        assert_eq!(c.unchanged, r.records.len());
+        assert!(c.missing.is_empty() && c.added.is_empty());
+    }
+
+    #[test]
+    fn synthetic_2x_slowdown_trips_the_gate() {
+        let base = quick_report();
+        let mut slow = base.clone();
+        slow.records[0].measured_s *= 2.0;
+        let c = compare(&base, &slow, DEFAULT_THRESHOLD_PCT);
+        assert!(!c.passed());
+        assert_eq!(c.regressions.len(), 1);
+        assert_eq!(c.regressions[0].key, base.records[0].key);
+        assert!((c.regressions[0].pct - 100.0).abs() < 1e-9);
+        // ...and the same slowdown passes a generous-enough threshold
+        assert!(compare(&base, &slow, 150.0).passed());
+        // ...and reads as an improvement in the reverse direction
+        let c = compare(&slow, &base, DEFAULT_THRESHOLD_PCT);
+        assert!(c.passed());
+        assert_eq!(c.improvements.len(), 1);
+    }
+
+    #[test]
+    fn disjoint_grids_pass_but_are_reported() {
+        let base = quick_report();
+        let empty = BenchReport {
+            version: SCHEMA_VERSION,
+            quick: true,
+            synthetic: true,
+            hw: vec![],
+            records: vec![],
+        };
+        let c = compare(&empty, &base, DEFAULT_THRESHOLD_PCT);
+        assert!(c.passed(), "fresh baseline must not fail the gate");
+        assert_eq!(c.matched(), 0);
+        assert_eq!(c.added.len(), base.records.len());
+        let c = compare(&base, &empty, DEFAULT_THRESHOLD_PCT);
+        assert!(c.passed());
+        assert_eq!(c.missing.len(), base.records.len());
+        assert!(c.render().contains("no overlapping workloads"));
+    }
+
+    #[test]
+    fn worst_regression_sorts_first() {
+        let base = quick_report();
+        let mut slow = base.clone();
+        slow.records[0].measured_s *= 1.5;
+        slow.records[1].measured_s *= 3.0;
+        let c = compare(&base, &slow, DEFAULT_THRESHOLD_PCT);
+        assert_eq!(c.regressions.len(), 2);
+        assert!(c.regressions[0].pct > c.regressions[1].pct);
+        assert!(c.render().contains("2 regressed"));
+    }
+}

@@ -1,0 +1,32 @@
+//! The roofline benchmark harness — `cachebound bench`.
+//!
+//! The paper's core claim (TVM-generated GEMM/conv are L1-cache-read
+//! bound, not compute bound) is only checkable if every operator run is
+//! scored against the hardware bound lines.  This subsystem makes that a
+//! single machine-readable artifact, following TVM's measure/record split:
+//!
+//! * [`sweep`] — enumerate the paper-relevant workload grid
+//!   (GEMM/conv/qnn/bit-serial × Tables III–V shapes), time each through
+//!   the multi-worker coordinator (`JobSpec::BenchSweep`), and score
+//!   against the four `analysis::bounds` lines + the `report::paper`
+//!   references.
+//! * [`record`] — the versioned `BENCH.json` schema (serialize, validate,
+//!   load).
+//! * [`compare`] — diff two `BENCH.json` files; non-zero exit on any
+//!   >threshold regression.  The `bench-smoke` CI job runs
+//!   `cachebound bench --quick --synthetic` and compares against the
+//!   committed `bench/baseline.json`.
+//!
+//! The six `benches/bench_*.rs` targets are thin wrappers over the
+//! helpers here ([`quick_flag`], [`bench_pipeline`], [`native_line`])
+//! plus their per-figure reporting.
+
+pub mod compare;
+pub mod record;
+pub mod sweep;
+
+pub use compare::{compare, CompareReport, Delta, DEFAULT_THRESHOLD_PCT};
+pub use record::{BenchRecord, BenchReport, HwRecord, SCHEMA_VERSION};
+pub use sweep::{
+    bench_pipeline, native_line, quick_flag, run_sweep, score, workload_set, SweepConfig,
+};

@@ -1,0 +1,365 @@
+//! `BENCH.json` — the versioned, machine-readable bench record.
+//!
+//! This is the measure/record split of AutoTVM applied to the roofline
+//! harness: `sweep` measures, this module records, `compare` gates.  The
+//! schema is deliberately flat (one object per workload run, bound lines
+//! inlined) so any external tool — CI, a notebook, `jq` — can consume it
+//! without knowing the crate's types.
+//!
+//! Schema (version 1):
+//!
+//! ```json
+//! {
+//!  "version": 1,
+//!  "quick": true,
+//!  "synthetic": true,
+//!  "hw": [ {"profile": "cortex-a53", "soc": "...", "peak_gflops_f32": 38.4,
+//!           "l1_read_mibs": 14363.0, "l2_read_mibs": 7039.0,
+//!           "ram_read_mibs": 2040.0} ],
+//!  "records": [ {"key": "bench/sim/cortex-a53/gemm/n512", "family": "gemm",
+//!                "shape": "n512", "profile": "cortex-a53", "macs": 134217728,
+//!                "elem_bits": 32, "measured_s": 0.037, "gflops": 7.2,
+//!                "compute_s": ..., "l1_read_s": ..., "l2_read_s": ...,
+//!                "ram_read_s": ..., "class": "L1-read",
+//!                "pct_of_bound": 96.0, "paper_gflops": 5.06,
+//!                "pct_of_paper": 142.0} ]
+//! }
+//! ```
+//!
+//! `paper_gflops`/`pct_of_paper` are omitted for workloads the paper
+//! publishes no absolute number for (conv/qnn/bit-serial are figure-only).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::bounds::BoundSet;
+use crate::hw::CpuSpec;
+use crate::util::json::{self, Value};
+
+/// Current `BENCH.json` schema version.  Bump on any breaking field change;
+/// `BenchReport::load` refuses files written by a *newer* schema.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Snapshot of one hardware profile the sweep was scored against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwRecord {
+    pub profile: String,
+    pub soc: String,
+    /// Paper eq. (1) theoretical float32 peak, GFLOP/s.
+    pub peak_gflops_f32: f64,
+    pub l1_read_mibs: f64,
+    pub l2_read_mibs: f64,
+    pub ram_read_mibs: f64,
+}
+
+impl HwRecord {
+    pub fn of(cpu: &CpuSpec) -> Self {
+        HwRecord {
+            profile: cpu.name.clone(),
+            soc: cpu.soc.clone(),
+            peak_gflops_f32: cpu.peak_flops(32) / 1e9,
+            l1_read_mibs: cpu.l1.read_bw,
+            l2_read_mibs: cpu.l2.read_bw,
+            ram_read_mibs: cpu.ram_read_bw,
+        }
+    }
+}
+
+/// One workload's measured time scored against the four bound lines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Stable result key ("bench/sim/cortex-a53/gemm/n512") — the identity
+    /// `compare` matches runs on.
+    pub key: String,
+    /// Operator family ("gemm", "conv", "qnn", "bitserial").
+    pub family: String,
+    /// Shape label ("n512", "C2", "n1024b2").
+    pub shape: String,
+    /// Hardware profile the bounds were computed for.
+    pub profile: String,
+    pub macs: u64,
+    pub elem_bits: u64,
+    /// Measured (or simulated) execution time, seconds.
+    pub measured_s: f64,
+    /// 2·MACs / measured_s / 1e9.
+    pub gflops: f64,
+    /// The four `BoundSet` lines, seconds.
+    pub compute_s: f64,
+    pub l1_read_s: f64,
+    pub l2_read_s: f64,
+    pub ram_read_s: f64,
+    /// `analysis::classify` verdict ("compute", "L1-read", "L2-read",
+    /// "RAM-read", "overhead").
+    pub class: String,
+    /// Percent of the binding hardware bound achieved
+    /// (`floor_s / measured_s · 100`; 100 = running at the hardware limit).
+    pub pct_of_bound: f64,
+    /// The paper's published GFLOP/s for this workload (Tables IV/V tuned
+    /// column), when one exists.
+    pub paper_gflops: Option<f64>,
+    /// Percent of the paper reference achieved.
+    pub pct_of_paper: Option<f64>,
+}
+
+impl BenchRecord {
+    /// Reassemble the bound lines as a [`BoundSet`].
+    pub fn bound_set(&self) -> BoundSet {
+        BoundSet {
+            macs: self.macs,
+            compute_s: self.compute_s,
+            l1_read_s: self.l1_read_s,
+            l2_read_s: self.l2_read_s,
+            ram_read_s: self.ram_read_s,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("key".into(), json::s(self.key.as_str()));
+        m.insert("family".into(), json::s(self.family.as_str()));
+        m.insert("shape".into(), json::s(self.shape.as_str()));
+        m.insert("profile".into(), json::s(self.profile.as_str()));
+        m.insert("macs".into(), json::num(self.macs as f64));
+        m.insert("elem_bits".into(), json::num(self.elem_bits as f64));
+        m.insert("measured_s".into(), json::num(self.measured_s));
+        m.insert("gflops".into(), json::num(self.gflops));
+        m.insert("compute_s".into(), json::num(self.compute_s));
+        m.insert("l1_read_s".into(), json::num(self.l1_read_s));
+        m.insert("l2_read_s".into(), json::num(self.l2_read_s));
+        m.insert("ram_read_s".into(), json::num(self.ram_read_s));
+        m.insert("class".into(), json::s(self.class.as_str()));
+        m.insert("pct_of_bound".into(), json::num(self.pct_of_bound));
+        if let Some(p) = self.paper_gflops {
+            m.insert("paper_gflops".into(), json::num(p));
+        }
+        if let Some(p) = self.pct_of_paper {
+            m.insert("pct_of_paper".into(), json::num(p));
+        }
+        Value::Obj(m)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(BenchRecord {
+            key: v.req("key")?.as_str()?.to_string(),
+            family: v.req("family")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_str()?.to_string(),
+            profile: v.req("profile")?.as_str()?.to_string(),
+            macs: v.req("macs")?.as_u64()?,
+            elem_bits: v.req("elem_bits")?.as_u64()?,
+            measured_s: v.req("measured_s")?.as_f64()?,
+            gflops: v.req("gflops")?.as_f64()?,
+            compute_s: v.req("compute_s")?.as_f64()?,
+            l1_read_s: v.req("l1_read_s")?.as_f64()?,
+            l2_read_s: v.req("l2_read_s")?.as_f64()?,
+            ram_read_s: v.req("ram_read_s")?.as_f64()?,
+            class: v.req("class")?.as_str()?.to_string(),
+            pct_of_bound: v.req("pct_of_bound")?.as_f64()?,
+            paper_gflops: v.get("paper_gflops").map(|x| x.as_f64()).transpose()?,
+            pct_of_paper: v.get("pct_of_paper").map(|x| x.as_f64()).transpose()?,
+        })
+    }
+}
+
+/// A full `BENCH.json` document: one sweep run over one or more profiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub version: u64,
+    /// Reduced shape grid (`--quick`).
+    pub quick: bool,
+    /// Simulator timings (`--synthetic`) rather than host wallclock.
+    pub synthetic: bool,
+    pub hw: Vec<HwRecord>,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    /// Look up a record by its stable key.
+    pub fn get(&self, key: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.key == key)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), json::num(self.version as f64));
+        m.insert("quick".into(), Value::Bool(self.quick));
+        m.insert("synthetic".into(), Value::Bool(self.synthetic));
+        m.insert(
+            "hw".into(),
+            Value::Arr(
+                self.hw
+                    .iter()
+                    .map(|h| {
+                        json::obj(vec![
+                            ("profile", json::s(h.profile.as_str())),
+                            ("soc", json::s(h.soc.as_str())),
+                            ("peak_gflops_f32", json::num(h.peak_gflops_f32)),
+                            ("l1_read_mibs", json::num(h.l1_read_mibs)),
+                            ("l2_read_mibs", json::num(h.l2_read_mibs)),
+                            ("ram_read_mibs", json::num(h.ram_read_mibs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "records".into(),
+            Value::Arr(self.records.iter().map(|r| r.to_json()).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let version = v.req("version")?.as_u64()?;
+        if version == 0 || version > SCHEMA_VERSION {
+            bail!(
+                "BENCH.json schema version {version} not supported (this build speaks <= {SCHEMA_VERSION})"
+            );
+        }
+        let hw = v
+            .req("hw")?
+            .as_arr()?
+            .iter()
+            .map(|h| {
+                Ok(HwRecord {
+                    profile: h.req("profile")?.as_str()?.to_string(),
+                    soc: h.req("soc")?.as_str()?.to_string(),
+                    peak_gflops_f32: h.req("peak_gflops_f32")?.as_f64()?,
+                    l1_read_mibs: h.req("l1_read_mibs")?.as_f64()?,
+                    l2_read_mibs: h.req("l2_read_mibs")?.as_f64()?,
+                    ram_read_mibs: h.req("ram_read_mibs")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let records = v
+            .req("records")?
+            .as_arr()?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchReport {
+            version,
+            quick: v.req("quick")?.as_bool()?,
+            synthetic: v.req("synthetic")?.as_bool()?,
+            hw,
+            records,
+        })
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        fs::write(path, json::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a `BENCH.json` written by [`save`](Self::save).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    fn sample_record(key: &str, measured_s: f64) -> BenchRecord {
+        BenchRecord {
+            key: key.into(),
+            family: "gemm".into(),
+            shape: "n512".into(),
+            profile: "cortex-a53".into(),
+            macs: 512u64.pow(3),
+            elem_bits: 32,
+            measured_s,
+            gflops: 2.0 * 512f64.powi(3) / measured_s / 1e9,
+            compute_s: 0.007,
+            l1_read_s: 0.0356,
+            l2_read_s: 0.0727,
+            ram_read_s: 0.2509,
+            class: "L1-read".into(),
+            pct_of_bound: 95.0,
+            paper_gflops: Some(5.06),
+            pct_of_paper: Some(142.0),
+        }
+    }
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            version: SCHEMA_VERSION,
+            quick: true,
+            synthetic: true,
+            hw: vec![HwRecord::of(&profile_by_name("a53").unwrap().cpu)],
+            records: vec![
+                sample_record("bench/sim/cortex-a53/gemm/n512", 0.0375),
+                BenchRecord {
+                    paper_gflops: None,
+                    pct_of_paper: None,
+                    key: "bench/sim/cortex-a53/conv/C2".into(),
+                    family: "conv".into(),
+                    shape: "C2".into(),
+                    ..sample_record("", 0.031)
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = sample_report();
+        let v = r.to_json();
+        let text = json::to_string_pretty(&v);
+        let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn optional_paper_fields_are_omitted_not_null() {
+        let r = sample_report();
+        let text = json::to_string_pretty(&r.records[1].to_json());
+        assert!(!text.contains("paper_gflops"));
+        assert!(!text.contains("pct_of_paper"));
+        let text0 = json::to_string_pretty(&r.records[0].to_json());
+        assert!(text0.contains("paper_gflops"));
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let r = sample_report();
+        let path = std::env::temp_dir().join("cachebound_bench_record_test/BENCH.json");
+        r.save(&path).unwrap();
+        let loaded = BenchReport::load(&path).unwrap();
+        assert_eq!(r, loaded);
+        assert!(loaded.get("bench/sim/cortex-a53/gemm/n512").is_some());
+        let _ = fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn newer_schema_versions_are_refused() {
+        let mut r = sample_report();
+        r.version = SCHEMA_VERSION + 1;
+        let text = json::to_string_pretty(&r.to_json());
+        assert!(BenchReport::from_json(&json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn bound_set_reassembles() {
+        let rec = sample_record("k", 0.04);
+        let b = rec.bound_set();
+        assert_eq!(b.macs, rec.macs);
+        assert_eq!(b.l1_read_s, rec.l1_read_s);
+        assert!(b.floor_s() >= b.compute_s);
+    }
+}

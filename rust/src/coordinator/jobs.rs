@@ -8,7 +8,7 @@
 use crate::hw::CpuSpec;
 use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
-use crate::operators::workloads::ConvLayer;
+use crate::operators::workloads::{BenchWorkload, ConvLayer};
 
 /// What to run.
 #[derive(Clone, Debug, PartialEq)]
@@ -67,6 +67,22 @@ pub enum JobSpec {
         seed: u64,
         cache_entries: usize,
     },
+    /// One roofline-bench workload (`cachebound bench`, `bench::sweep`).
+    ///
+    /// `native: false` times the workload on the calibrated simulator
+    /// (deterministic — what CI gates on); `native: true` measures the
+    /// native operator's host wallclock through `util::bench::measure`,
+    /// with `quick` selecting the fast vs thorough measurement profile
+    /// (`quick` is deliberately NOT part of the key: a quick and a full
+    /// run of the same workload are the same measurement for `compare`).
+    /// Native sweeps must run on a serial pool — concurrent wallclock
+    /// measurements contend for cores (see `Pipeline::bench_sweep`).
+    BenchSweep {
+        cpu: CpuSpec,
+        workload: BenchWorkload,
+        native: bool,
+        quick: bool,
+    },
 }
 
 /// Which native GEMM implementation a `NativeGemm` job runs.
@@ -117,6 +133,12 @@ impl JobSpec {
             JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
                 format!("serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}")
             }
+            JobSpec::BenchSweep { cpu, workload, native, .. } => format!(
+                "bench/{}/{}/{}",
+                if *native { "native" } else { "sim" },
+                cpu.name,
+                workload.key_part()
+            ),
         }
     }
 }
@@ -271,9 +293,89 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 cache_hits: out.metrics.cache_hits,
             }
         }
+        JobSpec::BenchSweep { cpu, workload, native, quick } => {
+            if *native {
+                run_native_bench(workload, *quick)
+            } else {
+                let tb = match workload {
+                    BenchWorkload::Gemm { n } => timing::simulate_gemm_time(
+                        cpu,
+                        *n,
+                        *n,
+                        *n,
+                        super::pipeline::default_tuned_schedule(),
+                        32,
+                    ),
+                    BenchWorkload::Conv { layer } => timing::simulate_conv_time(
+                        cpu,
+                        layer,
+                        super::pipeline::default_conv_schedule(),
+                        32,
+                    ),
+                    BenchWorkload::QnnConv { layer } => timing::simulate_conv_time(
+                        cpu,
+                        layer,
+                        super::pipeline::default_conv_schedule(),
+                        8,
+                    ),
+                    BenchWorkload::Bitserial { n, bits } => {
+                        timing::simulate_bitserial_gemm_time(cpu, *n, *n, *n, *bits, *bits, true)
+                    }
+                };
+                JobOutput::Seconds {
+                    secs: tb.total_s,
+                    bound: Some(tb.bound.name().to_string()),
+                }
+            }
+        }
         JobSpec::ArtifactValidate { .. } | JobSpec::ArtifactMeasure { .. } => JobOutput::Failed {
             error: "artifact jobs must run on the leader".into(),
         },
+    }
+}
+
+/// Host-wallclock measurement of one bench workload through the shared
+/// harness (`util::bench::measure`) — the native mode of `cachebound bench`.
+fn run_native_bench(workload: &BenchWorkload, quick: bool) -> JobOutput {
+    use crate::operators::{bitserial, conv, gemm, qnn, Tensor};
+    let cfg = if quick {
+        crate::util::bench::BenchConfig::quick()
+    } else {
+        crate::util::bench::BenchConfig::default()
+    };
+    let m = match workload {
+        BenchWorkload::Gemm { n } => {
+            let a = Tensor::rand_f32(&[*n, *n], 21);
+            let b = Tensor::rand_f32(&[*n, *n], 22);
+            let s = super::pipeline::default_tuned_schedule();
+            crate::util::bench::measure(&cfg, || gemm::tiled(&a, &b, s))
+        }
+        BenchWorkload::Conv { layer: l } => {
+            let x = Tensor::rand_f32(&[l.b, l.cin, l.h, l.w], 23);
+            let w = Tensor::rand_f32(&[l.cout, l.cin, l.k, l.k], 24);
+            crate::util::bench::measure(&cfg, || {
+                conv::spatial_pack(&x, &w, l.stride, l.pad, conv::ConvSchedule::default_tuned())
+            })
+        }
+        BenchWorkload::QnnConv { layer: l } => {
+            let x = Tensor::rand_i8(&[l.b, l.cin, l.h, l.w], 25);
+            let w = Tensor::rand_i8(&[l.cout, l.cin, l.k, l.k], 26);
+            crate::util::bench::measure(&cfg, || qnn::conv2d(&x, &w, l.stride, l.pad))
+        }
+        BenchWorkload::Bitserial { n, bits } => {
+            let a = Tensor::rand_unipolar(&[*n, *n], *bits as u32, 27);
+            let w = Tensor::rand_unipolar(&[*n, *n], *bits as u32, 28);
+            let wp = bitserial::pack_unipolar(&w, *bits);
+            // weights pre-packed, activations packed at runtime (§V-A)
+            crate::util::bench::measure(&cfg, || {
+                let ap = bitserial::pack_unipolar(&a, *bits);
+                bitserial::gemm_unipolar(&ap, &wp)
+            })
+        }
+    };
+    JobOutput::Seconds {
+        secs: m.seconds.median,
+        bound: None,
     }
 }
 
@@ -332,6 +434,45 @@ mod tests {
     fn artifact_job_on_worker_fails_loudly() {
         let out = run_cpu_job(&JobSpec::ArtifactValidate { name: "x".into() });
         assert!(out.is_failure());
+    }
+
+    #[test]
+    fn bench_sweep_sim_job_times_and_classifies() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let spec = JobSpec::BenchSweep {
+            cpu,
+            workload: BenchWorkload::Gemm { n: 256 },
+            native: false,
+            quick: true,
+        };
+        assert_eq!(spec.key(), "bench/sim/cortex-a53/gemm/n256");
+        match run_cpu_job(&spec) {
+            JobOutput::Seconds { secs, bound } => {
+                assert!(secs > 0.0);
+                // the tuned sim GEMM at N=256 is the paper's L1-bound regime
+                assert_eq!(bound.as_deref(), Some("L1-read"));
+            }
+            other => panic!("expected Seconds, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bench_sweep_native_job_measures_wallclock() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let spec = JobSpec::BenchSweep {
+            cpu,
+            workload: BenchWorkload::Gemm { n: 48 },
+            native: true,
+            quick: true,
+        };
+        assert_eq!(spec.key(), "bench/native/cortex-a53/gemm/n48");
+        match run_cpu_job(&spec) {
+            JobOutput::Seconds { secs, bound } => {
+                assert!(secs > 0.0);
+                assert!(bound.is_none(), "native timings carry no sim bound");
+            }
+            other => panic!("expected Seconds, got {other:?}"),
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::hw::{profile_by_name, CpuSpec};
 use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
-use crate::operators::workloads::{self, ConvLayer};
+use crate::operators::workloads::{self, BenchWorkload, ConvLayer};
 use crate::runtime::Registry;
 
 use super::jobs::{Job, JobSpec, NativeGemmVariant};
@@ -234,6 +234,44 @@ impl Pipeline {
         Ok(())
     }
 
+    /// Roofline-bench sweep (`cachebound bench`): one `BenchSweep` job per
+    /// workload for `profile`, results under `bench/{sim|native}/<cpu>/`.
+    ///
+    /// Simulator sweeps fan out across the pool (analytic timing is
+    /// CPU-pure and parallel-safe); native host-wallclock sweeps run on a
+    /// *serial* pool like `serve_scaling` — concurrent measurements would
+    /// contend for cores and corrupt every number.
+    pub fn bench_sweep(
+        &mut self,
+        profile: &str,
+        workloads: &[BenchWorkload],
+        native: bool,
+        quick: bool,
+    ) -> Result<()> {
+        let cpu = self.profile(profile)?;
+        let specs: Vec<JobSpec> = workloads
+            .iter()
+            .map(|&workload| JobSpec::BenchSweep {
+                cpu: cpu.clone(),
+                workload,
+                native,
+                quick,
+            })
+            .collect();
+        if native {
+            let jobs: Vec<Job> = specs
+                .into_iter()
+                .enumerate()
+                .map(|(i, spec)| Job { id: i as u64, spec })
+                .collect();
+            let completed = WorkerPool::serial().run(jobs, None);
+            self.store.ingest(&completed);
+        } else {
+            self.run_jobs(specs);
+        }
+        Ok(())
+    }
+
     /// Validate every artifact in the manifest through PJRT.
     pub fn validate_artifacts(&mut self) -> Result<Vec<(String, bool)>> {
         let names = match &self.registry {
@@ -319,6 +357,23 @@ mod tests {
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
+        }
+    }
+
+    #[test]
+    fn bench_sweep_populates_store_under_bench_keys() {
+        let mut p = Pipeline::new(quick_config());
+        let ws = [
+            BenchWorkload::Gemm { n: 128 },
+            BenchWorkload::Conv { layer: workloads::layer_by_name("C2").unwrap() },
+            BenchWorkload::Bitserial { n: 256, bits: 2 },
+        ];
+        p.bench_sweep("a53", &ws, false, true).unwrap();
+        let rows = p.store.by_prefix("bench/sim/cortex-a53/");
+        assert_eq!(rows.len(), 3);
+        for (k, v) in rows {
+            assert!(v.seconds.unwrap() > 0.0, "{k}");
+            assert!(v.bound.is_some(), "{k} missing sim bound");
         }
     }
 

@@ -7,9 +7,12 @@
 //! * **L3 (this crate)** — the measurement-and-analysis coordinator: hardware
 //!   models, a cache-hierarchy simulator, native operators, an AutoTVM-style
 //!   auto-tuner, the cache-bound analytical model, report generators
-//!   that regenerate every table and figure of the paper, and a sharded
+//!   that regenerate every table and figure of the paper, a sharded
 //!   multi-worker serving core (`coordinator::server`) that keeps each
-//!   artifact's executable cache-resident on exactly one worker.
+//!   artifact's executable cache-resident on exactly one worker, and a
+//!   roofline benchmark harness (`bench`) that sweeps the operator grid,
+//!   classifies every run against the hardware bound lines, and emits the
+//!   machine-readable `BENCH.json` the CI perf-regression gate diffs.
 //! * **L2 (`python/compile/model.py`)** — JAX single-operator networks,
 //!   lowered ahead-of-time to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled GEMM,
@@ -24,6 +27,7 @@
 //! for paper-vs-measured results.
 
 pub mod analysis;
+pub mod bench;
 pub mod coordinator;
 pub mod hw;
 pub mod membench;

@@ -10,6 +10,8 @@
 //! cachebound table4|table5                GEMM performance tables
 //! cachebound fig1..fig9 [--profile P]     figure data series (CSV under results/)
 //! cachebound validate                     run every AOT artifact through PJRT
+//! cachebound bench [--quick] [--synthetic]         roofline sweep -> BENCH.json
+//! cachebound bench compare a.json b.json  perf-regression gate (CI)
 //! cachebound serve --workers N --cache-entries K   sharded multi-worker serving
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
@@ -20,6 +22,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use cachebound::bench::{self, BenchReport};
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
     BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
@@ -40,28 +43,37 @@ fn main() {
     }
 }
 
-/// Minimal `--flag value` / `--flag` parser.
+/// Minimal `--flag value` / `--flag=value` / `--flag` parser; non-flag
+/// tokens (that are not a flag's value) are collected as positionals.
 struct Opts {
     flags: HashMap<String, String>,
+    positional: Vec<String>,
 }
 
 impl Opts {
     fn parse(args: &[String]) -> Self {
         let mut flags = HashMap::new();
+        let mut positional = Vec::new();
         let mut i = 0;
         while i < args.len() {
             if let Some(name) = args[i].strip_prefix("--") {
-                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                    i += 1;
-                    args[i].clone()
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
                 } else {
-                    "true".to_string()
-                };
-                flags.insert(name.to_string(), val);
+                    let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                        i += 1;
+                        args[i].clone()
+                    } else {
+                        "true".to_string()
+                    };
+                    flags.insert(name.to_string(), val);
+                }
+            } else {
+                positional.push(args[i].clone());
             }
             i += 1;
         }
-        Opts { flags }
+        Opts { flags, positional }
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -124,6 +136,7 @@ fn run(args: &[String]) -> Result<()> {
         "fig6" | "fig7" | "fig8" => cmd_fig678(&opts),
         "fig9" => cmd_fig9(&opts),
         "validate" => cmd_validate(&opts),
+        "bench" => cmd_bench(&args[1..]),
         "serve" => cmd_serve(&opts),
         "tune" => cmd_tune(&opts),
         "report-all" => cmd_report_all(&opts),
@@ -149,6 +162,15 @@ commands:
   fig6|fig7|fig8 [--profile P] quantized conv speedups / bw / GFLOP/s
   fig9 [--profile P]          GEMM GFLOP/s over size (tuned/naive/blas)
   validate [--artifacts DIR]  execute every AOT artifact via PJRT, check checksums
+  bench [--quick] [--synthetic] [--profile P] [--out FILE]
+                              roofline sweep of the GEMM/conv/qnn/bit-serial
+                              grid; classifies each run against the hardware
+                              bound lines and writes BENCH.json
+                              (--synthetic = deterministic simulator timing,
+                              the CI mode; default = host wallclock)
+  bench compare BASE.json NEW.json [--threshold PCT]
+                              diff two BENCH.json files; exit non-zero when
+                              any workload slowed by more than PCT (def. 10)
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
         [--max-batch B] [--shards M] [--synthetic]
                               sharded multi-worker serving over AOT artifacts
@@ -341,6 +363,98 @@ fn cmd_validate(opts: &Opts) -> Result<()> {
     println!("{}/{} artifacts validated", results.len() - failed, results.len());
     if failed > 0 {
         bail!("{failed} artifacts failed validation");
+    }
+    Ok(())
+}
+
+/// `cachebound bench [...]` / `cachebound bench compare a.json b.json`.
+fn cmd_bench(args: &[String]) -> Result<()> {
+    if args.first().map(String::as_str) == Some("compare") {
+        return cmd_bench_compare(&args[1..]);
+    }
+    let opts = Opts::parse(args);
+    let quick = opts.has("quick");
+    let synthetic = opts.has("synthetic");
+    let out = opts.get("out").unwrap_or("BENCH.json").to_string();
+    let mut cfg = bench::SweepConfig::new(quick, synthetic);
+    if let Some(p) = opts.get("profile") {
+        cfg.profiles = vec![p.to_string()];
+    }
+    println!(
+        "roofline bench: {} mode, {} grid, profiles {:?} ...",
+        if synthetic { "simulator" } else { "host-native" },
+        if quick { "quick" } else { "full" },
+        cfg.profiles
+    );
+    // the sweep needs no artifacts: simulator or native loop nests only
+    let mut pipeline = Pipeline::new(PipelineConfig {
+        skip_native: true,
+        ..PipelineConfig::default()
+    });
+    let report = bench::run_sweep(&mut pipeline, &cfg)?;
+
+    let mut table = Table::new(
+        "Roofline bench — measured vs hardware bounds",
+        &["workload", "profile", "time", "GFLOP/s", "class", "% of bound", "% of paper"],
+    )
+    .align(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+    ]);
+    for r in &report.records {
+        table.row(vec![
+            format!("{}/{}", r.family, r.shape),
+            r.profile.clone(),
+            fmt_time(r.measured_s),
+            format!("{:.2}", r.gflops),
+            r.class.clone(),
+            format!("{:.0}%", r.pct_of_bound),
+            r.pct_of_paper.map_or_else(|| "-".into(), |p| format!("{p:.0}%")),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    let cache_bound = report
+        .records
+        .iter()
+        .filter(|r| r.class.contains("-read"))
+        .count();
+    println!(
+        "{}/{} workloads classified cache-read bound (paper: GEMM/conv track the L1 line)",
+        cache_bound,
+        report.records.len()
+    );
+    report.save(&out)?;
+    println!("wrote {out} ({} records, schema v{})", report.records.len(), report.version);
+    Ok(())
+}
+
+/// `cachebound bench compare <baseline.json> <new.json> [--threshold PCT]`.
+fn cmd_bench_compare(args: &[String]) -> Result<()> {
+    let opts = Opts::parse(args);
+    let threshold = match opts.get("threshold") {
+        Some(v) => v.parse::<f64>()?,
+        None => bench::DEFAULT_THRESHOLD_PCT,
+    };
+    if !threshold.is_finite() || threshold < 0.0 {
+        bail!("--threshold must be a percentage >= 0, got {threshold}");
+    }
+    let [base_path, new_path] = opts.positional.as_slice() else {
+        bail!("usage: cachebound bench compare <baseline.json> <new.json> [--threshold PCT]");
+    };
+    let base = BenchReport::load(base_path)?;
+    let new = BenchReport::load(new_path)?;
+    let rep = bench::compare(&base, &new, threshold);
+    print!("{}", rep.render());
+    if !rep.passed() {
+        bail!(
+            "{} workload(s) regressed more than {threshold}% vs {base_path}",
+            rep.regressions.len()
+        );
     }
     Ok(())
 }

@@ -95,6 +95,87 @@ pub fn gemm_macs(n: usize) -> u64 {
 }
 
 // ---------------------------------------------------------------------------
+// Roofline bench workloads (bench::sweep, `cachebound bench`)
+// ---------------------------------------------------------------------------
+
+/// One workload of the roofline bench sweep: the paper-relevant
+/// operator × shape grid that `cachebound bench` times, scores against the
+/// four `analysis::bounds` lines, and records in `BENCH.json`.
+///
+/// Each variant maps onto one operator family of the paper:
+/// `Gemm` (Tables IV/V, Fig 1), `Conv` (Table III / Figs 2–3),
+/// `QnnConv` (int8, Figs 6–8), `Bitserial` (unipolar, Figs 4–5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchWorkload {
+    /// Tuned-schedule float32 square GEMM of size `n`.
+    Gemm { n: usize },
+    /// Float32 spatial-pack conv over a Table III layer.
+    Conv { layer: ConvLayer },
+    /// Int8 QNN conv over a Table III layer.
+    QnnConv { layer: ConvLayer },
+    /// Unipolar bit-serial GEMM of size `n` at `bits` activation/weight bits
+    /// (runtime activation packing included, §V-A).
+    Bitserial { n: usize, bits: usize },
+}
+
+impl BenchWorkload {
+    /// Operator family label ("gemm", "conv", "qnn", "bitserial").
+    pub fn family(&self) -> &'static str {
+        match self {
+            BenchWorkload::Gemm { .. } => "gemm",
+            BenchWorkload::Conv { .. } => "conv",
+            BenchWorkload::QnnConv { .. } => "qnn",
+            BenchWorkload::Bitserial { .. } => "bitserial",
+        }
+    }
+
+    /// Human/CSV shape label ("n512", "C2", "n1024b2").
+    pub fn shape(&self) -> String {
+        match self {
+            BenchWorkload::Gemm { n } => format!("n{n}"),
+            BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
+                layer.name.to_string()
+            }
+            BenchWorkload::Bitserial { n, bits } => format!("n{n}b{bits}"),
+        }
+    }
+
+    /// Stable key fragment used inside job/result keys.
+    pub fn key_part(&self) -> String {
+        format!("{}/{}", self.family(), self.shape())
+    }
+
+    /// MAC count under the paper's accounting (eq. 2 for GEMM, eq. 3/4 for
+    /// conv — the Table III column).
+    pub fn macs(&self) -> u64 {
+        match self {
+            BenchWorkload::Gemm { n } | BenchWorkload::Bitserial { n, .. } => gemm_macs(*n),
+            BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => layer.macs(),
+        }
+    }
+
+    /// Element width for the eq. (1) compute bound (SIMD lanes scale with
+    /// precision; bit-serial uses its nominal bit width).
+    pub fn elem_bits(&self) -> usize {
+        match self {
+            BenchWorkload::Gemm { .. } | BenchWorkload::Conv { .. } => 32,
+            BenchWorkload::QnnConv { .. } => 8,
+            BenchWorkload::Bitserial { bits, .. } => *bits,
+        }
+    }
+
+    /// Operand bytes per MAC for the one-read-per-MAC memory lines
+    /// (4 f32, 1 int8, bits/8 bit-serial — the `d` of eq. 5).
+    pub fn operand_bytes(&self) -> f64 {
+        match self {
+            BenchWorkload::Gemm { .. } | BenchWorkload::Conv { .. } => 4.0,
+            BenchWorkload::QnnConv { .. } => 1.0,
+            BenchWorkload::Bitserial { bits, .. } => *bits as f64 / 8.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Synthetic serving mix (coordinator::server, bench_serve)
 // ---------------------------------------------------------------------------
 
@@ -255,6 +336,24 @@ mod tests {
         assert_eq!(synthetic_gemm_n("gemm_f32_tuned_n32"), None);
         assert_eq!(synthetic_gemm_n("syn_gemm_n"), None);
         assert_eq!(synthetic_gemm_n("syn_gemm_n0"), None);
+    }
+
+    #[test]
+    fn bench_workload_accounting_matches_paper_models() {
+        let g = BenchWorkload::Gemm { n: 256 };
+        assert_eq!(g.macs(), 256u64.pow(3));
+        assert_eq!(g.key_part(), "gemm/n256");
+        assert_eq!((g.elem_bits(), g.operand_bytes()), (32, 4.0));
+
+        let c2 = layer_by_name("C2").unwrap();
+        let q = BenchWorkload::QnnConv { layer: c2 };
+        assert_eq!(q.macs(), c2.macs());
+        assert_eq!(q.key_part(), "qnn/C2");
+        assert_eq!((q.elem_bits(), q.operand_bytes()), (8, 1.0));
+
+        let b = BenchWorkload::Bitserial { n: 1024, bits: 2 };
+        assert_eq!(b.key_part(), "bitserial/n1024b2");
+        assert_eq!((b.elem_bits(), b.operand_bytes()), (2, 0.25));
     }
 
     #[test]

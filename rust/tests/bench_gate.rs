@@ -1,0 +1,138 @@
+//! End-to-end tests of the roofline bench harness: a real (quick,
+//! synthetic) sweep through the multi-worker coordinator, the BENCH.json
+//! schema roundtrip, and the `cachebound bench compare` regression gate —
+//! including the process exit code CI relies on.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use cachebound::bench::{compare, run_sweep, BenchReport, SweepConfig, DEFAULT_THRESHOLD_PCT};
+use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+
+fn quick_pipeline() -> Pipeline {
+    Pipeline::new(PipelineConfig {
+        n_workers: 2,
+        tune_trials: 4,
+        skip_native: true,
+        native_max_n: 0,
+    })
+}
+
+fn quick_report() -> BenchReport {
+    let cfg = SweepConfig {
+        profiles: vec!["a53".into(), "a72".into()],
+        quick: true,
+        synthetic: true,
+    };
+    run_sweep(&mut quick_pipeline(), &cfg).unwrap()
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cachebound_bench_gate_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn sweep_roundtrips_through_bench_json() {
+    let report = quick_report();
+    assert!(!report.records.is_empty());
+    assert_eq!(report.hw.len(), 2);
+    // every record scored: positive time, a class, bound lines ordered
+    for r in &report.records {
+        assert!(r.measured_s > 0.0, "{}", r.key);
+        assert!(!r.class.is_empty(), "{}", r.key);
+        assert!(r.l1_read_s < r.l2_read_s && r.l2_read_s < r.ram_read_s, "{}", r.key);
+        assert!(r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0, "{}: {}", r.key, r.pct_of_bound);
+    }
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("BENCH.json");
+    report.save(&path).unwrap();
+    let loaded = BenchReport::load(&path).unwrap();
+    assert_eq!(report, loaded, "save/load must be lossless");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_2x_slowdown_fails_compare() {
+    let base = quick_report();
+    let mut slow = base.clone();
+    for r in &mut slow.records {
+        if r.family == "gemm" {
+            r.measured_s *= 2.0;
+        }
+    }
+    let rep = compare(&base, &slow, DEFAULT_THRESHOLD_PCT);
+    assert!(!rep.passed());
+    assert_eq!(
+        rep.regressions.len(),
+        base.records.iter().filter(|r| r.family == "gemm").count()
+    );
+    // untouched families did not move
+    assert!(rep.regressions.iter().all(|d| d.key.contains("/gemm/")));
+}
+
+/// The contract the `bench-smoke` CI job gates on: the real binary exits 0
+/// on a clean comparison and non-zero on an injected regression.
+#[test]
+fn cli_compare_exit_codes() {
+    let base = quick_report();
+    let mut slow = base.clone();
+    slow.records[0].measured_s *= 2.0;
+
+    let dir = temp_dir("cli");
+    let base_path = dir.join("base.json");
+    let slow_path = dir.join("slow.json");
+    base.save(&base_path).unwrap();
+    slow.save(&slow_path).unwrap();
+
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let ok = Command::new(exe)
+        .args(["bench", "compare"])
+        .arg(&base_path)
+        .arg(&base_path)
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "identical reports must pass: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+
+    let bad = Command::new(exe)
+        .args(["bench", "compare"])
+        .arg(&base_path)
+        .arg(&slow_path)
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "2x slowdown must exit non-zero");
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("regressed"),
+        "stderr: {}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+
+    // a generous threshold waves the same slowdown through
+    let waved = Command::new(exe)
+        .args(["bench", "compare"])
+        .arg(&base_path)
+        .arg(&slow_path)
+        .args(["--threshold", "150"])
+        .output()
+        .unwrap();
+    assert!(waved.status.success());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The committed CI baseline must always be loadable by the current schema.
+#[test]
+fn committed_baseline_parses() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../bench/baseline.json");
+    let baseline = BenchReport::load(path).unwrap();
+    // comparing any run against the committed baseline must never fail the
+    // gate spuriously (empty or matching grids both pass)
+    let rep = compare(&baseline, &quick_report(), DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed(), "{}", rep.render());
+}
