@@ -73,7 +73,8 @@ fn main() -> Result<()> {
         // residual blocks + head, every conv a Pallas kernel) through PJRT
         let reg = pipeline.registry.as_mut().unwrap();
         if reg.manifest.by_name("resnet18_full_i32").is_some() {
-            let m = reg.measure("resnet18_full_i32", &cachebound::util::bench::BenchConfig::quick())?;
+            let cfg = cachebound::util::bench::BenchConfig::quick();
+            let m = reg.measure("resnet18_full_i32", &cfg)?;
             let macs = reg.manifest.by_name("resnet18_full_i32").unwrap().macs as f64;
             println!(
                 "  whole-model ResNet-18 (32x32 input, {:.1} MMACs): {:.1} ms/inference via PJRT",

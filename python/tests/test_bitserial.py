@@ -1,11 +1,13 @@
 """Bit-packing + bit-serial GEMM kernels: oracles, identities, properties."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from numpy.testing import assert_array_equal
+
+pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from compile.kernels import bitpack, bitserial, ref
 

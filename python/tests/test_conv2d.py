@@ -1,10 +1,12 @@
 """Pallas conv2d spatial-pack + im2col kernels vs lax.conv oracle."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from numpy.testing import assert_allclose
+
+pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from compile import workloads
 from compile.kernels import conv2d, ref

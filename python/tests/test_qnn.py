@@ -1,10 +1,12 @@
 """QNN int8 GEMM/conv kernels vs oracles."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from numpy.testing import assert_array_equal
+
+pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from compile import workloads
 from compile.kernels import gemm as gemm_mod

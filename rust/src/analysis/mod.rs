@@ -11,10 +11,12 @@
 
 pub mod bounds;
 pub mod classify;
+pub mod predict;
 pub mod refined;
 pub mod required_bw;
 
 pub use bounds::{gemm_bounds, workload_bounds, BoundSet};
 pub use classify::{classify, correlate_bounds, BoundClass, CorrelationReport};
+pub use predict::{classify_traffic, predict_workload, MrcPrediction, TraceMeta};
 pub use refined::{compare_conv, compare_gemm, packing_fraction, ModelComparison};
 pub use required_bw::{required_bandwidth, RequiredBw};

@@ -1,0 +1,283 @@
+//! MRC-based boundness prediction — classify *without* re-simulating.
+//!
+//! `sim::Hierarchy` answers "what were the per-level byte counts of this
+//! exact cache geometry" in O(accesses) per configuration.  This module
+//! answers the same question for **any** geometry from one traced replay:
+//! the miss-ratio curve (`telemetry::misscurve`) gives L1/L2 hit rates at
+//! arbitrary capacities, the rates extrapolate to per-level traffic, and
+//! the paper's bandwidth roofline (`sim::timing::roofline`) turns traffic
+//! into a predicted time and binding resource.  Predictions use the same
+//! [`BoundClass`] vocabulary and the same [`classify_traffic`] path as the
+//! full-simulation reference, so the two are comparable 1:1 (asserted on
+//! the Tables IV/V grid in `rust/tests/telemetry_mrc.rs`).
+//!
+//! Note the reference here is the *trace-driven* simulator, not the O(1)
+//! analytic `sim::TrafficModel`: the trace shows the tuned 64³ B-panel's
+//! cross-row reuse distance (~267 lines) just exceeds the A53's 256-line
+//! L1, so line fills stream from L2 — a knife-edge the analytic tile-fit
+//! heuristic rounds the other way.  The MRC makes that visible instead of
+//! averaging it away (see `DESIGN.md` §Telemetry).
+
+use crate::hw::{CpuSpec, MemLevel};
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::BenchWorkload;
+use crate::sim::hierarchy::LevelCounts;
+use crate::sim::timing::{
+    self, bitserial_word_rate, conv_compute_rate, gemm_compute_rate, gemm_mlp, TimeBreakdown,
+};
+use crate::sim::traffic::Traffic;
+use crate::telemetry::misscurve::{MissRatioCurve, PredictedRates};
+
+use super::bounds::workload_bounds;
+use super::classify::{classify, BoundClass};
+
+/// What one traced (possibly row-budgeted) replay measured, plus the
+/// factor relating it to the full shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceMeta {
+    /// Core accesses in the traced replay.
+    pub traced_accesses: u64,
+    /// Element bytes requested by the traced replay.
+    pub traced_bytes: u64,
+    /// Write-flavoured accesses in the traced replay (the C store stream).
+    pub traced_write_accesses: u64,
+    /// Full-shape work divided by traced work (1.0 for untruncated
+    /// replays); the replays are linear in their outer dimension, so this
+    /// is the row ratio.
+    pub scale: f64,
+}
+
+/// A full MRC-derived prediction for one workload on one CPU.
+#[derive(Clone, Copy, Debug)]
+pub struct MrcPrediction {
+    /// Hit rates at the CPU's L1/L2 geometry.
+    pub rates: PredictedRates,
+    /// Extrapolated full-shape per-level traffic.
+    pub traffic: Traffic,
+    /// Roofline decomposition of the predicted execution time.
+    pub time: TimeBreakdown,
+    /// `classify` verdict on the predicted time — comparable 1:1 with the
+    /// verdict on the full-simulation time from [`classify_traffic`].
+    pub class: BoundClass,
+}
+
+/// Schedule-dependent compute model shared by the predictor and the
+/// full-simulation reference: `(compute_s, mlp, overhead_s)` for `w`,
+/// mirroring the `sim::timing::simulate_*_time` entry points.
+pub fn workload_compute(cpu: &CpuSpec, w: &BenchWorkload) -> (f64, f64, f64) {
+    let flops = 2.0 * w.macs() as f64;
+    match w {
+        BenchWorkload::Gemm { .. } => {
+            let s = GemmSchedule::default_tuned();
+            (
+                flops / gemm_compute_rate(cpu, s, 32),
+                gemm_mlp(cpu, s, 32),
+                cpu.thread_overhead_s,
+            )
+        }
+        BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
+            let elem_bits = w.elem_bits();
+            let lanes = cpu.simd_lanes(elem_bits);
+            let mlp = if (layer.wo() as f64) >= lanes && layer.stride == 1 { 8.0 } else { 2.0 };
+            (
+                flops / conv_compute_rate(cpu, layer.wo(), layer.stride, elem_bits),
+                mlp,
+                cpu.thread_overhead_s,
+            )
+        }
+        BenchWorkload::Bitserial { n, bits } => {
+            // mirrors `timing::simulate_bitserial_gemm_time`: word ops +
+            // the runtime activation-packing overhead (§V-A)
+            let kw = (*n as f64 / 32.0).ceil();
+            let nf = *n as f64;
+            let words = (*bits * *bits) as f64 * nf * nf * kw;
+            let pack_ops = nf * nf * *bits as f64 * 2.0;
+            let pack_s = pack_ops / (cpu.frequency_hz * cpu.cores as f64)
+                + nf * nf * 4.0 / cpu.read_bw_bytes(MemLevel::L2);
+            (
+                words / bitserial_word_rate(cpu, true),
+                8.0,
+                cpu.thread_overhead_s + pack_s,
+            )
+        }
+    }
+}
+
+/// Roofline time + `classify` verdict for an arbitrary traffic estimate of
+/// `w` — the single classification path shared by the MRC predictor and
+/// the full-simulation reference, so the two verdicts can only differ
+/// through the traffic numbers themselves.
+pub fn classify_traffic(
+    cpu: &CpuSpec,
+    w: &BenchWorkload,
+    traffic: &Traffic,
+    slack: f64,
+) -> (TimeBreakdown, BoundClass) {
+    let (compute_s, mlp, overhead_s) = workload_compute(cpu, w);
+    let time = timing::roofline(cpu, traffic, compute_s, overhead_s, mlp);
+    let bounds = workload_bounds(cpu, w.macs(), w.operand_bytes(), w.elem_bits());
+    let class = classify(time.total_s, &bounds, slack);
+    (time, class)
+}
+
+/// Turn the trace simulator's per-level byte counts into a [`Traffic`]
+/// estimate for the full shape (`scale` un-truncates a row-budgeted
+/// replay).
+pub fn traffic_from_counts(
+    cpu: &CpuSpec,
+    w: &BenchWorkload,
+    counts: &LevelCounts,
+    write_accesses: u64,
+    scale: f64,
+) -> Traffic {
+    Traffic {
+        l1_bytes: counts.l1_bytes as f64 * scale,
+        l2_bytes: counts.l2_bytes as f64 * scale,
+        ram_bytes: counts.ram_bytes as f64 * scale,
+        write_bytes: write_accesses as f64 * scale * 4.0,
+        write_level: output_level(cpu, output_footprint_bytes(w)),
+    }
+}
+
+/// Predict traffic, time and boundness class for `w` from its miss-ratio
+/// curve.  `slack` is the `classify` tolerance (use
+/// [`crate::bench::sweep::CLASSIFY_SLACK`] to match the bench harness).
+pub fn predict_workload(
+    cpu: &CpuSpec,
+    w: &BenchWorkload,
+    mrc: &MissRatioCurve,
+    meta: &TraceMeta,
+    slack: f64,
+) -> MrcPrediction {
+    let rates = mrc.predict(cpu);
+    let line = cpu.l1.line_bytes as f64;
+    let accesses = meta.traced_accesses as f64 * meta.scale;
+    let l1_miss = 1.0 - rates.l1_hit_rate;
+
+    // C accumulator elements are 4 bytes wide in every replay generator.
+    let write_bytes = meta.traced_write_accesses as f64 * meta.scale * 4.0;
+    let traffic = Traffic {
+        l1_bytes: meta.traced_bytes as f64 * meta.scale,
+        l2_bytes: accesses * l1_miss * line,
+        ram_bytes: accesses * rates.ram_fraction * line,
+        write_bytes,
+        write_level: output_level(cpu, output_footprint_bytes(w)),
+    };
+
+    let (time, class) = classify_traffic(cpu, w, &traffic, slack);
+    MrcPrediction {
+        rates,
+        traffic,
+        time,
+        class,
+    }
+}
+
+/// Full-shape output footprint (the C array), for the write-stream level.
+fn output_footprint_bytes(w: &BenchWorkload) -> f64 {
+    match w {
+        BenchWorkload::Gemm { n } | BenchWorkload::Bitserial { n, .. } => (n * n * 4) as f64,
+        BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
+            (layer.cout * layer.ho() * layer.wo() * 4) as f64
+        }
+    }
+}
+
+/// Smallest level that absorbs an output stream of `bytes`.
+fn output_level(cpu: &CpuSpec, bytes: f64) -> MemLevel {
+    if bytes <= cpu.l1.size_bytes as f64 {
+        MemLevel::L1
+    } else if bytes <= cpu.l2.size_bytes as f64 {
+        MemLevel::L2
+    } else {
+        MemLevel::Ram
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::sim::hierarchy::Hierarchy;
+    use crate::sim::trace::replay_gemm_traced;
+    use crate::telemetry::reuse::ReuseAnalyzer;
+
+    struct Traced {
+        prediction: MrcPrediction,
+        sim_traffic: Traffic,
+        sim_time: TimeBreakdown,
+        sim_class: BoundClass,
+    }
+
+    fn traced_gemm(n: usize, rows: usize) -> Traced {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let w = BenchWorkload::Gemm { n };
+        let m = n.min(rows);
+        let mut h = Hierarchy::new(&cpu);
+        let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+        replay_gemm_traced(&mut h, m, n, n, GemmSchedule::default_tuned(), 4, &mut analyzer);
+        let scale = n as f64 / m as f64;
+        let meta = TraceMeta {
+            traced_accesses: analyzer.accesses(),
+            traced_bytes: analyzer.bytes_accessed,
+            traced_write_accesses: analyzer.write_accesses,
+            scale,
+        };
+        let mrc = MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes);
+        let prediction = predict_workload(&cpu, &w, &mrc, &meta, 2.5);
+        let sim_traffic =
+            traffic_from_counts(&cpu, &w, &h.counts, analyzer.write_accesses, scale);
+        let (sim_time, sim_class) = classify_traffic(&cpu, &w, &sim_traffic, 2.5);
+        Traced {
+            prediction,
+            sim_traffic,
+            sim_time,
+            sim_class,
+        }
+    }
+
+    #[test]
+    fn tuned_gemm_prediction_is_cache_read_bound_and_agrees() {
+        let t = traced_gemm(256, 64);
+        assert!(
+            matches!(t.prediction.class, BoundClass::CacheRead(_)),
+            "{:?}",
+            t.prediction.time
+        );
+        assert_eq!(t.prediction.class, t.sim_class);
+        assert!(t.prediction.rates.l1_hit_rate > 0.5 && t.prediction.rates.l1_hit_rate < 1.0);
+    }
+
+    #[test]
+    fn predicted_time_tracks_full_simulation() {
+        let t = traced_gemm(256, 64);
+        let ratio = t.prediction.time.total_s / t.sim_time.total_s;
+        assert!(
+            ratio > 0.8 && ratio < 1.25,
+            "predicted/simulated = {ratio:.3} ({:?} vs {:?})",
+            t.prediction.time,
+            t.sim_time
+        );
+    }
+
+    #[test]
+    fn predicted_traffic_matches_trace_counts_when_unscaled() {
+        // rows = n (no truncation): MRC traffic must track the hierarchy's
+        // own per-level byte counts on the same trace
+        let t = traced_gemm(128, 128);
+        let l1 = t.sim_traffic.l1_bytes;
+        assert!((t.prediction.traffic.l1_bytes - l1).abs() / l1 < 1e-9);
+        let l2 = t.sim_traffic.l2_bytes;
+        let rel = (t.prediction.traffic.l2_bytes - l2).abs() / l2;
+        assert!(rel < 0.2, "L2 traffic prediction off by {:.1}%", rel * 100.0);
+    }
+
+    #[test]
+    fn small_gemm_is_overhead_or_l1_on_both_paths() {
+        // n=32 sits in the paper's small-matrix regime; whatever verdict
+        // the shared classifier reaches, predictor and simulation must
+        // reach it together.
+        let t = traced_gemm(32, 32);
+        assert_eq!(t.prediction.class, t.sim_class);
+    }
+}

@@ -165,8 +165,7 @@ mod tests {
         });
         let cfg = SweepConfig {
             profiles: vec!["a53".into()],
-            quick: true,
-            synthetic: true,
+            ..SweepConfig::new(true, true)
         };
         run_sweep(&mut p, &cfg).unwrap()
     }

@@ -6,11 +6,12 @@
 //! inlined) so any external tool — CI, a notebook, `jq` — can consume it
 //! without knowing the crate's types.
 //!
-//! Schema (version 1):
+//! Schema (version 2; version-1 files remain readable — they simply lack
+//! the optional `telemetry` section):
 //!
 //! ```json
 //! {
-//!  "version": 1,
+//!  "version": 2,
 //!  "quick": true,
 //!  "synthetic": true,
 //!  "hw": [ {"profile": "cortex-a53", "soc": "...", "peak_gflops_f32": 38.4,
@@ -22,12 +23,19 @@
 //!                "compute_s": ..., "l1_read_s": ..., "l2_read_s": ...,
 //!                "ram_read_s": ..., "class": "L1-read",
 //!                "pct_of_bound": 96.0, "paper_gflops": 5.06,
-//!                "pct_of_paper": 142.0} ]
+//!                "pct_of_paper": 142.0,
+//!                "telemetry": {"sim_l1_hit_rate": 0.93, "sim_l2_hit_rate": 0.97,
+//!                              "mrc_l1_hit_rate": 0.93, "mrc_l2_hit_rate": 0.98,
+//!                              "sim_class": "L2-read", "predicted_class": "L2-read",
+//!                              "working_set_bytes": 20480}} ]
 //! }
 //! ```
 //!
 //! `paper_gflops`/`pct_of_paper` are omitted for workloads the paper
-//! publishes no absolute number for (conv/qnn/bit-serial are figure-only).
+//! publishes no absolute number for (conv/qnn/bit-serial are figure-only);
+//! `telemetry` is present only when the sweep ran with `--telemetry`
+//! (`SweepConfig::telemetry`), carrying the `telemetry::TraceSummary` of a
+//! row-budgeted traced replay.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -40,8 +48,9 @@ use crate::hw::CpuSpec;
 use crate::util::json::{self, Value};
 
 /// Current `BENCH.json` schema version.  Bump on any breaking field change;
-/// `BenchReport::load` refuses files written by a *newer* schema.
-pub const SCHEMA_VERSION: u64 = 1;
+/// `BenchReport::load` refuses files written by a *newer* schema.  v2 adds
+/// the optional per-record `telemetry` section; v1 files still load.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Snapshot of one hardware profile the sweep was scored against.
 #[derive(Clone, Debug, PartialEq)]
@@ -102,6 +111,61 @@ pub struct BenchRecord {
     pub paper_gflops: Option<f64>,
     /// Percent of the paper reference achieved.
     pub pct_of_paper: Option<f64>,
+    /// Cache-telemetry section (schema v2, `--telemetry` sweeps only).
+    pub telemetry: Option<TelemetryRecord>,
+}
+
+/// The per-record telemetry section: simulated vs MRC-predicted cache
+/// behaviour from one row-budgeted traced replay (see
+/// `telemetry::TraceSummary`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryRecord {
+    pub sim_l1_hit_rate: f64,
+    pub sim_l2_hit_rate: f64,
+    pub mrc_l1_hit_rate: f64,
+    pub mrc_l2_hit_rate: f64,
+    pub sim_class: String,
+    pub predicted_class: String,
+    pub working_set_bytes: u64,
+}
+
+impl TelemetryRecord {
+    /// Build from the trace driver's summary.
+    pub fn of(s: &crate::telemetry::TraceSummary) -> Self {
+        TelemetryRecord {
+            sim_l1_hit_rate: s.sim_l1_hit_rate,
+            sim_l2_hit_rate: s.sim_l2_hit_rate,
+            mrc_l1_hit_rate: s.mrc_l1_hit_rate,
+            mrc_l2_hit_rate: s.mrc_l2_hit_rate,
+            sim_class: s.sim_class.clone(),
+            predicted_class: s.predicted_class.clone(),
+            working_set_bytes: s.working_set_bytes,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("sim_l1_hit_rate", json::num(self.sim_l1_hit_rate)),
+            ("sim_l2_hit_rate", json::num(self.sim_l2_hit_rate)),
+            ("mrc_l1_hit_rate", json::num(self.mrc_l1_hit_rate)),
+            ("mrc_l2_hit_rate", json::num(self.mrc_l2_hit_rate)),
+            ("sim_class", json::s(self.sim_class.as_str())),
+            ("predicted_class", json::s(self.predicted_class.as_str())),
+            ("working_set_bytes", json::num(self.working_set_bytes as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TelemetryRecord {
+            sim_l1_hit_rate: v.req("sim_l1_hit_rate")?.as_f64()?,
+            sim_l2_hit_rate: v.req("sim_l2_hit_rate")?.as_f64()?,
+            mrc_l1_hit_rate: v.req("mrc_l1_hit_rate")?.as_f64()?,
+            mrc_l2_hit_rate: v.req("mrc_l2_hit_rate")?.as_f64()?,
+            sim_class: v.req("sim_class")?.as_str()?.to_string(),
+            predicted_class: v.req("predicted_class")?.as_str()?.to_string(),
+            working_set_bytes: v.req("working_set_bytes")?.as_u64()?,
+        })
+    }
 }
 
 impl BenchRecord {
@@ -138,6 +202,9 @@ impl BenchRecord {
         if let Some(p) = self.pct_of_paper {
             m.insert("pct_of_paper".into(), json::num(p));
         }
+        if let Some(t) = &self.telemetry {
+            m.insert("telemetry".into(), t.to_json());
+        }
         Value::Obj(m)
     }
 
@@ -159,6 +226,7 @@ impl BenchRecord {
             pct_of_bound: v.req("pct_of_bound")?.as_f64()?,
             paper_gflops: v.get("paper_gflops").map(|x| x.as_f64()).transpose()?,
             pct_of_paper: v.get("pct_of_paper").map(|x| x.as_f64()).transpose()?,
+            telemetry: v.get("telemetry").map(TelemetryRecord::from_json).transpose()?,
         })
     }
 }
@@ -215,7 +283,8 @@ impl BenchReport {
         let version = v.req("version")?.as_u64()?;
         if version == 0 || version > SCHEMA_VERSION {
             bail!(
-                "BENCH.json schema version {version} not supported (this build speaks <= {SCHEMA_VERSION})"
+                "BENCH.json schema version {version} not supported \
+                 (this build speaks <= {SCHEMA_VERSION})"
             );
         }
         let hw = v
@@ -293,6 +362,15 @@ mod tests {
             pct_of_bound: 95.0,
             paper_gflops: Some(5.06),
             pct_of_paper: Some(142.0),
+            telemetry: Some(TelemetryRecord {
+                sim_l1_hit_rate: 0.93,
+                sim_l2_hit_rate: 0.97,
+                mrc_l1_hit_rate: 0.935,
+                mrc_l2_hit_rate: 0.98,
+                sim_class: "L2-read".into(),
+                predicted_class: "L2-read".into(),
+                working_set_bytes: 20480,
+            }),
         }
     }
 
@@ -307,6 +385,7 @@ mod tests {
                 BenchRecord {
                     paper_gflops: None,
                     pct_of_paper: None,
+                    telemetry: None,
                     key: "bench/sim/cortex-a53/conv/C2".into(),
                     family: "conv".into(),
                     shape: "C2".into(),
@@ -331,8 +410,24 @@ mod tests {
         let text = json::to_string_pretty(&r.records[1].to_json());
         assert!(!text.contains("paper_gflops"));
         assert!(!text.contains("pct_of_paper"));
+        assert!(!text.contains("telemetry"));
         let text0 = json::to_string_pretty(&r.records[0].to_json());
         assert!(text0.contains("paper_gflops"));
+        assert!(text0.contains("telemetry"));
+    }
+
+    #[test]
+    fn schema_v1_files_still_load() {
+        // a v1 document: version 1, no telemetry sections anywhere
+        let mut r = sample_report();
+        r.version = 1;
+        for rec in &mut r.records {
+            rec.telemetry = None;
+        }
+        let text = json::to_string_pretty(&r.to_json());
+        let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.version, 1);
+        assert!(back.records.iter().all(|rec| rec.telemetry.is_none()));
     }
 
     #[test]

@@ -32,12 +32,17 @@ use crate::operators::workloads::{resnet18_layers, BenchWorkload, GEMM_TABLE_SIZ
 use crate::report::paper;
 use crate::util::bench::{measure, report_line, BenchConfig};
 
-use super::record::{BenchRecord, BenchReport, HwRecord, SCHEMA_VERSION};
+use super::record::{BenchRecord, BenchReport, HwRecord, TelemetryRecord, SCHEMA_VERSION};
+use crate::telemetry::TraceSummary;
 
 /// Classification slack: a measurement within this factor of the largest
 /// respected bound is attributed to it (matches the end-to-end example's
 /// tolerance for the overhead-laden small-shape regime).
 pub const CLASSIFY_SLACK: f64 = 2.5;
+
+/// Row budget of the traced replays behind `--telemetry` (GEMM/bit-serial
+/// rows, conv input rows).
+pub const DEFAULT_TRACE_ROWS: usize = 16;
 
 /// Configuration of one `cachebound bench` run.
 #[derive(Clone, Debug)]
@@ -48,6 +53,15 @@ pub struct SweepConfig {
     pub quick: bool,
     /// Simulator timing instead of host wallclock.
     pub synthetic: bool,
+    /// Attach a per-record `telemetry` section (schema v2): a row-budgeted
+    /// traced replay per workload, simulated vs MRC-predicted hit rates
+    /// and boundness class.
+    pub telemetry: bool,
+    /// Row budget of the telemetry traces.
+    pub trace_rows: usize,
+    /// Override the workload grid (None = the paper grid of
+    /// [`workload_set`]).
+    pub workloads: Option<Vec<BenchWorkload>>,
 }
 
 impl SweepConfig {
@@ -56,7 +70,15 @@ impl SweepConfig {
             profiles: vec!["a53".into(), "a72".into()],
             quick,
             synthetic,
+            telemetry: false,
+            trace_rows: DEFAULT_TRACE_ROWS,
+            workloads: None,
         }
+    }
+
+    pub fn with_telemetry(mut self) -> Self {
+        self.telemetry = true;
+        self
     }
 }
 
@@ -100,7 +122,10 @@ pub fn run_sweep(pipeline: &mut Pipeline, cfg: &SweepConfig) -> Result<BenchRepo
     let Some(first_profile) = cfg.profiles.first() else {
         bail!("bench sweep needs at least one profile");
     };
-    let workloads = workload_set(cfg.quick);
+    let workloads = cfg
+        .workloads
+        .clone()
+        .unwrap_or_else(|| workload_set(cfg.quick));
     let native = !cfg.synthetic;
     let sweep_profiles = if native { &cfg.profiles[..1] } else { &cfg.profiles[..] };
     for profile in sweep_profiles {
@@ -136,6 +161,14 @@ pub fn run_sweep(pipeline: &mut Pipeline, cfg: &SweepConfig) -> Result<BenchRepo
         }
         hw.push(HwRecord::of(&cpu));
     }
+    if cfg.telemetry {
+        for profile in &cfg.profiles {
+            let cpu = profile_by_name(profile)?.cpu;
+            let summaries = pipeline.trace_grid(profile, &workloads, cfg.trace_rows)?;
+            let summaries: Vec<TraceSummary> = summaries.into_iter().map(|(_, s)| s).collect();
+            attach_telemetry(&mut records, &cpu.name, &workloads, &summaries);
+        }
+    }
     Ok(BenchReport {
         version: SCHEMA_VERSION,
         quick: cfg.quick,
@@ -143,6 +176,25 @@ pub fn run_sweep(pipeline: &mut Pipeline, cfg: &SweepConfig) -> Result<BenchRepo
         hw,
         records,
     })
+}
+
+/// Attach trace summaries (one per workload, for one profile) to the
+/// matching records by `(profile, family/shape)` identity.
+fn attach_telemetry(
+    records: &mut [BenchRecord],
+    profile: &str,
+    workloads: &[BenchWorkload],
+    summaries: &[TraceSummary],
+) {
+    debug_assert_eq!(workloads.len(), summaries.len());
+    for (w, s) in workloads.iter().zip(summaries) {
+        let key_part = w.key_part();
+        for r in records.iter_mut() {
+            if r.profile == profile && format!("{}/{}", r.family, r.shape) == key_part {
+                r.telemetry = Some(TelemetryRecord::of(s));
+            }
+        }
+    }
 }
 
 /// Score one measured time against the bound lines and the paper reference.
@@ -167,6 +219,7 @@ pub fn score(cpu: &CpuSpec, w: BenchWorkload, key: &str, measured_s: f64) -> Ben
         pct_of_bound: b.floor_s() / measured_s * 100.0,
         paper_gflops,
         pct_of_paper: paper_gflops.map(|p| gflops / p * 100.0),
+        telemetry: None,
     }
 }
 
@@ -247,8 +300,7 @@ mod tests {
         let mut p = quick_pipeline();
         let cfg = SweepConfig {
             profiles: vec!["a53".into()],
-            quick: true,
-            synthetic: true,
+            ..SweepConfig::new(true, true)
         };
         let rep = run_sweep(&mut p, &cfg).unwrap();
         assert_eq!(rep.records.len(), workload_set(true).len());
@@ -276,12 +328,50 @@ mod tests {
     fn sweep_is_deterministic_in_synthetic_mode() {
         let cfg = SweepConfig {
             profiles: vec!["a72".into()],
-            quick: true,
-            synthetic: true,
+            ..SweepConfig::new(true, true)
         };
         let a = run_sweep(&mut quick_pipeline(), &cfg).unwrap();
         let b = run_sweep(&mut quick_pipeline(), &cfg).unwrap();
         assert_eq!(a, b, "synthetic sweeps must be bit-identical for CI diffs");
+    }
+
+    #[test]
+    fn telemetry_sweep_attaches_v2_sections() {
+        let mut p = quick_pipeline();
+        let cfg = SweepConfig {
+            profiles: vec!["a53".into()],
+            telemetry: true,
+            trace_rows: 32,
+            workloads: Some(vec![
+                BenchWorkload::Gemm { n: 64 },
+                BenchWorkload::Bitserial { n: 64, bits: 1 },
+            ]),
+            ..SweepConfig::new(true, true)
+        };
+        let rep = run_sweep(&mut p, &cfg).unwrap();
+        assert_eq!(rep.version, SCHEMA_VERSION);
+        assert_eq!(rep.records.len(), 2);
+        for r in &rep.records {
+            let t = r.telemetry.as_ref().unwrap_or_else(|| panic!("{} lacks telemetry", r.key));
+            assert!(t.sim_l1_hit_rate > 0.0 && t.sim_l1_hit_rate <= 1.0);
+            assert!(!t.predicted_class.is_empty());
+        }
+        // roundtrips through the v2 schema
+        let text = crate::util::json::to_string_pretty(&rep.to_json());
+        let back = BenchReport::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rep, back);
+    }
+
+    #[test]
+    fn plain_sweep_has_no_telemetry_sections() {
+        let mut p = quick_pipeline();
+        let cfg = SweepConfig {
+            profiles: vec!["a53".into()],
+            workloads: Some(vec![BenchWorkload::Gemm { n: 64 }]),
+            ..SweepConfig::new(true, true)
+        };
+        let rep = run_sweep(&mut p, &cfg).unwrap();
+        assert!(rep.records.iter().all(|r| r.telemetry.is_none()));
     }
 
     #[test]

@@ -67,6 +67,16 @@ pub enum JobSpec {
         seed: u64,
         cache_entries: usize,
     },
+    /// One telemetry trace (`cachebound trace`, `bench --telemetry`):
+    /// replay the workload through the hierarchy with a reuse-distance
+    /// sink and report simulated vs MRC-predicted hit rates and boundness
+    /// class.  CPU-pure, parallel-safe.
+    Trace {
+        cpu: CpuSpec,
+        workload: BenchWorkload,
+        /// Row budget of the replay (`telemetry::TraceBudget`).
+        max_rows: usize,
+    },
     /// One roofline-bench workload (`cachebound bench`, `bench::sweep`).
     ///
     /// `native: false` times the workload on the calibrated simulator
@@ -133,6 +143,9 @@ impl JobSpec {
             JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
                 format!("serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}")
             }
+            JobSpec::Trace { cpu, workload, max_rows } => {
+                format!("trace/{}/{}/r{}", cpu.name, workload.key_part(), max_rows)
+            }
             JobSpec::BenchSweep { cpu, workload, native, .. } => format!(
                 "bench/{}/{}/{}",
                 if *native { "native" } else { "sim" },
@@ -164,6 +177,8 @@ pub enum JobOutput {
     },
     /// Validation outcome.
     Validated { passed: bool, detail: String },
+    /// Telemetry-trace outcome (simulated vs MRC-predicted cache profile).
+    Traced { summary: crate::telemetry::TraceSummary },
     /// Serving-run outcome (sharded server over the synthetic mix).
     Served {
         throughput_rps: f64,
@@ -239,8 +254,8 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             } else {
                 crate::tuner::TunerKind::Random
             };
-            match crate::tuner::tune(&crate::tuner::Tuner::new(kind, *n_trials), &space, &mut target)
-            {
+            let tuner = crate::tuner::Tuner::new(kind, *n_trials);
+            match crate::tuner::tune(&tuner, &space, &mut target) {
                 Ok(res) => JobOutput::Tuned {
                     best_seconds: res.best_seconds,
                     best_desc: format!("{:?}", res.best_config),
@@ -262,8 +277,8 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             } else {
                 crate::tuner::TunerKind::Random
             };
-            match crate::tuner::tune(&crate::tuner::Tuner::new(kind, *n_trials), &space, &mut target)
-            {
+            let tuner = crate::tuner::Tuner::new(kind, *n_trials);
+            match crate::tuner::tune(&tuner, &space, &mut target) {
                 Ok(res) => JobOutput::Tuned {
                     best_seconds: res.best_seconds,
                     best_desc: format!("{:?}", res.best_config),
@@ -272,6 +287,14 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 },
                 Err(e) => JobOutput::Failed { error: e.to_string() },
             }
+        }
+        JobSpec::Trace { cpu, workload, max_rows } => {
+            let report = crate::telemetry::trace_workload(
+                cpu,
+                workload,
+                crate::telemetry::TraceBudget::new(*max_rows),
+            );
+            JobOutput::Traced { summary: report.summary() }
         }
         JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
             use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
@@ -472,6 +495,27 @@ mod tests {
                 assert!(bound.is_none(), "native timings carry no sim bound");
             }
             other => panic!("expected Seconds, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_job_reports_both_classifications() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let spec = JobSpec::Trace {
+            cpu,
+            workload: BenchWorkload::Gemm { n: 64 },
+            max_rows: 32,
+        };
+        assert_eq!(spec.key(), "trace/cortex-a53/gemm/n64/r32");
+        assert!(!spec.leader_only());
+        match run_cpu_job(&spec) {
+            JobOutput::Traced { summary } => {
+                assert_eq!(summary.key, "gemm/n64");
+                assert!(summary.accesses > 0);
+                assert!(!summary.sim_class.is_empty());
+                assert!(!summary.predicted_class.is_empty());
+            }
+            other => panic!("expected Traced, got {other:?}"),
         }
     }
 

@@ -272,6 +272,54 @@ impl Pipeline {
         Ok(())
     }
 
+    /// Telemetry-trace sweep (`cachebound trace`, `bench --telemetry`):
+    /// one `Trace` job per workload, fanned across the pool (trace replays
+    /// are CPU-pure and deterministic).  Returns `(result key, summary)`
+    /// pairs in workload order; summaries also land in the store under
+    /// their keys (`trace/<cpu>/<family>/<shape>/r<rows>`).
+    pub fn trace_grid(
+        &mut self,
+        profile: &str,
+        workloads: &[BenchWorkload],
+        max_rows: usize,
+    ) -> Result<Vec<(String, crate::telemetry::TraceSummary)>> {
+        let cpu = self.profile(profile)?;
+        let specs: Vec<JobSpec> = workloads
+            .iter()
+            .map(|&workload| JobSpec::Trace {
+                cpu: cpu.clone(),
+                workload,
+                max_rows,
+            })
+            .collect();
+        let keys: Vec<String> = specs.iter().map(|s| s.key()).collect();
+        let jobs: Vec<Job> = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| Job { id: i as u64, spec })
+            .collect();
+        let completed = self.pool.run(jobs, self.registry.as_mut());
+        // match by job id, not key: duplicate workloads share a key but
+        // still deserve one summary each
+        let mut by_id: std::collections::HashMap<u64, crate::telemetry::TraceSummary> = completed
+            .iter()
+            .filter_map(|c| match &c.output {
+                super::jobs::JobOutput::Traced { summary } => Some((c.id, summary.clone())),
+                _ => None,
+            })
+            .collect();
+        self.store.ingest(&completed);
+        keys.into_iter()
+            .enumerate()
+            .map(|(i, k)| {
+                let s = by_id
+                    .remove(&(i as u64))
+                    .ok_or_else(|| anyhow::anyhow!("trace produced no result for {k}"))?;
+                Ok((k, s))
+            })
+            .collect()
+    }
+
     /// Validate every artifact in the manifest through PJRT.
     pub fn validate_artifacts(&mut self) -> Result<Vec<(String, bool)>> {
         let names = match &self.registry {
@@ -374,6 +422,25 @@ mod tests {
         for (k, v) in rows {
             assert!(v.seconds.unwrap() > 0.0, "{k}");
             assert!(v.bound.is_some(), "{k} missing sim bound");
+        }
+    }
+
+    #[test]
+    fn trace_grid_returns_summaries_and_populates_store() {
+        let mut p = Pipeline::new(quick_config());
+        let ws = [
+            BenchWorkload::Gemm { n: 64 },
+            BenchWorkload::Bitserial { n: 64, bits: 1 },
+        ];
+        let out = p.trace_grid("a53", &ws, 32).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, "trace/cortex-a53/gemm/n64/r32");
+        assert_eq!(out[0].1.key, "gemm/n64");
+        let rows = p.store.by_prefix("trace/cortex-a53/");
+        assert_eq!(rows.len(), 2);
+        for (k, v) in rows {
+            assert!(v.bound.is_some(), "{k} missing predicted class");
+            assert!(v.detail.as_deref().unwrap().contains("L1"), "{k}");
         }
     }
 

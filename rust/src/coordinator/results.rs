@@ -87,6 +87,13 @@ impl ResultStore {
                         p99_s * 1e3
                     )),
                 },
+                super::jobs::JobOutput::Traced { summary } => ResultValue {
+                    seconds: None,
+                    // the headline verdict: the MRC-predicted boundness
+                    bound: Some(summary.predicted_class.clone()),
+                    passed: Some(summary.classes_agree()),
+                    detail: Some(summary.render()),
+                },
                 super::jobs::JobOutput::Validated { passed, detail } => ResultValue {
                     seconds: None,
                     bound: None,

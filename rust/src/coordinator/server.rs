@@ -39,7 +39,7 @@
 //! * **cache purity** — a cache hit returns a payload bit-identical to the
 //!   original execution, with `exec_seconds == 0` and `cached == true`.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -52,6 +52,7 @@ use crate::operators::workloads;
 use crate::operators::Tensor;
 use crate::runtime::inputs::literal_checksum;
 use crate::runtime::{Manifest, Registry};
+use crate::telemetry::CacheProfile;
 use crate::util::lru::LruCache;
 use crate::util::stats::{percentile_sorted, Summary};
 
@@ -106,6 +107,27 @@ pub struct Metrics {
     pub latency_seconds: Vec<f64>,
     /// Per-shard rollup (sharded server only).
     pub per_shard: Vec<ShardMetrics>,
+    /// Per-worker working-set-pressure estimates (populated only when the
+    /// server was started with per-artifact [`CacheProfile`]s).
+    pub worker_pressure: Vec<WorkerPressure>,
+}
+
+/// Cache working-set pressure of one worker: how many bytes of cache its
+/// resident artifact set wants, from the telemetry subsystem's
+/// per-artifact profiles.  The shard→worker affinity makes this a
+/// per-worker property: an artifact's executable *and* its cache working
+/// set live on exactly one worker.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerPressure {
+    pub worker: usize,
+    /// Distinct artifacts routed to this worker.
+    pub artifacts: u64,
+    /// Of those, how many had a profile attached.
+    pub profiled: u64,
+    /// Σ `working_set_bytes` over the profiled artifacts — compare against
+    /// the part's L1/L2 sizes to see whether the worker's mix is
+    /// cache-resident.
+    pub resident_bytes: u64,
 }
 
 impl Metrics {
@@ -394,6 +416,10 @@ pub struct ServeConfig {
     /// Shared with `PjrtExecutor` workers via `Arc` — the one registry
     /// handle that *is* thread-safe.
     pub catalog: Option<Arc<Manifest>>,
+    /// Per-artifact cache profiles (telemetry subsystem).  When present,
+    /// [`Metrics::worker_pressure`] reports each worker's resident
+    /// working-set estimate.
+    pub profiles: Option<Arc<BTreeMap<String, CacheProfile>>>,
 }
 
 impl ServeConfig {
@@ -404,6 +430,7 @@ impl ServeConfig {
             cache_entries: 0,
             batch: BatchPolicy::default(),
             catalog: None,
+            profiles: None,
         }
     }
 
@@ -414,6 +441,11 @@ impl ServeConfig {
 
     pub fn with_catalog(mut self, catalog: Arc<Manifest>) -> Self {
         self.catalog = Some(catalog);
+        self
+    }
+
+    pub fn with_profiles(mut self, profiles: Arc<BTreeMap<String, CacheProfile>>) -> Self {
+        self.profiles = Some(profiles);
         self
     }
 
@@ -449,11 +481,14 @@ pub struct ShardedServer {
     n_shards: usize,
     workers: usize,
     catalog: Option<Arc<Manifest>>,
+    profiles: Option<Arc<BTreeMap<String, CacheProfile>>>,
     senders: Vec<mpsc::Sender<Envelope>>,
     resp_rx: mpsc::Receiver<Response>,
     handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
     admitted: u64,
     rejected: Vec<Response>,
+    /// Distinct artifacts admitted per worker (working-set accounting).
+    worker_artifacts: Vec<BTreeSet<String>>,
     started: Instant,
 }
 
@@ -490,11 +525,13 @@ impl ShardedServer {
             n_shards,
             workers,
             catalog: config.catalog,
+            profiles: config.profiles,
             senders,
             resp_rx,
             handles,
             admitted: 0,
             rejected: Vec::new(),
+            worker_artifacts: vec![BTreeSet::new(); workers],
             started: Instant::now(),
         }
     }
@@ -530,6 +567,9 @@ impl ShardedServer {
         let shard = shard_for(&req.artifact, self.n_shards);
         let worker = shard % self.workers;
         self.admitted += 1;
+        if !self.worker_artifacts[worker].contains(&req.artifact) {
+            self.worker_artifacts[worker].insert(req.artifact.clone());
+        }
         self.senders[worker]
             .send(Envelope { req, enqueued: Instant::now(), shard })
             .expect("serve worker alive");
@@ -567,6 +607,8 @@ impl ShardedServer {
             admitted,
             rejected,
             started,
+            profiles,
+            worker_artifacts,
             ..
         } = self;
         drop(senders); // workers drain their queues and exit
@@ -602,6 +644,26 @@ impl ShardedServer {
         metrics.rejected = rejected.len() as u64;
         metrics.batches = per_shard.values().map(|s| s.batches).sum();
         metrics.per_shard = per_shard.into_values().collect();
+        if let Some(profiles) = &profiles {
+            metrics.worker_pressure = worker_artifacts
+                .iter()
+                .enumerate()
+                .map(|(worker, artifacts)| {
+                    let mut p = WorkerPressure {
+                        worker,
+                        artifacts: artifacts.len() as u64,
+                        ..WorkerPressure::default()
+                    };
+                    for a in artifacts {
+                        if let Some(profile) = profiles.get(a) {
+                            p.profiled += 1;
+                            p.resident_bytes += profile.working_set_bytes;
+                        }
+                    }
+                    p
+                })
+                .collect();
+        }
         responses.extend(rejected);
         ServeOutcome { responses, metrics, wall_seconds }
     }
@@ -858,6 +920,49 @@ mod tests {
         assert!(good.ok);
         assert_eq!(out.metrics.completed, 1);
         assert_eq!(out.metrics.failed, 1);
+    }
+
+    #[test]
+    fn cache_profiles_surface_worker_pressure() {
+        use crate::hw::profile_by_name;
+        use crate::telemetry::synthetic_gemm_profile;
+
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mix = workloads::serving_mix();
+        let profiles: BTreeMap<String, CacheProfile> = mix
+            .iter()
+            .take(3)
+            .map(|m| (m.artifact.clone(), synthetic_gemm_profile(&cpu, &m.artifact, m.n)))
+            .collect();
+        let profiles = Arc::new(profiles);
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2).with_profiles(profiles.clone()),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        for id in 0..16u64 {
+            let artifact = mix[id as usize % mix.len()].artifact.clone();
+            srv.submit(Request { id, artifact });
+        }
+        let out = srv.finish();
+        assert_eq!(out.metrics.worker_pressure.len(), 2);
+        let total_artifacts: u64 =
+            out.metrics.worker_pressure.iter().map(|p| p.artifacts).sum();
+        assert_eq!(total_artifacts, mix.len() as u64, "each artifact on exactly one worker");
+        let total_profiled: u64 =
+            out.metrics.worker_pressure.iter().map(|p| p.profiled).sum();
+        assert_eq!(total_profiled, 3);
+        let resident: u64 =
+            out.metrics.worker_pressure.iter().map(|p| p.resident_bytes).sum();
+        let expected: u64 = profiles.values().map(|p| p.working_set_bytes).sum();
+        assert_eq!(resident, expected);
+    }
+
+    #[test]
+    fn no_profiles_means_no_pressure_rows() {
+        let mut srv = synthetic_server(2, 0);
+        srv.submit(Request { id: 0, artifact: workloads::synthetic_artifact(32) });
+        let out = srv.finish();
+        assert!(out.metrics.worker_pressure.is_empty());
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //!   artifact's executable cache-resident on exactly one worker, and a
 //!   roofline benchmark harness (`bench`) that sweeps the operator grid,
 //!   classifies every run against the hardware bound lines, and emits the
-//!   machine-readable `BENCH.json` the CI perf-regression gate diffs.
+//!   machine-readable `BENCH.json` the CI perf-regression gate diffs, and
+//!   a cache-telemetry subsystem (`telemetry`) that turns one traced
+//!   replay into reuse-distance profiles, miss-ratio curves and
+//!   boundness *predictions* for arbitrary cache sizes
+//!   (`cachebound trace`).
 //! * **L2 (`python/compile/model.py`)** — JAX single-operator networks,
 //!   lowered ahead-of-time to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (tiled GEMM,
@@ -35,5 +39,6 @@ pub mod operators;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod tuner;
 pub mod util;

@@ -10,8 +10,10 @@
 //! cachebound table4|table5                GEMM performance tables
 //! cachebound fig1..fig9 [--profile P]     figure data series (CSV under results/)
 //! cachebound validate                     run every AOT artifact through PJRT
-//! cachebound bench [--quick] [--synthetic]         roofline sweep -> BENCH.json
+//! cachebound bench [--quick] [--synthetic] [--telemetry]   roofline sweep -> BENCH.json
 //! cachebound bench compare a.json b.json  perf-regression gate (CI)
+//! cachebound trace <family> [flags] [--json PATH]   reuse histograms + MRC + prediction
+//! cachebound figmrc [--profile P] [--n N] miss-ratio-curve figure (CSV)
 //! cachebound serve --workers N --cache-entries K   sharded multi-worker serving
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
@@ -29,9 +31,10 @@ use cachebound::coordinator::server::{
 };
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
-use cachebound::operators::workloads;
+use cachebound::operators::workloads::{self, BenchWorkload};
 use cachebound::report;
 use cachebound::runtime::{Manifest, Registry};
+use cachebound::telemetry::{self, CacheProfile, TraceBudget};
 use cachebound::tuner;
 use cachebound::util::table::{fmt_gflops, fmt_mibs, fmt_time, Align, Table};
 
@@ -137,6 +140,8 @@ fn run(args: &[String]) -> Result<()> {
         "fig9" => cmd_fig9(&opts),
         "validate" => cmd_validate(&opts),
         "bench" => cmd_bench(&args[1..]),
+        "trace" => cmd_trace(&opts),
+        "figmrc" => cmd_figmrc(&opts),
         "serve" => cmd_serve(&opts),
         "tune" => cmd_tune(&opts),
         "report-all" => cmd_report_all(&opts),
@@ -162,20 +167,33 @@ commands:
   fig6|fig7|fig8 [--profile P] quantized conv speedups / bw / GFLOP/s
   fig9 [--profile P]          GEMM GFLOP/s over size (tuned/naive/blas)
   validate [--artifacts DIR]  execute every AOT artifact via PJRT, check checksums
-  bench [--quick] [--synthetic] [--profile P] [--out FILE]
+  bench [--quick] [--synthetic] [--profile P] [--out FILE] [--telemetry]
                               roofline sweep of the GEMM/conv/qnn/bit-serial
                               grid; classifies each run against the hardware
                               bound lines and writes BENCH.json
                               (--synthetic = deterministic simulator timing,
-                              the CI mode; default = host wallclock)
+                              the CI mode; default = host wallclock;
+                              --telemetry = attach per-run reuse/MRC
+                              sections, schema v2)
   bench compare BASE.json NEW.json [--threshold PCT]
                               diff two BENCH.json files; exit non-zero when
                               any workload slowed by more than PCT (def. 10)
+  trace gemm|conv|qnn|bitserial [--n N] [--layer C2] [--bits B]
+        [--profile P] [--rows R] [--json PATH]
+                              traced replay through the cache hierarchy:
+                              per-operand reuse-distance histograms, the
+                              miss-ratio curve + working-set knees, and
+                              MRC-predicted vs fully-simulated hit rates
+                              and boundness class
+  figmrc [--profile P] [--n N] miss-ratio-curve figure data (CSV) for a
+                              tuned GEMM, L1/L2 capacities marked
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
         [--max-batch B] [--shards M] [--synthetic]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
-                              when artifacts/ is absent or --synthetic is set)
+                              when artifacts/ is absent or --synthetic is set;
+                              synthetic mode attaches telemetry cache profiles
+                              and reports per-worker working-set pressure)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -380,11 +398,14 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     if let Some(p) = opts.get("profile") {
         cfg.profiles = vec![p.to_string()];
     }
+    cfg.telemetry = opts.has("telemetry");
+    cfg.trace_rows = opts.usize("trace-rows", cfg.trace_rows)?;
     println!(
-        "roofline bench: {} mode, {} grid, profiles {:?} ...",
+        "roofline bench: {} mode, {} grid, profiles {:?}{} ...",
         if synthetic { "simulator" } else { "host-native" },
         if quick { "quick" } else { "full" },
-        cfg.profiles
+        cfg.profiles,
+        if cfg.telemetry { ", +telemetry" } else { "" }
     );
     // the sweep needs no artifacts: simulator or native loop nests only
     let mut pipeline = Pipeline::new(PipelineConfig {
@@ -428,6 +449,29 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         cache_bound,
         report.records.len()
     );
+    if cfg.telemetry {
+        let with: Vec<_> = report
+            .records
+            .iter()
+            .filter_map(|r| r.telemetry.as_ref())
+            .collect();
+        let agree = with
+            .iter()
+            .filter(|t| t.predicted_class == t.sim_class)
+            .count();
+        let mean_err: f64 = with
+            .iter()
+            .map(|t| (t.mrc_l1_hit_rate - t.sim_l1_hit_rate).abs() * 100.0)
+            .sum::<f64>()
+            / with.len().max(1) as f64;
+        println!(
+            "telemetry: {}/{} MRC-predicted classes agree with full simulation, \
+             mean |L1 hit-rate error| {:.2} p.p.",
+            agree,
+            with.len(),
+            mean_err
+        );
+    }
     report.save(&out)?;
     println!("wrote {out} ({} records, schema v{})", report.records.len(), report.version);
     Ok(())
@@ -456,6 +500,145 @@ fn cmd_bench_compare(args: &[String]) -> Result<()> {
             rep.regressions.len()
         );
     }
+    Ok(())
+}
+
+/// `cachebound trace <gemm|conv|qnn|bitserial> [...]`.
+fn cmd_trace(opts: &Opts) -> Result<()> {
+    let family = opts
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: cachebound trace <gemm|conv|qnn|bitserial> [flags]"))?;
+    let layer_of = |name: &str| {
+        workloads::layer_by_name(name)
+            .ok_or_else(|| anyhow!("unknown Table III layer '{name}' (C2..C11)"))
+    };
+    let workload = match family {
+        "gemm" => BenchWorkload::Gemm { n: opts.usize("n", 256)? },
+        "conv" => BenchWorkload::Conv { layer: layer_of(opts.get("layer").unwrap_or("C2"))? },
+        "qnn" => BenchWorkload::QnnConv { layer: layer_of(opts.get("layer").unwrap_or("C2"))? },
+        "bitserial" => BenchWorkload::Bitserial {
+            n: opts.usize("n", 256)?,
+            bits: opts.usize("bits", 2)?,
+        },
+        other => bail!("unknown operator family '{other}' (gemm|conv|qnn|bitserial)"),
+    };
+    let profile = opts.profile("a53");
+    let cpu = profile_by_name(&profile)?.cpu;
+    let budget = TraceBudget::new(opts.usize("rows", TraceBudget::default().max_rows)?);
+    println!(
+        "tracing {} on {} (row budget {}, schedule: tuned defaults)...",
+        workload.key_part(),
+        cpu.name,
+        budget.max_rows
+    );
+    let r = telemetry::trace_workload(&cpu, &workload, budget);
+
+    println!(
+        "\n{} accesses over {} distinct lines (scale x{:.1} to full shape)",
+        r.accesses, r.lines_touched, r.scale
+    );
+    let mut t = Table::new(
+        "Per-operand reuse distances (lines)",
+        &["operand", "accesses", "cold", "p50"],
+    )
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for o in &r.operands {
+        t.row(vec![
+            o.operand.clone(),
+            o.accesses.to_string(),
+            o.cold.to_string(),
+            o.p50_lines.map_or_else(|| "-".into(), |d| d.to_string()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    let mut t = Table::new(
+        "Miss-ratio curve (working-set knees marked *)",
+        &["capacity", "predicted hit rate", ""],
+    )
+    .align(&[Align::Right, Align::Right, Align::Left]);
+    let knee_caps: Vec<u64> = r.knees.iter().map(|k| k.capacity_bytes).collect();
+    for &(bytes, rate) in &r.mrc_points {
+        let mut marks = String::new();
+        if knee_caps.contains(&bytes) {
+            marks.push('*');
+        }
+        if bytes == cpu.l1.size_bytes as u64 {
+            marks.push_str(" <- L1");
+        }
+        if bytes == cpu.l2.size_bytes as u64 {
+            marks.push_str(" <- L2");
+        }
+        t.row(vec![
+            format!("{} KiB", bytes / 1024),
+            format!("{:.2}%", rate * 100.0),
+            marks,
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "working set (98% of peak hit rate): {} KiB",
+        r.working_set_bytes / 1024
+    );
+
+    println!("\npredicted vs simulated ({}):", cpu.name);
+    println!(
+        "  L1 hit rate  {:.2}% (mrc) vs {:.2}% (sim)  [{:+.2} p.p.]",
+        r.prediction.rates.l1_hit_rate * 100.0,
+        r.sim_l1_hit_rate * 100.0,
+        (r.prediction.rates.l1_hit_rate - r.sim_l1_hit_rate) * 100.0,
+    );
+    println!(
+        "  L2 hit rate  {:.2}% (mrc) vs {:.2}% (sim)  [{:+.2} p.p.]",
+        r.prediction.rates.l2_hit_rate * 100.0,
+        r.sim_l2_hit_rate * 100.0,
+        (r.prediction.rates.l2_hit_rate - r.sim_l2_hit_rate) * 100.0,
+    );
+    println!(
+        "  time         {} (mrc) vs {} (sim)",
+        fmt_time(r.prediction.time.total_s),
+        fmt_time(r.sim_time_s)
+    );
+    println!(
+        "  class        {} (mrc) vs {} (sim) -> {}",
+        r.predicted_class,
+        r.sim_class,
+        if r.classes_agree() { "agree" } else { "DISAGREE" }
+    );
+
+    if let Some(path) = opts.get("json") {
+        let text = cachebound::util::json::to_string_pretty(&r.to_json());
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, text)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `cachebound figmrc [--profile P] [--n N]`.
+fn cmd_figmrc(opts: &Opts) -> Result<()> {
+    let profile = opts.profile("a53");
+    let n = opts.usize("n", 256)?;
+    let (f, csv) = report::fig_mrc(&profile, n)?;
+    let path = format!("{}/figmrc_{}_n{}.csv", results_dir(opts), profile, n);
+    csv.write(&path)?;
+    println!(
+        "MRC ({profile}, {}): L1 {:.1}% / L2 {:.1}% predicted hit rates, \
+         working set {} KiB, class {} (mrc) vs {} (sim)",
+        f.workload,
+        f.l1_hit_rate * 100.0,
+        f.l2_hit_rate * 100.0,
+        f.working_set_bytes / 1024,
+        f.predicted_class,
+        f.sim_class,
+    );
+    println!("wrote {path}");
     Ok(())
 }
 
@@ -497,6 +680,19 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             (srv.serve_stream(stream), "pjrt artifacts")
         }
         None => {
+            // telemetry cache profiles for the synthetic mix: traced once
+            // per artifact, so serve metrics can report per-worker
+            // working-set pressure against the calibrated part
+            let cpu = profile_by_name(&opts.profile("a53"))?.cpu;
+            let profiles: std::collections::BTreeMap<String, CacheProfile> =
+                workloads::serving_mix()
+                    .into_iter()
+                    .map(|m| {
+                        let p = telemetry::synthetic_gemm_profile(&cpu, &m.artifact, m.n);
+                        (m.artifact, p)
+                    })
+                    .collect();
+            cfg.profiles = Some(Arc::new(profiles));
             let stream = workloads::serving_requests(n_requests, seed);
             let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
             (srv.serve_stream(stream), "synthetic native-GEMM mix")
@@ -552,6 +748,32 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         ]);
     }
     println!("{}", table.to_markdown());
+    if !m.worker_pressure.is_empty() {
+        let cpu = profile_by_name(&opts.profile("a53"))?.cpu;
+        let mut t = Table::new(
+            "Per-worker cache working-set pressure (telemetry profiles)",
+            &["worker", "artifacts", "profiled", "resident", "vs L1", "vs L2"],
+        )
+        .align(&[
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+        for p in &m.worker_pressure {
+            t.row(vec![
+                p.worker.to_string(),
+                p.artifacts.to_string(),
+                p.profiled.to_string(),
+                format!("{} KiB", p.resident_bytes / 1024),
+                format!("{:.1}x", p.resident_bytes as f64 / cpu.l1.size_bytes as f64),
+                format!("{:.2}x", p.resident_bytes as f64 / cpu.l2.size_bytes as f64),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
     if m.failed > 0 {
         // surface the root cause, not just the count
         if let Some(r) = outcome.responses.iter().find(|r| !r.ok) {
@@ -609,6 +831,7 @@ fn cmd_report_all(opts: &Opts) -> Result<()> {
         (cmd_fig45, "fig4/5"),
         (cmd_fig678, "fig6/7/8"),
         (cmd_fig9, "fig9"),
+        (cmd_figmrc, "figmrc"),
     ] {
         println!("--- {p} ---");
         f(opts)?;

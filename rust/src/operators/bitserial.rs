@@ -198,7 +198,13 @@ pub fn complexity_factor(abits: usize, wbits: usize) -> f64 {
 mod tests {
     use super::*;
 
-    fn unipolar_pair(m: usize, n: usize, k: usize, bits: usize, seed: u64) -> (Tensor<i32>, Tensor<i32>) {
+    fn unipolar_pair(
+        m: usize,
+        n: usize,
+        k: usize,
+        bits: usize,
+        seed: u64,
+    ) -> (Tensor<i32>, Tensor<i32>) {
         (
             Tensor::rand_unipolar(&[m, k], bits as u32, seed),
             Tensor::rand_unipolar(&[n, k], bits as u32, seed + 1),

@@ -217,7 +217,8 @@ pub fn im2col_conv(x: &Tensor<f32>, w: &Tensor<f32>, stride: usize, pad: usize) 
     let ho_wo = p;
     let mut out = Tensor::zeros(&[b, cout, ho_wo]);
     for bi in 0..b {
-        let colmat = Tensor::from_vec(&[p, ckk], cols.data[bi * p * ckk..(bi + 1) * p * ckk].to_vec());
+        let colmat =
+            Tensor::from_vec(&[p, ckk], cols.data[bi * p * ckk..(bi + 1) * p * ckk].to_vec());
         let prod = super::gemm::blocked(&colmat, &wmat); // (P, cout)
         for co in 0..cout {
             for pp in 0..p {
@@ -238,7 +239,13 @@ mod tests {
     use crate::operators::tensor::max_abs_diff;
     use crate::operators::workloads::layer_by_name;
 
-    fn conv_pair(cin: usize, cout: usize, h: usize, k: usize, seed: u64) -> (Tensor<f32>, Tensor<f32>) {
+    fn conv_pair(
+        cin: usize,
+        cout: usize,
+        h: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Tensor<f32>, Tensor<f32>) {
         (
             Tensor::rand_f32(&[1, cin, h, h], seed),
             Tensor::rand_f32(&[cout, cin, k, k], seed + 1),

@@ -268,7 +268,14 @@ pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678,
 
     let mut csv6 = Csv::new(&["layer", "qnn8_speedup", "bs1_uni", "bs2_uni", "bs4_uni", "bs8_uni"]);
     let mut csv7 = Csv::new(&["layer", "dtype", "bw_req_mibs", "l1_bw_mibs"]);
-    let mut csv8 = Csv::new(&["layer", "f32_gflops", "qnn8_gflops", "bs1_bi_gops", "bs2_bi_gops", "bs8_bi_gops"]);
+    let mut csv8 = Csv::new(&[
+        "layer",
+        "f32_gflops",
+        "qnn8_gflops",
+        "bs1_bi_gops",
+        "bs2_bi_gops",
+        "bs8_bi_gops",
+    ]);
     let l1_bw = cpu.read_bw_bytes(MemLevel::L1);
     for r in &rows {
         csv6.row(vec![
@@ -283,7 +290,15 @@ pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678,
         for (label, secs, d) in [
             ("f32", r.f32_s, 4.0),
             ("qnn8", r.qnn8_s, 1.0),
-            ("bs2", r.bitserial_s.iter().find(|(b, _, _)| *b == 2).map(|x| x.1).unwrap_or(f64::NAN), 0.25),
+            (
+                "bs2",
+                r.bitserial_s
+                    .iter()
+                    .find(|(b, _, _)| *b == 2)
+                    .map(|x| x.1)
+                    .unwrap_or(f64::NAN),
+                0.25,
+            ),
         ] {
             let bw = required_bandwidth(flops / secs, d).bw_req;
             csv7.row(vec![
@@ -311,6 +326,55 @@ pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678,
         ]);
     }
     Ok((Fig678 { rows, l1_bw }, csv6, csv7, csv8))
+}
+
+/// MRC figure (telemetry subsystem, alongside Fig 1): predicted hit rate
+/// versus cache capacity for one traced workload, with the profile's
+/// L1/L2 sizes marked and predicted-vs-simulated classification.
+pub struct FigMrc {
+    pub workload: String,
+    /// `(capacity_bytes, predicted_hit_rate)` — the curve.
+    pub points: Vec<(u64, f64)>,
+    pub l1_bytes: u64,
+    pub l2_bytes: u64,
+    /// Predicted hit rates at the profile's L1/L2 geometry.
+    pub l1_hit_rate: f64,
+    pub l2_hit_rate: f64,
+    pub working_set_bytes: u64,
+    pub sim_class: String,
+    pub predicted_class: String,
+}
+
+/// Build the MRC figure for a tuned GEMM of size `n` on `profile`.
+pub fn fig_mrc(profile: &str, n: usize) -> Result<(FigMrc, Csv)> {
+    use crate::operators::workloads::BenchWorkload;
+    use crate::telemetry::{trace_workload, TraceBudget};
+
+    let cpu = profile_by_name(profile)?.cpu;
+    let r = trace_workload(&cpu, &BenchWorkload::Gemm { n }, TraceBudget::default());
+    let mut csv = Csv::new(&["capacity_kib", "hit_rate", "l1_kib", "l2_kib"]);
+    for &(bytes, rate) in &r.mrc_points {
+        csv.row(vec![
+            format!("{:.2}", bytes as f64 / 1024.0),
+            format!("{rate:.6}"),
+            (cpu.l1.size_bytes / 1024).to_string(),
+            (cpu.l2.size_bytes / 1024).to_string(),
+        ]);
+    }
+    Ok((
+        FigMrc {
+            workload: r.key(),
+            points: r.mrc_points.clone(),
+            l1_bytes: cpu.l1.size_bytes as u64,
+            l2_bytes: cpu.l2.size_bytes as u64,
+            l1_hit_rate: r.prediction.rates.l1_hit_rate,
+            l2_hit_rate: r.prediction.rates.l2_hit_rate,
+            working_set_bytes: r.working_set_bytes,
+            sim_class: r.sim_class.clone(),
+            predicted_class: r.predicted_class.clone(),
+        },
+        csv,
+    ))
 }
 
 /// Fig 9: GEMM GFLOP/s over size for naive/tuned/blas (the appendix plot).
@@ -343,9 +407,9 @@ pub fn fig9(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig9, Csv)> {
             .seconds(&sim_gemm_key(&cpu, n, GemmSchedule::naive()))
             .map(|s| gf(s, n))
             .unwrap_or(f64::NAN);
+        let blas_schedule = GemmSchedule::new(4, 16, 256, 4);
         let bl = gf(
-            crate::sim::timing::simulate_gemm_time(&cpu, n, n, n, GemmSchedule::new(4, 16, 256, 4), 32)
-                .total_s,
+            crate::sim::timing::simulate_gemm_time(&cpu, n, n, n, blas_schedule, 32).total_s,
             n,
         );
         csv.row(vec![
@@ -457,6 +521,20 @@ mod tests {
             c2.speedup_bits(2, true).unwrap() > c11.speedup_bits(2, true).unwrap(),
             "NHWC small-image penalty"
         );
+    }
+
+    #[test]
+    fn fig_mrc_curve_is_monotone_and_classified() {
+        let (f, csv) = fig_mrc("a53", 96).unwrap();
+        assert_eq!(f.workload, "gemm/n96");
+        assert_eq!(csv.len(), f.points.len());
+        for w in f.points.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-12, "MRC must be monotone");
+        }
+        assert!(f.l1_hit_rate > 0.0 && f.l1_hit_rate <= 1.0);
+        assert!(!f.predicted_class.is_empty());
+        assert!(!f.sim_class.is_empty());
+        assert!(f.working_set_bytes > 0);
     }
 
     #[test]

@@ -23,7 +23,16 @@ pub fn bandwidth_table(profile: &ProfileSpec, host: Option<&[BwPoint]>) -> (Tabl
     };
     let mut t = Table::new(
         format!("Table {idx} — memory bandwidth, {} ({})", cpu.name, cpu.soc),
-        &["Memory", "Block", "Read MiB/s", "Write MiB/s", "Paper read", "Paper write", "Host read", "Host write"],
+        &[
+            "Memory",
+            "Block",
+            "Read MiB/s",
+            "Write MiB/s",
+            "Paper read",
+            "Paper write",
+            "Host read",
+            "Host write",
+        ],
     )
     .align(&[
         Align::Left,
@@ -97,7 +106,11 @@ pub struct GemmTableRow {
 ///
 /// The "tuned" column comes from the auto-tuner's best config if a tuning
 /// result is in the store, else the default tuned schedule.
-pub fn gemm_table(pipeline: &mut Pipeline, profile_name: &str, sizes: &[usize]) -> Result<(Table, Csv, Vec<GemmTableRow>)> {
+pub fn gemm_table(
+    pipeline: &mut Pipeline,
+    profile_name: &str,
+    sizes: &[usize],
+) -> Result<(Table, Csv, Vec<GemmTableRow>)> {
     pipeline.gemm_table(profile_name, sizes)?;
     let profile = profile_by_name(profile_name)?;
     let cpu = &profile.cpu;

@@ -72,7 +72,12 @@ impl Runtime {
 
     /// Execute `iters` times for timing (first call excluded by the
     /// caller's warmup); returns per-iteration seconds.
-    pub fn time(&self, exe: &PjRtLoadedExecutable, inputs: &[Literal], iters: usize) -> Result<f64> {
+    pub fn time(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        inputs: &[Literal],
+        iters: usize,
+    ) -> Result<f64> {
         let t0 = Instant::now();
         for _ in 0..iters.max(1) {
             let result = exe.execute::<Literal>(inputs)?;

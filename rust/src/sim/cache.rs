@@ -5,7 +5,9 @@
 //! of both Cortex parts' L1D).  The simulator tracks hits, misses,
 //! evictions and writebacks; `hierarchy` composes two of these plus RAM.
 
-use crate::hw::CacheLevelSpec;
+use crate::hw::{CacheLevelSpec, MemLevel};
+use crate::telemetry::event::{CacheEvent, EventKind, Operand};
+use crate::telemetry::sink::{EventSink, NullSink};
 
 /// Kind of access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,6 +57,9 @@ struct Line {
     dirty: bool,
     /// LRU timestamp (monotone counter; larger = more recent).
     stamp: u64,
+    /// Operand tag of the access that filled the line (telemetry only; the
+    /// untraced path leaves it at `Other`).
+    operand: Operand,
 }
 
 /// A set-associative, true-LRU, write-back/write-allocate cache.
@@ -87,7 +92,13 @@ impl SetAssocCache {
             line_bytes: spec.line_bytes,
             line_shift: spec.line_bytes.trailing_zeros(),
             lines: vec![
-                Line { tag: 0, valid: false, dirty: false, stamp: 0 };
+                Line {
+                    tag: 0,
+                    valid: false,
+                    dirty: false,
+                    stamp: 0,
+                    operand: Operand::Other,
+                };
                 sets * spec.associativity
             ],
             clock: 0,
@@ -101,7 +112,27 @@ impl SetAssocCache {
 
     /// Access one address (a single element touch; the line granularity is
     /// handled internally).  Returns hit/miss + eviction writeback.
+    ///
+    /// Thin default over [`access_traced`](Self::access_traced) with the
+    /// no-op sink — monomorphization reduces it to the pre-telemetry code,
+    /// so the untraced hot path pays nothing.
     pub fn access(&mut self, addr: u64, kind: AccessKind) -> AccessResult {
+        self.access_traced(addr, kind, 0, MemLevel::L1, Operand::Other, &mut NullSink)
+    }
+
+    /// [`access`](Self::access) with structured-event emission: every
+    /// hit/miss (at `level`, tagged `operand`, `bytes` wide) plus any
+    /// eviction and dirty writeback (tagged with the *victim's* operand and
+    /// line base address) is recorded into `sink`.
+    pub fn access_traced<S: EventSink>(
+        &mut self,
+        addr: u64,
+        kind: AccessKind,
+        bytes: u32,
+        level: MemLevel,
+        operand: Operand,
+        sink: &mut S,
+    ) -> AccessResult {
         self.clock += 1;
         let line_addr = addr >> self.line_shift;
         let set = (line_addr as usize) & (self.sets - 1);
@@ -120,6 +151,14 @@ impl SetAssocCache {
                 } else {
                     self.stats.read_hits += 1;
                 }
+                sink.record(&CacheEvent {
+                    level,
+                    kind: EventKind::Hit,
+                    access: kind,
+                    addr,
+                    bytes,
+                    operand,
+                });
                 return AccessResult { hit: true, writeback: false };
             }
         }
@@ -141,18 +180,45 @@ impl SetAssocCache {
         let writeback = line.valid && line.dirty;
         if line.valid {
             self.stats.evictions += 1;
+            let victim_addr =
+                ((line.tag << self.sets.trailing_zeros()) | set as u64) << self.line_shift;
+            sink.record(&CacheEvent {
+                level,
+                kind: EventKind::Eviction,
+                access: kind,
+                addr: victim_addr,
+                bytes: self.line_bytes as u32,
+                operand: line.operand,
+            });
             if writeback {
                 self.stats.writebacks += 1;
+                sink.record(&CacheEvent {
+                    level,
+                    kind: EventKind::Writeback,
+                    access: kind,
+                    addr: victim_addr,
+                    bytes: self.line_bytes as u32,
+                    operand: line.operand,
+                });
             }
         }
         line.tag = tag;
         line.valid = true;
         line.dirty = kind == AccessKind::Write; // write-allocate
         line.stamp = self.clock;
+        line.operand = operand;
         match kind {
             AccessKind::Read => self.stats.read_misses += 1,
             AccessKind::Write => self.stats.write_misses += 1,
         }
+        sink.record(&CacheEvent {
+            level,
+            kind: EventKind::Miss,
+            access: kind,
+            addr,
+            bytes,
+            operand,
+        });
         AccessResult { hit: false, writeback }
     }
 
@@ -260,6 +326,92 @@ mod tests {
         c.reset();
         assert_eq!(c.stats, CacheStats::default());
         assert!(!c.access(0, AccessKind::Read).hit);
+    }
+
+    #[test]
+    fn hit_rate_is_zero_on_zero_accesses() {
+        let stats = CacheStats::default();
+        assert_eq!(stats.accesses(), 0);
+        assert_eq!(stats.hit_rate(), 0.0, "no accesses must not divide by zero");
+    }
+
+    #[test]
+    fn lru_eviction_order_under_associativity_width_conflict_set() {
+        // One set, 4 ways; a conflict set exactly as wide as the
+        // associativity plus one.  64B lines, 4 sets? -> force 1 set:
+        // 256B / 64B / 4-way = 1 set; every line maps to it.
+        let mut c = SetAssocCache::new(&tiny_spec(256, 64, 4));
+        let line = |i: u64| i * 64;
+        // fill: A B C D (stamps 1..4)
+        for i in 0..4 {
+            assert!(!c.access(line(i), AccessKind::Read).hit);
+        }
+        // touch A then C: recency order is now B < D < A < C
+        assert!(c.access(line(0), AccessKind::Read).hit);
+        assert!(c.access(line(2), AccessKind::Read).hit);
+        // E must evict B (the true-LRU victim), not the oldest-filled A
+        assert!(!c.access(line(4), AccessKind::Read).hit);
+        assert!(!c.access(line(1), AccessKind::Read).hit, "B was the LRU victim");
+        // that re-fill of B evicted D (next in LRU order: D < A < C < E);
+        // A and C must have survived both evictions
+        assert!(c.access(line(0), AccessKind::Read).hit, "A must survive");
+        assert!(c.access(line(2), AccessKind::Read).hit, "C must survive");
+        assert!(!c.access(line(3), AccessKind::Read).hit, "D followed B out");
+    }
+
+    #[test]
+    fn traced_events_match_stats_and_tag_victims() {
+        use crate::telemetry::sink::VecSink;
+
+        // 1-set 2-way cache: A(write) B -> C evicts dirty A
+        let mut c = SetAssocCache::new(&tiny_spec(128, 64, 2));
+        let mut sink = VecSink::new(64);
+        c.access_traced(0, AccessKind::Write, 4, MemLevel::L1, Operand::C, &mut sink);
+        c.access_traced(64, AccessKind::Read, 4, MemLevel::L1, Operand::A, &mut sink);
+        c.access_traced(128, AccessKind::Read, 4, MemLevel::L1, Operand::B, &mut sink);
+        let kinds: Vec<EventKind> = sink.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Miss,
+                EventKind::Miss,
+                EventKind::Eviction,
+                EventKind::Writeback,
+                EventKind::Miss,
+            ]
+        );
+        let wb = sink
+            .events
+            .iter()
+            .find(|e| e.kind == EventKind::Writeback)
+            .unwrap();
+        assert_eq!(wb.addr, 0, "victim line base address");
+        assert_eq!(wb.operand, Operand::C, "victim keeps its filler's tag");
+        assert_eq!(wb.bytes, 64, "writebacks move whole lines");
+        assert_eq!(c.stats.writebacks, 1);
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn traced_with_null_sink_equals_untraced() {
+        let spec = tiny_spec(512, 64, 2);
+        let mut plain = SetAssocCache::new(&spec);
+        let mut traced = SetAssocCache::new(&spec);
+        for i in 0..500u64 {
+            let addr = (i * 97) % 4096;
+            let kind = if i % 3 == 0 { AccessKind::Write } else { AccessKind::Read };
+            let a = plain.access(addr, kind);
+            let b = traced.access_traced(
+                addr,
+                kind,
+                4,
+                MemLevel::L1,
+                Operand::B,
+                &mut crate::telemetry::sink::NullSink,
+            );
+            assert_eq!(a, b, "access {i}");
+        }
+        assert_eq!(plain.stats, traced.stats);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! transfers one line L2→L1; an L2 miss transfers one line RAM→L2.
 //! Writebacks add write traffic at the receiving level.
 
-use crate::hw::CpuSpec;
+use crate::hw::{CpuSpec, MemLevel};
+use crate::telemetry::event::Operand;
+use crate::telemetry::sink::{EventSink, NullSink};
 
 use super::cache::{AccessKind, SetAssocCache};
 
@@ -42,13 +44,32 @@ impl Hierarchy {
     }
 
     /// One element access of `bytes` (1, 4, ...) at `addr`.
+    ///
+    /// Thin default over [`access_traced`](Self::access_traced) with the
+    /// no-op sink; monomorphization keeps this hot path identical to the
+    /// pre-telemetry code.
     pub fn access(&mut self, addr: u64, bytes: u32, kind: AccessKind) {
+        self.access_traced(addr, bytes, kind, Operand::Other, &mut NullSink);
+    }
+
+    /// [`access`](Self::access) with structured-event emission: the L1
+    /// hit/miss (exactly one per call), any L1 eviction/writeback, and —
+    /// on an L1 miss — the L2 fill's hit/miss/eviction/writeback events
+    /// all land in `sink`, tagged with `operand`.
+    pub fn access_traced<S: EventSink>(
+        &mut self,
+        addr: u64,
+        bytes: u32,
+        kind: AccessKind,
+        operand: Operand,
+        sink: &mut S,
+    ) {
         self.counts.accesses += 1;
         self.counts.l1_bytes += bytes as u64;
         let l1_line = self.l1.line_bytes() as u64;
         let l2_line = self.l2.line_bytes() as u64;
 
-        let r1 = self.l1.access(addr, kind);
+        let r1 = self.l1.access_traced(addr, kind, bytes, MemLevel::L1, operand, sink);
         if r1.hit {
             return;
         }
@@ -60,7 +81,14 @@ impl Hierarchy {
             // as an L2 write access at the victim address — approximated by
             // the same address' line; traffic counted above)
         }
-        let r2 = self.l2.access(addr, AccessKind::Read);
+        let r2 = self.l2.access_traced(
+            addr,
+            AccessKind::Read,
+            l1_line as u32,
+            MemLevel::L2,
+            operand,
+            sink,
+        );
         if !r2.hit {
             self.counts.ram_bytes += l2_line;
         }
@@ -141,6 +169,54 @@ mod tests {
             h.access(i * 4, 4, AccessKind::Write);
         }
         assert!(h.counts.wb_l2_bytes > 0, "expected L1 writebacks");
+    }
+
+    #[test]
+    fn dirty_writeback_propagates_to_the_next_level() {
+        // Satellite edge case: a dirty L1 victim must add exactly one line
+        // of L1→L2 writeback traffic, and clean victims must add none.
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        let line = cpu.l1.line_bytes as u64;
+        let l1_lines = (cpu.l1.size_bytes / cpu.l1.line_bytes) as u64;
+
+        // dirty one line, then stream reads over a full L1 worth of other
+        // lines in the same sets so the dirty line is certainly evicted
+        h.access(0, 4, AccessKind::Write);
+        for i in 1..=l1_lines {
+            h.access(i * line, 4, AccessKind::Read);
+        }
+        assert_eq!(h.counts.wb_l2_bytes, line, "exactly the one dirty line written back");
+
+        // the same sweep again is all-clean: no further writebacks
+        let wb_before = h.counts.wb_l2_bytes;
+        for i in 1..=l1_lines {
+            h.access(i * line, 4, AccessKind::Read);
+        }
+        assert_eq!(h.counts.wb_l2_bytes, wb_before, "clean evictions write nothing back");
+        assert_eq!(h.l1.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn traced_replay_emits_l2_events_only_on_l1_misses() {
+        use crate::telemetry::sink::CountingSink;
+
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = Hierarchy::new(&cpu);
+        let mut sink = CountingSink::new();
+        // 8 KB working set swept twice: second sweep is pure L1 hits
+        let elems = (8 * 1024 / 4) as u64;
+        for _ in 0..2 {
+            for i in 0..elems {
+                h.access_traced(i * 4, 4, AccessKind::Read, Operand::B, &mut sink);
+            }
+        }
+        assert_eq!(sink.l1.hits + sink.l1.misses, h.counts.accesses);
+        assert_eq!(sink.l1.hits, h.l1.stats.hits());
+        assert_eq!(sink.l1.misses, h.l1.stats.misses());
+        // every L2 event stems from an L1 miss
+        assert_eq!(sink.l2.hits + sink.l2.misses, sink.l1.misses);
+        assert_eq!(sink.l2.misses, h.l2.stats.misses());
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! [`timing`] turns per-level bytes into execution time via the paper's
 //! bandwidth roofline: `t = max(t_compute, bytes_lvl / bw_lvl)` over levels
 //! — exactly the bound lines of Figs 1–3.
+//!
+//! Every access path also exists as an `access_traced` variant that emits
+//! structured events (hit/miss/eviction/writeback, operand-tagged) into a
+//! pluggable [`crate::telemetry::EventSink`]; the plain `access` methods
+//! delegate with the no-op sink, which monomorphizes back to the original
+//! hot path.
 
 pub mod cache;
 pub mod hierarchy;

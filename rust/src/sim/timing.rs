@@ -234,8 +234,8 @@ pub fn simulate_operator_time(
     match kind {
         "gemm_naive" => simulate_gemm_time(cpu, n, n, n, GemmSchedule::naive(), 32).total_s,
         "gemm_tuned" => {
-            simulate_gemm_time(cpu, n, n, n, schedule.unwrap_or(GemmSchedule::new(64, 64, 64, 4)), 32)
-                .total_s
+            let s = schedule.unwrap_or(GemmSchedule::new(64, 64, 64, 4));
+            simulate_gemm_time(cpu, n, n, n, s, 32).total_s
         }
         other => panic!("unknown operator kind {other}"),
     }

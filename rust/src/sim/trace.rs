@@ -10,9 +10,11 @@
 //! 4 KiB boundaries (base addresses `A_BASE`, `B_BASE`, `C_BASE` shifted
 //! per array size), row-major, matching what malloc'd buffers look like.
 
-use crate::operators::gemm::GemmSchedule;
 use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::ConvLayer;
+use crate::telemetry::event::Operand;
+use crate::telemetry::sink::{EventSink, NullSink};
 
 use super::cache::AccessKind;
 use super::hierarchy::Hierarchy;
@@ -31,13 +33,20 @@ fn align_up(x: u64, a: u64) -> u64 {
 /// so A is touched once per (i,kk) pair per j-block, B once per MAC, and C
 /// once per (i,j) pair per k-panel (accumulator kept in registers along kk
 /// up to the unroll factor).  `elem` is the operand byte width.
-pub fn replay_gemm(
+pub fn replay_gemm(h: &mut Hierarchy, m: usize, n: usize, k: usize, s: GemmSchedule, elem: u32) {
+    replay_gemm_traced(h, m, n, k, s, elem, &mut NullSink);
+}
+
+/// [`replay_gemm`] with telemetry: every access is tagged with its operand
+/// (`A`/`B` panels, `C` accumulator) and emitted into `sink`.
+pub fn replay_gemm_traced<S: EventSink>(
     h: &mut Hierarchy,
     m: usize,
     n: usize,
     k: usize,
     s: GemmSchedule,
     elem: u32,
+    sink: &mut S,
 ) {
     let s = s.clamp(m, n, k);
     let a_base = 0u64;
@@ -53,22 +62,42 @@ pub fn replay_gemm(
                 for i in i0..i1 {
                     // C row touched once per k-panel (read-modify-write)
                     for j in j0..j1 {
-                        h.access(c_base + (i * n + j) as u64 * 4, 4, AccessKind::Read);
+                        h.access_traced(
+                            c_base + (i * n + j) as u64 * 4,
+                            4,
+                            AccessKind::Read,
+                            Operand::C,
+                            sink,
+                        );
                     }
                     for kk in k0..k1 {
                         // A element: one register load per j-sweep
-                        h.access(a_base + (i * k + kk) as u64 * elem as u64, elem, AccessKind::Read);
+                        h.access_traced(
+                            a_base + (i * k + kk) as u64 * elem as u64,
+                            elem,
+                            AccessKind::Read,
+                            Operand::A,
+                            sink,
+                        );
                         // B row: streamed, one read per MAC (the paper's model)
                         for j in j0..j1 {
-                            h.access(
+                            h.access_traced(
                                 b_base + (kk * n + j) as u64 * elem as u64,
                                 elem,
                                 AccessKind::Read,
+                                Operand::B,
+                                sink,
                             );
                         }
                     }
                     for j in j0..j1 {
-                        h.access(c_base + (i * n + j) as u64 * 4, 4, AccessKind::Write);
+                        h.access_traced(
+                            c_base + (i * n + j) as u64 * 4,
+                            4,
+                            AccessKind::Write,
+                            Operand::C,
+                            sink,
+                        );
                     }
                 }
             }
@@ -80,6 +109,18 @@ pub fn replay_gemm(
 /// `operators::conv::spatial_pack`): (co-block, row-block) tiles, taps
 /// unrolled, innermost `ox` contiguous.
 pub fn replay_conv_spatial_pack(h: &mut Hierarchy, l: &ConvLayer, s: ConvSchedule, elem: u32) {
+    replay_conv_spatial_pack_traced(h, l, s, elem, &mut NullSink);
+}
+
+/// [`replay_conv_spatial_pack`] with telemetry: activations tagged `A`,
+/// weights `B`, the output accumulator `C`.
+pub fn replay_conv_spatial_pack_traced<S: EventSink>(
+    h: &mut Hierarchy,
+    l: &ConvLayer,
+    s: ConvSchedule,
+    elem: u32,
+    sink: &mut S,
+) {
     let (cin, cout, k, stride) = (l.cin, l.cout, l.k, l.stride);
     let (hp, wp) = (l.h + 2 * l.pad, l.w + 2 * l.pad);
     let (ho, wo) = (l.ho(), l.wo());
@@ -98,25 +139,31 @@ pub fn replay_conv_spatial_pack(h: &mut Hierarchy, l: &ConvLayer, s: ConvSchedul
                     for dy in 0..k {
                         for dx in 0..k {
                             // weight tap: register-resident across the sweep
-                            h.access(
+                            h.access_traced(
                                 w_base + (((co * cin + ci) * k + dy) * k + dx) as u64 * elem as u64,
                                 elem,
                                 AccessKind::Read,
+                                Operand::B,
+                                sink,
                             );
                             for oy in r0..r1 {
                                 let iy = oy * stride + dy;
                                 for ox in 0..wo {
                                     let ix = ox * stride + dx;
-                                    h.access(
+                                    h.access_traced(
                                         x_base + ((ci * hp + iy) * wp + ix) as u64 * elem as u64,
                                         elem,
                                         AccessKind::Read,
+                                        Operand::A,
+                                        sink,
                                     );
                                     // output accumulate (read-modify-write)
-                                    h.access(
+                                    h.access_traced(
                                         o_base + ((co * ho + oy) * wo + ox) as u64 * 4,
                                         4,
                                         AccessKind::Write,
+                                        Operand::C,
+                                        sink,
                                     );
                                 }
                             }
@@ -138,6 +185,20 @@ pub fn replay_bitserial_gemm(
     abits: usize,
     wbits: usize,
 ) {
+    replay_bitserial_gemm_traced(h, m, n, kw, abits, wbits, &mut NullSink);
+}
+
+/// [`replay_bitserial_gemm`] with telemetry: activation planes tagged `A`,
+/// weight planes `B`, the popcount accumulator `C`.
+pub fn replay_bitserial_gemm_traced<S: EventSink>(
+    h: &mut Hierarchy,
+    m: usize,
+    n: usize,
+    kw: usize,
+    abits: usize,
+    wbits: usize,
+    sink: &mut S,
+) {
     let a_base = 0u64;
     let b_base = align_up(a_base + (abits * m * kw * 4) as u64, PAGE);
     let c_base = align_up(b_base + (wbits * n * kw * 4) as u64, PAGE);
@@ -146,10 +207,28 @@ pub fn replay_bitserial_gemm(
             for r in 0..m {
                 for c in 0..n {
                     for w in 0..kw {
-                        h.access(a_base + (((i * m + r) * kw) + w) as u64 * 4, 4, AccessKind::Read);
-                        h.access(b_base + (((j * n + c) * kw) + w) as u64 * 4, 4, AccessKind::Read);
+                        h.access_traced(
+                            a_base + (((i * m + r) * kw) + w) as u64 * 4,
+                            4,
+                            AccessKind::Read,
+                            Operand::A,
+                            sink,
+                        );
+                        h.access_traced(
+                            b_base + (((j * n + c) * kw) + w) as u64 * 4,
+                            4,
+                            AccessKind::Read,
+                            Operand::B,
+                            sink,
+                        );
                     }
-                    h.access(c_base + (r * n + c) as u64 * 4, 4, AccessKind::Write);
+                    h.access_traced(
+                        c_base + (r * n + c) as u64 * 4,
+                        4,
+                        AccessKind::Write,
+                        Operand::C,
+                        sink,
+                    );
                 }
             }
         }
@@ -218,6 +297,37 @@ mod tests {
         replay_bitserial_gemm(&mut h2, 32, 32, 4, 2, 2);
         assert!(h2.counts.accesses > 3 * h1.counts.accesses);
         assert!(h2.counts.accesses < 5 * h1.counts.accesses);
+    }
+
+    #[test]
+    fn traced_replay_matches_untraced_and_attributes_operands() {
+        use crate::telemetry::reuse::ReuseAnalyzer;
+
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let (m, n, k) = (32, 32, 32);
+        let s = GemmSchedule::new(16, 16, 16, 2);
+
+        let mut plain = Hierarchy::new(&cpu);
+        replay_gemm(&mut plain, m, n, k, s, 4);
+
+        let mut traced = Hierarchy::new(&cpu);
+        let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+        replay_gemm_traced(&mut traced, m, n, k, s, 4, &mut analyzer);
+
+        // the sink must not perturb the simulation
+        assert_eq!(plain.counts, traced.counts);
+        assert_eq!(plain.l1.stats, traced.l1.stats);
+
+        // one analyzer touch per core access, attributed per operand
+        assert_eq!(analyzer.accesses(), traced.counts.accesses);
+        use crate::telemetry::event::Operand;
+        let b_reads = analyzer.histogram(Operand::B).total();
+        assert_eq!(b_reads, (m * n * k) as u64, "one B read per MAC");
+        let a_reads = analyzer.histogram(Operand::A).total();
+        assert_eq!(a_reads, (m * k * (n / 16)) as u64);
+        let c_touches = analyzer.histogram(Operand::C).total();
+        assert_eq!(c_touches, (2 * m * n * (k / 16)) as u64);
+        assert_eq!(analyzer.write_accesses, (m * n * (k / 16)) as u64);
     }
 
     #[test]

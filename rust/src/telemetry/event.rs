@@ -1,0 +1,110 @@
+//! Structured cache events — the vocabulary of the telemetry subsystem.
+//!
+//! One [`CacheEvent`] is emitted per observable cache action: an access
+//! resolving to a hit or a miss at a level, an eviction of a resident line,
+//! and a dirty writeback travelling to the level below.  Events carry the
+//! *operand tag* ([`Operand`]) the trace generator assigned, which is what
+//! turns a flat address stream into per-operand reuse-distance profiles —
+//! the "is it A-panel reuse or B-stream reuse that thrashes L1?" question
+//! the aggregate hit/miss counters of `sim::CacheStats` cannot answer.
+
+use crate::hw::MemLevel;
+use crate::sim::cache::AccessKind;
+
+/// Which logical operand of the operator an access belongs to.
+///
+/// The convention across the replay generators (`sim::trace`):
+/// `A` = first input (GEMM A panel / conv activations / bit-serial
+/// activation planes), `B` = second input (GEMM B panel / conv weights /
+/// bit-serial weight planes), `C` = output accumulator.  `Other` tags
+/// untraced traffic (the default of the sink-free `access` path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Operand {
+    A,
+    B,
+    C,
+    Other,
+}
+
+impl Operand {
+    pub const ALL: [Operand; 4] = [Operand::A, Operand::B, Operand::C, Operand::Other];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Operand::A => "A",
+            Operand::B => "B",
+            Operand::C => "C",
+            Operand::Other => "other",
+        }
+    }
+
+    /// Dense index into per-operand tables (matches [`Operand::ALL`]).
+    pub fn index(self) -> usize {
+        match self {
+            Operand::A => 0,
+            Operand::B => 1,
+            Operand::C => 2,
+            Operand::Other => 3,
+        }
+    }
+}
+
+/// What happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The access found its line resident at `level`.
+    Hit,
+    /// The access missed at `level`; a fill from below follows.
+    Miss,
+    /// A resident line was displaced to make room (addr = victim line).
+    Eviction,
+    /// A dirty victim's line is written to the level below (addr = victim).
+    Writeback,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Hit => "hit",
+            EventKind::Miss => "miss",
+            EventKind::Eviction => "eviction",
+            EventKind::Writeback => "writeback",
+        }
+    }
+}
+
+/// One structured cache event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheEvent {
+    /// Which cache level produced the event.
+    pub level: MemLevel,
+    pub kind: EventKind,
+    /// Read/write flavour of the triggering access (for `Eviction` and
+    /// `Writeback` this is the access that *caused* the displacement).
+    pub access: AccessKind,
+    /// Element address for `Hit`/`Miss`; victim *line* base address for
+    /// `Eviction`/`Writeback`.
+    pub addr: u64,
+    /// Bytes requested by the access (element width for L1 accesses, line
+    /// width for fills and writebacks).
+    pub bytes: u32,
+    pub operand: Operand,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_indices_match_all_order() {
+        for (i, op) in Operand::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i);
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Operand::B.name(), "B");
+        assert_eq!(EventKind::Writeback.name(), "writeback");
+    }
+}

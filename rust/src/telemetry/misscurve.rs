@@ -1,0 +1,245 @@
+//! Miss-ratio curves: one traced replay → predicted hit rates for *any*
+//! cache size.
+//!
+//! The stack-distance property of LRU (Mattson et al., 1970): an access
+//! with reuse distance `d` hits a fully-associative LRU cache of capacity
+//! `C` lines iff `d < C`.  So the cumulative distribution of the distances
+//! recorded by `telemetry::reuse` *is* the hit-rate-versus-capacity curve,
+//! for every capacity at once — the single-pass alternative to
+//! re-simulating `sim::Hierarchy` per cache configuration.
+//!
+//! Two-level prediction uses the same property twice: an access misses L1
+//! iff `d >= C_L1`, and that miss hits L2 iff `d < C_L2` (the filtered L2
+//! stream inherits the global LRU stack order).  Both are exact for
+//! fully-associative LRU and approximations for the set-associative
+//! hardware `sim` models; the gap *is* the conflict-miss contribution,
+//! which the A53's 4-way L1 keeps small for blocked operators while the
+//! A72's 2-way L1 can blow it wide open on power-of-two strides — a
+//! set-conflict sensitivity this module makes measurable (see
+//! `DESIGN.md` §Telemetry).
+
+use crate::hw::CpuSpec;
+
+use super::reuse::{MAX_EXACT_DISTANCE, ReuseHistogram};
+
+/// A miss-ratio curve over line-granular capacities.
+#[derive(Clone, Debug)]
+pub struct MissRatioCurve {
+    hist: ReuseHistogram,
+    line_bytes: usize,
+}
+
+/// Hit rates predicted for a concrete two-level hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredictedRates {
+    /// Predicted L1 hit rate over all accesses.
+    pub l1_hit_rate: f64,
+    /// Predicted L2 hit rate over the L1-miss stream (the quantity
+    /// `sim::Hierarchy`'s L2 `CacheStats` measures).
+    pub l2_hit_rate: f64,
+    /// Fraction of all accesses served by RAM.
+    pub ram_fraction: f64,
+}
+
+/// One working-set knee: the capacity at which the hit rate jumps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Knee {
+    pub capacity_lines: usize,
+    pub capacity_bytes: u64,
+    /// Hit rate just past the knee.
+    pub hit_rate: f64,
+    /// Hit-rate gain across the knee.
+    pub gain: f64,
+}
+
+impl MissRatioCurve {
+    pub fn new(hist: ReuseHistogram, line_bytes: usize) -> Self {
+        MissRatioCurve { hist, line_bytes }
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        self.line_bytes
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hist.total()
+    }
+
+    /// Predicted hit rate of a fully-associative LRU cache of
+    /// `capacity_bytes`.
+    pub fn hit_rate_at_bytes(&self, capacity_bytes: usize) -> f64 {
+        self.hist.hit_rate(capacity_bytes / self.line_bytes)
+    }
+
+    /// Predicted hit rate at a line-granular capacity.
+    pub fn hit_rate_at_lines(&self, capacity_lines: usize) -> f64 {
+        self.hist.hit_rate(capacity_lines)
+    }
+
+    /// Hit rates for a concrete CPU's L1/L2 geometry.
+    pub fn predict(&self, cpu: &CpuSpec) -> PredictedRates {
+        let p1 = self.hit_rate_at_bytes(cpu.l1.size_bytes);
+        let p2 = self.hit_rate_at_bytes(cpu.l2.size_bytes);
+        let miss1 = 1.0 - p1;
+        let l2_hit_rate = if miss1 > 1e-12 { (p2 - p1) / miss1 } else { 1.0 };
+        PredictedRates {
+            l1_hit_rate: p1,
+            l2_hit_rate,
+            ram_fraction: 1.0 - p2,
+        }
+    }
+
+    /// The curve sampled at log-spaced capacities (4 points per octave
+    /// from one line to [`MAX_EXACT_DISTANCE`]), as `(bytes, hit_rate)` —
+    /// the data series of the MRC figure and the `--json` dump.  Adjacent
+    /// duplicate rates are collapsed to keep the series compact.
+    pub fn points(&self) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = Vec::new();
+        for lines in sample_capacities() {
+            let rate = self.hist.hit_rate(lines);
+            let bytes = (lines * self.line_bytes) as u64;
+            if let Some(&(_, last)) = out.last() {
+                if (rate - last).abs() < 1e-9 {
+                    continue;
+                }
+            }
+            out.push((bytes, rate));
+        }
+        out
+    }
+
+    /// Working-set knees: capacities where the hit rate gains at least
+    /// `min_gain` over the previous sample point.
+    pub fn knees(&self, min_gain: f64) -> Vec<Knee> {
+        let mut out = Vec::new();
+        let mut prev_rate = 0.0;
+        for lines in sample_capacities() {
+            let rate = self.hist.hit_rate(lines);
+            if rate - prev_rate >= min_gain {
+                out.push(Knee {
+                    capacity_lines: lines,
+                    capacity_bytes: (lines * self.line_bytes) as u64,
+                    hit_rate: rate,
+                    gain: rate - prev_rate,
+                });
+            }
+            prev_rate = rate;
+        }
+        out
+    }
+
+    /// Smallest capacity (bytes) reaching `fraction` of the curve's
+    /// maximum finite hit rate — the working-set-size estimate behind
+    /// `CacheProfile::working_set_bytes`.
+    pub fn capacity_for_fraction(&self, fraction: f64) -> u64 {
+        let max_rate = self.hist.hit_rate(MAX_EXACT_DISTANCE);
+        let target = max_rate * fraction;
+        for lines in sample_capacities() {
+            if self.hist.hit_rate(lines) >= target - 1e-12 {
+                return (lines * self.line_bytes) as u64;
+            }
+        }
+        (MAX_EXACT_DISTANCE * self.line_bytes) as u64
+    }
+}
+
+/// Log-spaced line capacities: 4 per octave from 1 line to the exact-count
+/// ceiling.
+fn sample_capacities() -> Vec<usize> {
+    let mut caps = Vec::new();
+    let mut c = 1usize;
+    while c < MAX_EXACT_DISTANCE {
+        caps.push(c);
+        for num in [5usize, 6, 7] {
+            let mid = c * num / 4;
+            if mid > c && mid < c * 2 {
+                caps.push(mid);
+            }
+        }
+        c *= 2;
+    }
+    caps.push(MAX_EXACT_DISTANCE);
+    caps.dedup();
+    caps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+
+    /// Histogram of a cyclic sweep: `far_misses` cold + everything else at
+    /// distance `ws - 1`.
+    fn sweep_hist(ws: u64, rounds: u64) -> ReuseHistogram {
+        let mut h = ReuseHistogram::new();
+        for _ in 0..ws {
+            h.record(None);
+        }
+        for _ in 0..(rounds - 1) * ws {
+            h.record(Some(ws - 1));
+        }
+        h
+    }
+
+    #[test]
+    fn step_curve_has_the_sweep_knee() {
+        // 100-line working set swept 10 times (reuse distance 99): the
+        // hit rate steps from 0 to 0.9 exactly at a 100-line capacity.
+        let mrc = MissRatioCurve::new(sweep_hist(100, 10), 64);
+        assert_eq!(mrc.hit_rate_at_lines(99), 0.0);
+        assert!((mrc.hit_rate_at_lines(100) - 0.9).abs() < 1e-12);
+        let knees = mrc.knees(0.5);
+        assert_eq!(knees.len(), 1);
+        // first sampled capacity past 100 lines is 112 (= 64 * 7/4)
+        assert!(knees[0].capacity_lines > 100 && knees[0].capacity_lines <= 128);
+        assert!((knees[0].hit_rate - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_places_sweep_between_l1_and_l2() {
+        // A 64 KiB working set: misses the A53's 16 KiB L1, fits the
+        // 512 KiB L2 -> L1 ~0, conditional L2 ~1 (minus cold misses).
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let lines = (64 * 1024 / 64) as u64; // 1024 lines
+        let mrc = MissRatioCurve::new(sweep_hist(lines, 20), 64);
+        let p = mrc.predict(&cpu);
+        assert!(p.l1_hit_rate < 0.01, "{p:?}");
+        assert!(p.l2_hit_rate > 0.9, "{p:?}");
+        assert!(p.ram_fraction < 0.1, "{p:?}");
+    }
+
+    #[test]
+    fn predict_all_hits_saturates_l2_rate() {
+        // tiny working set: everything hits L1; conditional L2 rate
+        // defined as 1.0 rather than 0/0
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mut h = ReuseHistogram::new();
+        h.record(None);
+        for _ in 0..999 {
+            h.record(Some(0));
+        }
+        let p = MissRatioCurve::new(h, 64).predict(&cpu);
+        assert!(p.l1_hit_rate > 0.99);
+        assert!(p.l2_hit_rate <= 1.0);
+    }
+
+    #[test]
+    fn points_are_monotone_and_capped() {
+        let mrc = MissRatioCurve::new(sweep_hist(300, 4), 64);
+        let pts = mrc.points();
+        assert!(!pts.is_empty());
+        for w in pts.windows(2) {
+            assert!(w[1].0 > w[0].0, "capacities increase");
+            assert!(w[1].1 >= w[0].1 - 1e-12, "hit rate is monotone");
+        }
+        assert!(pts.iter().all(|&(_, r)| (0.0..=1.0).contains(&r)));
+    }
+
+    #[test]
+    fn capacity_for_fraction_finds_the_working_set() {
+        let mrc = MissRatioCurve::new(sweep_hist(100, 10), 64);
+        let ws = mrc.capacity_for_fraction(0.9);
+        // the sweep's working set is 100 lines = 6400 bytes
+        assert!(ws >= 100 * 64 && ws <= 128 * 64, "{ws}");
+    }
+}

@@ -1,0 +1,42 @@
+//! Cache telemetry: event traces, reuse-distance profiles, and
+//! miss-ratio-curve boundness prediction.
+//!
+//! The simulator (`sim`) measures *what happened* in one cache
+//! configuration; this subsystem explains *why* and predicts what would
+//! happen in any other:
+//!
+//! * [`event`]/[`sink`] — structured cache events
+//!   (hit/miss/eviction/writeback, operand-tagged) emitted by
+//!   `sim::SetAssocCache::access_traced` and `sim::Hierarchy::access_traced`
+//!   into a pluggable [`sink::EventSink`].  The no-op [`sink::NullSink`]
+//!   keeps the untraced hot path allocation-free and branch-identical.
+//! * [`reuse`] — streaming, bounded-memory stack-distance analysis over
+//!   cache lines, with per-operand histograms.
+//! * [`misscurve`] — the Mattson stack property turns one distance
+//!   histogram into hit rates for **every** cache capacity: the miss-ratio
+//!   curve, its working-set knees, and L1/L2 predictions for a concrete
+//!   CPU.
+//! * [`profile`] — the [`profile::trace_workload`] driver tying it
+//!   together: one traced replay yields the set-associative ground truth
+//!   *and* the MRC prediction, per-operand histograms, an optional JSON
+//!   report, and the per-artifact [`profile::CacheProfile`]s the serving
+//!   core uses for working-set-pressure accounting.
+//!
+//! The `analysis::predict` module consumes the MRC to derive boundness
+//! classes (L1/L2/RAM/compute) for arbitrary shapes without
+//! re-simulating; `rust/tests/telemetry_mrc.rs` validates prediction
+//! against full simulation on the paper's Tables IV/V GEMM grid.
+
+pub mod event;
+pub mod misscurve;
+pub mod profile;
+pub mod reuse;
+pub mod sink;
+
+pub use event::{CacheEvent, EventKind, Operand};
+pub use misscurve::{Knee, MissRatioCurve, PredictedRates};
+pub use profile::{
+    synthetic_gemm_profile, trace_workload, CacheProfile, TraceBudget, TraceReport, TraceSummary,
+};
+pub use reuse::{ReuseAnalyzer, ReuseHistogram};
+pub use sink::{CountingSink, EventSink, NullSink, TeeSink, VecSink};

@@ -1,0 +1,486 @@
+//! Per-workload cache profiles: one traced replay → reuse histograms, MRC,
+//! knees, and predicted-vs-simulated classification.
+//!
+//! [`trace_workload`] is the single driver everything rides on: the CLI's
+//! `cachebound trace`, the `JobSpec::Trace` coordinator job, the optional
+//! `telemetry` section of `BENCH.json`, and the serving core's
+//! [`CacheProfile`]s.  It replays one operator through `sim::Hierarchy`
+//! with a `ReuseAnalyzer` sink attached, so the *same pass* yields both
+//! the set-associative ground truth (cache stats) and the MRC prediction —
+//! which is what makes predicted-vs-simulated a meaningful validation.
+//!
+//! Replays are row-budgeted ([`TraceBudget`]): the loop nests repeat the
+//! same tile-level reuse pattern along their outer dimension, so tracing
+//! `max_rows` of it and scaling linearly reproduces the full-shape traffic
+//! at a fraction of the cost (the budget is recorded in the report).
+
+use crate::analysis::predict::{
+    classify_traffic, predict_workload, traffic_from_counts, MrcPrediction, TraceMeta,
+};
+use crate::bench::sweep::CLASSIFY_SLACK;
+use crate::hw::CpuSpec;
+use crate::operators::conv::ConvSchedule;
+use crate::operators::gemm::GemmSchedule;
+use crate::operators::workloads::BenchWorkload;
+use crate::sim::hierarchy::{Hierarchy, LevelCounts};
+use crate::sim::trace::{
+    replay_bitserial_gemm_traced, replay_conv_spatial_pack_traced, replay_gemm_traced,
+};
+use crate::util::json::{self, Value};
+
+use super::event::Operand;
+use super::misscurve::{Knee, MissRatioCurve};
+use super::reuse::{DistanceBucket, ReuseAnalyzer};
+
+/// Fraction of the peak finite hit rate defining the working-set estimate.
+/// High because the distance-0 (within-line) mass alone reaches ~90% for
+/// streaming operators; the knee of interest is the last few percent.
+pub const WORKING_SET_FRACTION: f64 = 0.98;
+
+/// How much of a workload's outer dimension a trace replays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceBudget {
+    /// Cap on the outer extent (GEMM/bit-serial rows, conv input rows).
+    pub max_rows: usize,
+}
+
+impl TraceBudget {
+    pub fn new(max_rows: usize) -> Self {
+        TraceBudget { max_rows: max_rows.max(1) }
+    }
+}
+
+impl Default for TraceBudget {
+    fn default() -> Self {
+        TraceBudget { max_rows: 64 }
+    }
+}
+
+/// Reuse profile of one operand stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperandProfile {
+    pub operand: String,
+    pub accesses: u64,
+    pub cold: u64,
+    /// Median reuse distance in lines (None when cold/far dominates).
+    pub p50_lines: Option<u64>,
+    pub buckets: Vec<DistanceBucket>,
+}
+
+/// Everything one traced replay produced.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub family: String,
+    pub shape: String,
+    pub cpu_name: String,
+    /// Row budget the replay ran under.
+    pub max_rows: usize,
+    /// Full-shape work / traced work.
+    pub scale: f64,
+    pub accesses: u64,
+    pub lines_touched: u64,
+    /// Trace-simulator per-level byte counts (the ground truth).
+    pub counts: LevelCounts,
+    /// Set-associative simulated hit rates (L1 over all accesses, L2 over
+    /// the L1-miss stream).
+    pub sim_l1_hit_rate: f64,
+    pub sim_l2_hit_rate: f64,
+    /// Full-simulation roofline time and class (same classifier as the
+    /// prediction — agreement is the validation).
+    pub sim_time_s: f64,
+    pub sim_class: String,
+    /// The MRC-side prediction.
+    pub prediction: MrcPrediction,
+    pub predicted_class: String,
+    /// Smallest capacity reaching [`WORKING_SET_FRACTION`] of the peak
+    /// finite hit rate.
+    pub working_set_bytes: u64,
+    pub operands: Vec<OperandProfile>,
+    /// `(capacity_bytes, predicted_hit_rate)` — the MRC data series.
+    pub mrc_points: Vec<(u64, f64)>,
+    pub knees: Vec<Knee>,
+}
+
+/// Trace one workload on one CPU profile: replay through the hierarchy
+/// with a reuse-analyzer sink, then predict and classify both ways.
+pub fn trace_workload(cpu: &CpuSpec, w: &BenchWorkload, budget: TraceBudget) -> TraceReport {
+    let mut h = Hierarchy::new(cpu);
+    let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+    let (scale, max_rows) = match w {
+        BenchWorkload::Gemm { n } => {
+            let m = (*n).min(budget.max_rows);
+            replay_gemm_traced(&mut h, m, *n, *n, GemmSchedule::default_tuned(), 4, &mut analyzer);
+            (*n as f64 / m as f64, m)
+        }
+        BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
+            let elem = if matches!(w, BenchWorkload::QnnConv { .. }) { 1 } else { 4 };
+            let mut traced = *layer;
+            traced.h = traced.h.min(budget.max_rows);
+            replay_conv_spatial_pack_traced(
+                &mut h,
+                &traced,
+                ConvSchedule::default_tuned(),
+                elem,
+                &mut analyzer,
+            );
+            (
+                layer.macs_exact() as f64 / traced.macs_exact() as f64,
+                traced.h,
+            )
+        }
+        BenchWorkload::Bitserial { n, bits } => {
+            let m = (*n).min(budget.max_rows);
+            let kw = n.div_ceil(32);
+            replay_bitserial_gemm_traced(&mut h, m, *n, kw, *bits, *bits, &mut analyzer);
+            (*n as f64 / m as f64, m)
+        }
+    };
+
+    let meta = TraceMeta {
+        traced_accesses: analyzer.accesses(),
+        traced_bytes: analyzer.bytes_accessed,
+        traced_write_accesses: analyzer.write_accesses,
+        scale,
+    };
+    let mrc = MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes);
+    let prediction = predict_workload(cpu, w, &mrc, &meta, CLASSIFY_SLACK);
+
+    let sim_traffic = traffic_from_counts(cpu, w, &h.counts, analyzer.write_accesses, scale);
+    let (sim_time, sim_class) = classify_traffic(cpu, w, &sim_traffic, CLASSIFY_SLACK);
+
+    let operands = Operand::ALL
+        .iter()
+        .filter_map(|&op| {
+            let hist = analyzer.histogram(op);
+            if hist.total() == 0 {
+                return None;
+            }
+            Some(OperandProfile {
+                operand: op.name().to_string(),
+                accesses: hist.total(),
+                cold: hist.cold(),
+                p50_lines: hist.percentile(50.0),
+                buckets: hist.log_buckets(),
+            })
+        })
+        .collect();
+
+    TraceReport {
+        family: w.family().to_string(),
+        shape: w.shape(),
+        cpu_name: cpu.name.clone(),
+        max_rows,
+        scale,
+        accesses: analyzer.accesses(),
+        lines_touched: analyzer.lines_touched() as u64,
+        counts: h.counts,
+        sim_l1_hit_rate: h.l1.stats.hit_rate(),
+        sim_l2_hit_rate: h.l2.stats.hit_rate(),
+        sim_time_s: sim_time.total_s,
+        sim_class: sim_class.name(),
+        predicted_class: prediction.class.name(),
+        working_set_bytes: mrc.capacity_for_fraction(WORKING_SET_FRACTION),
+        prediction,
+        operands,
+        mrc_points: mrc.points(),
+        knees: mrc.knees(0.05),
+    }
+}
+
+impl TraceReport {
+    /// "family/shape" — the stable identity used in job keys and BENCH
+    /// records.
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.family, self.shape)
+    }
+
+    /// |predicted − simulated| L1 hit rate, percentage points.
+    pub fn l1_err_pp(&self) -> f64 {
+        (self.prediction.rates.l1_hit_rate - self.sim_l1_hit_rate).abs() * 100.0
+    }
+
+    /// |predicted − simulated| L2 hit rate, percentage points.
+    pub fn l2_err_pp(&self) -> f64 {
+        (self.prediction.rates.l2_hit_rate - self.sim_l2_hit_rate).abs() * 100.0
+    }
+
+    /// Did prediction and full simulation reach the same boundness class?
+    pub fn classes_agree(&self) -> bool {
+        self.predicted_class == self.sim_class
+    }
+
+    /// The compact record the coordinator store and `BENCH.json` carry.
+    pub fn summary(&self) -> TraceSummary {
+        TraceSummary {
+            key: self.key(),
+            profile: self.cpu_name.clone(),
+            accesses: self.accesses,
+            sim_l1_hit_rate: self.sim_l1_hit_rate,
+            sim_l2_hit_rate: self.sim_l2_hit_rate,
+            mrc_l1_hit_rate: self.prediction.rates.l1_hit_rate,
+            mrc_l2_hit_rate: self.prediction.rates.l2_hit_rate,
+            sim_class: self.sim_class.clone(),
+            predicted_class: self.predicted_class.clone(),
+            working_set_bytes: self.working_set_bytes,
+        }
+    }
+
+    /// Per-artifact profile for the serving core.
+    pub fn cache_profile(&self, artifact: &str) -> CacheProfile {
+        CacheProfile {
+            artifact: artifact.to_string(),
+            accesses: self.accesses,
+            l1_hit_rate: self.prediction.rates.l1_hit_rate,
+            l2_hit_rate: self.prediction.rates.l2_hit_rate,
+            working_set_bytes: self.working_set_bytes,
+            predicted_class: self.predicted_class.clone(),
+        }
+    }
+
+    /// Full JSON document (the `cachebound trace --json` payload).
+    pub fn to_json(&self) -> Value {
+        let bucket_json = |b: &DistanceBucket| {
+            json::obj(vec![
+                (
+                    "lo",
+                    if b.lo == u64::MAX { Value::Null } else { json::num(b.lo as f64) },
+                ),
+                (
+                    "hi",
+                    if b.hi == u64::MAX { Value::Null } else { json::num(b.hi as f64) },
+                ),
+                ("count", json::num(b.count as f64)),
+            ])
+        };
+        let operands = self
+            .operands
+            .iter()
+            .map(|o| {
+                json::obj(vec![
+                    ("operand", json::s(o.operand.as_str())),
+                    ("accesses", json::num(o.accesses as f64)),
+                    ("cold", json::num(o.cold as f64)),
+                    (
+                        "p50_lines",
+                        o.p50_lines.map_or(Value::Null, |d| json::num(d as f64)),
+                    ),
+                    (
+                        "histogram",
+                        Value::Arr(o.buckets.iter().map(bucket_json).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let mrc = self
+            .mrc_points
+            .iter()
+            .map(|&(bytes, rate)| json::arr(vec![json::num(bytes as f64), json::num(rate)]))
+            .collect();
+        let knees = self
+            .knees
+            .iter()
+            .map(|k| {
+                json::obj(vec![
+                    ("capacity_bytes", json::num(k.capacity_bytes as f64)),
+                    ("hit_rate", json::num(k.hit_rate)),
+                    ("gain", json::num(k.gain)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("workload", json::s(self.key())),
+            ("family", json::s(self.family.as_str())),
+            ("shape", json::s(self.shape.as_str())),
+            ("profile", json::s(self.cpu_name.as_str())),
+            ("max_rows", json::num(self.max_rows as f64)),
+            ("scale", json::num(self.scale)),
+            ("accesses", json::num(self.accesses as f64)),
+            ("lines_touched", json::num(self.lines_touched as f64)),
+            ("working_set_bytes", json::num(self.working_set_bytes as f64)),
+            ("operands", Value::Arr(operands)),
+            ("mrc", Value::Arr(mrc)),
+            ("knees", Value::Arr(knees)),
+            (
+                "simulated",
+                json::obj(vec![
+                    ("l1_hit_rate", json::num(self.sim_l1_hit_rate)),
+                    ("l2_hit_rate", json::num(self.sim_l2_hit_rate)),
+                    ("time_s", json::num(self.sim_time_s)),
+                    ("class", json::s(self.sim_class.as_str())),
+                ]),
+            ),
+            (
+                "predicted",
+                json::obj(vec![
+                    ("l1_hit_rate", json::num(self.prediction.rates.l1_hit_rate)),
+                    ("l2_hit_rate", json::num(self.prediction.rates.l2_hit_rate)),
+                    ("ram_fraction", json::num(self.prediction.rates.ram_fraction)),
+                    ("time_s", json::num(self.prediction.time.total_s)),
+                    ("class", json::s(self.predicted_class.as_str())),
+                    ("l1_err_pp", json::num(self.l1_err_pp())),
+                    ("l2_err_pp", json::num(self.l2_err_pp())),
+                    ("classes_agree", Value::Bool(self.classes_agree())),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Compact per-trace record: what `JobOutput::Traced`, the result store
+/// and `BENCH.json` carry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSummary {
+    pub key: String,
+    pub profile: String,
+    pub accesses: u64,
+    pub sim_l1_hit_rate: f64,
+    pub sim_l2_hit_rate: f64,
+    pub mrc_l1_hit_rate: f64,
+    pub mrc_l2_hit_rate: f64,
+    pub sim_class: String,
+    pub predicted_class: String,
+    pub working_set_bytes: u64,
+}
+
+impl TraceSummary {
+    pub fn classes_agree(&self) -> bool {
+        self.sim_class == self.predicted_class
+    }
+
+    /// One-line rendering for result-store details and logs.
+    pub fn render(&self) -> String {
+        format!(
+            "L1 {:.1}%/{:.1}% L2 {:.1}%/{:.1}% (sim/mrc), ws {} KiB, class {}/{}",
+            self.sim_l1_hit_rate * 100.0,
+            self.mrc_l1_hit_rate * 100.0,
+            self.sim_l2_hit_rate * 100.0,
+            self.mrc_l2_hit_rate * 100.0,
+            self.working_set_bytes / 1024,
+            self.sim_class,
+            self.predicted_class,
+        )
+    }
+}
+
+/// Per-artifact cache profile for the serving core: what a worker's cache
+/// working set looks like when this artifact is resident.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheProfile {
+    pub artifact: String,
+    pub accesses: u64,
+    pub l1_hit_rate: f64,
+    pub l2_hit_rate: f64,
+    /// Estimated working-set size (bytes of cache for
+    /// [`WORKING_SET_FRACTION`] of the peak hit rate).
+    pub working_set_bytes: u64,
+    pub predicted_class: String,
+}
+
+/// Profile a synthetic serving artifact (`syn_gemm_n<N>`) by tracing its
+/// tiled GEMM untruncated (serving GEMMs are small).
+pub fn synthetic_gemm_profile(cpu: &CpuSpec, artifact: &str, n: usize) -> CacheProfile {
+    trace_workload(cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(n)).cache_profile(artifact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::operators::workloads::ConvLayer;
+
+    fn a53() -> CpuSpec {
+        profile_by_name("a53").unwrap().cpu
+    }
+
+    fn tiny_conv() -> ConvLayer {
+        ConvLayer {
+            name: "tiny",
+            b: 1,
+            cin: 8,
+            cout: 8,
+            h: 12,
+            w: 12,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        }
+    }
+
+    #[test]
+    fn gemm_trace_produces_consistent_report() {
+        let cpu = a53();
+        let r = trace_workload(&cpu, &BenchWorkload::Gemm { n: 96 }, TraceBudget::new(32));
+        assert_eq!(r.key(), "gemm/n96");
+        assert_eq!(r.max_rows, 32);
+        assert!((r.scale - 3.0).abs() < 1e-12);
+        assert_eq!(r.accesses, r.counts.accesses);
+        assert!(r.lines_touched > 0);
+        // operand split covers A, B and C
+        let names: Vec<&str> = r.operands.iter().map(|o| o.operand.as_str()).collect();
+        assert_eq!(names, vec!["A", "B", "C"]);
+        // histogram mass equals accesses
+        let total: u64 = r.operands.iter().map(|o| o.accesses).sum();
+        assert_eq!(total, r.accesses);
+        assert!(r.working_set_bytes > 0);
+    }
+
+    #[test]
+    fn every_family_traces_and_serializes() {
+        let cpu = a53();
+        let layer = tiny_conv();
+        let workloads = [
+            BenchWorkload::Gemm { n: 48 },
+            BenchWorkload::Conv { layer },
+            BenchWorkload::QnnConv { layer },
+            BenchWorkload::Bitserial { n: 48, bits: 2 },
+        ];
+        for w in &workloads {
+            let r = trace_workload(&cpu, w, TraceBudget::default());
+            assert!(r.accesses > 0, "{}", r.key());
+            assert!(!r.mrc_points.is_empty(), "{}", r.key());
+            let text = json::to_string_pretty(&r.to_json());
+            let v = json::parse(&text).expect("valid JSON");
+            assert_eq!(v.req("workload").unwrap().as_str().unwrap(), r.key());
+            assert!(v.req("predicted").unwrap().req("class").is_ok());
+            assert!(!v.req("mrc").unwrap().as_arr().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn small_gemm_prediction_matches_simulation_closely() {
+        // 48³ f32 fits comfortably in L2 and mostly in L1: the MRC and the
+        // set-associative simulation must agree tightly.
+        let cpu = a53();
+        let r = trace_workload(&cpu, &BenchWorkload::Gemm { n: 48 }, TraceBudget::new(48));
+        assert!(r.l1_err_pp() < 2.0, "L1 err {:.2}pp", r.l1_err_pp());
+        assert!(r.l2_err_pp() < 2.0, "L2 err {:.2}pp", r.l2_err_pp());
+        assert!(r.classes_agree(), "sim {} vs mrc {}", r.sim_class, r.predicted_class);
+    }
+
+    #[test]
+    fn summary_and_cache_profile_are_consistent() {
+        let cpu = a53();
+        let r = trace_workload(&cpu, &BenchWorkload::Gemm { n: 64 }, TraceBudget::new(64));
+        let s = r.summary();
+        assert_eq!(s.key, "gemm/n64");
+        assert_eq!(s.working_set_bytes, r.working_set_bytes);
+        assert!(s.render().contains("ws"));
+        let p = r.cache_profile("syn_gemm_n64");
+        assert_eq!(p.artifact, "syn_gemm_n64");
+        assert_eq!(p.working_set_bytes, r.working_set_bytes);
+    }
+
+    #[test]
+    fn synthetic_profile_working_set_grows_with_n() {
+        let cpu = a53();
+        let small = synthetic_gemm_profile(&cpu, "syn_gemm_n32", 32);
+        let big = synthetic_gemm_profile(&cpu, "syn_gemm_n128", 128);
+        assert!(
+            big.working_set_bytes > small.working_set_bytes,
+            "{} vs {}",
+            big.working_set_bytes,
+            small.working_set_bytes
+        );
+    }
+}

@@ -1,0 +1,503 @@
+//! Streaming reuse-distance (stack-distance) analysis over cache lines.
+//!
+//! For every access, the *stack distance* is the number of **distinct other
+//! cache lines** touched since the previous access to the same line (cold
+//! first touches have infinite distance).  Under fully-associative LRU the
+//! access hits a cache of capacity `C` lines **iff** its distance is
+//! `< C` — which is what lets one traced replay predict hit rates for
+//! *every* cache size at once (`misscurve`), instead of re-simulating per
+//! configuration.
+//!
+//! The analyzer is streaming and bounded-memory:
+//!
+//! * distances are computed with a Fenwick tree over access-time slots
+//!   (the classic O(log n) stack-distance algorithm); the slot window is
+//!   periodically *compacted* down to the set of live lines, so memory is
+//!   O(distinct lines), not O(trace length);
+//! * histograms store exact counts only up to [`MAX_EXACT_DISTANCE`]
+//!   (2^18 lines = 16 MiB of 64-byte lines — beyond every cache this
+//!   framework models); farther reuses fold into a single `far` bucket
+//!   that any realistic capacity scores as a miss.
+//!
+//! Histograms are kept **per operand** (A/B/C tags from `sim::trace`) so a
+//! schedule's pathology is attributable: a B-stream whose distance
+//! distribution sits just beyond the L1 capacity is the paper's
+//! L1-cache-bound GEMM in one picture.
+
+use std::collections::HashMap;
+
+use crate::hw::MemLevel;
+use crate::sim::cache::AccessKind;
+
+use super::event::{CacheEvent, EventKind, Operand};
+use super::sink::EventSink;
+
+/// Largest stack distance recorded exactly (in lines).  16 MiB of 64 B
+/// lines — larger than any L2 this framework models, so folding farther
+/// distances into one bucket loses nothing for hit-rate prediction.
+pub const MAX_EXACT_DISTANCE: usize = 1 << 18;
+
+/// A reuse-distance histogram (distances in cache lines).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReuseHistogram {
+    /// `counts[d]` = accesses with stack distance exactly `d`; grown on
+    /// demand, capped at [`MAX_EXACT_DISTANCE`] entries.
+    counts: Vec<u64>,
+    /// Finite distances `>= MAX_EXACT_DISTANCE`.
+    far: u64,
+    /// Cold first touches (infinite distance).
+    cold: u64,
+}
+
+impl ReuseHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one access; `None` = cold first touch.
+    pub fn record(&mut self, distance: Option<u64>) {
+        match distance {
+            Some(d) if (d as usize) < MAX_EXACT_DISTANCE => {
+                let d = d as usize;
+                if d >= self.counts.len() {
+                    self.counts.resize(d + 1, 0);
+                }
+                self.counts[d] += 1;
+            }
+            Some(_) => self.far += 1,
+            None => self.cold += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.far + self.cold
+    }
+
+    pub fn cold(&self) -> u64 {
+        self.cold
+    }
+
+    /// Accesses with distance `< capacity_lines` — the fully-associative
+    /// LRU hits of a cache of that many lines.  Capacities beyond
+    /// [`MAX_EXACT_DISTANCE`] are clamped (the `far` bucket stays a miss).
+    pub fn hits_within(&self, capacity_lines: usize) -> u64 {
+        let cap = capacity_lines.min(self.counts.len());
+        self.counts[..cap].iter().sum()
+    }
+
+    /// Predicted hit rate at `capacity_lines` (0 when the histogram is
+    /// empty).
+    pub fn hit_rate(&self, capacity_lines: usize) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits_within(capacity_lines) as f64 / total as f64
+    }
+
+    /// Smallest distance `d` such that at least `p`% of accesses have
+    /// distance `<= d`; `None` when that mass is only reached through the
+    /// far/cold buckets.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (d, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Some(d as u64);
+            }
+        }
+        None
+    }
+
+    /// Log₂-bucketed view `(lo, hi, count)` with `hi` exclusive, plus the
+    /// far and cold buckets — the compact rendering for CLI/JSON output.
+    pub fn log_buckets(&self) -> Vec<DistanceBucket> {
+        let mut out = Vec::new();
+        let mut lo = 0usize;
+        let mut hi = 1usize;
+        while lo < self.counts.len() {
+            let end = hi.min(self.counts.len());
+            let count: u64 = self.counts[lo..end].iter().sum();
+            if count > 0 {
+                out.push(DistanceBucket {
+                    lo: lo as u64,
+                    hi: hi as u64,
+                    count,
+                    kind: BucketKind::Exact,
+                });
+            }
+            lo = hi;
+            hi *= 2;
+        }
+        if self.far > 0 {
+            out.push(DistanceBucket {
+                lo: MAX_EXACT_DISTANCE as u64,
+                hi: u64::MAX,
+                count: self.far,
+                kind: BucketKind::Far,
+            });
+        }
+        if self.cold > 0 {
+            out.push(DistanceBucket {
+                lo: u64::MAX,
+                hi: u64::MAX,
+                count: self.cold,
+                kind: BucketKind::Cold,
+            });
+        }
+        out
+    }
+
+    /// Accumulate another histogram into this one.
+    pub fn merge(&mut self, other: &ReuseHistogram) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (d, &c) in other.counts.iter().enumerate() {
+            self.counts[d] += c;
+        }
+        self.far += other.far;
+        self.cold += other.cold;
+    }
+}
+
+/// One log-bucket row of a histogram rendering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DistanceBucket {
+    /// Inclusive lower distance bound (lines).
+    pub lo: u64,
+    /// Exclusive upper bound (`u64::MAX` for far/cold).
+    pub hi: u64,
+    pub count: u64,
+    pub kind: BucketKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BucketKind {
+    Exact,
+    Far,
+    Cold,
+}
+
+/// Fenwick (binary indexed) tree of slot-occupancy counts.
+#[derive(Clone, Debug)]
+struct Fenwick {
+    tree: Vec<u32>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Fenwick { tree: vec![0; n + 1] }
+    }
+
+    fn len(&self) -> usize {
+        self.tree.len() - 1
+    }
+
+    /// Add `delta` at slot `i` (0-based).
+    fn add(&mut self, i: usize, delta: i32) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            self.tree[i] = (self.tree[i] as i64 + delta as i64) as u32;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of slots `[0, i)` (0-based, `i` exclusive).
+    fn prefix(&self, i: usize) -> u64 {
+        let mut i = i.min(self.len());
+        let mut s = 0u64;
+        while i > 0 {
+            s += self.tree[i] as u64;
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Minimum slot-window size (keeps compaction amortized for tiny traces).
+const MIN_SLOTS: usize = 1 << 12;
+
+/// The streaming analyzer: feeds per-operand [`ReuseHistogram`]s from a
+/// line-granular address stream.  Implements [`EventSink`], consuming the
+/// L1 hit/miss events of a traced replay (exactly one per core access).
+#[derive(Clone, Debug)]
+pub struct ReuseAnalyzer {
+    line_shift: u32,
+    /// line -> most recent access slot.
+    last: HashMap<u64, usize>,
+    /// 1 at each live line's most recent slot.
+    occupied: Fenwick,
+    /// Next free slot.
+    time: usize,
+    per_operand: [ReuseHistogram; 4],
+    /// Total element bytes requested (for traffic extrapolation).
+    pub bytes_accessed: u64,
+    /// Write-flavoured accesses (C-store stream estimate).
+    pub write_accesses: u64,
+}
+
+impl ReuseAnalyzer {
+    pub fn new(line_bytes: usize) -> Self {
+        assert!(line_bytes.is_power_of_two(), "line size must be a power of two");
+        ReuseAnalyzer {
+            line_shift: line_bytes.trailing_zeros(),
+            last: HashMap::new(),
+            occupied: Fenwick::new(MIN_SLOTS),
+            time: 0,
+            per_operand: Default::default(),
+            bytes_accessed: 0,
+            write_accesses: 0,
+        }
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        1usize << self.line_shift
+    }
+
+    /// Distinct lines seen so far.
+    pub fn lines_touched(&self) -> usize {
+        self.last.len()
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.per_operand.iter().map(|h| h.total()).sum()
+    }
+
+    /// One element access tagged with its operand.
+    pub fn touch(&mut self, addr: u64, operand: Operand) {
+        // Compact *before* touching any bookkeeping: compaction rebuilds
+        // the window from `last`, so running it mid-access (after the old
+        // slot's occupancy was cleared but before `last` is repointed)
+        // would resurrect the in-flight line's old slot as a phantom that
+        // inflates every later distance by one.
+        if self.time == self.occupied.len() {
+            self.compact();
+        }
+        let line = addr >> self.line_shift;
+        let distance = match self.last.get(&line) {
+            Some(&prev) => {
+                // live slots strictly after prev = distinct other lines
+                // touched since the previous access to this line
+                let d = self.occupied.prefix(self.time) - self.occupied.prefix(prev + 1);
+                self.occupied.add(prev, -1);
+                Some(d)
+            }
+            None => None,
+        };
+        let slot = self.time;
+        self.occupied.add(slot, 1);
+        self.last.insert(line, slot);
+        self.time += 1;
+        self.per_operand[operand.index()].record(distance);
+    }
+
+    /// Rebuild the slot window keeping only live lines, preserving their
+    /// recency order.  Runs every `O(window)` accesses; each rebuild is
+    /// `O(lines · log lines)`, so the amortized cost per access stays
+    /// logarithmic and memory stays proportional to the working set.
+    fn compact(&mut self) {
+        let mut live: Vec<(usize, u64)> =
+            self.last.iter().map(|(&line, &slot)| (slot, line)).collect();
+        live.sort_unstable();
+        let window = (2 * live.len()).max(MIN_SLOTS);
+        self.occupied = Fenwick::new(window);
+        for (new_slot, &(_, line)) in live.iter().enumerate() {
+            self.occupied.add(new_slot, 1);
+            self.last.insert(line, new_slot);
+        }
+        self.time = live.len();
+    }
+
+    pub fn histogram(&self, operand: Operand) -> &ReuseHistogram {
+        &self.per_operand[operand.index()]
+    }
+
+    /// The combined (all-operand) histogram.
+    pub fn combined(&self) -> ReuseHistogram {
+        let mut out = ReuseHistogram::new();
+        for h in &self.per_operand {
+            out.merge(h);
+        }
+        out
+    }
+}
+
+impl EventSink for ReuseAnalyzer {
+    fn record(&mut self, ev: &CacheEvent) {
+        // Exactly one L1 hit-or-miss event per core access; evictions,
+        // writebacks and L2 events describe consequences, not reuses.
+        if ev.level == MemLevel::L1 && matches!(ev.kind, EventKind::Hit | EventKind::Miss) {
+            self.bytes_accessed += ev.bytes as u64;
+            if ev.access == AccessKind::Write {
+                self.write_accesses += 1;
+            }
+            self.touch(ev.addr, ev.operand);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn touch_all(a: &mut ReuseAnalyzer, lines: &[u64]) {
+        for &l in lines {
+            a.touch(l * 64, Operand::A);
+        }
+    }
+
+    #[test]
+    fn textbook_distances() {
+        // A B C A: distance(A₂) = 2 (B, C); B and C are cold.
+        let mut a = ReuseAnalyzer::new(64);
+        touch_all(&mut a, &[0, 1, 2, 0]);
+        let h = a.histogram(Operand::A);
+        assert_eq!(h.cold(), 3);
+        assert_eq!(h.hits_within(3), 1, "distance 2 < 3");
+        assert_eq!(h.hits_within(2), 0, "distance 2 not < 2");
+    }
+
+    #[test]
+    fn repeat_access_is_distance_zero() {
+        let mut a = ReuseAnalyzer::new(64);
+        touch_all(&mut a, &[5, 5, 5]);
+        let h = a.histogram(Operand::A);
+        assert_eq!(h.cold(), 1);
+        assert_eq!(h.hits_within(1), 2);
+    }
+
+    #[test]
+    fn same_line_different_elements_share_distance() {
+        // 64 B lines: addresses 0 and 60 are the same line.
+        let mut a = ReuseAnalyzer::new(64);
+        a.touch(0, Operand::B);
+        a.touch(60, Operand::B);
+        assert_eq!(a.histogram(Operand::B).hits_within(1), 1);
+        assert_eq!(a.lines_touched(), 1);
+    }
+
+    #[test]
+    fn intervening_reaccess_counts_once() {
+        // A B B A: distance(A₂) = 1 (B once, not twice).
+        let mut a = ReuseAnalyzer::new(64);
+        touch_all(&mut a, &[0, 1, 1, 0]);
+        assert_eq!(a.histogram(Operand::A).hits_within(2), 2);
+    }
+
+    #[test]
+    fn cyclic_sweep_matches_lru_theory() {
+        // Sweeping W distinct lines R times: after the cold pass every
+        // access has distance W-1 — hits iff capacity >= W.
+        let (w, rounds) = (10u64, 4);
+        let mut a = ReuseAnalyzer::new(64);
+        for _ in 0..rounds {
+            touch_all(&mut a, &(0..w).collect::<Vec<_>>());
+        }
+        let h = a.combined();
+        assert_eq!(h.cold(), w);
+        assert_eq!(h.hits_within(w as usize), (rounds - 1) * w);
+        assert_eq!(h.hits_within(w as usize - 1), 0);
+    }
+
+    #[test]
+    fn compaction_preserves_distances() {
+        // Drive well past MIN_SLOTS so several compactions happen, with a
+        // small live set; distances must stay exact throughout.
+        let mut a = ReuseAnalyzer::new(64);
+        let lines = 16u64;
+        let rounds = (MIN_SLOTS as u64 / lines) * 3 + 7;
+        for _ in 0..rounds {
+            touch_all(&mut a, &(0..lines).collect::<Vec<_>>());
+        }
+        let h = a.combined();
+        assert_eq!(h.total(), rounds * lines);
+        assert_eq!(h.cold(), lines);
+        assert_eq!(h.hits_within(lines as usize), (rounds - 1) * lines);
+        assert_eq!(h.hits_within(lines as usize - 1), 0);
+        assert_eq!(a.lines_touched(), lines as usize);
+    }
+
+    #[test]
+    fn compaction_on_a_mid_stack_reuse_leaves_no_phantom_slot() {
+        // Arrange the window so compaction fires exactly when a line from
+        // the *middle* of the LRU stack is re-accessed: compaction rebuilds
+        // from `last`, and a phantom occupancy left for the in-flight line
+        // would inflate every later distance by one.
+        let lines = 10u64;
+        let mut a = ReuseAnalyzer::new(64);
+        // exactly MIN_SLOTS touches of a pure cycle; the next touch
+        // triggers compaction at entry
+        for i in 0..MIN_SLOTS as u64 {
+            a.touch((i % lines) * 64, Operand::A);
+        }
+        // mid-stack reuse at the compaction boundary: line 2 was followed
+        // by 3, 4, 5 — distance exactly 3
+        a.touch(2 * 64, Operand::A);
+        // one more sweep (skipping 2): every distance is exactly 9
+        for l in [6u64, 7, 8, 9, 0, 1, 3, 4, 5] {
+            a.touch(l * 64, Operand::A);
+        }
+        let h = a.combined();
+        let total = MIN_SLOTS as u64 + 10;
+        assert_eq!(h.total(), total);
+        assert_eq!(h.cold(), lines);
+        assert_eq!(h.hits_within(4), 1, "the distance-3 mid-stack reuse");
+        assert_eq!(
+            h.hits_within(lines as usize),
+            total - lines,
+            "a phantom slot would inflate some distances past {lines}"
+        );
+    }
+
+    #[test]
+    fn per_operand_split_and_combined_total() {
+        let mut a = ReuseAnalyzer::new(64);
+        a.touch(0, Operand::A);
+        a.touch(64, Operand::B);
+        a.touch(0, Operand::A);
+        assert_eq!(a.histogram(Operand::A).total(), 2);
+        assert_eq!(a.histogram(Operand::B).total(), 1);
+        assert_eq!(a.combined().total(), 3);
+        assert_eq!(a.accesses(), 3);
+    }
+
+    #[test]
+    fn percentile_and_buckets() {
+        let mut h = ReuseHistogram::new();
+        for _ in 0..90 {
+            h.record(Some(1));
+        }
+        for _ in 0..10 {
+            h.record(Some(300));
+        }
+        assert_eq!(h.percentile(50.0), Some(1));
+        assert_eq!(h.percentile(95.0), Some(300));
+        let buckets = h.log_buckets();
+        assert!(buckets.iter().any(|b| b.lo <= 1 && 1 < b.hi && b.count == 90));
+        assert_eq!(buckets.iter().map(|b| b.count).sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn far_distances_fold_into_miss_bucket() {
+        let mut h = ReuseHistogram::new();
+        h.record(Some(MAX_EXACT_DISTANCE as u64 + 5));
+        h.record(Some(2));
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.hits_within(MAX_EXACT_DISTANCE), 1);
+        assert!((h.hit_rate(MAX_EXACT_DISTANCE) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_rates_are_zero() {
+        let h = ReuseHistogram::new();
+        assert_eq!(h.hit_rate(1024), 0.0);
+        assert_eq!(h.percentile(50.0), None);
+        assert!(h.log_buckets().is_empty());
+    }
+}

@@ -1,0 +1,168 @@
+//! Event sinks — where the simulator's structured cache events go.
+//!
+//! [`EventSink`] is the pluggable receiving end of
+//! `sim::SetAssocCache::access_traced` / `sim::Hierarchy::access_traced`.
+//! The contract that keeps the existing hot path free: sinks are passed by
+//! generic parameter (monomorphized, no `dyn` dispatch, no allocation), and
+//! [`NullSink`]'s `record` is an empty `#[inline]` body, so the untraced
+//! `access` entry points compile to exactly the pre-telemetry code.
+
+use super::event::{CacheEvent, EventKind};
+use crate::hw::MemLevel;
+
+/// Receiver of structured cache events.
+pub trait EventSink {
+    fn record(&mut self, ev: &CacheEvent);
+}
+
+/// The no-op sink: the default of every untraced `access` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    #[inline(always)]
+    fn record(&mut self, _ev: &CacheEvent) {}
+}
+
+/// Per-(level, kind) event counters — cheap structural validation that the
+/// emitting side and `CacheStats` agree, and the backing of the CLI's event
+/// summary table.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CountingSink {
+    pub l1: EventCounts,
+    pub l2: EventCounts,
+}
+
+impl CountingSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn level_mut(&mut self, level: MemLevel) -> &mut EventCounts {
+        match level {
+            MemLevel::L1 => &mut self.l1,
+            // RAM emits no events; L2 misses imply the RAM transfer.
+            MemLevel::L2 | MemLevel::Ram => &mut self.l2,
+        }
+    }
+}
+
+impl EventSink for CountingSink {
+    fn record(&mut self, ev: &CacheEvent) {
+        let c = self.level_mut(ev.level);
+        match ev.kind {
+            EventKind::Hit => c.hits += 1,
+            EventKind::Miss => c.misses += 1,
+            EventKind::Eviction => c.evictions += 1,
+            EventKind::Writeback => c.writebacks += 1,
+        }
+    }
+}
+
+/// Bounded in-memory event capture, for tests and event-trace dumps.  Once
+/// `capacity` events are stored further events are counted but dropped, so
+/// a long replay cannot exhaust memory.
+#[derive(Clone, Debug)]
+pub struct VecSink {
+    pub events: Vec<CacheEvent>,
+    pub dropped: u64,
+    capacity: usize,
+}
+
+impl VecSink {
+    pub fn new(capacity: usize) -> Self {
+        VecSink {
+            events: Vec::new(),
+            dropped: 0,
+            capacity,
+        }
+    }
+}
+
+impl EventSink for VecSink {
+    fn record(&mut self, ev: &CacheEvent) {
+        if self.events.len() < self.capacity {
+            self.events.push(*ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Fan one event stream out to two sinks (e.g. a reuse analyzer plus a
+/// counting sink) without boxing.
+pub struct TeeSink<'a, S1: EventSink, S2: EventSink> {
+    pub first: &'a mut S1,
+    pub second: &'a mut S2,
+}
+
+impl<'a, S1: EventSink, S2: EventSink> TeeSink<'a, S1, S2> {
+    pub fn new(first: &'a mut S1, second: &'a mut S2) -> Self {
+        TeeSink { first, second }
+    }
+}
+
+impl<'a, S1: EventSink, S2: EventSink> EventSink for TeeSink<'a, S1, S2> {
+    fn record(&mut self, ev: &CacheEvent) {
+        self.first.record(ev);
+        self.second.record(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cache::AccessKind;
+    use crate::telemetry::event::Operand;
+
+    fn ev(level: MemLevel, kind: EventKind) -> CacheEvent {
+        CacheEvent {
+            level,
+            kind,
+            access: AccessKind::Read,
+            addr: 0x40,
+            bytes: 4,
+            operand: Operand::A,
+        }
+    }
+
+    #[test]
+    fn counting_sink_buckets_by_level_and_kind() {
+        let mut s = CountingSink::new();
+        s.record(&ev(MemLevel::L1, EventKind::Hit));
+        s.record(&ev(MemLevel::L1, EventKind::Miss));
+        s.record(&ev(MemLevel::L2, EventKind::Writeback));
+        assert_eq!(s.l1.hits, 1);
+        assert_eq!(s.l1.misses, 1);
+        assert_eq!(s.l2.writebacks, 1);
+        assert_eq!(s.l2.hits, 0);
+    }
+
+    #[test]
+    fn vec_sink_bounds_memory() {
+        let mut s = VecSink::new(2);
+        for _ in 0..5 {
+            s.record(&ev(MemLevel::L1, EventKind::Hit));
+        }
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.dropped, 3);
+    }
+
+    #[test]
+    fn tee_sink_duplicates() {
+        let mut a = CountingSink::new();
+        let mut b = VecSink::new(8);
+        let mut tee = TeeSink::new(&mut a, &mut b);
+        tee.record(&ev(MemLevel::L1, EventKind::Eviction));
+        assert_eq!(a.l1.evictions, 1);
+        assert_eq!(b.events.len(), 1);
+    }
+}

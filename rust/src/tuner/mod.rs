@@ -20,5 +20,7 @@ pub mod measure;
 pub mod space;
 
 pub use driver::{tune, TuneResult, Tuner, TunerKind};
-pub use measure::{ArtifactGemmTarget, MeasureTarget, NativeGemmTarget, SimConvTarget, SimGemmTarget};
+pub use measure::{
+    ArtifactGemmTarget, MeasureTarget, NativeGemmTarget, SimConvTarget, SimGemmTarget,
+};
 pub use space::{ConvSpace, Feature, GemmSpace, SearchSpace};

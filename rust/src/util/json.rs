@@ -225,7 +225,10 @@ impl<'a> Parser<'a> {
                 _ => {
                     // copy raw UTF-8 bytes through
                     let start = self.i - 1;
-                    while self.i < self.b.len() && self.b[self.i] != b'"' && self.b[self.i] != b'\\' {
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
                         self.i += 1;
                     }
                     s.push_str(std::str::from_utf8(&self.b[start..self.i])?);

@@ -22,8 +22,7 @@ fn quick_pipeline() -> Pipeline {
 fn quick_report() -> BenchReport {
     let cfg = SweepConfig {
         profiles: vec!["a53".into(), "a72".into()],
-        quick: true,
-        synthetic: true,
+        ..SweepConfig::new(true, true)
     };
     run_sweep(&mut quick_pipeline(), &cfg).unwrap()
 }

@@ -313,7 +313,8 @@ fn prop_simulated_time_positive_and_monotone_in_work() {
             1 + rng.below(8) as usize,
         );
         let t1 = cachebound::sim::timing::simulate_gemm_time(&cpu, n, n, n, s, 32).total_s;
-        let t2 = cachebound::sim::timing::simulate_gemm_time(&cpu, 2 * n, 2 * n, 2 * n, s, 32).total_s;
+        let t2 =
+            cachebound::sim::timing::simulate_gemm_time(&cpu, 2 * n, 2 * n, 2 * n, s, 32).total_s;
         assert!(t1 > 0.0 && t2.is_finite());
         assert!(t2 > t1, "8x work must take longer: {t1} vs {t2} (n={n}, {s:?})");
     });
