@@ -6,14 +6,26 @@
 //! the scaling factor over the single-worker baseline.  The acceptance
 //! target (EXPERIMENTS.md §Serving): ≥ 2× at 4 workers on a ≥ 4-core host.
 //! A second section isolates the LRU response cache's effect at a fixed
-//! worker count.
+//! worker count; a third A/Bs hash vs cache-aware placement — on the
+//! uniform mix (expected within ±5%) and on the adversarial two-artifact
+//! co-run mix, where hashing co-locates two L2-hungry artifacts on one
+//! worker and cache-aware placement must split them
+//! (`coordinator::placement::adversarial_mix`).
 //!
 //! Run: `cargo bench --bench bench_serve`
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use cachebound::analysis::InterferenceModel;
+use cachebound::coordinator::placement::adversarial_mix;
 use cachebound::coordinator::server::{
     ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
 };
+use cachebound::coordinator::PlacementPolicy;
+use cachebound::hw::profile_by_name;
 use cachebound::operators::workloads;
+use cachebound::telemetry::CacheProfile;
 use cachebound::util::table::fmt_time;
 
 const REQUESTS: usize = 480;
@@ -24,6 +36,39 @@ fn serve_once(workers: usize, cache_entries: usize, stream: &[String]) -> ServeO
     let cfg = ServeConfig::new(workers).with_cache(cache_entries);
     ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
         .serve_stream(stream.iter().cloned())
+}
+
+/// One placement-A/B run: fixed worker count, no response cache (caching
+/// would mask the execution-path difference the A/B is about).
+fn serve_placed(
+    workers: usize,
+    stream: &[String],
+    placement: PlacementPolicy,
+    profiles: &Arc<BTreeMap<String, CacheProfile>>,
+) -> ServeOutcome {
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let cfg = ServeConfig::new(workers)
+        .with_profiles(profiles.clone())
+        .with_placement(placement)
+        .with_cpu(cpu);
+    ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+        .serve_stream(stream.iter().cloned())
+}
+
+/// Best-of-N placement run (same rationale as [`best_rps`]).
+fn best_placed_rps(
+    workers: usize,
+    stream: &[String],
+    placement: PlacementPolicy,
+    profiles: &Arc<BTreeMap<String, CacheProfile>>,
+) -> f64 {
+    (0..RUNS)
+        .map(|_| {
+            let out = serve_placed(workers, stream, placement, profiles);
+            assert_eq!(out.metrics.completed, stream.len() as u64);
+            out.metrics.throughput(out.wall_seconds)
+        })
+        .fold(0.0, f64::max)
 }
 
 /// Best-of-N throughput (req/s): serving runs are wall-clock experiments,
@@ -95,4 +140,49 @@ fn main() {
             out.metrics.cache_hit_rate() * 100.0
         );
     }
+
+    // -- placement A/B: hash vs cache-aware (2 workers, no cache) --
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    println!("\n-- placement A/B: hash vs cache-aware (2 workers) --");
+    println!("profiling the serving mix (telemetry traces)...");
+    let mix_profiles = cachebound::telemetry::serving_mix_profiles(&cpu);
+    let hash_rps = best_placed_rps(2, &stream, PlacementPolicy::Hash, &mix_profiles);
+    let aware_rps = best_placed_rps(2, &stream, PlacementPolicy::CacheAware, &mix_profiles);
+    println!(
+        "uniform mix:      hash {hash_rps:8.1} req/s   cache-aware {aware_rps:8.1} req/s   \
+         ({:+.1}% — expected within ±5%)",
+        (aware_rps / hash_rps - 1.0) * 100.0
+    );
+
+    // adversarial co-run mix: two artifacts that hash onto the same worker
+    // and whose L2 demands sum past the A53's 512 KiB L2
+    println!("profiling adversarial candidates (budgeted telemetry traces)...");
+    let Some(adv) = adversarial_mix(&cpu, 2, 8) else {
+        println!("adversarial mix: no qualifying candidate pair on this profile — skipped");
+        return;
+    };
+    let model = InterferenceModel::new(&cpu);
+    let refs: Vec<&CacheProfile> = adv.iter().map(|(_, p)| p).collect();
+    let colocated = model.total_slowdown(&refs);
+    println!(
+        "adversarial pair: {} + {}  (demands {} + {} KiB vs {} KiB L2; \
+         co-located predicted slowdown {:.3} vs {:.3} split)",
+        adv[0].0,
+        adv[1].0,
+        model.demand_bytes(&adv[0].1) / 1024,
+        model.demand_bytes(&adv[1].1) / 1024,
+        cpu.l2.size_bytes / 1024,
+        colocated,
+        refs.len() as f64,
+    );
+    let adv_profiles: Arc<BTreeMap<String, CacheProfile>> =
+        Arc::new(adv.iter().cloned().collect());
+    let adv_stream: Vec<String> = (0..REQUESTS).map(|i| adv[i % 2].0.clone()).collect();
+    let adv_hash = best_placed_rps(2, &adv_stream, PlacementPolicy::Hash, &adv_profiles);
+    let adv_aware = best_placed_rps(2, &adv_stream, PlacementPolicy::CacheAware, &adv_profiles);
+    println!(
+        "adversarial mix:  hash {adv_hash:8.1} req/s   cache-aware {adv_aware:8.1} req/s   \
+         ({:.2}x — hash serializes both on one worker, cache-aware splits them)",
+        adv_aware / adv_hash
+    );
 }

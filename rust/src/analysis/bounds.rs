@@ -11,10 +11,15 @@ use crate::hw::{CpuSpec, MemLevel};
 /// The four bound times for one workload (seconds).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BoundSet {
+    /// Multiply-accumulate count of the workload.
     pub macs: u64,
+    /// Eq. (1)/(2) compute-bound time.
     pub compute_s: f64,
+    /// One-read-per-MAC time from L1.
     pub l1_read_s: f64,
+    /// One-read-per-MAC time from L2.
     pub l2_read_s: f64,
+    /// One-read-per-MAC time from RAM.
     pub ram_read_s: f64,
 }
 

@@ -14,13 +14,16 @@ use super::bounds::BoundSet;
 /// Which bound best explains a single measurement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BoundClass {
+    /// The compute peak explains the measurement.
     Compute,
+    /// A memory level's read bandwidth explains it.
     CacheRead(MemLevel),
     /// Slower than every bound by a wide margin (overhead-dominated).
     Overhead,
 }
 
 impl BoundClass {
+    /// Display name ("compute", "L1-read", ..., "overhead").
     pub fn name(&self) -> String {
         match self {
             BoundClass::Compute => "compute".into(),

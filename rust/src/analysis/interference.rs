@@ -1,0 +1,374 @@
+//! Co-run interference on a shared L2: price what co-residency costs.
+//!
+//! The paper's central measurement is that ML operators on the A53/A72 are
+//! bound by the cache hierarchy, not compute — so when a serving worker
+//! hosts several artifacts, the scarce resource they fight over is the
+//! *shared L2*.  This module turns the telemetry subsystem's per-artifact
+//! [`CacheProfile`]s (sampled miss-ratio curve + trace meta) into a co-run
+//! cost model, in three steps:
+//!
+//! 1. **Partition** the L2 among co-residents.  Each artifact's *demand* is
+//!    the larger of its reuse working set and its traced footprint (a
+//!    streaming panel occupies cache it never re-reads), clamped to the L2
+//!    size.  Resident `i`'s effective capacity is
+//!    `max(C − Σ_{j≠i} d_j,  C·d_i/Σ_j d_j)`, clamped to `[L1, C]` — it
+//!    keeps whatever its co-residents leave behind, but never less than its
+//!    demand-proportional share (LRU occupancy converges near demand
+//!    proportionality).  Both branches shrink (weakly) as residents are
+//!    added, so **a co-resident can never improve anyone's hit rate** — a
+//!    property the unit tests pin down.  A solo resident gets exactly `C`.
+//! 2. **Re-read the MRC** at the reduced capacity.  The stack-distance
+//!    property makes this a lookup: the profile's sampled curve gives the
+//!    combined hit rate at any capacity, and the L1 term is unchanged (L1
+//!    is private per core; only the L2 is shared).
+//! 3. **Convert extra misses to a slowdown** through the *same* rates →
+//!    traffic → roofline → classify path as [`super::predict`]
+//!    ([`traffic_from_rates`] + [`classify_traffic`]), so a solo co-run
+//!    set reproduces [`super::predict::predict_workload`] bit-for-bit —
+//!    the machinery validated to ≤ 2 p.p. on the Tables IV/V grid now
+//!    prices interference too.
+//!
+//! The consumer is `coordinator::placement`, which packs artifacts onto
+//! serving workers by minimizing the summed predicted slowdown.
+
+use crate::bench::sweep::CLASSIFY_SLACK;
+use crate::hw::CpuSpec;
+use crate::telemetry::{CacheProfile, PredictedRates};
+
+use super::predict::{classify_traffic, traffic_from_rates};
+
+/// Predicted cost of one artifact inside a co-resident set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoRunPrediction {
+    /// Artifact this row describes.
+    pub artifact: String,
+    /// L2 demand used for partitioning: `min(max(working set, footprint), C)`.
+    pub demand_bytes: u64,
+    /// Effective L2 capacity the partitioning granted this artifact.
+    pub effective_l2_bytes: u64,
+    /// Hit rates re-read off the MRC at the effective capacity.
+    pub rates: PredictedRates,
+    /// Predicted execution time with the full L2 to itself, seconds.
+    pub solo_time_s: f64,
+    /// Predicted execution time at the effective capacity, seconds.
+    pub time_s: f64,
+    /// `time_s / solo_time_s` — ≥ 1 by the monotonicity of the partition.
+    pub slowdown: f64,
+    /// `analysis::classify` verdict at the effective capacity.
+    pub class: String,
+}
+
+/// The co-run interference model for one CPU profile.
+#[derive(Clone, Debug)]
+pub struct InterferenceModel {
+    /// The part whose L1/L2 geometry and bandwidths price the misses.
+    pub cpu: CpuSpec,
+    /// `classify` tolerance (defaults to the bench harness slack).
+    pub slack: f64,
+}
+
+impl InterferenceModel {
+    /// Model for `cpu` with the standard classification slack.
+    pub fn new(cpu: &CpuSpec) -> Self {
+        InterferenceModel { cpu: cpu.clone(), slack: CLASSIFY_SLACK }
+    }
+
+    /// Override the classification slack.
+    pub fn with_slack(mut self, slack: f64) -> Self {
+        self.slack = slack;
+        self
+    }
+
+    /// L2 demand of one profile: the larger of its reuse working set and
+    /// its traced footprint, clamped to the L2 size.
+    pub fn demand_bytes(&self, p: &CacheProfile) -> u64 {
+        p.working_set_bytes
+            .max(p.footprint_bytes)
+            .min(self.cpu.l2.size_bytes as u64)
+    }
+
+    /// Effective L2 capacity of resident `i` among `residents` (see the
+    /// module docs for the partitioning rule and its monotonicity).
+    pub fn effective_l2_bytes(&self, residents: &[&CacheProfile], i: usize) -> u64 {
+        let c = self.cpu.l2.size_bytes as f64;
+        let demands: Vec<f64> =
+            residents.iter().map(|p| self.demand_bytes(p) as f64).collect();
+        let total: f64 = demands.iter().sum();
+        let others: f64 = total - demands[i];
+        let leftover = c - others;
+        let proportional = if total > 0.0 { c * demands[i] / total } else { c };
+        leftover.max(proportional).clamp(self.cpu.l1.size_bytes as f64, c) as u64
+    }
+
+    /// Price every resident of a co-run set.
+    pub fn co_run(&self, residents: &[&CacheProfile]) -> Vec<CoRunPrediction> {
+        (0..residents.len())
+            .map(|i| self.predict_at(residents[i], self.effective_l2_bytes(residents, i)))
+            .collect()
+    }
+
+    /// Price one artifact with the full L2 to itself.  Routed through the
+    /// same path as [`Self::co_run`], so `solo(p)` equals the single row of
+    /// `co_run(&[p])` — and both agree exactly with
+    /// [`super::predict::predict_workload`] for traced profiles.
+    pub fn solo(&self, p: &CacheProfile) -> CoRunPrediction {
+        self.predict_at(p, self.cpu.l2.size_bytes as u64)
+    }
+
+    /// The greedy packing objective: summed predicted slowdown of a
+    /// co-resident set (an empty set costs 0, a solo resident 1).
+    pub fn total_slowdown(&self, residents: &[&CacheProfile]) -> f64 {
+        self.co_run(residents).iter().map(|c| c.slowdown).sum()
+    }
+
+    /// Re-read the profile's MRC with the L1 unchanged and the L2 reduced
+    /// to `effective_l2` — the same arithmetic as `MissRatioCurve::predict`
+    /// at a different capacity.
+    fn rates_at(&self, p: &CacheProfile, effective_l2: u64) -> PredictedRates {
+        let l1 = self.cpu.l1.size_bytes as u64;
+        let p1 = hit_rate_at(&p.mrc_points, l1);
+        let p2 = hit_rate_at(&p.mrc_points, effective_l2.max(l1)).max(p1);
+        let miss1 = 1.0 - p1;
+        let l2_hit_rate = if miss1 > 1e-12 { (p2 - p1) / miss1 } else { 1.0 };
+        PredictedRates { l1_hit_rate: p1, l2_hit_rate, ram_fraction: 1.0 - p2 }
+    }
+
+    fn predict_at(&self, p: &CacheProfile, effective_l2: u64) -> CoRunPrediction {
+        let demand_bytes = self.demand_bytes(p);
+        let (w, meta) = match (&p.workload, &p.meta) {
+            (Some(w), Some(meta)) if !p.mrc_points.is_empty() => (w, meta),
+            _ => {
+                // Hand-built profile without a curve: it occupies its
+                // demand but cannot be re-priced — carry its solo numbers.
+                let p2 = p.l1_hit_rate + (1.0 - p.l1_hit_rate) * p.l2_hit_rate;
+                return CoRunPrediction {
+                    artifact: p.artifact.clone(),
+                    demand_bytes,
+                    effective_l2_bytes: effective_l2,
+                    rates: PredictedRates {
+                        l1_hit_rate: p.l1_hit_rate,
+                        l2_hit_rate: p.l2_hit_rate,
+                        ram_fraction: 1.0 - p2,
+                    },
+                    solo_time_s: p.solo_time_s,
+                    time_s: p.solo_time_s,
+                    slowdown: 1.0,
+                    class: p.predicted_class.clone(),
+                };
+            }
+        };
+        let rates = self.rates_at(p, effective_l2);
+        let traffic = traffic_from_rates(&self.cpu, w, &rates, meta);
+        let (time, class) = classify_traffic(&self.cpu, w, &traffic, self.slack);
+
+        let solo_rates = self.rates_at(p, self.cpu.l2.size_bytes as u64);
+        let solo_traffic = traffic_from_rates(&self.cpu, w, &solo_rates, meta);
+        let (solo_time, _) = classify_traffic(&self.cpu, w, &solo_traffic, self.slack);
+
+        // total_s includes the positive thread overhead, so the ratio is
+        // well-defined even for degenerate zero-traffic profiles.
+        let slowdown = time.total_s / solo_time.total_s;
+        CoRunPrediction {
+            artifact: p.artifact.clone(),
+            demand_bytes,
+            effective_l2_bytes: effective_l2,
+            rates,
+            solo_time_s: solo_time.total_s,
+            time_s: time.total_s,
+            slowdown,
+            class: class.name(),
+        }
+    }
+}
+
+/// Step-left lookup over an ascending sampled curve: the hit rate of the
+/// largest sampled capacity `<= capacity_bytes` (0 below the first sample).
+fn hit_rate_at(points: &[(u64, f64)], capacity_bytes: u64) -> f64 {
+    let mut rate = 0.0;
+    for &(bytes, r) in points {
+        if bytes <= capacity_bytes {
+            rate = r;
+        } else {
+            break;
+        }
+    }
+    rate
+}
+
+/// Test fixture shared with the placement unit tests: a hand-built
+/// profile with a one-knee step curve — hit rate 0 below `knee_bytes`,
+/// `peak` at and above it.
+#[cfg(test)]
+pub(crate) fn step_profile(name: &str, knee_bytes: u64, peak: f64) -> CacheProfile {
+    use crate::operators::workloads::BenchWorkload;
+    use super::predict::TraceMeta;
+    let accesses = 1_000_000u64;
+    CacheProfile {
+        artifact: name.to_string(),
+        accesses,
+        l1_hit_rate: 0.0,
+        l2_hit_rate: peak,
+        working_set_bytes: knee_bytes,
+        footprint_bytes: knee_bytes,
+        predicted_class: "RAM-read".into(),
+        solo_time_s: 0.0,
+        workload: Some(BenchWorkload::Gemm { n: 64 }),
+        meta: Some(TraceMeta {
+            traced_accesses: accesses,
+            traced_bytes: accesses * 4,
+            traced_write_accesses: 0,
+            scale: 1.0,
+        }),
+        mrc_points: vec![(64, 0.0), (knee_bytes, peak)],
+        knees: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::profile_by_name;
+    use crate::operators::workloads::BenchWorkload;
+    use crate::telemetry::{synthetic_gemm_profile, trace_workload, TraceBudget};
+
+    fn a53() -> CpuSpec {
+        profile_by_name("a53").unwrap().cpu
+    }
+
+    #[test]
+    fn solo_gets_the_whole_l2_and_slowdown_one() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let p = synthetic_gemm_profile(&cpu, "syn_gemm_n64", 64);
+        let solo = model.solo(&p);
+        assert_eq!(solo.effective_l2_bytes, cpu.l2.size_bytes as u64);
+        assert!((solo.slowdown - 1.0).abs() < 1e-12, "{}", solo.slowdown);
+        let co = model.co_run(&[&p]);
+        assert_eq!(co.len(), 1);
+        assert_eq!(co[0], solo, "a one-element co-run set is solo");
+    }
+
+    #[test]
+    fn solo_reproduces_predict_workload_exactly() {
+        use crate::analysis::predict::{predict_workload, TraceMeta};
+        use crate::operators::gemm::GemmSchedule;
+        use crate::sim::hierarchy::Hierarchy;
+        use crate::sim::trace::replay_gemm_traced;
+        use crate::telemetry::reuse::ReuseAnalyzer;
+        use crate::telemetry::MissRatioCurve;
+
+        let cpu = a53();
+        let n = 96;
+        // the reference: a direct predict_workload over the same replay
+        let mut h = Hierarchy::new(&cpu);
+        let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+        replay_gemm_traced(&mut h, n, n, n, GemmSchedule::default_tuned(), 4, &mut analyzer);
+        let meta = TraceMeta {
+            traced_accesses: analyzer.accesses(),
+            traced_bytes: analyzer.bytes_accessed,
+            traced_write_accesses: analyzer.write_accesses,
+            scale: 1.0,
+        };
+        let mrc = MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes);
+        let reference = predict_workload(&cpu, &BenchWorkload::Gemm { n }, &mrc, &meta, 2.5);
+
+        let p = trace_workload(&cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(n))
+            .cache_profile("syn_gemm_n96");
+        let solo = InterferenceModel::new(&cpu).with_slack(2.5).solo(&p);
+        assert_eq!(solo.rates, reference.rates, "rates must match bit-for-bit");
+        assert_eq!(solo.time_s, reference.time.total_s, "time must match bit-for-bit");
+        assert_eq!(solo.class, reference.class.name());
+    }
+
+    #[test]
+    fn adding_a_co_resident_never_improves_hit_rate_or_time() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        // a profile with real mass at L2 scale, so co-residency bites
+        let victim = step_profile("victim", 300 * 1024, 0.9);
+        let mut residents: Vec<CacheProfile> = vec![victim.clone()];
+        let mut prev = model.co_run(&[&victim])[0].clone();
+        for i in 0..4 {
+            residents.push(step_profile(&format!("intruder{i}"), 150 * 1024, 0.8));
+            let refs: Vec<&CacheProfile> = residents.iter().collect();
+            let now = model.co_run(&refs)[0].clone();
+            let prev_combined = 1.0 - prev.rates.ram_fraction;
+            let now_combined = 1.0 - now.rates.ram_fraction;
+            assert!(
+                now_combined <= prev_combined + 1e-12,
+                "+intruder{i}: hit rate improved {prev_combined} -> {now_combined}"
+            );
+            assert!(
+                now.time_s >= prev.time_s - 1e-15,
+                "+intruder{i}: time improved {} -> {}",
+                prev.time_s,
+                now.time_s
+            );
+            assert!(now.slowdown >= 1.0 - 1e-12);
+            prev = now;
+        }
+    }
+
+    #[test]
+    fn two_big_residents_slow_each_other_down() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        // both want ~300 KiB of the 512 KiB L2: each gets ~half, losing
+        // its knee -> real predicted slowdown
+        let a = step_profile("a", 300 * 1024, 0.9);
+        let b = step_profile("b", 300 * 1024, 0.9);
+        let co = model.co_run(&[&a, &b]);
+        assert!(co[0].slowdown > 1.05, "{:?}", co[0]);
+        assert!(co[1].slowdown > 1.05, "{:?}", co[1]);
+        assert!(co[0].effective_l2_bytes < cpu.l2.size_bytes as u64);
+        assert!(model.total_slowdown(&[&a, &b]) > 2.1);
+    }
+
+    #[test]
+    fn small_co_residents_are_nearly_free() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        // two tiny working sets fit the L2 side by side: leftover capacity
+        // still covers each knee, so nobody slows down
+        let a = step_profile("a", 64 * 1024, 0.9);
+        let b = step_profile("b", 64 * 1024, 0.9);
+        for c in model.co_run(&[&a, &b]) {
+            assert!((c.slowdown - 1.0).abs() < 1e-9, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn non_repriceable_profile_is_interference_neutral() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let mut legacy = step_profile("legacy", 400 * 1024, 0.9);
+        legacy.workload = None;
+        legacy.meta = None;
+        legacy.mrc_points.clear();
+        legacy.solo_time_s = 1e-3;
+        assert!(!legacy.repriceable());
+        let big = step_profile("big", 300 * 1024, 0.9);
+        let co = model.co_run(&[&legacy, &big]);
+        // the legacy row keeps its solo numbers...
+        assert_eq!(co[0].slowdown, 1.0);
+        assert_eq!(co[0].time_s, 1e-3);
+        // ...but its demand still squeezes the repriceable co-resident
+        assert!(co[1].slowdown > 1.0);
+    }
+
+    #[test]
+    fn effective_capacity_is_demand_proportional_under_pressure() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let big = step_profile("big", 400 * 1024, 0.9);
+        let small = step_profile("small", 100 * 1024, 0.9);
+        let refs = [&big, &small];
+        let e_big = model.effective_l2_bytes(&refs, 0);
+        let e_small = model.effective_l2_bytes(&refs, 1);
+        assert!(e_big > e_small, "{e_big} vs {e_small}");
+        // both floors: leftover and proportional share
+        let c = cpu.l2.size_bytes as f64;
+        assert!(e_big as f64 >= c * 400.0 / 500.0 - 1.0);
+        assert!(e_small as f64 >= c - 400.0 * 1024.0 - 1.0);
+    }
+}

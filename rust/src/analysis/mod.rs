@@ -8,15 +8,41 @@
 //!   resource the operator is bound by and how strongly measured times
 //!   correlate with each bound across a sweep (the quantitative version of
 //!   "execution time strongly correlates with the L1 cache boundary").
+//! * [`predict`] — boundness classes from a miss-ratio curve
+//!   ([`crate::telemetry`]) instead of a fresh simulation: rates → traffic
+//!   → roofline → classify.
+//! * [`interference`] — co-run cost on a shared L2: partition capacity
+//!   among co-resident artifacts, re-read each MRC at the reduced size,
+//!   and price the extra misses through the same [`predict`] path.  Feeds
+//!   the serving-side placement planner
+//!   ([`crate::coordinator::placement`]).
+//! * [`refined`] — the tile-aware refinement of the simple one-read-per-MAC
+//!   model, compared across model tiers.
+//!
+//! The classifier in one picture — a measurement 1.4× above the L1-read
+//! line (the paper's tuned-GEMM regime) is attributed to L1:
+//!
+//! ```
+//! use cachebound::analysis::{classify, gemm_bounds};
+//! use cachebound::hw::profile_by_name;
+//!
+//! let cpu = profile_by_name("a53").unwrap().cpu;
+//! let b = gemm_bounds(&cpu, 512);
+//! assert_eq!(classify(b.l1_read_s * 1.4, &b, 2.0).name(), "L1-read");
+//! ```
 
 pub mod bounds;
 pub mod classify;
+pub mod interference;
 pub mod predict;
 pub mod refined;
 pub mod required_bw;
 
 pub use bounds::{gemm_bounds, workload_bounds, BoundSet};
 pub use classify::{classify, correlate_bounds, BoundClass, CorrelationReport};
-pub use predict::{classify_traffic, predict_workload, MrcPrediction, TraceMeta};
+pub use interference::{CoRunPrediction, InterferenceModel};
+pub use predict::{
+    classify_traffic, predict_workload, traffic_from_rates, MrcPrediction, TraceMeta,
+};
 pub use refined::{compare_conv, compare_gemm, packing_fraction, ModelComparison};
 pub use required_bw::{required_bandwidth, RequiredBw};

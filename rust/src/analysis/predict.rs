@@ -139,6 +139,33 @@ pub fn traffic_from_counts(
     }
 }
 
+/// Turn a pair of predicted hit rates into a full-shape [`Traffic`]
+/// estimate — the rates → traffic step of [`predict_workload`], exposed so
+/// the co-run interference model (`analysis::interference`) can re-price a
+/// workload at a *reduced* effective L2 capacity through the exact same
+/// arithmetic (solo co-run sets therefore reproduce [`predict_workload`]
+/// bit-for-bit).
+pub fn traffic_from_rates(
+    cpu: &CpuSpec,
+    w: &BenchWorkload,
+    rates: &PredictedRates,
+    meta: &TraceMeta,
+) -> Traffic {
+    let line = cpu.l1.line_bytes as f64;
+    let accesses = meta.traced_accesses as f64 * meta.scale;
+    let l1_miss = 1.0 - rates.l1_hit_rate;
+
+    // C accumulator elements are 4 bytes wide in every replay generator.
+    let write_bytes = meta.traced_write_accesses as f64 * meta.scale * 4.0;
+    Traffic {
+        l1_bytes: meta.traced_bytes as f64 * meta.scale,
+        l2_bytes: accesses * l1_miss * line,
+        ram_bytes: accesses * rates.ram_fraction * line,
+        write_bytes,
+        write_level: output_level(cpu, output_footprint_bytes(w)),
+    }
+}
+
 /// Predict traffic, time and boundness class for `w` from its miss-ratio
 /// curve.  `slack` is the `classify` tolerance (use
 /// [`crate::bench::sweep::CLASSIFY_SLACK`] to match the bench harness).
@@ -150,20 +177,7 @@ pub fn predict_workload(
     slack: f64,
 ) -> MrcPrediction {
     let rates = mrc.predict(cpu);
-    let line = cpu.l1.line_bytes as f64;
-    let accesses = meta.traced_accesses as f64 * meta.scale;
-    let l1_miss = 1.0 - rates.l1_hit_rate;
-
-    // C accumulator elements are 4 bytes wide in every replay generator.
-    let write_bytes = meta.traced_write_accesses as f64 * meta.scale * 4.0;
-    let traffic = Traffic {
-        l1_bytes: meta.traced_bytes as f64 * meta.scale,
-        l2_bytes: accesses * l1_miss * line,
-        ram_bytes: accesses * rates.ram_fraction * line,
-        write_bytes,
-        write_level: output_level(cpu, output_footprint_bytes(w)),
-    };
-
+    let traffic = traffic_from_rates(cpu, w, &rates, meta);
     let (time, class) = classify_traffic(cpu, w, &traffic, slack);
     MrcPrediction {
         rates,

@@ -25,7 +25,9 @@ use crate::sim::trace;
 /// Predictions of the three model tiers for one workload (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct ModelComparison {
+    /// Analytic one-read-per-MAC model time.
     pub simple_s: f64,
+    /// Refined (tile-aware) model time.
     pub refined_s: f64,
     /// Only populated when exact replay is feasible (`with_trace`).
     pub trace_s: Option<f64>,

@@ -20,8 +20,11 @@ pub const DEFAULT_THRESHOLD_PCT: f64 = 10.0;
 /// One matched workload whose time moved.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Delta {
+    /// Stable workload key the two runs were matched on.
     pub key: String,
+    /// Baseline measured time, seconds.
     pub base_s: f64,
+    /// New-run measured time, seconds.
     pub new_s: f64,
     /// Percent change in measured time (positive = slower).
     pub pct: f64,
@@ -30,6 +33,7 @@ pub struct Delta {
 /// Outcome of comparing a new run against a baseline.
 #[derive(Clone, Debug)]
 pub struct CompareReport {
+    /// Regression threshold the comparison used.
     pub threshold_pct: f64,
     /// Matched workloads slower than baseline by more than the threshold.
     pub regressions: Vec<Delta>,

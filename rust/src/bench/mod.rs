@@ -19,7 +19,32 @@
 //!
 //! The six `benches/bench_*.rs` targets are thin wrappers over the
 //! helpers here ([`quick_flag`], [`bench_pipeline`], [`native_line`])
-//! plus their per-figure reporting.
+//! plus their per-figure reporting.  Related subsystems:
+//! [`crate::analysis`] supplies the bound lines and classifier,
+//! [`crate::telemetry`] the optional per-record `telemetry` sections
+//! (schema v2), [`crate::coordinator`] the job fan-out.
+//!
+//! A one-workload synthetic sweep, scored and recorded:
+//!
+//! ```
+//! use cachebound::bench::{run_sweep, SweepConfig};
+//! use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
+//! use cachebound::operators::workloads::BenchWorkload;
+//!
+//! let mut pipeline = Pipeline::new(PipelineConfig {
+//!     n_workers: 1,
+//!     skip_native: true,
+//!     ..Default::default()
+//! });
+//! let cfg = SweepConfig {
+//!     profiles: vec!["a53".into()],
+//!     workloads: Some(vec![BenchWorkload::Gemm { n: 64 }]),
+//!     ..SweepConfig::new(true, true)
+//! };
+//! let report = run_sweep(&mut pipeline, &cfg).unwrap();
+//! assert_eq!(report.records.len(), 1);
+//! assert!(report.records[0].measured_s > 0.0);
+//! ```
 
 pub mod compare;
 pub mod record;

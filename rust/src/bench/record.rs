@@ -55,16 +55,22 @@ pub const SCHEMA_VERSION: u64 = 2;
 /// Snapshot of one hardware profile the sweep was scored against.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HwRecord {
+    /// Profile name ("cortex-a53", "cortex-a72").
     pub profile: String,
+    /// SoC / board description.
     pub soc: String,
     /// Paper eq. (1) theoretical float32 peak, GFLOP/s.
     pub peak_gflops_f32: f64,
+    /// Measured L1 read bandwidth, MiB/s (Table I/II).
     pub l1_read_mibs: f64,
+    /// Measured L2 read bandwidth, MiB/s.
     pub l2_read_mibs: f64,
+    /// Measured RAM read bandwidth, MiB/s.
     pub ram_read_mibs: f64,
 }
 
 impl HwRecord {
+    /// Snapshot the scoring-relevant numbers of one profile.
     pub fn of(cpu: &CpuSpec) -> Self {
         HwRecord {
             profile: cpu.name.clone(),
@@ -89,7 +95,9 @@ pub struct BenchRecord {
     pub shape: String,
     /// Hardware profile the bounds were computed for.
     pub profile: String,
+    /// Multiply-accumulate count (paper accounting).
     pub macs: u64,
+    /// Element width the compute bound was computed for.
     pub elem_bits: u64,
     /// Measured (or simulated) execution time, seconds.
     pub measured_s: f64,
@@ -97,8 +105,11 @@ pub struct BenchRecord {
     pub gflops: f64,
     /// The four `BoundSet` lines, seconds.
     pub compute_s: f64,
+    /// L1 read-bound time, seconds.
     pub l1_read_s: f64,
+    /// L2 read-bound time, seconds.
     pub l2_read_s: f64,
+    /// RAM read-bound time, seconds.
     pub ram_read_s: f64,
     /// `analysis::classify` verdict ("compute", "L1-read", "L2-read",
     /// "RAM-read", "overhead").
@@ -120,12 +131,19 @@ pub struct BenchRecord {
 /// `telemetry::TraceSummary`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TelemetryRecord {
+    /// Set-associative simulated L1 hit rate.
     pub sim_l1_hit_rate: f64,
+    /// Simulated L2 hit rate over the L1-miss stream.
     pub sim_l2_hit_rate: f64,
+    /// MRC-predicted L1 hit rate.
     pub mrc_l1_hit_rate: f64,
+    /// MRC-predicted L2 hit rate.
     pub mrc_l2_hit_rate: f64,
+    /// Boundness class of the full-simulation time.
     pub sim_class: String,
+    /// Boundness class of the MRC prediction.
     pub predicted_class: String,
+    /// Working-set estimate (98% of peak hit rate).
     pub working_set_bytes: u64,
 }
 
@@ -234,12 +252,15 @@ impl BenchRecord {
 /// A full `BENCH.json` document: one sweep run over one or more profiles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchReport {
+    /// Schema version the file was written with.
     pub version: u64,
     /// Reduced shape grid (`--quick`).
     pub quick: bool,
     /// Simulator timings (`--synthetic`) rather than host wallclock.
     pub synthetic: bool,
+    /// Hardware profiles the sweep was scored against.
     pub hw: Vec<HwRecord>,
+    /// One scored record per workload run.
     pub records: Vec<BenchRecord>,
 }
 
@@ -249,6 +270,7 @@ impl BenchReport {
         self.records.iter().find(|r| r.key == key)
     }
 
+    /// Serialize to the documented schema.
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("version".into(), json::num(self.version as f64));
@@ -279,6 +301,7 @@ impl BenchReport {
         Value::Obj(m)
     }
 
+    /// Parse a document (v1 and v2 both load).
     pub fn from_json(v: &Value) -> Result<Self> {
         let version = v.req("version")?.as_u64()?;
         if version == 0 || version > SCHEMA_VERSION {

@@ -65,6 +65,7 @@ pub struct SweepConfig {
 }
 
 impl SweepConfig {
+    /// Config for both paper profiles, telemetry off.
     pub fn new(quick: bool, synthetic: bool) -> Self {
         SweepConfig {
             profiles: vec!["a53".into(), "a72".into()],
@@ -76,6 +77,7 @@ impl SweepConfig {
         }
     }
 
+    /// Attach per-record telemetry sections (schema v2).
     pub fn with_telemetry(mut self) -> Self {
         self.telemetry = true;
         self

@@ -10,69 +10,111 @@ use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::{BenchWorkload, ConvLayer};
 
+use super::placement::PlacementPolicy;
+
 /// What to run.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobSpec {
     /// Analytic-simulator GEMM timing on a calibrated profile.
     SimGemm {
+        /// Calibrated profile to simulate.
         cpu: CpuSpec,
+        /// Square GEMM size.
         n: usize,
+        /// Tile schedule.
         schedule: GemmSchedule,
+        /// Element width in bits.
         elem_bits: usize,
     },
     /// Analytic-simulator conv timing.
     SimConv {
+        /// Calibrated profile to simulate.
         cpu: CpuSpec,
+        /// Table III conv layer.
         layer: ConvLayer,
+        /// Blocking schedule.
         schedule: ConvSchedule,
+        /// Element width in bits.
         elem_bits: usize,
     },
     /// Analytic-simulator bit-serial GEMM timing.
     SimBitserial {
+        /// Calibrated profile to simulate.
         cpu: CpuSpec,
+        /// Square GEMM size.
         n: usize,
+        /// Activation bit width.
         abits: usize,
+        /// Weight bit width.
         wbits: usize,
+        /// Unipolar (vs bipolar) encoding.
         unipolar: bool,
     },
     /// Host-wallclock native GEMM timing.
     NativeGemm {
+        /// Square GEMM size.
         n: usize,
+        /// Tile schedule (tiled variant only).
         schedule: GemmSchedule,
+        /// Which native implementation to time.
         variant: NativeGemmVariant,
     },
     /// Tune a GEMM schedule on the simulator for a profile.
     TuneSimGemm {
+        /// Calibrated profile to tune for.
         cpu: CpuSpec,
+        /// Square GEMM size.
         n: usize,
+        /// Measurement budget.
         n_trials: usize,
+        /// GBT cost model (vs random search).
         use_gbt: bool,
     },
     /// Tune a conv schedule on the simulator.
     TuneSimConv {
+        /// Calibrated profile to tune for.
         cpu: CpuSpec,
+        /// Table III conv layer.
         layer: ConvLayer,
+        /// Measurement budget.
         n_trials: usize,
+        /// GBT cost model (vs random search).
         use_gbt: bool,
     },
     /// Validate an AOT artifact's numerics (leader-only).
-    ArtifactValidate { name: String },
+    ArtifactValidate {
+        /// Artifact name.
+        name: String,
+    },
     /// Time an AOT artifact (leader-only).
-    ArtifactMeasure { name: String },
+    ArtifactMeasure {
+        /// Artifact name.
+        name: String,
+    },
     /// Run the synthetic serving mix through the sharded server (CPU-pure:
     /// the synthetic executor serves native tiled GEMMs, no PJRT).
+    /// `placement: CacheAware` traces the mix's cache profiles first and
+    /// routes by the greedy co-run plan instead of the artifact hash.
     ServeMix {
+        /// Worker threads.
         workers: usize,
+        /// Stream length.
         requests: usize,
+        /// Stream RNG seed.
         seed: u64,
+        /// Per-worker LRU response-cache entries.
         cache_entries: usize,
+        /// Artifact→worker policy (hash vs cache-aware).
+        placement: PlacementPolicy,
     },
     /// One telemetry trace (`cachebound trace`, `bench --telemetry`):
     /// replay the workload through the hierarchy with a reuse-distance
     /// sink and report simulated vs MRC-predicted hit rates and boundness
     /// class.  CPU-pure, parallel-safe.
     Trace {
+        /// Calibrated profile to trace against.
         cpu: CpuSpec,
+        /// Workload to replay.
         workload: BenchWorkload,
         /// Row budget of the replay (`telemetry::TraceBudget`).
         max_rows: usize,
@@ -88,9 +130,13 @@ pub enum JobSpec {
     /// Native sweeps must run on a serial pool — concurrent wallclock
     /// measurements contend for cores (see `Pipeline::bench_sweep`).
     BenchSweep {
+        /// Profile whose bound lines score the run.
         cpu: CpuSpec,
+        /// Workload to time.
         workload: BenchWorkload,
+        /// Host wallclock instead of the simulator.
         native: bool,
+        /// Fast measurement profile.
         quick: bool,
     },
 }
@@ -98,8 +144,11 @@ pub enum JobSpec {
 /// Which native GEMM implementation a `NativeGemm` job runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NativeGemmVariant {
+    /// Triple-loop scalar GEMM.
     Naive,
+    /// Schedule-parameterized cache-blocked GEMM.
     Tiled,
+    /// Fixed-block reference implementation.
     Blocked,
 }
 
@@ -140,8 +189,11 @@ impl JobSpec {
             }
             JobSpec::ArtifactValidate { name } => format!("validate/{name}"),
             JobSpec::ArtifactMeasure { name } => format!("measure/{name}"),
-            JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
-                format!("serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}")
+            JobSpec::ServeMix { workers, requests, seed, cache_entries, placement } => {
+                format!(
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/p{}",
+                    placement.key_part()
+                )
             }
             JobSpec::Trace { cpu, workload, max_rows } => {
                 format!("trace/{}/{}/r{}", cpu.name, workload.key_part(), max_rows)
@@ -159,7 +211,9 @@ impl JobSpec {
 /// A queued job with its sequence number.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// Sequence number (also the result-matching key).
     pub id: u64,
+    /// What to run.
     pub spec: JobSpec,
 }
 
@@ -167,32 +221,59 @@ pub struct Job {
 #[derive(Clone, Debug)]
 pub enum JobOutput {
     /// A timing in seconds (+ optional bound name from the simulator).
-    Seconds { secs: f64, bound: Option<String> },
+    Seconds {
+        /// Measured/simulated time, seconds.
+        secs: f64,
+        /// Binding-resource name from the simulator, when one exists.
+        bound: Option<String>,
+    },
     /// Tuning outcome.
     Tuned {
+        /// Best time found, seconds.
         best_seconds: f64,
+        /// Human-readable description of the best config.
         best_desc: String,
+        /// Trials actually measured.
         trials: usize,
+        /// Total size of the searched space.
         space: usize,
     },
     /// Validation outcome.
-    Validated { passed: bool, detail: String },
+    Validated {
+        /// All outputs matched their checksums.
+        passed: bool,
+        /// Per-output detail line.
+        detail: String,
+    },
     /// Telemetry-trace outcome (simulated vs MRC-predicted cache profile).
-    Traced { summary: crate::telemetry::TraceSummary },
+    Traced {
+        /// The compact trace record.
+        summary: crate::telemetry::TraceSummary,
+    },
     /// Serving-run outcome (sharded server over the synthetic mix).
     Served {
+        /// Completed requests per second of wall time.
         throughput_rps: f64,
+        /// Median end-to-end latency, seconds.
         p50_s: f64,
+        /// 99th-percentile end-to-end latency, seconds.
         p99_s: f64,
+        /// Successfully answered requests.
         completed: u64,
+        /// Failed requests.
         failed: u64,
+        /// Responses served from the LRU response cache.
         cache_hits: u64,
     },
     /// Job failed.
-    Failed { error: String },
+    Failed {
+        /// What went wrong.
+        error: String,
+    },
 }
 
 impl JobOutput {
+    /// The headline seconds of timing-shaped outputs.
     pub fn seconds(&self) -> Option<f64> {
         match self {
             JobOutput::Seconds { secs, .. } => Some(*secs),
@@ -201,6 +282,7 @@ impl JobOutput {
         }
     }
 
+    /// Did the job fail?
     pub fn is_failure(&self) -> bool {
         matches!(self, JobOutput::Failed { .. })
     }
@@ -296,13 +378,22 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             );
             JobOutput::Traced { summary: report.summary() }
         }
-        JobSpec::ServeMix { workers, requests, seed, cache_entries } => {
+        JobSpec::ServeMix { workers, requests, seed, cache_entries, placement } => {
             use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
-            let out = ShardedServer::start(
-                ServeConfig::new(*workers).with_cache(*cache_entries),
-                |_w| Ok(SyntheticExecutor::new()),
-            )
-            .serve_stream(crate::operators::workloads::serving_requests(*requests, *seed));
+            let mut cfg = ServeConfig::new(*workers)
+                .with_cache(*cache_entries)
+                .with_placement(*placement);
+            if *placement == PlacementPolicy::CacheAware {
+                // the plan needs per-artifact profiles: the synthetic mix
+                // traced against the part the bounds are calibrated for
+                // (cached, so a scaling sweep pays the replays only once)
+                let cpu = crate::hw::profile_by_name("a53").expect("builtin profile").cpu;
+                cfg = cfg
+                    .with_profiles(crate::telemetry::serving_mix_profiles(&cpu))
+                    .with_cpu(cpu);
+            }
+            let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+                .serve_stream(crate::operators::workloads::serving_requests(*requests, *seed));
             let (p50, p99) = match out.metrics.latency_percentiles(&[50.0, 99.0]).as_deref() {
                 Some([p50, p99]) => (*p50, *p99),
                 _ => (0.0, 0.0),
@@ -521,14 +612,39 @@ mod tests {
 
     #[test]
     fn serve_mix_job_serves_and_reports() {
-        let spec = JobSpec::ServeMix { workers: 2, requests: 24, seed: 7, cache_entries: 16 };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16");
+        let spec = JobSpec::ServeMix {
+            workers: 2,
+            requests: 24,
+            seed: 7,
+            cache_entries: 16,
+            placement: PlacementPolicy::Hash,
+        };
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/phash");
         let out = run_cpu_job(&spec);
         match out {
             JobOutput::Served { throughput_rps, completed, failed, .. } => {
                 assert_eq!(completed, 24);
                 assert_eq!(failed, 0);
                 assert!(throughput_rps > 0.0);
+            }
+            other => panic!("expected Served, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_mix_job_accepts_cache_aware_placement() {
+        let spec = JobSpec::ServeMix {
+            workers: 2,
+            requests: 16,
+            seed: 7,
+            cache_entries: 0,
+            placement: PlacementPolicy::CacheAware,
+        };
+        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/pcache");
+        match run_cpu_job(&spec) {
+            JobOutput::Served { completed, failed, .. } => {
+                assert_eq!(completed, 16);
+                assert_eq!(failed, 0);
             }
             other => panic!("expected Served, got {other:?}"),
         }

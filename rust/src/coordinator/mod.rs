@@ -12,18 +12,36 @@
 //! The deployment face is [`server`]: the single-threaded reference
 //! [`Server`] and the sharded multi-worker [`ShardedServer`], which hashes
 //! requests to per-artifact [`shard`]s so each worker owns a disjoint,
-//! cache-resident slice of the artifact set.  Division of labor with the
+//! cache-resident slice of the artifact set.  [`placement`] upgrades that
+//! hash to telemetry-driven scheduling: per-artifact
+//! [`CacheProfile`]s feed the co-run interference model
+//! ([`crate::analysis::interference`]) and a greedy packer assigns
+//! artifacts to workers by predicted slowdown on the shared L2
+//! ([`PlacementPolicy::CacheAware`]).  Division of labor with the
 //! [`pool`]: the pool fans out *finite experiment batches* and routes
 //! PJRT-bound jobs to the leader; the sharded server runs *open-ended
 //! request streams* and sidesteps the leader bottleneck by giving every
 //! worker its own thread-confined executor.
 //!
+//! Serving the synthetic mix in three lines:
+//!
+//! ```
+//! use cachebound::coordinator::server::{Request, ServeConfig, ShardedServer, SyntheticExecutor};
+//!
+//! let mut srv = ShardedServer::start(ServeConfig::new(2), |_| Ok(SyntheticExecutor::new()));
+//! srv.submit(Request { id: 0, artifact: "syn_gemm_n32".into() });
+//! assert_eq!(srv.finish().metrics.completed, 1);
+//! ```
+//!
 //! [`report`]: crate::report
 //! [`Server`]: server::Server
 //! [`ShardedServer`]: server::ShardedServer
+//! [`CacheProfile`]: crate::telemetry::CacheProfile
+//! [`PlacementPolicy::CacheAware`]: placement::PlacementPolicy::CacheAware
 
 pub mod jobs;
 pub mod pipeline;
+pub mod placement;
 pub mod pool;
 pub mod results;
 pub mod server;
@@ -31,10 +49,11 @@ pub mod shard;
 
 pub use jobs::{Job, JobOutput, JobSpec};
 pub use pipeline::{Pipeline, PipelineConfig};
+pub use placement::{Placement, PlacementPolicy, WorkerPlan};
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
 pub use server::{
     BatchPolicy, Exec, Executor, Metrics, PjrtExecutor, Request, Response, ServeConfig,
-    ServeOutcome, Server, ShardedServer, SyntheticExecutor,
+    ServeOutcome, Server, ShardedServer, SyntheticExecutor, WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

@@ -14,12 +14,14 @@ use crate::operators::workloads::{self, BenchWorkload, ConvLayer};
 use crate::runtime::Registry;
 
 use super::jobs::{Job, JobSpec, NativeGemmVariant};
+use super::placement::PlacementPolicy;
 use super::pool::WorkerPool;
 use super::results::ResultStore;
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
+    /// Worker threads of the job pool.
     pub n_workers: usize,
     /// Tuning trials per workload.
     pub tune_trials: usize,
@@ -45,18 +47,26 @@ pub fn default_tuned_schedule() -> GemmSchedule {
     GemmSchedule::new(64, 64, 64, 4)
 }
 
+/// The tuned conv schedule used when tuning is skipped.
 pub fn default_conv_schedule() -> ConvSchedule {
     ConvSchedule::new(32, 4)
 }
 
+/// The experiment pipeline: owns the pool, the optional artifact
+/// registry and the result store; one method per paper experiment.
 pub struct Pipeline {
+    /// Pipeline configuration.
     pub config: PipelineConfig,
+    /// Worker pool experiment jobs fan out over.
     pub pool: WorkerPool,
+    /// Results keyed by stable job keys.
     pub store: ResultStore,
+    /// AOT artifact registry (enables `Artifact*` jobs).
     pub registry: Option<Registry>,
 }
 
 impl Pipeline {
+    /// Pipeline with an empty store and a fresh pool.
     pub fn new(config: PipelineConfig) -> Self {
         Pipeline {
             pool: WorkerPool::new(config.n_workers),
@@ -210,11 +220,17 @@ impl Pipeline {
     }
 
     /// Serving-throughput scaling sweep (EXPERIMENTS.md §Serving): one
-    /// `ServeMix` run per worker count over the identical request stream.
+    /// `ServeMix` run per worker count over the identical request stream,
+    /// routed by `placement` (hash baseline or the cache-aware plan).
     /// Runs on a *serial* pool — each job spawns its own sharded-server
     /// worker threads, and concurrent servers would contend for cores and
     /// corrupt the scaling measurement.
-    pub fn serve_scaling(&mut self, worker_counts: &[usize], requests: usize) -> Result<()> {
+    pub fn serve_scaling(
+        &mut self,
+        worker_counts: &[usize],
+        requests: usize,
+        placement: PlacementPolicy,
+    ) -> Result<()> {
         let specs: Vec<JobSpec> = worker_counts
             .iter()
             .map(|&w| JobSpec::ServeMix {
@@ -222,6 +238,7 @@ impl Pipeline {
                 requests,
                 seed: 0xD15C,
                 cache_entries: 0,
+                placement,
             })
             .collect();
         let jobs: Vec<Job> = specs
@@ -398,14 +415,26 @@ mod tests {
     #[test]
     fn serve_scaling_populates_store() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[1, 2], 16).unwrap();
+        p.serve_scaling(&[1, 2], 16, PlacementPolicy::Hash).unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 2);
         for (k, v) in rows {
+            assert!(k.ends_with("/phash"), "{k} must carry the placement policy");
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
         }
+    }
+
+    #[test]
+    fn serve_scaling_carries_cache_aware_policy() {
+        let mut p = Pipeline::new(quick_config());
+        p.serve_scaling(&[2], 12, PlacementPolicy::CacheAware).unwrap();
+        let rows = p.store.by_prefix("serve_mix/");
+        assert_eq!(rows.len(), 1);
+        let (k, v) = &rows[0];
+        assert!(k.ends_with("/pcache"), "{k}");
+        assert_eq!(v.passed, Some(true), "{k} had failures");
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Cache-aware artifact placement for the sharded serving core.
+//!
+//! The hash placement of [`super::shard`] spreads artifacts uniformly —
+//! which is exactly wrong when two L2-hungry artifacts land on the same
+//! worker and thrash the shared cache the paper shows every operator is
+//! bound by.  This module closes the telemetry → scheduling loop:
+//!
+//! * [`plan`] runs a greedy bin-packing assigner over the per-artifact
+//!   [`CacheProfile`]s: artifacts are sorted by L2 demand (working-set /
+//!   footprint knee, largest first — the classic first-fit-decreasing
+//!   order) and each is placed on the worker that minimizes the increase
+//!   in predicted total slowdown under the co-run model
+//!   ([`InterferenceModel`]), breaking ties toward the least-loaded worker
+//!   so equal-cost placements still balance.  The result is deterministic
+//!   for a fixed profile set (tested).
+//! * [`Placement::rebalance`] is the feedback hook: when the server's
+//!   *observed* per-worker pressure diverges from the plan beyond a
+//!   threshold (artifacts the plan never saw, planned artifacts that never
+//!   arrived), it re-plans over the artifacts actually being served.
+//!
+//! Greedy-vs-hash guarantee: with at most one artifact per worker the two
+//! policies predict identical cost (no co-residency anywhere), and greedy
+//! never co-locates two artifacts when a free worker would predict
+//! strictly less slowdown — so on the adversarial two-artifact mix (demand
+//! sum past the L2) greedy always splits, while hash co-locates whenever
+//! the names collide.  See `DESIGN.md` §Placement for the math.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::analysis::InterferenceModel;
+use crate::hw::CpuSpec;
+use crate::operators::workloads::synthetic_artifact;
+use crate::telemetry::{synthetic_gemm_profile_budgeted, CacheProfile};
+
+use super::server::WorkerPressure;
+use super::shard::shard_for;
+
+/// How the sharded server maps artifacts to workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Stable hash of the artifact name ([`shard_for`]) — the baseline,
+    /// oblivious to cache working sets.
+    #[default]
+    Hash,
+    /// Greedy bin-packing over [`CacheProfile`]s via [`plan`]; falls back
+    /// to hash for artifacts without a profile.
+    CacheAware,
+}
+
+impl PlacementPolicy {
+    /// Parse a CLI flag value ("hash" | "cache-aware").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "hash" => Ok(PlacementPolicy::Hash),
+            "cache-aware" | "cacheaware" | "cache" => Ok(PlacementPolicy::CacheAware),
+            other => bail!("unknown placement policy '{other}' (hash | cache-aware)"),
+        }
+    }
+
+    /// Display name ("hash" | "cache-aware").
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::Hash => "hash",
+            PlacementPolicy::CacheAware => "cache-aware",
+        }
+    }
+
+    /// Short fragment for job/result keys ("hash" | "cache").
+    pub fn key_part(self) -> &'static str {
+        match self {
+            PlacementPolicy::Hash => "hash",
+            PlacementPolicy::CacheAware => "cache",
+        }
+    }
+}
+
+/// One worker's share of a [`Placement`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerPlan {
+    /// Worker index.
+    pub worker: usize,
+    /// Artifacts assigned to this worker, in assignment order.
+    pub artifacts: Vec<String>,
+    /// Σ `working_set_bytes` of the assigned profiles — the predicted
+    /// pressure [`super::server::Metrics`] compares observations against.
+    pub resident_bytes: u64,
+    /// Σ predicted co-run slowdowns of the assigned set (1.0 per artifact
+    /// when interference-free).
+    pub slowdown: f64,
+}
+
+/// A full artifact → worker assignment with its predicted cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// Worker count the plan was built for.
+    pub workers: usize,
+    /// Artifact → worker map consulted by the server's admission path.
+    pub assignments: BTreeMap<String, usize>,
+    /// Per-worker breakdown (`plan[w].worker == w` for all `w`).
+    pub plan: Vec<WorkerPlan>,
+    /// Σ over workers of the predicted co-run slowdown sums.
+    pub total_slowdown: f64,
+}
+
+/// Greedy bin-packing: sort profiles by L2 demand (descending, ties by
+/// name), then place each artifact on the worker whose predicted total
+/// slowdown grows the least, breaking ties toward the smaller resident
+/// byte count and then the lower worker index.
+pub fn plan(
+    model: &InterferenceModel,
+    profiles: &BTreeMap<String, CacheProfile>,
+    workers: usize,
+) -> Placement {
+    let workers = workers.max(1);
+    let mut order: Vec<&CacheProfile> = profiles.values().collect();
+    order.sort_by(|a, b| {
+        model
+            .demand_bytes(b)
+            .cmp(&model.demand_bytes(a))
+            .then_with(|| a.artifact.cmp(&b.artifact))
+    });
+
+    let mut assigned: Vec<Vec<&CacheProfile>> = vec![Vec::new(); workers];
+    let mut cost: Vec<f64> = vec![0.0; workers];
+    let mut bytes: Vec<u64> = vec![0; workers];
+    let mut assignments = BTreeMap::new();
+    for p in order {
+        let mut best: Option<(f64, u64, usize, f64)> = None;
+        for w in 0..workers {
+            let mut candidate = assigned[w].clone();
+            candidate.push(p);
+            let new_cost = model.total_slowdown(&candidate);
+            let delta = new_cost - cost[w];
+            let key = (delta, bytes[w]);
+            let better = match &best {
+                Some((bd, bb, _, _)) => key < (*bd, *bb),
+                None => true,
+            };
+            if better {
+                best = Some((delta, bytes[w], w, new_cost));
+            }
+        }
+        let (_, _, w, new_cost) = best.expect("workers >= 1");
+        assigned[w].push(p);
+        cost[w] = new_cost;
+        bytes[w] += p.working_set_bytes;
+        assignments.insert(p.artifact.clone(), w);
+    }
+
+    let plan: Vec<WorkerPlan> = (0..workers)
+        .map(|w| WorkerPlan {
+            worker: w,
+            artifacts: assigned[w].iter().map(|p| p.artifact.clone()).collect(),
+            resident_bytes: assigned[w].iter().map(|p| p.working_set_bytes).sum(),
+            slowdown: cost[w],
+        })
+        .collect();
+    Placement {
+        workers,
+        assignments,
+        total_slowdown: cost.iter().sum(),
+        plan,
+    }
+}
+
+impl Placement {
+    /// Worker assigned to `artifact`, if the plan covers it.
+    pub fn worker_for(&self, artifact: &str) -> Option<usize> {
+        self.assignments.get(artifact).copied()
+    }
+
+    /// Predicted resident working-set bytes of one worker (0 beyond the
+    /// plan).
+    pub fn predicted_bytes(&self, worker: usize) -> u64 {
+        self.plan.get(worker).map_or(0, |p| p.resident_bytes)
+    }
+
+    /// Worst relative gap between predicted and observed per-worker
+    /// pressure, in `[0, 1]`: `|observed − predicted| / max(both, 1)`,
+    /// maximized over workers.  0 when every worker's residency matched
+    /// the plan.
+    pub fn divergence(&self, observed: &[WorkerPressure]) -> f64 {
+        let mut worst = 0.0f64;
+        for w in 0..self.workers.max(observed.len()) {
+            let pred = self.predicted_bytes(w);
+            let obs = observed
+                .iter()
+                .find(|p| p.worker == w)
+                .map_or(0, |p| p.resident_bytes);
+            let denom = pred.max(obs).max(1) as f64;
+            worst = worst.max((pred as f64 - obs as f64).abs() / denom);
+        }
+        worst
+    }
+
+    /// The feedback hook the server calls after a run: when the observed
+    /// pressure diverges from this plan by more than `threshold`, re-plan
+    /// over `observed_profiles` (the artifacts actually served) and return
+    /// the new placement; `None` while the plan still matches reality.
+    pub fn rebalance(
+        &self,
+        model: &InterferenceModel,
+        observed_profiles: &BTreeMap<String, CacheProfile>,
+        observed: &[WorkerPressure],
+        threshold: f64,
+    ) -> Option<Placement> {
+        if self.divergence(observed) <= threshold {
+            return None;
+        }
+        Some(plan(model, observed_profiles, self.workers))
+    }
+}
+
+/// Candidate sizes for [`adversarial_mix`], profiled lazily in order.
+const ADVERSARIAL_CANDIDATES: [usize; 4] = [160, 192, 224, 256];
+
+/// Row budget of the adversarial-candidate traces: two full M-tiles, so
+/// the cross-tile B-panel reuse (the L2-scale knee) is captured without
+/// replaying the whole matrix.
+const ADVERSARIAL_TRACE_ROWS: usize = 128;
+
+/// Build the adversarial two-artifact co-run mix: the first pair of
+/// synthetic GEMM artifacts that (a) hash placement co-locates on one
+/// worker under `workers`/`n_shards`, and (b) whose L2 demands each fit
+/// the part's L2 alone but sum past it — the configuration where
+/// cache-aware placement must split what hashing collides.  `None` if no
+/// candidate pair qualifies on this CPU profile.
+pub fn adversarial_mix(
+    cpu: &CpuSpec,
+    workers: usize,
+    n_shards: usize,
+) -> Option<Vec<(String, CacheProfile)>> {
+    let model = InterferenceModel::new(cpu);
+    let l2 = cpu.l2.size_bytes as u64;
+    let mut profiled: Vec<(String, CacheProfile)> = Vec::new();
+    for &n in &ADVERSARIAL_CANDIDATES {
+        let name = synthetic_artifact(n);
+        let profile =
+            synthetic_gemm_profile_budgeted(cpu, &name, n, ADVERSARIAL_TRACE_ROWS);
+        profiled.push((name, profile));
+        let (nj, pj) = profiled.last().expect("just pushed");
+        for (ni, pi) in &profiled[..profiled.len() - 1] {
+            let same_worker =
+                shard_for(ni, n_shards) % workers == shard_for(nj, n_shards) % workers;
+            let (di, dj) = (model.demand_bytes(pi), model.demand_bytes(pj));
+            if same_worker && di < l2 && dj < l2 && di + dj > l2 {
+                return Some(vec![(ni.clone(), pi.clone()), (nj.clone(), pj.clone())]);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::interference::step_profile;
+    use crate::hw::profile_by_name;
+
+    fn a53() -> CpuSpec {
+        profile_by_name("a53").unwrap().cpu
+    }
+
+    fn profile_map(ps: Vec<CacheProfile>) -> BTreeMap<String, CacheProfile> {
+        ps.into_iter().map(|p| (p.artifact.clone(), p)).collect()
+    }
+
+    #[test]
+    fn policy_parses_and_names() {
+        assert_eq!(PlacementPolicy::parse("hash").unwrap(), PlacementPolicy::Hash);
+        assert_eq!(
+            PlacementPolicy::parse("cache-aware").unwrap(),
+            PlacementPolicy::CacheAware
+        );
+        assert!(PlacementPolicy::parse("round-robin").is_err());
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::Hash);
+        assert_eq!(PlacementPolicy::CacheAware.name(), "cache-aware");
+        assert_eq!(PlacementPolicy::CacheAware.key_part(), "cache");
+    }
+
+    #[test]
+    fn two_big_artifacts_are_split_across_workers() {
+        let model = InterferenceModel::new(&a53());
+        // each fits the 512 KiB L2 alone, together they spill it
+        let profiles = profile_map(vec![
+            step_profile("big_a", 300 * 1024, 0.9),
+            step_profile("big_b", 300 * 1024, 0.9),
+        ]);
+        let p = plan(&model, &profiles, 2);
+        assert_ne!(
+            p.worker_for("big_a"),
+            p.worker_for("big_b"),
+            "greedy must split the adversarial pair: {p:?}"
+        );
+        assert!((p.total_slowdown - 2.0).abs() < 1e-9, "split = no interference");
+    }
+
+    #[test]
+    fn equal_cost_placements_balance_by_load() {
+        let model = InterferenceModel::new(&a53());
+        // four tiny interference-free artifacts on two workers: the
+        // slowdown deltas all tie at 1.0, so the load tie-break must
+        // spread them 2 + 2
+        let profiles = profile_map(
+            (0..4)
+                .map(|i| step_profile(&format!("tiny{i}"), 16 * 1024, 0.9))
+                .collect(),
+        );
+        let p = plan(&model, &profiles, 2);
+        assert_eq!(p.plan[0].artifacts.len(), 2, "{p:?}");
+        assert_eq!(p.plan[1].artifacts.len(), 2, "{p:?}");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let profiles = profile_map(vec![
+            step_profile("a", 300 * 1024, 0.9),
+            step_profile("b", 200 * 1024, 0.85),
+            step_profile("c", 120 * 1024, 0.7),
+            step_profile("d", 64 * 1024, 0.95),
+            step_profile("e", 300 * 1024, 0.9),
+        ]);
+        let first = plan(&model, &profiles, 3);
+        for _ in 0..5 {
+            assert_eq!(plan(&model, &profiles, 3), first, "identical placement across runs");
+        }
+        // every artifact is assigned exactly once, workers within range
+        assert_eq!(first.assignments.len(), 5);
+        assert!(first.assignments.values().all(|&w| w < 3));
+        let planned: usize = first.plan.iter().map(|w| w.artifacts.len()).sum();
+        assert_eq!(planned, 5);
+    }
+
+    #[test]
+    fn single_worker_plan_puts_everything_there() {
+        let model = InterferenceModel::new(&a53());
+        let profiles = profile_map(vec![
+            step_profile("a", 300 * 1024, 0.9),
+            step_profile("b", 300 * 1024, 0.9),
+        ]);
+        let p = plan(&model, &profiles, 1);
+        assert!(p.assignments.values().all(|&w| w == 0));
+        // forced co-residency: the plan prices the interference honestly
+        assert!(p.total_slowdown > 2.0, "{}", p.total_slowdown);
+    }
+
+    #[test]
+    fn divergence_and_rebalance_fire_on_drift() {
+        let model = InterferenceModel::new(&a53());
+        let profiles = profile_map(vec![
+            step_profile("a", 300 * 1024, 0.9),
+            step_profile("b", 300 * 1024, 0.9),
+        ]);
+        let p = plan(&model, &profiles, 2);
+        // observation matching the plan: no divergence, no rebalance
+        let matching: Vec<WorkerPressure> = (0..2)
+            .map(|w| WorkerPressure {
+                worker: w,
+                artifacts: 1,
+                profiled: 1,
+                resident_bytes: p.predicted_bytes(w),
+                predicted_bytes: p.predicted_bytes(w),
+            })
+            .collect();
+        assert_eq!(p.divergence(&matching), 0.0);
+        assert!(p.rebalance(&model, &profiles, &matching, 0.25).is_none());
+
+        // all traffic actually landed on worker 0: full divergence
+        let skewed = vec![
+            WorkerPressure {
+                worker: 0,
+                artifacts: 2,
+                profiled: 2,
+                resident_bytes: 600 * 1024,
+                predicted_bytes: p.predicted_bytes(0),
+            },
+            WorkerPressure {
+                worker: 1,
+                artifacts: 0,
+                profiled: 0,
+                resident_bytes: 0,
+                predicted_bytes: p.predicted_bytes(1),
+            },
+        ];
+        assert!(p.divergence(&skewed) > 0.25, "{}", p.divergence(&skewed));
+        let re = p.rebalance(&model, &profiles, &skewed, 0.25).expect("rebalance fires");
+        assert_eq!(re.assignments.len(), 2);
+        assert_ne!(re.worker_for("a"), re.worker_for("b"));
+    }
+
+    #[test]
+    fn adversarial_mix_collides_under_hash_and_splits_under_plan() {
+        let cpu = a53();
+        // the default serve geometry: 2 workers, 4x shards
+        let mix = adversarial_mix(&cpu, 2, 8).expect("a qualifying pair exists on the A53");
+        assert_eq!(mix.len(), 2);
+        let (na, pa) = &mix[0];
+        let (nb, pb) = &mix[1];
+        // hash co-locates them...
+        assert_eq!(shard_for(na, 8) % 2, shard_for(nb, 8) % 2);
+        // ...and their demands straddle the L2
+        let model = InterferenceModel::new(&cpu);
+        let l2 = cpu.l2.size_bytes as u64;
+        assert!(model.demand_bytes(pa) < l2 && model.demand_bytes(pb) < l2);
+        assert!(model.demand_bytes(pa) + model.demand_bytes(pb) > l2);
+        // the greedy plan splits them
+        let profiles = profile_map(vec![pa.clone(), pb.clone()]);
+        let p = plan(&model, &profiles, 2);
+        assert_ne!(p.worker_for(na), p.worker_for(nb), "{p:?}");
+        // and the split strictly beats the co-located alternative
+        let colocated = model.total_slowdown(&[pa, pb]);
+        assert!(
+            p.total_slowdown < colocated || (colocated - 2.0).abs() < 1e-9,
+            "split {} vs co-located {}",
+            p.total_slowdown,
+            colocated
+        );
+    }
+}

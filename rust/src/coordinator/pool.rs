@@ -23,8 +23,11 @@ use super::jobs::{run_cpu_job, Job, JobOutput, JobSpec};
 /// A completed job.
 #[derive(Clone, Debug)]
 pub struct Completed {
+    /// Job sequence number.
     pub id: u64,
+    /// Stable result key of the job spec.
     pub key: String,
+    /// What the job produced.
     pub output: JobOutput,
     /// Thread label that executed the job ("leader" or "worker-<i>").
     pub executed_on: String,
@@ -32,10 +35,12 @@ pub struct Completed {
 
 /// Fixed-size worker pool.
 pub struct WorkerPool {
+    /// Worker threads the pool spawns per batch.
     pub n_workers: usize,
 }
 
 impl WorkerPool {
+    /// Pool with `n_workers` threads (min 1).
     pub fn new(n_workers: usize) -> Self {
         WorkerPool {
             n_workers: n_workers.max(1),

@@ -18,13 +18,18 @@ pub type ResultKey = String;
 /// A stored value.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ResultValue {
+    /// Headline timing, when the result has one.
     pub seconds: Option<f64>,
+    /// Simulator bound / predicted class, when present.
     pub bound: Option<String>,
+    /// Pass/fail verdict, when the result is a check.
     pub passed: Option<bool>,
+    /// Free-form detail line for reports.
     pub detail: Option<String>,
 }
 
 impl ResultValue {
+    /// A plain timing result.
     pub fn seconds(secs: f64) -> Self {
         ResultValue {
             seconds: Some(secs),
@@ -42,10 +47,12 @@ pub struct ResultStore {
 }
 
 impl ResultStore {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert or replace one result.
     pub fn insert(&mut self, key: impl Into<String>, value: ResultValue) {
         self.map.insert(key.into(), value);
     }
@@ -111,10 +118,12 @@ impl ResultStore {
         }
     }
 
+    /// Look up one result by key.
     pub fn get(&self, key: &str) -> Option<&ResultValue> {
         self.map.get(key)
     }
 
+    /// The `seconds` field of a result, if both exist.
     pub fn seconds(&self, key: &str) -> Option<f64> {
         self.map.get(key).and_then(|v| v.seconds)
     }
@@ -128,10 +137,12 @@ impl ResultStore {
             .collect()
     }
 
+    /// Stored result count.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is stored.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

@@ -25,10 +25,13 @@
 //!
 //! Invariants (tested in `rust/tests/serve_multiworker.rs`):
 //!
-//! * **per-artifact FIFO** — an artifact maps to one shard, a shard to one
-//!   worker, and each shard queue is drained front-to-back, so responses
-//!   for any given artifact are emitted in admission order even with many
-//!   workers and no global lock;
+//! * **per-artifact FIFO** — an artifact maps to one shard queue on one
+//!   (consistently chosen) worker, and each shard queue is drained
+//!   front-to-back, so responses for any given artifact are emitted in
+//!   admission order even with many workers and no global lock.  Under
+//!   hash placement a shard has exactly one owning worker; a cache-aware
+//!   plan may split a shard's artifacts across workers, in which case the
+//!   per-shard rollup keeps one [`ShardMetrics`] row per (shard, worker);
 //! * **exactly one response per request** — every admitted request is
 //!   answered (success, failure, or cache hit), and rejected requests are
 //!   answered at the front door;
@@ -47,6 +50,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::analysis::InterferenceModel;
+use crate::hw::{profile_by_name, CpuSpec};
 use crate::operators::gemm::{self, GemmSchedule};
 use crate::operators::workloads;
 use crate::operators::Tensor;
@@ -56,11 +61,13 @@ use crate::telemetry::CacheProfile;
 use crate::util::lru::LruCache;
 use crate::util::stats::{percentile_sorted, Summary};
 
+use super::placement::{self, Placement, PlacementPolicy};
 use super::shard::{shard_for, ShardMetrics};
 
 /// One inference request.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Request {
+    /// Caller-chosen request id, echoed in the response.
     pub id: u64,
     /// Artifact name to execute (the "model variant" being served).
     pub artifact: String,
@@ -69,13 +76,17 @@ pub struct Request {
 /// One completed response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Id of the request this response answers.
     pub id: u64,
+    /// Artifact that was executed.
     pub artifact: String,
     /// Execution wall time (excludes queueing; 0 for cache hits).
     pub exec_seconds: f64,
     /// Total latency including queue wait.
     pub latency_seconds: f64,
+    /// Did execution succeed?
     pub ok: bool,
+    /// Failure description when `ok` is false.
     pub error: Option<String>,
     /// Output checksum — the response payload.  Artifacts are pure
     /// functions of their protocol inputs, so this is identical across
@@ -93,9 +104,13 @@ pub struct Response {
 /// the single-threaded [`Server`] leaves `per_shard` empty.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Requests admitted (including rejected ones).
     pub requests: u64,
+    /// Successfully answered requests.
     pub completed: u64,
+    /// Failed requests (rejections included).
     pub failed: u64,
+    /// Executor batches formed.
     pub batches: u64,
     /// Responses served from the response cache (subset of `completed`).
     pub cache_hits: u64,
@@ -103,9 +118,13 @@ pub struct Metrics {
     /// a subset of `failed` that reaches no shard, so per-shard sums cover
     /// `requests - rejected`.
     pub rejected: u64,
+    /// Per-response execution times.
     pub exec_seconds: Vec<f64>,
+    /// Per-response end-to-end latencies.
     pub latency_seconds: Vec<f64>,
-    /// Per-shard rollup (sharded server only).
+    /// Per-shard rollup (sharded server only): one row per
+    /// (shard, worker) pair — a single row per shard under hash placement,
+    /// possibly several when a cache-aware plan splits a shard's artifacts.
     pub per_shard: Vec<ShardMetrics>,
     /// Per-worker working-set-pressure estimates (populated only when the
     /// server was started with per-artifact [`CacheProfile`]s).
@@ -119,6 +138,7 @@ pub struct Metrics {
 /// set live on exactly one worker.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkerPressure {
+    /// Worker index this row describes.
     pub worker: usize,
     /// Distinct artifacts routed to this worker.
     pub artifacts: u64,
@@ -128,21 +148,29 @@ pub struct WorkerPressure {
     /// the part's L1/L2 sizes to see whether the worker's mix is
     /// cache-resident.
     pub resident_bytes: u64,
+    /// What the cache-aware placement plan *predicted* this worker would
+    /// hold (0 under hash placement).  The gap between this and
+    /// `resident_bytes` is what drives [`super::placement::Placement::rebalance`].
+    pub predicted_bytes: u64,
 }
 
 impl Metrics {
+    /// Summary of execution times (None when empty).
     pub fn exec_summary(&self) -> Option<Summary> {
         (!self.exec_seconds.is_empty()).then(|| Summary::of(&self.exec_seconds))
     }
 
+    /// Summary of end-to-end latencies (None when empty).
     pub fn latency_summary(&self) -> Option<Summary> {
         (!self.latency_seconds.is_empty()).then(|| Summary::of(&self.latency_seconds))
     }
 
+    /// Completed requests per second of wall time.
     pub fn throughput(&self, wall_seconds: f64) -> f64 {
         self.completed as f64 / wall_seconds.max(1e-12)
     }
 
+    /// Cache hits / completed (0 when nothing completed).
     pub fn cache_hit_rate(&self) -> f64 {
         if self.completed == 0 {
             0.0
@@ -185,6 +213,7 @@ impl Default for BatchPolicy {
 /// Result of one artifact execution.
 #[derive(Clone, Copy, Debug)]
 pub struct Exec {
+    /// Execution wall time, seconds.
     pub seconds: f64,
     /// Output checksum (the pure-function response payload).
     pub payload: f64,
@@ -211,6 +240,7 @@ pub struct PjrtExecutor {
 }
 
 impl PjrtExecutor {
+    /// Executor over `<artifacts_dir>/manifest.json`.
     pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         Ok(PjrtExecutor { registry: Registry::open(artifacts_dir)? })
     }
@@ -252,6 +282,7 @@ pub struct SyntheticExecutor {
 }
 
 impl SyntheticExecutor {
+    /// Executor with empty input caches.
     pub fn new() -> Self {
         SyntheticExecutor {
             schedule: GemmSchedule::new(32, 32, 32, 4),
@@ -301,10 +332,12 @@ pub struct Server {
     registry: Registry,
     policy: BatchPolicy,
     queue: VecDeque<(Request, Instant)>,
+    /// Aggregate metrics of everything served so far.
     pub metrics: Metrics,
 }
 
 impl Server {
+    /// Server over an opened registry.
     pub fn new(registry: Registry, policy: BatchPolicy) -> Self {
         Server {
             registry,
@@ -391,6 +424,7 @@ impl Server {
         }
     }
 
+    /// Requests still queued.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -410,6 +444,7 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Per-worker LRU response-cache entries; 0 disables caching.
     pub cache_entries: usize,
+    /// Batching policy (max consecutive same-artifact runs).
     pub batch: BatchPolicy,
     /// Admission-time catalog: requests whose artifact is not in the
     /// manifest are rejected at the front door without touching a worker.
@@ -418,11 +453,25 @@ pub struct ServeConfig {
     pub catalog: Option<Arc<Manifest>>,
     /// Per-artifact cache profiles (telemetry subsystem).  When present,
     /// [`Metrics::worker_pressure`] reports each worker's resident
-    /// working-set estimate.
+    /// working-set estimate, and [`PlacementPolicy::CacheAware`] has the
+    /// data it needs to plan.
     pub profiles: Option<Arc<BTreeMap<String, CacheProfile>>>,
+    /// How artifacts map to workers: the hash baseline, or a greedy
+    /// cache-aware plan over `profiles` (`super::placement`).
+    pub placement: PlacementPolicy,
+    /// CPU profile pricing the cache-aware plan (None defaults to the
+    /// Cortex-A53, the part the synthetic serving mix is calibrated
+    /// against).
+    pub cpu: Option<CpuSpec>,
+    /// Observed-vs-predicted pressure divergence (fraction, `[0, 1]`)
+    /// beyond which [`ShardedServer::finish`] computes a rebalanced
+    /// placement ([`ServeOutcome::rebalanced`]).
+    pub rebalance_threshold: f64,
 }
 
 impl ServeConfig {
+    /// Config for `workers` worker threads with every option at its
+    /// baseline (auto shards, no cache, hash placement).
     pub fn new(workers: usize) -> Self {
         ServeConfig {
             workers: workers.max(1),
@@ -431,21 +480,41 @@ impl ServeConfig {
             batch: BatchPolicy::default(),
             catalog: None,
             profiles: None,
+            placement: PlacementPolicy::default(),
+            cpu: None,
+            rebalance_threshold: 0.25,
         }
     }
 
+    /// Enable the per-worker LRU response cache with `entries` entries.
     pub fn with_cache(mut self, entries: usize) -> Self {
         self.cache_entries = entries;
         self
     }
 
+    /// Attach the admission-time artifact catalog.
     pub fn with_catalog(mut self, catalog: Arc<Manifest>) -> Self {
         self.catalog = Some(catalog);
         self
     }
 
+    /// Attach per-artifact cache profiles (enables pressure reporting and
+    /// cache-aware placement).
     pub fn with_profiles(mut self, profiles: Arc<BTreeMap<String, CacheProfile>>) -> Self {
         self.profiles = Some(profiles);
+        self
+    }
+
+    /// Select the placement policy.
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Price the cache-aware plan against `cpu` instead of the default
+    /// Cortex-A53.
+    pub fn with_cpu(mut self, cpu: CpuSpec) -> Self {
+        self.cpu = Some(cpu);
         self
     }
 
@@ -470,9 +539,15 @@ pub struct ServeOutcome {
     /// Responses in completion order (per-artifact subsequences are in
     /// admission order — the FIFO invariant).
     pub responses: Vec<Response>,
+    /// Aggregate serving metrics (per-shard and per-worker rollups inside).
     pub metrics: Metrics,
     /// Wall time from server start to drain completion.
     pub wall_seconds: f64,
+    /// Set when a cache-aware run's observed per-worker pressure diverged
+    /// from the plan beyond `ServeConfig::rebalance_threshold`: the
+    /// re-planned placement over the artifacts actually served — the
+    /// server's feedback hook ([`super::placement::Placement::rebalance`]).
+    pub rebalanced: Option<Placement>,
 }
 
 /// The sharded multi-worker serving core.  See the module docs for the
@@ -482,6 +557,12 @@ pub struct ShardedServer {
     workers: usize,
     catalog: Option<Arc<Manifest>>,
     profiles: Option<Arc<BTreeMap<String, CacheProfile>>>,
+    /// The cache-aware plan, when the config asked for one and profiles
+    /// were available; None under hash placement.
+    placement: Option<Arc<Placement>>,
+    /// CPU the plan was priced against (also used by the rebalance hook).
+    cpu: CpuSpec,
+    rebalance_threshold: f64,
     senders: Vec<mpsc::Sender<Envelope>>,
     resp_rx: mpsc::Receiver<Response>,
     handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
@@ -504,6 +585,20 @@ impl ShardedServer {
     {
         let n_shards = config.n_shards();
         let workers = config.workers;
+        let cpu = config
+            .cpu
+            .clone()
+            .unwrap_or_else(|| profile_by_name("a53").expect("builtin profile").cpu);
+        // The cache-aware plan needs profiles; without them the policy
+        // silently degrades to hash (the CLI surfaces a note).
+        let placement_plan = match (config.placement, &config.profiles) {
+            (PlacementPolicy::CacheAware, Some(profiles)) => Some(Arc::new(placement::plan(
+                &InterferenceModel::new(&cpu),
+                profiles,
+                workers,
+            ))),
+            _ => None,
+        };
         let factory = Arc::new(factory);
         let (resp_tx, resp_rx) = mpsc::channel::<Response>();
         let mut senders = Vec::with_capacity(workers);
@@ -526,6 +621,9 @@ impl ShardedServer {
             workers,
             catalog: config.catalog,
             profiles: config.profiles,
+            placement: placement_plan,
+            cpu,
+            rebalance_threshold: config.rebalance_threshold,
             senders,
             resp_rx,
             handles,
@@ -536,10 +634,18 @@ impl ShardedServer {
         }
     }
 
+    /// The cache-aware plan this server routes by (None under hash
+    /// placement or when no profiles were attached).
+    pub fn placement(&self) -> Option<&Placement> {
+        self.placement.as_deref()
+    }
+
+    /// Shard count of this server.
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
 
+    /// Worker-thread count of this server.
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -565,7 +671,14 @@ impl ShardedServer {
             }
         }
         let shard = shard_for(&req.artifact, self.n_shards);
-        let worker = shard % self.workers;
+        // The plan overrides the shard→worker hash for artifacts it covers;
+        // per-artifact FIFO survives because an artifact still maps to one
+        // shard queue on one (consistently chosen) worker.
+        let worker = self
+            .placement
+            .as_ref()
+            .and_then(|p| p.worker_for(&req.artifact))
+            .unwrap_or(shard % self.workers);
         self.admitted += 1;
         if !self.worker_artifacts[worker].contains(&req.artifact) {
             self.worker_artifacts[worker].insert(req.artifact.clone());
@@ -608,16 +721,24 @@ impl ShardedServer {
             rejected,
             started,
             profiles,
+            placement,
+            cpu,
+            rebalance_threshold,
             worker_artifacts,
             ..
         } = self;
         drop(senders); // workers drain their queues and exit
         let mut responses: Vec<Response> = resp_rx.iter().collect();
-        let mut per_shard: BTreeMap<usize, ShardMetrics> = BTreeMap::new();
+        // Keyed by (shard, worker), not shard alone: a cache-aware plan may
+        // route two same-shard artifacts to different workers, and folding
+        // those rows together would misattribute the owning worker.  Under
+        // hash placement a shard has exactly one owner, so the keys — and
+        // the rollup — are identical to the shard-only version.
+        let mut per_shard: BTreeMap<(usize, usize), ShardMetrics> = BTreeMap::new();
         for h in handles {
             for sm in h.join().expect("serve worker panicked") {
                 per_shard
-                    .entry(sm.shard)
+                    .entry((sm.shard, sm.worker))
                     .and_modify(|acc| acc.merge(&sm))
                     .or_insert(sm);
             }
@@ -652,6 +773,9 @@ impl ShardedServer {
                     let mut p = WorkerPressure {
                         worker,
                         artifacts: artifacts.len() as u64,
+                        predicted_bytes: placement
+                            .as_ref()
+                            .map_or(0, |pl| pl.predicted_bytes(worker)),
                         ..WorkerPressure::default()
                     };
                     for a in artifacts {
@@ -664,8 +788,27 @@ impl ShardedServer {
                 })
                 .collect();
         }
+        // The rebalance hook: when the plan's predicted pressure diverged
+        // from what this run actually put on each worker, re-plan over the
+        // artifacts that were really served.
+        let rebalanced = match (&placement, &profiles) {
+            (Some(plan), Some(profiles)) if !metrics.worker_pressure.is_empty() => {
+                let observed: BTreeMap<String, CacheProfile> = worker_artifacts
+                    .iter()
+                    .flatten()
+                    .filter_map(|a| profiles.get(a).map(|p| (a.clone(), p.clone())))
+                    .collect();
+                plan.rebalance(
+                    &InterferenceModel::new(&cpu),
+                    &observed,
+                    &metrics.worker_pressure,
+                    rebalance_threshold,
+                )
+            }
+            _ => None,
+        };
         responses.extend(rejected);
-        ServeOutcome { responses, metrics, wall_seconds }
+        ServeOutcome { responses, metrics, wall_seconds, rebalanced }
     }
 }
 
@@ -963,6 +1106,81 @@ mod tests {
         srv.submit(Request { id: 0, artifact: workloads::synthetic_artifact(32) });
         let out = srv.finish();
         assert!(out.metrics.worker_pressure.is_empty());
+    }
+
+    /// The shared (cached) serving-mix profiles — the replays dominate
+    /// test time, so every test reuses one traced set.
+    fn mix_profiles() -> Arc<BTreeMap<String, CacheProfile>> {
+        crate::telemetry::serving_mix_profiles(&profile_by_name("a53").unwrap().cpu)
+    }
+
+    #[test]
+    fn cache_aware_placement_routes_by_plan() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mix = workloads::serving_mix();
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_profiles(mix_profiles())
+                .with_placement(PlacementPolicy::CacheAware)
+                .with_cpu(cpu),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let plan = srv.placement().expect("profiles + cache-aware => a plan").clone();
+        assert_eq!(plan.assignments.len(), mix.len());
+        for id in 0..20u64 {
+            let artifact = mix[id as usize % mix.len()].artifact.clone();
+            srv.submit(Request { id, artifact });
+        }
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, 20);
+        // every artifact was served, so observed pressure must reconcile
+        // exactly with the plan's per-worker prediction — proof the
+        // admission path actually routed by the plan
+        assert_eq!(out.metrics.worker_pressure.len(), 2);
+        for row in &out.metrics.worker_pressure {
+            assert_eq!(row.predicted_bytes, plan.predicted_bytes(row.worker));
+            assert_eq!(
+                row.resident_bytes, row.predicted_bytes,
+                "worker {} diverged from the plan",
+                row.worker
+            );
+        }
+        assert!(out.rebalanced.is_none(), "no divergence when the stream matches the plan");
+    }
+
+    #[test]
+    fn hash_placement_reports_no_predicted_pressure() {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2).with_profiles(mix_profiles()),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        assert!(srv.placement().is_none());
+        srv.submit(Request { id: 0, artifact: workloads::synthetic_artifact(32) });
+        let out = srv.finish();
+        assert!(out.metrics.worker_pressure.iter().all(|p| p.predicted_bytes == 0));
+        assert!(out.rebalanced.is_none());
+    }
+
+    #[test]
+    fn pressure_divergence_triggers_rebalance_hint() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mix = workloads::serving_mix();
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_profiles(mix_profiles())
+                .with_placement(PlacementPolicy::CacheAware)
+                .with_cpu(cpu),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        // the plan expected the whole mix; serve only one artifact
+        for id in 0..8u64 {
+            srv.submit(Request { id, artifact: mix[0].artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, 8);
+        let re = out.rebalanced.expect("one-artifact stream must diverge from the plan");
+        assert_eq!(re.assignments.len(), 1, "re-planned over what was actually served");
+        assert!(re.assignments.contains_key(&mix[0].artifact));
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //!
 //! The sharded server ([`super::server::ShardedServer`]) keys every request
 //! by its artifact name.  [`shard_for`] maps a name to one of `n_shards`
-//! queues; each shard is owned by exactly one worker (shard id mod worker
-//! count), which gives the two properties the whole design rests on:
+//! queues; under hash placement each shard is owned by exactly one worker
+//! (shard id mod worker count; a cache-aware plan —
+//! [`super::placement`] — may instead split a shard's artifacts across
+//! workers, keeping per-artifact affinity).  This gives the two
+//! properties the whole design rests on:
 //!
 //! * **cache affinity** — an artifact's compiled executable, inputs and
 //!   response cache live on one worker, so repeated requests stay hot in
@@ -66,6 +69,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
@@ -84,10 +88,12 @@ impl LatencyHistogram {
         self.max_seconds = self.max_seconds.max(seconds);
     }
 
+    /// Recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact mean of the recorded samples.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -96,10 +102,12 @@ impl LatencyHistogram {
         }
     }
 
+    /// Exact minimum (0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.min_seconds }
     }
 
+    /// Exact maximum.
     pub fn max(&self) -> f64 {
         self.max_seconds
     }
@@ -155,12 +163,17 @@ impl LatencyHistogram {
 /// admission-rejected requests, which never reach a shard.
 #[derive(Clone, Debug, Default)]
 pub struct ShardMetrics {
+    /// Shard id these counters belong to.
     pub shard: usize,
     /// Worker that owned this shard.
     pub worker: usize,
+    /// Requests routed to this shard.
     pub requests: u64,
+    /// Successfully answered requests.
     pub completed: u64,
+    /// Failed requests.
     pub failed: u64,
+    /// Executor batches formed from this shard's queue.
     pub batches: u64,
     /// Responses served from the LRU response cache (subset of `completed`).
     pub cache_hits: u64,
@@ -169,6 +182,7 @@ pub struct ShardMetrics {
 }
 
 impl ShardMetrics {
+    /// Zeroed counters for one shard owned by `worker`.
     pub fn new(shard: usize, worker: usize) -> Self {
         ShardMetrics {
             shard,

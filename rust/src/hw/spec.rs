@@ -5,23 +5,30 @@ use thiserror::Error;
 /// Bandwidth in MiB/s — the unit of the paper's Tables I & II.
 pub type Mibs = f64;
 
+/// Bytes per MiB.
 pub const MIB: f64 = 1024.0 * 1024.0;
 
 #[derive(Debug, Error)]
+/// Errors of the memory-level parser.
 pub enum MemoryspecError {
     #[error("unknown memory level {0}")]
+    /// The string named no known hierarchy level.
     UnknownLevel(String),
 }
 
 /// Which level of the hierarchy a number refers to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MemLevel {
+    /// Private per-core L1 data cache.
     L1,
+    /// Shared L2.
     L2,
+    /// Main memory.
     Ram,
 }
 
 impl MemLevel {
+    /// Display name ("L1", "L2", "RAM").
     pub fn name(self) -> &'static str {
         match self {
             MemLevel::L1 => "L1",
@@ -30,6 +37,7 @@ impl MemLevel {
         }
     }
 
+    /// Parse a level name ("l1", "DRAM", ...).
     pub fn parse(s: &str) -> Result<Self, MemoryspecError> {
         match s.to_ascii_uppercase().as_str() {
             "L1" => Ok(MemLevel::L1),
@@ -39,6 +47,7 @@ impl MemLevel {
         }
     }
 
+    /// Every level, outermost last.
     pub const ALL: [MemLevel; 3] = [MemLevel::L1, MemLevel::L2, MemLevel::Ram];
 }
 
@@ -46,8 +55,11 @@ impl MemLevel {
 /// the analytical cache-bound model.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CacheLevelSpec {
+    /// Capacity in bytes.
     pub size_bytes: usize,
+    /// Cache-line size in bytes.
     pub line_bytes: usize,
+    /// Ways per set.
     pub associativity: usize,
     /// Measured read bandwidth (all cores), paper Tables I & II.
     pub read_bw: Mibs,
@@ -58,6 +70,7 @@ pub struct CacheLevelSpec {
 }
 
 impl CacheLevelSpec {
+    /// Set count implied by the geometry.
     pub fn sets(&self) -> usize {
         self.size_bytes / (self.line_bytes * self.associativity)
     }
@@ -66,10 +79,13 @@ impl CacheLevelSpec {
 /// A full processor profile.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CpuSpec {
+    /// Profile name ("cortex-a53", ...).
     pub name: String,
     /// e.g. "BCM2837 (Raspberry Pi 3)"
     pub soc: String,
+    /// Core clock frequency.
     pub frequency_hz: f64,
+    /// Core count.
     pub cores: usize,
     /// FLOPs per instruction (2 for a fused MAC).
     pub flop_per_instr: f64,
@@ -77,11 +93,15 @@ pub struct CpuSpec {
     pub instr_per_cycle: f64,
     /// SIMD width in bits (NEON = 128).
     pub simd_bits: usize,
+    /// L1 data-cache spec.
     pub l1: CacheLevelSpec,
+    /// L2 cache spec.
     pub l2: CacheLevelSpec,
     /// RAM bandwidths + latency (size/assoc unused).
     pub ram_read_bw: Mibs,
+    /// Measured RAM write bandwidth, MiB/s.
     pub ram_write_bw: Mibs,
+    /// RAM load-to-use latency in cycles.
     pub ram_latency_cycles: u64,
     /// Fixed per-invocation multi-thread fork/join overhead in seconds —
     /// the paper's "overhead of multi-threading [that] is dominating for
@@ -136,6 +156,7 @@ impl CpuSpec {
         mibs * MIB
     }
 
+    /// The cache spec of a level (None for RAM).
     pub fn cache(&self, level: MemLevel) -> Option<&CacheLevelSpec> {
         match level {
             MemLevel::L1 => Some(&self.l1),
@@ -148,6 +169,7 @@ impl CpuSpec {
 /// Profile wrapper with provenance for reports.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ProfileSpec {
+    /// The processor description.
     pub cpu: CpuSpec,
     /// Where the numbers came from ("paper Table I", "host-measured", path).
     pub provenance: String,

@@ -27,8 +27,10 @@
 //!
 //! See the repository `README.md` for the quickstart and CLI reference,
 //! `DESIGN.md` for the experiment index (which module reproduces which
-//! paper table/figure) and the serving-core design, and `EXPERIMENTS.md`
-//! for paper-vs-measured results.
+//! paper table/figure), the serving-core design and the placement model,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench;

@@ -14,7 +14,7 @@
 //! cachebound bench compare a.json b.json  perf-regression gate (CI)
 //! cachebound trace <family> [flags] [--json PATH]   reuse histograms + MRC + prediction
 //! cachebound figmrc [--profile P] [--n N] miss-ratio-curve figure (CSV)
-//! cachebound serve --workers N --cache-entries K   sharded multi-worker serving
+//! cachebound serve --workers N [--placement cache-aware]   sharded multi-worker serving
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
 //! ```
@@ -29,12 +29,13 @@ use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
     BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
 };
+use cachebound::coordinator::PlacementPolicy;
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
 use cachebound::operators::workloads::{self, BenchWorkload};
 use cachebound::report;
 use cachebound::runtime::{Manifest, Registry};
-use cachebound::telemetry::{self, CacheProfile, TraceBudget};
+use cachebound::telemetry::{self, TraceBudget};
 use cachebound::tuner;
 use cachebound::util::table::{fmt_gflops, fmt_mibs, fmt_time, Align, Table};
 
@@ -189,11 +190,15 @@ commands:
                               tuned GEMM, L1/L2 capacities marked
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
         [--max-batch B] [--shards M] [--synthetic]
+        [--placement hash|cache-aware]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
                               when artifacts/ is absent or --synthetic is set;
                               synthetic mode attaches telemetry cache profiles
-                              and reports per-worker working-set pressure)
+                              and reports per-worker working-set pressure;
+                              --placement cache-aware packs artifacts onto
+                              workers by predicted co-run slowdown on the
+                              shared L2 instead of hashing)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -646,9 +651,14 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let workers = opts.usize("workers", 4)?;
     let n_requests = opts.usize("requests", 256)?;
     let seed = opts.usize("seed", 0xD15C)? as u64;
+    let placement = match opts.get("placement") {
+        Some(v) => PlacementPolicy::parse(v)?,
+        None => PlacementPolicy::Hash,
+    };
     let mut cfg = ServeConfig::new(workers).with_cache(opts.usize("cache-entries", 64)?);
     cfg.batch = BatchPolicy { max_batch: opts.usize("max-batch", 8)? };
     cfg.shards = opts.usize("shards", 0)?;
+    cfg.placement = placement;
 
     // Fall back to the synthetic mix only when artifacts are genuinely
     // absent; a present-but-broken manifest is a hard error, not a silent
@@ -671,6 +681,12 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             if menu.is_empty() {
                 bail!("manifest has no artifacts — run `make artifacts`");
             }
+            if placement == PlacementPolicy::CacheAware {
+                println!(
+                    "note: AOT artifacts carry no cache profiles — \
+                     cache-aware placement falls back to hash"
+                );
+            }
             let stream = workloads::bursty_requests(&menu, n_requests, seed);
             cfg.catalog = Some(m.clone());
             let exec_manifest = m.clone();
@@ -681,31 +697,44 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         }
         None => {
             // telemetry cache profiles for the synthetic mix: traced once
-            // per artifact, so serve metrics can report per-worker
-            // working-set pressure against the calibrated part
+            // per artifact (and cached per profile), so serve metrics can
+            // report per-worker working-set pressure against the calibrated
+            // part — and, under --placement cache-aware, feed the greedy
+            // co-run planner
             let cpu = profile_by_name(&opts.profile("a53"))?.cpu;
-            let profiles: std::collections::BTreeMap<String, CacheProfile> =
-                workloads::serving_mix()
-                    .into_iter()
-                    .map(|m| {
-                        let p = telemetry::synthetic_gemm_profile(&cpu, &m.artifact, m.n);
-                        (m.artifact, p)
-                    })
-                    .collect();
-            cfg.profiles = Some(Arc::new(profiles));
+            cfg.profiles = Some(telemetry::serving_mix_profiles(&cpu));
+            cfg.cpu = Some(cpu);
             let stream = workloads::serving_requests(n_requests, seed);
             let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+            if let Some(plan) = srv.placement() {
+                let mut t = Table::new(
+                    "Cache-aware placement plan (greedy co-run packing)",
+                    &["worker", "artifacts", "resident", "slowdown"],
+                )
+                .align(&[Align::Right, Align::Left, Align::Right, Align::Right]);
+                for w in &plan.plan {
+                    t.row(vec![
+                        w.worker.to_string(),
+                        w.artifacts.join(", "),
+                        format!("{} KiB", w.resident_bytes / 1024),
+                        format!("{:.3}", w.slowdown),
+                    ]);
+                }
+                println!("{}", t.to_markdown());
+            }
             (srv.serve_stream(stream), "synthetic native-GEMM mix")
         }
     };
 
     let m = &outcome.metrics;
     println!(
-        "served {}/{} requests in {:.2}s -> {:.1} req/s  ({workers} workers, {mode})",
+        "served {}/{} requests in {:.2}s -> {:.1} req/s  \
+         ({workers} workers, {mode}, {} placement)",
         m.completed,
         m.requests,
         outcome.wall_seconds,
         m.throughput(outcome.wall_seconds),
+        placement.name(),
     );
     println!(
         "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at admission)",
@@ -752,9 +781,10 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         let cpu = profile_by_name(&opts.profile("a53"))?.cpu;
         let mut t = Table::new(
             "Per-worker cache working-set pressure (telemetry profiles)",
-            &["worker", "artifacts", "profiled", "resident", "vs L1", "vs L2"],
+            &["worker", "artifacts", "profiled", "resident", "predicted", "vs L1", "vs L2"],
         )
         .align(&[
+            Align::Right,
             Align::Right,
             Align::Right,
             Align::Right,
@@ -768,11 +798,26 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
                 p.artifacts.to_string(),
                 p.profiled.to_string(),
                 format!("{} KiB", p.resident_bytes / 1024),
+                if placement == PlacementPolicy::CacheAware {
+                    format!("{} KiB", p.predicted_bytes / 1024)
+                } else {
+                    "-".into()
+                },
                 format!("{:.1}x", p.resident_bytes as f64 / cpu.l1.size_bytes as f64),
                 format!("{:.2}x", p.resident_bytes as f64 / cpu.l2.size_bytes as f64),
             ]);
         }
         println!("{}", t.to_markdown());
+    }
+    if let Some(re) = &outcome.rebalanced {
+        println!(
+            "note: observed pressure diverged from the plan — suggested rebalance \
+             (predicted total slowdown {:.3}):",
+            re.total_slowdown
+        );
+        for w in &re.plan {
+            println!("  worker {}: {}", w.worker, w.artifacts.join(", "));
+        }
     }
     if m.failed > 0 {
         // surface the root cause, not just the count

@@ -13,8 +13,11 @@ use crate::util::stats::Summary;
 /// One measured point of the sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct BwPoint {
+    /// Probe block size.
     pub block_bytes: usize,
+    /// Measured read bandwidth, bytes/s.
     pub read_bw: f64,  // bytes/s
+    /// Measured write bandwidth, bytes/s.
     pub write_bw: f64, // bytes/s
 }
 

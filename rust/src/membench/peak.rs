@@ -13,8 +13,11 @@ use std::time::Instant;
 /// Result of the peak measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct PeakResult {
+    /// FLOPs executed.
     pub flops: f64,
+    /// Wall time, seconds.
     pub seconds: f64,
+    /// Achieved FLOP/s.
     pub flops_per_sec: f64,
 }
 

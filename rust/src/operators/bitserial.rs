@@ -15,13 +15,16 @@
 
 use super::tensor::Tensor;
 
+/// Bits packed per word (u32 planes).
 pub const LANES: usize = 32;
 
 /// Packed bit-plane matrix: `planes[b]` is row-major (rows × kw) u32 where
 /// kw = K/32; bit `t` of word `w` is position `w*32 + t` of the row.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Packed {
+    /// Bit planes per element.
     pub bits: usize,
+    /// Packed rows.
     pub rows: usize,
     /// packed words per row
     pub kw: usize,
@@ -33,16 +36,19 @@ pub struct Packed {
 
 impl Packed {
     #[inline]
+    /// One bit plane as a row-major word slice.
     pub fn plane(&self, b: usize) -> &[u32] {
         &self.data[b * self.rows * self.kw..(b + 1) * self.rows * self.kw]
     }
 
     #[inline]
+    /// One row of one bit plane.
     pub fn row(&self, b: usize, r: usize) -> &[u32] {
         let base = (b * self.rows + r) * self.kw;
         &self.data[base..base + self.kw]
     }
 
+    /// Total packed size in bytes.
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }

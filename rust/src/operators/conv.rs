@@ -20,18 +20,22 @@ pub struct ConvSchedule {
 }
 
 impl ConvSchedule {
+    /// Schedule with the given output-channel and row blocks.
     pub fn new(bco: usize, brow: usize) -> Self {
         ConvSchedule { bco, brow }
     }
 
+    /// The deliberately-bad 1×1 blocking of the "naive" column.
     pub fn naive() -> Self {
         ConvSchedule::new(1, 1)
     }
 
+    /// A generally-good default (pre-tuning starting point).
     pub fn default_tuned() -> Self {
         ConvSchedule::new(32, 4)
     }
 
+    /// Clamp blocks to the layer's actual extents.
     pub fn clamp(&self, cout: usize, ho: usize) -> ConvSchedule {
         ConvSchedule {
             bco: self.bco.min(cout).max(1),

@@ -27,6 +27,7 @@ pub struct GemmSchedule {
 }
 
 impl GemmSchedule {
+    /// Schedule with the given tile sizes and unroll factor.
     pub fn new(bm: usize, bn: usize, bk: usize, unroll: usize) -> Self {
         GemmSchedule { bm, bn, bk, unroll }
     }
@@ -47,6 +48,7 @@ impl GemmSchedule {
         (self.bm * self.bk + self.bk * self.bn) * elem_bytes + self.bm * self.bn * 4
     }
 
+    /// Clamp tiles to the problem's actual extents.
     pub fn clamp(&self, m: usize, n: usize, k: usize) -> GemmSchedule {
         GemmSchedule {
             bm: self.bm.min(m).max(1),

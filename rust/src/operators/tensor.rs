@@ -9,11 +9,14 @@ use crate::util::rng::stream_at;
 /// Row-major dense tensor over a flat `Vec<T>`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T> {
+    /// Dimension extents (row-major layout).
     pub shape: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<T>,
 }
 
 impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         Tensor {
@@ -22,6 +25,7 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// Tensor over an existing element vector (length-checked).
     pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor {
@@ -30,10 +34,12 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -7,14 +7,23 @@
 /// One ResNet-18 convolution layer (paper Table III).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvLayer {
+    /// Table III layer name ("C2".."C11").
     pub name: &'static str,
+    /// Batch size.
     pub b: usize,
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Square kernel extent.
     pub k: usize,
+    /// Convolution stride.
     pub stride: usize,
+    /// Zero padding.
     pub pad: usize,
 }
 
@@ -24,6 +33,7 @@ impl ConvLayer {
         (self.h + 2 * self.pad - self.k) / self.stride + 1
     }
 
+    /// Real tensor output width.
     pub fn wo(&self) -> usize {
         (self.w + 2 * self.pad - self.k) / self.stride + 1
     }
@@ -35,6 +45,7 @@ impl ConvLayer {
         (self.h + 2 * self.pad) / self.stride
     }
 
+    /// Paper eq. (3) output width (no kernel-extent term).
     pub fn wo_eq3(&self) -> usize {
         (self.w + 2 * self.pad) / self.stride
     }
@@ -108,14 +119,28 @@ pub fn gemm_macs(n: usize) -> u64 {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BenchWorkload {
     /// Tuned-schedule float32 square GEMM of size `n`.
-    Gemm { n: usize },
+    Gemm {
+        /// Square matrix size.
+        n: usize,
+    },
     /// Float32 spatial-pack conv over a Table III layer.
-    Conv { layer: ConvLayer },
+    Conv {
+        /// The layer geometry.
+        layer: ConvLayer,
+    },
     /// Int8 QNN conv over a Table III layer.
-    QnnConv { layer: ConvLayer },
+    QnnConv {
+        /// The layer geometry.
+        layer: ConvLayer,
+    },
     /// Unipolar bit-serial GEMM of size `n` at `bits` activation/weight bits
     /// (runtime activation packing included, §V-A).
-    Bitserial { n: usize, bits: usize },
+    Bitserial {
+        /// Square matrix size.
+        n: usize,
+        /// Activation and weight bit width.
+        bits: usize,
+    },
 }
 
 impl BenchWorkload {

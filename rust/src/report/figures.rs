@@ -24,14 +24,19 @@ fn sim_gemm_key(cpu: &CpuSpec, n: usize, s: GemmSchedule) -> String {
 
 /// Fig 1: execution time vs matrix size with hardware bound lines.
 pub struct Fig1 {
+    /// Matrix sizes of the sweep.
     pub sizes: Vec<usize>,
+    /// Tuned-schedule simulated times.
     pub tuned_s: Vec<f64>,
+    /// Naive-schedule simulated times.
     pub naive_s: Vec<f64>,
+    /// The four bound lines per size.
     pub bounds: Vec<BoundSet>,
     /// Which bound line best explains the tuned times (expected: L1-read).
     pub best_bound: String,
 }
 
+/// Build Fig 1 (time vs size + bound lines) for `profile`.
 pub fn fig1(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig1, Csv)> {
     let cpu = profile_by_name(profile)?.cpu;
     let sizes = workloads::gemm_sweep_sizes();
@@ -90,13 +95,17 @@ pub fn fig1(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig1, Csv)> {
 
 /// Fig 2/3: conv layer times (fig2) and sorted GFLOP/s (fig3) vs bounds.
 pub struct Fig23 {
+    /// Table III layer names, in order.
     pub layers: Vec<String>,
+    /// Simulated time per layer.
     pub measured_s: Vec<f64>,
+    /// The four bound lines per layer.
     pub bounds: Vec<BoundSet>,
     /// (layer, gflops) sorted descending — the Fig 3 ordering.
     pub sorted_perf: Vec<(String, f64)>,
 }
 
+/// Build Figs 2/3 (conv times + sorted GFLOP/s) for `profile`.
 pub fn fig2_fig3(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig23, Csv)> {
     let cpu = profile_by_name(profile)?.cpu;
     let layers = pipeline.conv_layers(profile)?;
@@ -145,9 +154,11 @@ pub fn fig2_fig3(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig23, Csv)>
 pub struct Fig45 {
     /// (bits, unipolar, size, gops, bw_req bytes/s)
     pub points: Vec<(usize, bool, usize, f64, f64)>,
+    /// L1 read bandwidth, bytes/s (the Fig 5 reference line).
     pub l1_bw: f64,
 }
 
+/// Build Figs 4/5 (bit-serial perf + required bandwidth).
 pub fn fig4_fig5(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig45, Csv, Csv)> {
     let cpu = profile_by_name(profile)?.cpu;
     let sizes = vec![128, 256, 512, 1024, 2048, 4096, 8192];
@@ -204,24 +215,32 @@ fn polarity(unipolar: bool) -> &'static str {
 pub struct Fig678 {
     /// per layer: (name, f32_s, qnn8_s, map bits -> bitserial_s (unipolar))
     pub rows: Vec<QuantRow>,
+    /// L1 read bandwidth, bytes/s (the Fig 7 reference line).
     pub l1_bw: f64,
 }
 
 #[derive(Clone, Debug)]
+/// One layer's quantization outcomes (f32 vs int8 vs bit-serial).
 pub struct QuantRow {
+    /// Layer name.
     pub layer: String,
+    /// Layer MACs (paper accounting).
     pub macs: u64,
+    /// Float32 simulated time.
     pub f32_s: f64,
+    /// Int8 QNN simulated time.
     pub qnn8_s: f64,
     /// (bits, unipolar seconds, bipolar seconds)
     pub bitserial_s: Vec<(usize, f64, f64)>,
 }
 
 impl QuantRow {
+    /// Int8 speedup over float32.
     pub fn speedup_qnn(&self) -> f64 {
         self.f32_s / self.qnn8_s
     }
 
+    /// Bit-serial speedup over float32 at `bits`, if swept.
     pub fn speedup_bits(&self, bits: usize, unipolar: bool) -> Option<f64> {
         self.bitserial_s
             .iter()
@@ -230,6 +249,7 @@ impl QuantRow {
     }
 }
 
+/// Build Figs 6/7/8 (quantized conv speedups/bw/GFLOP/s).
 pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678, Csv, Csv, Csv)> {
     let cpu = profile_by_name(profile)?.cpu;
     let bits = vec![1usize, 2, 4, 8];
@@ -332,16 +352,23 @@ pub fn fig6_fig7_fig8(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig678,
 /// versus cache capacity for one traced workload, with the profile's
 /// L1/L2 sizes marked and predicted-vs-simulated classification.
 pub struct FigMrc {
+    /// "family/shape" of the traced workload.
     pub workload: String,
     /// `(capacity_bytes, predicted_hit_rate)` — the curve.
     pub points: Vec<(u64, f64)>,
+    /// Profile L1 capacity (the first marked line).
     pub l1_bytes: u64,
+    /// Profile L2 capacity (the second marked line).
     pub l2_bytes: u64,
     /// Predicted hit rates at the profile's L1/L2 geometry.
     pub l1_hit_rate: f64,
+    /// Predicted L2 hit rate over the L1-miss stream.
     pub l2_hit_rate: f64,
+    /// Working-set estimate (98% of peak hit rate).
     pub working_set_bytes: u64,
+    /// Boundness class of the full-simulation time.
     pub sim_class: String,
+    /// Boundness class of the MRC prediction.
     pub predicted_class: String,
 }
 
@@ -379,13 +406,19 @@ pub fn fig_mrc(profile: &str, n: usize) -> Result<(FigMrc, Csv)> {
 
 /// Fig 9: GEMM GFLOP/s over size for naive/tuned/blas (the appendix plot).
 pub struct Fig9 {
+    /// Matrix sizes of the sweep.
     pub sizes: Vec<usize>,
+    /// Tuned GFLOP/s per size.
     pub tuned_gflops: Vec<f64>,
+    /// Naive GFLOP/s per size.
     pub naive_gflops: Vec<f64>,
+    /// OpenBLAS reference GFLOP/s (paper column).
     pub blas_gflops: Vec<f64>,
+    /// Eq. (1) theoretical peak.
     pub peak_gflops: f64,
 }
 
+/// Build Fig 9 (GFLOP/s over size, three implementations).
 pub fn fig9(pipeline: &mut Pipeline, profile: &str) -> Result<(Fig9, Csv)> {
     let cpu = profile_by_name(profile)?.cpu;
     let sizes = workloads::gemm_sweep_sizes();

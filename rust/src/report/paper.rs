@@ -22,11 +22,17 @@ pub fn bandwidth_table(profile: &str) -> Vec<(&'static str, &'static str, f64, f
 
 /// One row of Table IV/V: (N, openBLAS, naive, tuned, measured peak, theoretical peak).
 pub struct GemmRow {
+    /// Matrix size.
     pub n: usize,
+    /// OpenBLAS GFLOP/s.
     pub openblas: f64,
+    /// TVM-naive GFLOP/s.
     pub naive: f64,
+    /// TVM-tuned GFLOP/s.
     pub tuned: f64,
+    /// arm-peak measured GFLOP/s.
     pub measured_peak: f64,
+    /// Eq. (1) theoretical GFLOP/s.
     pub theoretical_peak: f64,
 }
 
@@ -72,6 +78,7 @@ pub fn gemm_table_a72() -> Vec<GemmRow> {
     .collect()
 }
 
+/// Table IV or V by profile name (empty for unknown profiles).
 pub fn gemm_table(profile: &str) -> Vec<GemmRow> {
     match profile {
         "cortex-a53" => gemm_table_a53(),

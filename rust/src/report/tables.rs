@@ -94,11 +94,17 @@ pub fn bandwidth_table(profile: &ProfileSpec, host: Option<&[BwPoint]>) -> (Tabl
 /// One rendered row of Table IV/V (simulated + paper).
 #[derive(Clone, Debug)]
 pub struct GemmTableRow {
+    /// Matrix size.
     pub n: usize,
+    /// OpenBLAS reference GFLOP/s (paper column).
     pub blas_gflops: f64,
+    /// Naive-schedule simulated GFLOP/s.
     pub naive_gflops: f64,
+    /// Default-tuned-schedule simulated GFLOP/s.
     pub tuned_gflops: f64,
+    /// Auto-tuner-schedule simulated GFLOP/s.
     pub tuned_autotuned_gflops: f64,
+    /// Eq. (1) theoretical GFLOP/s.
     pub theoretical_peak: f64,
 }
 

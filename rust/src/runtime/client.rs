@@ -34,6 +34,7 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

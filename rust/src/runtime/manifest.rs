@@ -17,12 +17,16 @@ use crate::util::json::{self, Value};
 /// and the SplitMix64 seed for regeneration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InputSpec {
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Dtype spec ("f32" | "i8" | "u32" | "i32u<bits>").
     pub dtype: String,
+    /// SplitMix64 seed regenerating the tensor bit-exactly.
     pub seed: u64,
 }
 
 impl InputSpec {
+    /// Element count (shape product).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -31,18 +35,26 @@ impl InputSpec {
 /// One expected output: shape, numpy dtype name, checksum + exactness.
 #[derive(Clone, Debug, PartialEq)]
 pub struct OutputSpec {
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Numpy dtype name.
     pub dtype: String,
+    /// Expected output checksum.
     pub checksum: f64,
+    /// Whether the checksum must match bit-exactly.
     pub exact: bool,
 }
 
 /// One lowered operator variant.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact name (the serving/validation identity).
     pub name: String,
+    /// HLO text file, relative to the artifact dir.
     pub file: String,
+    /// Protocol inputs (regenerated from seeds).
     pub inputs: Vec<InputSpec>,
+    /// Expected outputs with checksums.
     pub outputs: Vec<OutputSpec>,
     /// "gemm" | "conv" | "qnn_gemm" | "bitserial_gemm" | ...
     pub kind: String,
@@ -53,6 +65,7 @@ pub struct ArtifactSpec {
 }
 
 impl ArtifactSpec {
+    /// Logical FLOPs (2·MACs).
     pub fn flops(&self) -> f64 {
         2.0 * self.macs as f64
     }
@@ -62,6 +75,7 @@ impl ArtifactSpec {
         self.meta.get(key).and_then(|v| v.as_u64().ok())
     }
 
+    /// String-valued kind-specific metadata accessor.
     pub fn meta_str(&self, key: &str) -> Option<&str> {
         self.meta.get(key).and_then(|v| v.as_str().ok())
     }
@@ -70,7 +84,9 @@ impl ArtifactSpec {
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every lowered operator variant.
     pub artifacts: Vec<ArtifactSpec>,
     /// (name, macs) pairs of the ResNet-18 workload grid for cross-checks.
     pub resnet_macs: Vec<(String, u64)>,
@@ -143,6 +159,7 @@ impl Manifest {
         Ok(Manifest { dir, artifacts, resnet_macs })
     }
 
+    /// Look up an artifact by name.
     pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }
@@ -152,6 +169,7 @@ impl Manifest {
         self.artifacts.iter().filter(|a| a.kind == kind).collect()
     }
 
+    /// Absolute path of an artifact's HLO file.
     pub fn hlo_path(&self, a: &ArtifactSpec) -> PathBuf {
         self.dir.join(&a.file)
     }

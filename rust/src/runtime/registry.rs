@@ -20,12 +20,16 @@ use super::manifest::{ArtifactSpec, Manifest};
 /// Outcome of validating one artifact against its manifest checksums.
 #[derive(Clone, Debug)]
 pub struct Validation {
+    /// Artifact that was validated.
     pub name: String,
+    /// All outputs matched their checksums.
     pub passed: bool,
     /// (expected, actual, relative error) per output.
     pub details: Vec<(f64, f64, f64)>,
 }
 
+/// Loaded-artifact registry: compiles HLO through PJRT on demand and
+/// caches executables + protocol inputs per artifact.
 pub struct Registry {
     /// The parsed manifest.  Held through `Arc` so a serving front-end and
     /// many per-worker registries can share one parse: the manifest is
@@ -39,6 +43,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Open `<artifacts_dir>/manifest.json` and build a registry.
     pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         Self::with_manifest(Arc::new(Manifest::load(artifacts_dir)?))
     }
@@ -56,6 +61,7 @@ impl Registry {
         })
     }
 
+    /// The underlying PJRT runtime handle.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }

@@ -12,35 +12,46 @@ use crate::telemetry::sink::{EventSink, NullSink};
 /// Kind of access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AccessKind {
+    /// Load.
     Read,
+    /// Store (write-allocate: misses fill the line first).
     Write,
 }
 
 /// Counters for one cache level.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Read accesses that hit.
     pub read_hits: u64,
+    /// Read accesses that missed.
     pub read_misses: u64,
+    /// Write accesses that hit.
     pub write_hits: u64,
+    /// Write accesses that missed.
     pub write_misses: u64,
+    /// Valid lines displaced to make room.
     pub evictions: u64,
     /// Dirty evictions propagating a line write to the next level.
     pub writebacks: u64,
 }
 
 impl CacheStats {
+    /// Total hits (read + write).
     pub fn hits(&self) -> u64 {
         self.read_hits + self.write_hits
     }
 
+    /// Total misses (read + write).
     pub fn misses(&self) -> u64 {
         self.read_misses + self.write_misses
     }
 
+    /// Total accesses.
     pub fn accesses(&self) -> u64 {
         self.hits() + self.misses()
     }
 
+    /// Hits / accesses (0 when nothing was accessed).
     pub fn hit_rate(&self) -> f64 {
         if self.accesses() == 0 {
             return 0.0;
@@ -70,18 +81,21 @@ pub struct SetAssocCache {
     line_shift: u32,
     lines: Vec<Line>,
     clock: u64,
+    /// Hit/miss/eviction counters of this level.
     pub stats: CacheStats,
 }
 
 /// Result of one access at this level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AccessResult {
+    /// The access found its line resident.
     pub hit: bool,
     /// A dirty line was evicted and must be written to the level below.
     pub writeback: bool,
 }
 
 impl SetAssocCache {
+    /// Cache with `spec`'s geometry, all lines invalid.
     pub fn new(spec: &CacheLevelSpec) -> Self {
         let sets = spec.sets();
         assert!(sets.is_power_of_two(), "set count must be a power of two");
@@ -106,6 +120,7 @@ impl SetAssocCache {
         }
     }
 
+    /// Line size in bytes.
     pub fn line_bytes(&self) -> usize {
         self.line_bytes
     }

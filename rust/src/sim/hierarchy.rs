@@ -25,16 +25,23 @@ pub struct LevelCounts {
     pub wb_l2_bytes: u64,
     /// Line bytes written back L2 → RAM.
     pub wb_ram_bytes: u64,
+    /// Core accesses driven through the hierarchy.
     pub accesses: u64,
 }
 
+/// Two-level cache hierarchy (L1 → L2 → RAM) with per-level byte
+/// counts — the trace-driven half of the ARM substitution.
 pub struct Hierarchy {
+    /// The L1 data cache.
     pub l1: SetAssocCache,
+    /// The shared L2.
     pub l2: SetAssocCache,
+    /// Per-level traffic accumulated so far.
     pub counts: LevelCounts,
 }
 
 impl Hierarchy {
+    /// Hierarchy with `cpu`'s L1/L2 geometry, empty.
     pub fn new(cpu: &CpuSpec) -> Self {
         Hierarchy {
             l1: SetAssocCache::new(&cpu.l1),
@@ -97,6 +104,7 @@ impl Hierarchy {
         }
     }
 
+    /// Invalidate everything and zero the counters.
     pub fn reset(&mut self) {
         self.l1.reset();
         self.l2.reset();

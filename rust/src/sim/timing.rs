@@ -20,10 +20,15 @@ use super::traffic::Traffic;
 /// Which resource bounds the operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Bound {
+    /// Limited by the eq. (1) compute peak.
     Compute,
+    /// Limited by L1 read bandwidth (the paper's headline regime).
     L1Read,
+    /// Limited by L2 read bandwidth.
     L2Read,
+    /// Limited by RAM read bandwidth.
     RamRead,
+    /// Limited by the output write stream.
     Write,
     /// Serialized miss latency (low memory-level parallelism) — what makes
     /// unprefetchable "naive" schedules slower than any bandwidth bound.
@@ -31,6 +36,7 @@ pub enum Bound {
 }
 
 impl Bound {
+    /// Display name ("compute", "L1-read", ...).
     pub fn name(self) -> &'static str {
         match self {
             Bound::Compute => "compute",
@@ -46,13 +52,21 @@ impl Bound {
 /// Full decomposition of a simulated execution time.
 #[derive(Clone, Copy, Debug)]
 pub struct TimeBreakdown {
+    /// Compute-bound time.
     pub compute_s: f64,
+    /// L1 read time.
     pub l1_s: f64,
+    /// L2 read time.
     pub l2_s: f64,
+    /// RAM read time.
     pub ram_s: f64,
+    /// Output write time.
     pub write_s: f64,
+    /// Fixed multi-threading fork/join overhead.
     pub overhead_s: f64,
+    /// max(all components) + overhead — the simulated time.
     pub total_s: f64,
+    /// Which component was binding.
     pub bound: Bound,
 }
 

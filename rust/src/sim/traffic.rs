@@ -46,10 +46,12 @@ const CAPACITY_UTIL: f64 = 0.75;
 /// The analytic traffic model, parameterized by the machine.
 #[derive(Clone, Debug)]
 pub struct TrafficModel {
+    /// The machine whose cache capacities parameterize the model.
     pub cpu: CpuSpec,
 }
 
 impl TrafficModel {
+    /// Model for one CPU profile.
     pub fn new(cpu: &CpuSpec) -> Self {
         TrafficModel { cpu: cpu.clone() }
     }

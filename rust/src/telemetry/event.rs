@@ -20,15 +20,21 @@ use crate::sim::cache::AccessKind;
 /// untraced traffic (the default of the sink-free `access` path).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Operand {
+    /// First input (GEMM A panel / activations).
     A,
+    /// Second input (GEMM B panel / weights).
     B,
+    /// Output accumulator.
     C,
+    /// Untraced traffic (the sink-free `access` path).
     Other,
 }
 
 impl Operand {
+    /// Every operand, in [`Operand::index`] order.
     pub const ALL: [Operand; 4] = [Operand::A, Operand::B, Operand::C, Operand::Other];
 
+    /// Display name ("A", "B", "C", "other").
     pub fn name(self) -> &'static str {
         match self {
             Operand::A => "A",
@@ -63,6 +69,7 @@ pub enum EventKind {
 }
 
 impl EventKind {
+    /// Display name ("hit", "miss", "eviction", "writeback").
     pub fn name(self) -> &'static str {
         match self {
             EventKind::Hit => "hit",
@@ -78,6 +85,7 @@ impl EventKind {
 pub struct CacheEvent {
     /// Which cache level produced the event.
     pub level: MemLevel,
+    /// What happened (hit/miss/eviction/writeback).
     pub kind: EventKind,
     /// Read/write flavour of the triggering access (for `Eviction` and
     /// `Writeback` this is the access that *caused* the displacement).
@@ -88,6 +96,7 @@ pub struct CacheEvent {
     /// Bytes requested by the access (element width for L1 accesses, line
     /// width for fills and writebacks).
     pub bytes: u32,
+    /// Operand stream the event belongs to.
     pub operand: Operand,
 }
 

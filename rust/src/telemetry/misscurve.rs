@@ -44,7 +44,9 @@ pub struct PredictedRates {
 /// One working-set knee: the capacity at which the hit rate jumps.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Knee {
+    /// Capacity at the knee, in cache lines.
     pub capacity_lines: usize,
+    /// Capacity at the knee, in bytes.
     pub capacity_bytes: u64,
     /// Hit rate just past the knee.
     pub hit_rate: f64,
@@ -53,14 +55,17 @@ pub struct Knee {
 }
 
 impl MissRatioCurve {
+    /// Curve over `hist` with `line_bytes`-sized lines.
     pub fn new(hist: ReuseHistogram, line_bytes: usize) -> Self {
         MissRatioCurve { hist, line_bytes }
     }
 
+    /// Cache-line size the distances were measured in.
     pub fn line_bytes(&self) -> usize {
         self.line_bytes
     }
 
+    /// Total accesses behind the curve.
     pub fn accesses(&self) -> u64 {
         self.hist.total()
     }
@@ -106,6 +111,21 @@ impl MissRatioCurve {
             out.push((bytes, rate));
         }
         out
+    }
+
+    /// The curve at every sample capacity, *without* collapsing adjacent
+    /// duplicate rates — the lossless series a [`super::CacheProfile`]
+    /// carries so the co-run interference model (`analysis::interference`)
+    /// can re-read the curve at arbitrary effective capacities after the
+    /// histogram itself is gone.  Because the sample grid contains every
+    /// power-of-two line count, a step-left lookup over these points
+    /// reproduces [`Self::predict`] exactly for the built-in profiles
+    /// (whose L1/L2 capacities are powers of two).
+    pub fn sampled(&self) -> Vec<(u64, f64)> {
+        sample_capacities()
+            .into_iter()
+            .map(|lines| ((lines * self.line_bytes) as u64, self.hist.hit_rate(lines)))
+            .collect()
     }
 
     /// Working-set knees: capacities where the hit rate gains at least

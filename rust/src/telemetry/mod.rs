@@ -22,10 +22,29 @@
 //!   report, and the per-artifact [`profile::CacheProfile`]s the serving
 //!   core uses for working-set-pressure accounting.
 //!
-//! The `analysis::predict` module consumes the MRC to derive boundness
-//! classes (L1/L2/RAM/compute) for arbitrary shapes without
+//! The [`crate::analysis::predict`] module consumes the MRC to derive
+//! boundness classes (L1/L2/RAM/compute) for arbitrary shapes without
 //! re-simulating; `rust/tests/telemetry_mrc.rs` validates prediction
-//! against full simulation on the paper's Tables IV/V GEMM grid.
+//! against full simulation on the paper's Tables IV/V GEMM grid.  The
+//! per-artifact [`CacheProfile`]s carry the sampled curve onward to the
+//! serving layer, where [`crate::analysis::interference`] re-reads it at
+//! reduced capacities and [`crate::coordinator::placement`] packs
+//! artifacts onto workers accordingly.
+//!
+//! One traced replay, end to end:
+//!
+//! ```
+//! use cachebound::hw::profile_by_name;
+//! use cachebound::operators::workloads::BenchWorkload;
+//! use cachebound::telemetry::{trace_workload, TraceBudget};
+//!
+//! let cpu = profile_by_name("a53").unwrap().cpu;
+//! let r = trace_workload(&cpu, &BenchWorkload::Gemm { n: 48 }, TraceBudget::new(16));
+//! assert!(r.accesses > 0);
+//! assert!(!r.mrc_points.is_empty());
+//! // the same replay yields the simulated ground truth *and* the prediction
+//! assert!(r.sim_l1_hit_rate > 0.0 && r.prediction.rates.l1_hit_rate > 0.0);
+//! ```
 
 pub mod event;
 pub mod misscurve;
@@ -36,7 +55,8 @@ pub mod sink;
 pub use event::{CacheEvent, EventKind, Operand};
 pub use misscurve::{Knee, MissRatioCurve, PredictedRates};
 pub use profile::{
-    synthetic_gemm_profile, trace_workload, CacheProfile, TraceBudget, TraceReport, TraceSummary,
+    serving_mix_profiles, synthetic_gemm_profile, synthetic_gemm_profile_budgeted,
+    trace_workload, CacheProfile, TraceBudget, TraceReport, TraceSummary,
 };
 pub use reuse::{ReuseAnalyzer, ReuseHistogram};
 pub use sink::{CountingSink, EventSink, NullSink, TeeSink, VecSink};

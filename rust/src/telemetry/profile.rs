@@ -45,6 +45,7 @@ pub struct TraceBudget {
 }
 
 impl TraceBudget {
+    /// Budget capped at `max_rows` outer rows (min 1).
     pub fn new(max_rows: usize) -> Self {
         TraceBudget { max_rows: max_rows.max(1) }
     }
@@ -59,45 +60,74 @@ impl Default for TraceBudget {
 /// Reuse profile of one operand stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct OperandProfile {
+    /// Operand name ("A", "B", "C", "other").
     pub operand: String,
+    /// Accesses attributed to this operand.
     pub accesses: u64,
+    /// Cold first touches (infinite reuse distance).
     pub cold: u64,
     /// Median reuse distance in lines (None when cold/far dominates).
     pub p50_lines: Option<u64>,
+    /// Log₂-bucketed distance histogram rows.
     pub buckets: Vec<DistanceBucket>,
 }
 
 /// Everything one traced replay produced.
 #[derive(Clone, Debug)]
 pub struct TraceReport {
+    /// Operator family label ("gemm", "conv", "qnn", "bitserial").
     pub family: String,
+    /// Shape label ("n512", "C2", "n64b2").
     pub shape: String,
+    /// Name of the CPU profile the replay ran against.
     pub cpu_name: String,
+    /// The workload that was replayed.
+    pub workload: BenchWorkload,
     /// Row budget the replay ran under.
     pub max_rows: usize,
     /// Full-shape work / traced work.
     pub scale: f64,
+    /// Core accesses in the traced replay.
     pub accesses: u64,
+    /// Distinct cache lines the replay touched.
     pub lines_touched: u64,
+    /// `lines_touched × line_bytes` — the traced memory footprint (what the
+    /// replay would occupy in an infinite cache).  Row-budgeted replays
+    /// undercount the truncated operand rows but always cover the dominant
+    /// shared panel in full.
+    pub footprint_bytes: u64,
+    /// What the traced replay measured, plus the truncation scale — enough
+    /// to re-run the rates → traffic extrapolation at a different cache
+    /// capacity (`analysis::interference`).
+    pub meta: TraceMeta,
+    /// The miss-ratio curve at every sample capacity (no dedup), as
+    /// `(capacity_bytes, hit_rate)` — the lossless series behind
+    /// [`CacheProfile::mrc_points`].
+    pub mrc_sampled: Vec<(u64, f64)>,
     /// Trace-simulator per-level byte counts (the ground truth).
     pub counts: LevelCounts,
     /// Set-associative simulated hit rates (L1 over all accesses, L2 over
     /// the L1-miss stream).
     pub sim_l1_hit_rate: f64,
+    /// Simulated L2 hit rate over the L1-miss stream.
     pub sim_l2_hit_rate: f64,
     /// Full-simulation roofline time and class (same classifier as the
     /// prediction — agreement is the validation).
     pub sim_time_s: f64,
+    /// Boundness class of the full-simulation time.
     pub sim_class: String,
     /// The MRC-side prediction.
     pub prediction: MrcPrediction,
+    /// Boundness class of the MRC prediction.
     pub predicted_class: String,
     /// Smallest capacity reaching [`WORKING_SET_FRACTION`] of the peak
     /// finite hit rate.
     pub working_set_bytes: u64,
+    /// Per-operand reuse profiles (A/B/C split).
     pub operands: Vec<OperandProfile>,
     /// `(capacity_bytes, predicted_hit_rate)` — the MRC data series.
     pub mrc_points: Vec<(u64, f64)>,
+    /// Working-set knees of the miss-ratio curve.
     pub knees: Vec<Knee>,
 }
 
@@ -169,10 +199,14 @@ pub fn trace_workload(cpu: &CpuSpec, w: &BenchWorkload, budget: TraceBudget) -> 
         family: w.family().to_string(),
         shape: w.shape(),
         cpu_name: cpu.name.clone(),
+        workload: *w,
         max_rows,
         scale,
         accesses: analyzer.accesses(),
         lines_touched: analyzer.lines_touched() as u64,
+        footprint_bytes: analyzer.lines_touched() as u64 * cpu.l1.line_bytes as u64,
+        meta,
+        mrc_sampled: mrc.sampled(),
         counts: h.counts,
         sim_l1_hit_rate: h.l1.stats.hit_rate(),
         sim_l2_hit_rate: h.l2.stats.hit_rate(),
@@ -225,7 +259,9 @@ impl TraceReport {
         }
     }
 
-    /// Per-artifact profile for the serving core.
+    /// Per-artifact profile for the serving core — carries the full
+    /// sampled MRC and trace meta so the placement layer can re-price the
+    /// artifact at a reduced effective L2 (`analysis::interference`).
     pub fn cache_profile(&self, artifact: &str) -> CacheProfile {
         CacheProfile {
             artifact: artifact.to_string(),
@@ -233,7 +269,13 @@ impl TraceReport {
             l1_hit_rate: self.prediction.rates.l1_hit_rate,
             l2_hit_rate: self.prediction.rates.l2_hit_rate,
             working_set_bytes: self.working_set_bytes,
+            footprint_bytes: self.footprint_bytes,
             predicted_class: self.predicted_class.clone(),
+            solo_time_s: self.prediction.time.total_s,
+            workload: Some(self.workload),
+            meta: Some(self.meta),
+            mrc_points: self.mrc_sampled.clone(),
+            knees: self.knees.clone(),
         }
     }
 
@@ -331,19 +373,30 @@ impl TraceReport {
 /// and `BENCH.json` carry.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceSummary {
+    /// "family/shape" identity of the traced workload.
     pub key: String,
+    /// CPU profile the trace ran against.
     pub profile: String,
+    /// Core accesses in the traced replay.
     pub accesses: u64,
+    /// Set-associative simulated L1 hit rate.
     pub sim_l1_hit_rate: f64,
+    /// Simulated L2 hit rate over the L1-miss stream.
     pub sim_l2_hit_rate: f64,
+    /// MRC-predicted L1 hit rate.
     pub mrc_l1_hit_rate: f64,
+    /// MRC-predicted L2 hit rate.
     pub mrc_l2_hit_rate: f64,
+    /// Boundness class of the full-simulation time.
     pub sim_class: String,
+    /// Boundness class of the MRC prediction.
     pub predicted_class: String,
+    /// Working-set estimate (98% of peak hit rate).
     pub working_set_bytes: u64,
 }
 
 impl TraceSummary {
+    /// Did prediction and simulation reach the same class?
     pub fn classes_agree(&self) -> bool {
         self.sim_class == self.predicted_class
     }
@@ -365,22 +418,110 @@ impl TraceSummary {
 
 /// Per-artifact cache profile for the serving core: what a worker's cache
 /// working set looks like when this artifact is resident.
+///
+/// Beyond the scalar summary the serving metrics consume, the profile
+/// carries the sampled miss-ratio curve, the working-set knees and the
+/// trace meta — everything `analysis::interference` needs to re-price the
+/// artifact's traffic at a *reduced* effective L2 capacity when it shares
+/// the cache with co-resident artifacts.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CacheProfile {
+    /// Artifact name this profile describes.
     pub artifact: String,
+    /// Core accesses in the traced replay.
     pub accesses: u64,
+    /// MRC-predicted L1 hit rate at the profiled CPU's geometry.
     pub l1_hit_rate: f64,
+    /// MRC-predicted L2 hit rate over the L1-miss stream.
     pub l2_hit_rate: f64,
     /// Estimated working-set size (bytes of cache for
     /// [`WORKING_SET_FRACTION`] of the peak hit rate).
     pub working_set_bytes: u64,
+    /// Traced memory footprint (`lines_touched × line_bytes`) — what the
+    /// artifact *occupies* in a large cache, as opposed to what it *reuses*
+    /// ([`Self::working_set_bytes`]).  Streaming operators occupy far more
+    /// than they reuse; L2 partitioning uses the larger of the two.
+    pub footprint_bytes: u64,
+    /// `analysis::classify` verdict of the solo prediction.
     pub predicted_class: String,
+    /// MRC-predicted solo execution time (full L2 to itself), seconds.
+    pub solo_time_s: f64,
+    /// The replayed workload (None for hand-built profiles — such profiles
+    /// cannot be re-priced and are treated as interference-neutral).
+    pub workload: Option<BenchWorkload>,
+    /// The replay's [`TraceMeta`] (None for hand-built profiles).
+    pub meta: Option<TraceMeta>,
+    /// Sampled miss-ratio curve `(capacity_bytes, hit_rate)`, ascending,
+    /// no dedup — step-left lookup reproduces the histogram's hit rate
+    /// exactly at every power-of-two line count.
+    pub mrc_points: Vec<(u64, f64)>,
+    /// Working-set knees of the curve (≥ 5 p.p. hit-rate gains).
+    pub knees: Vec<Knee>,
+}
+
+impl CacheProfile {
+    /// Can this profile be re-priced at a reduced capacity?  True for
+    /// profiles built by [`trace_workload`]; false for hand-assembled ones,
+    /// which the interference model treats as occupying their working set
+    /// but running at their solo time.
+    pub fn repriceable(&self) -> bool {
+        self.workload.is_some() && self.meta.is_some() && !self.mrc_points.is_empty()
+    }
 }
 
 /// Profile a synthetic serving artifact (`syn_gemm_n<N>`) by tracing its
 /// tiled GEMM untruncated (serving GEMMs are small).
 pub fn synthetic_gemm_profile(cpu: &CpuSpec, artifact: &str, n: usize) -> CacheProfile {
     trace_workload(cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(n)).cache_profile(artifact)
+}
+
+/// Cache profiles for the whole synthetic serving mix
+/// (`operators::workloads::serving_mix`), traced once per CPU profile
+/// *name* and shared behind an `Arc` — the single map every cache-aware
+/// serving consumer (the CLI, `ServeMix` jobs, benches, tests) hands to
+/// `ServeConfig::with_profiles`.  Cached because the traced replays
+/// dominate a serving run's setup cost: a `Pipeline::serve_scaling`
+/// sweep would otherwise re-trace the identical mix once per worker
+/// count.
+pub fn serving_mix_profiles(
+    cpu: &CpuSpec,
+) -> std::sync::Arc<std::collections::BTreeMap<String, CacheProfile>> {
+    use std::collections::{BTreeMap, HashMap};
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    type MixMap = Arc<BTreeMap<String, CacheProfile>>;
+    static CACHE: OnceLock<Mutex<HashMap<String, MixMap>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("serving-mix profile cache poisoned");
+    if let Some(profiles) = guard.get(&cpu.name) {
+        return profiles.clone();
+    }
+    let profiles: MixMap = Arc::new(
+        crate::operators::workloads::serving_mix()
+            .into_iter()
+            .map(|m| {
+                let p = synthetic_gemm_profile(cpu, &m.artifact, m.n);
+                (m.artifact, p)
+            })
+            .collect(),
+    );
+    guard.insert(cpu.name.clone(), profiles.clone());
+    profiles
+}
+
+/// [`synthetic_gemm_profile`] with an explicit row budget — for larger
+/// artifacts (the adversarial co-run mix) where an untruncated replay is
+/// needlessly slow.  Budgets must cover at least two M-tiles (128 rows for
+/// the default 64-row tile), or the trace misses the cross-tile panel
+/// reuse that defines the L2-scale footprint.
+pub fn synthetic_gemm_profile_budgeted(
+    cpu: &CpuSpec,
+    artifact: &str,
+    n: usize,
+    max_rows: usize,
+) -> CacheProfile {
+    trace_workload(cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(max_rows))
+        .cache_profile(artifact)
 }
 
 #[cfg(test)]

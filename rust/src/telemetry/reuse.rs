@@ -50,6 +50,7 @@ pub struct ReuseHistogram {
 }
 
 impl ReuseHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
@@ -69,10 +70,12 @@ impl ReuseHistogram {
         }
     }
 
+    /// Total recorded accesses (exact + far + cold).
     pub fn total(&self) -> u64 {
         self.counts.iter().sum::<u64>() + self.far + self.cold
     }
 
+    /// Cold first touches (infinite distance).
     pub fn cold(&self) -> u64 {
         self.cold
     }
@@ -173,14 +176,20 @@ pub struct DistanceBucket {
     pub lo: u64,
     /// Exclusive upper bound (`u64::MAX` for far/cold).
     pub hi: u64,
+    /// Accesses falling in this bucket.
     pub count: u64,
+    /// Exact-range, far-overflow or cold bucket.
     pub kind: BucketKind,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// What a [`DistanceBucket`] row represents.
 pub enum BucketKind {
+    /// Distances counted exactly (`lo..hi` lines).
     Exact,
+    /// Finite distances beyond [`MAX_EXACT_DISTANCE`].
     Far,
+    /// First touches (no previous access to the line).
     Cold,
 }
 
@@ -243,6 +252,7 @@ pub struct ReuseAnalyzer {
 }
 
 impl ReuseAnalyzer {
+    /// Analyzer for `line_bytes`-sized cache lines.
     pub fn new(line_bytes: usize) -> Self {
         assert!(line_bytes.is_power_of_two(), "line size must be a power of two");
         ReuseAnalyzer {
@@ -256,6 +266,7 @@ impl ReuseAnalyzer {
         }
     }
 
+    /// Cache-line size distances are measured in.
     pub fn line_bytes(&self) -> usize {
         1usize << self.line_shift
     }
@@ -265,6 +276,7 @@ impl ReuseAnalyzer {
         self.last.len()
     }
 
+    /// Total accesses recorded across all operands.
     pub fn accesses(&self) -> u64 {
         self.per_operand.iter().map(|h| h.total()).sum()
     }
@@ -314,6 +326,7 @@ impl ReuseAnalyzer {
         self.time = live.len();
     }
 
+    /// The reuse histogram of one operand stream.
     pub fn histogram(&self, operand: Operand) -> &ReuseHistogram {
         &self.per_operand[operand.index()]
     }

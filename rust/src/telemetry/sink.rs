@@ -12,6 +12,7 @@ use crate::hw::MemLevel;
 
 /// Receiver of structured cache events.
 pub trait EventSink {
+    /// Consume one event (called inline on the traced access path).
     fn record(&mut self, ev: &CacheEvent);
 }
 
@@ -29,19 +30,27 @@ impl EventSink for NullSink {
 /// summary table.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EventCounts {
+    /// Hit events.
     pub hits: u64,
+    /// Miss events.
     pub misses: u64,
+    /// Eviction events (victim displaced).
     pub evictions: u64,
+    /// Dirty-victim writeback events.
     pub writebacks: u64,
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Sink that tallies events per level (L1, and L2 with RAM folded in).
 pub struct CountingSink {
+    /// L1 event counters.
     pub l1: EventCounts,
+    /// L2 event counters (RAM events fold in here).
     pub l2: EventCounts,
 }
 
 impl CountingSink {
+    /// All counters at zero.
     pub fn new() -> Self {
         Self::default()
     }
@@ -72,12 +81,15 @@ impl EventSink for CountingSink {
 /// a long replay cannot exhaust memory.
 #[derive(Clone, Debug)]
 pub struct VecSink {
+    /// Captured events, in emission order.
     pub events: Vec<CacheEvent>,
+    /// Events dropped once `capacity` was reached.
     pub dropped: u64,
     capacity: usize,
 }
 
 impl VecSink {
+    /// Capture up to `capacity` events, then count drops.
     pub fn new(capacity: usize) -> Self {
         VecSink {
             events: Vec::new(),
@@ -100,11 +112,14 @@ impl EventSink for VecSink {
 /// Fan one event stream out to two sinks (e.g. a reuse analyzer plus a
 /// counting sink) without boxing.
 pub struct TeeSink<'a, S1: EventSink, S2: EventSink> {
+    /// First receiver.
     pub first: &'a mut S1,
+    /// Second receiver.
     pub second: &'a mut S2,
 }
 
 impl<'a, S1: EventSink, S2: EventSink> TeeSink<'a, S1, S2> {
+    /// Tee into `first` and `second`.
     pub fn new(first: &'a mut S1, second: &'a mut S2) -> Self {
         TeeSink { first, second }
     }

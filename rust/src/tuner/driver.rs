@@ -16,24 +16,33 @@ use super::space::SearchSpace;
 /// Tuner selection (§III-A: XGB for regular dtypes, random for bit-serial).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TunerKind {
+    /// Uniform random sampling of the schedule space.
     Random,
+    /// Gradient-boosted-trees cost model with epsilon-greedy ranking.
     Gbt,
 }
 
 /// One measured trial.
 #[derive(Clone, Debug)]
 pub struct Trial<C> {
+    /// Index of the measured config in the search space.
     pub index: usize,
+    /// The schedule that was measured.
     pub config: C,
+    /// Measured (or simulated) execution time.
     pub seconds: f64,
 }
 
 /// Result of a tuning run.
 #[derive(Clone, Debug)]
 pub struct TuneResult<C> {
+    /// Fastest configuration found.
     pub best_config: C,
+    /// Its execution time, seconds.
     pub best_seconds: f64,
+    /// Every measured trial, in measurement order.
     pub trials: Vec<Trial<C>>,
+    /// Total size of the searched space.
     pub space_size: usize,
 }
 
@@ -53,13 +62,18 @@ impl<C: Copy> TuneResult<C> {
 
 /// Tuning driver.
 pub struct Tuner {
+    /// Search strategy (random vs GBT cost model).
     pub kind: TunerKind,
+    /// Measurement budget.
     pub n_trials: usize,
+    /// Configs proposed per cost-model round.
     pub batch: usize,
+    /// RNG seed (runs are reproducible).
     pub seed: u64,
 }
 
 impl Tuner {
+    /// Tuner with the default batch size and seed.
     pub fn new(kind: TunerKind, n_trials: usize) -> Self {
         Tuner {
             kind,

@@ -142,6 +142,7 @@ impl Gbt {
         Gbt { trees, base, eta }
     }
 
+    /// Predicted objective value for one feature vector.
     pub fn predict(&self, x: &[f64]) -> f64 {
         self.base + self.eta * self.trees.iter().map(|t| t.predict(x)).sum::<f64>()
     }

@@ -21,8 +21,10 @@ use crate::util::bench::{measure, BenchConfig};
 
 /// Anything the tuner can measure: seconds for one config (lower = better).
 pub trait MeasureTarget {
+    /// The schedule type being searched.
     type Config: Copy;
 
+    /// Measure one config; returns its execution time in seconds.
     fn measure(&mut self, config: Self::Config) -> Result<f64>;
 
     /// A human-readable label for logs.
@@ -31,12 +33,16 @@ pub trait MeasureTarget {
 
 /// Host-wallclock measurement of the native tiled GEMM.
 pub struct NativeGemmTarget {
+    /// Left operand.
     pub a: Tensor<f32>,
+    /// Right operand.
     pub b: Tensor<f32>,
+    /// Measurement profile (warmup, samples).
     pub cfg: BenchConfig,
 }
 
 impl NativeGemmTarget {
+    /// Target for an `n`×`n` problem with seeded random inputs.
     pub fn square(n: usize, seed: u64) -> Self {
         NativeGemmTarget {
             a: Tensor::rand_f32(&[n, n], seed),
@@ -61,14 +67,20 @@ impl MeasureTarget for NativeGemmTarget {
 
 /// Simulator-backed GEMM target (the ARM boards).
 pub struct SimGemmTarget {
+    /// Calibrated profile evaluated by the simulator.
     pub cpu: CpuSpec,
+    /// GEMM M extent.
     pub m: usize,
+    /// GEMM N extent.
     pub n: usize,
+    /// GEMM K (reduction) extent.
     pub k: usize,
+    /// Operand element width in bits.
     pub elem_bits: usize,
 }
 
 impl SimGemmTarget {
+    /// Simulator target for a square `n`³ float32 GEMM.
     pub fn square(cpu: &CpuSpec, n: usize) -> Self {
         SimGemmTarget {
             cpu: cpu.clone(),
@@ -95,8 +107,11 @@ impl MeasureTarget for SimGemmTarget {
 
 /// Simulator-backed conv target.
 pub struct SimConvTarget {
+    /// Calibrated profile evaluated by the simulator.
     pub cpu: CpuSpec,
+    /// The conv layer being tuned.
     pub layer: ConvLayer,
+    /// Operand element width in bits.
     pub elem_bits: usize,
 }
 
@@ -115,8 +130,11 @@ impl MeasureTarget for SimConvTarget {
 /// Real-codegen target: artifact variants executed through PJRT.
 /// The schedule grid is fixed at AOT time (`workloads.GEMM_VARIANTS`).
 pub struct ArtifactGemmTarget<'r> {
+    /// PJRT registry holding the variant artifacts.
     pub registry: &'r mut crate::runtime::Registry,
+    /// Square GEMM size of the variant grid.
     pub n: usize,
+    /// Measurement profile.
     pub cfg: BenchConfig,
 }
 
@@ -126,6 +144,7 @@ impl ArtifactGemmTarget<'_> {
         format!("gemm_f32_var_n{}_b{}x{}x{}", self.n, s.bm, s.bn, s.bk)
     }
 
+    /// Was this schedule's variant AOT-compiled?
     pub fn available(&self, s: GemmSchedule) -> bool {
         self.registry.manifest.by_name(&self.artifact_name(s)).is_some()
     }

@@ -16,14 +16,18 @@ pub type Feature = Vec<f64>;
 
 /// A search space over schedule configs of type `C`.
 pub trait SearchSpace {
+    /// The schedule type the space enumerates.
     type Config: Copy + std::fmt::Debug;
 
+    /// Total config count.
     fn len(&self) -> usize;
 
+    /// True when the space has no configs.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The config at dense index `idx`.
     fn config(&self, idx: usize) -> Self::Config;
 
     /// Feature vector of config `idx` for the cost model.
@@ -44,9 +48,13 @@ fn pow2s(lo: usize, cap: usize) -> Vec<usize> {
 /// GEMM schedule space for an `m × n × k` problem on `cpu`.
 #[derive(Clone, Debug)]
 pub struct GemmSpace {
+    /// GEMM M extent.
     pub m: usize,
+    /// GEMM N extent.
     pub n: usize,
+    /// GEMM K (reduction) extent.
     pub k: usize,
+    /// Profile whose cache sizes shape the feature vector.
     pub cpu: CpuSpec,
     bms: Vec<usize>,
     bns: Vec<usize>,
@@ -55,6 +63,7 @@ pub struct GemmSpace {
 }
 
 impl GemmSpace {
+    /// Power-of-two tile space for an `m`×`n`×`k` problem.
     pub fn new(cpu: &CpuSpec, m: usize, n: usize, k: usize) -> Self {
         GemmSpace {
             m,
@@ -110,13 +119,16 @@ impl SearchSpace for GemmSpace {
 /// Conv schedule space for a layer.
 #[derive(Clone, Debug)]
 pub struct ConvSpace {
+    /// The conv layer whose schedule is searched.
     pub layer: ConvLayer,
+    /// Profile whose cache sizes shape the feature vector.
     pub cpu: CpuSpec,
     bcos: Vec<usize>,
     brows: Vec<usize>,
 }
 
 impl ConvSpace {
+    /// Output-channel × row-block space for `layer`.
     pub fn new(cpu: &CpuSpec, layer: ConvLayer) -> Self {
         let mut bcos = pow2s(1, layer.cout.min(128));
         if !bcos.contains(&layer.cout) && layer.cout <= 128 {

@@ -14,8 +14,11 @@ use super::stats::Summary;
 /// Configuration for one measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
+    /// Warmup time before samples are recorded.
     pub warmup: Duration,
+    /// Samples per measurement.
     pub samples: usize,
+    /// Per-sample duration the iteration count is tuned to.
     pub target_sample_time: Duration,
     /// Hard cap on total time spent in one `measure` call.
     pub max_total: Duration,
@@ -47,8 +50,11 @@ impl BenchConfig {
 /// Result of one measurement: per-iteration seconds.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Per-iteration timing summary.
     pub seconds: Summary,
+    /// Iterations folded into each sample.
     pub iters_per_sample: u64,
+    /// Total iterations across all samples.
     pub total_iters: u64,
 }
 

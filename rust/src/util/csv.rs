@@ -14,6 +14,7 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Empty document with the given header row.
     pub fn new(headers: &[&str]) -> Self {
         Csv {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -21,12 +22,14 @@ impl Csv {
         }
     }
 
+    /// Append one row (width-checked against the header).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "csv row width mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Render to CSV text.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         out.push_str(&escape_row(&self.headers));
@@ -48,10 +51,12 @@ impl Csv {
             .with_context(|| format!("writing csv {}", path.display()))
     }
 
+    /// Data-row count.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// True when no data rows exist.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }

@@ -14,15 +14,22 @@ use anyhow::{anyhow, bail, Result};
 /// fit exactly) with an `as_u64`/`as_i64` view for counts.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number, as f64.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys — deterministic output).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object field lookup (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -35,6 +42,7 @@ impl Value {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// The value as f64, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(x) => Ok(*x),
@@ -42,6 +50,7 @@ impl Value {
         }
     }
 
+    /// The value as an exact u64, or an error.
     pub fn as_u64(&self) -> Result<u64> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 || x > 2f64.powi(53) {
@@ -50,10 +59,12 @@ impl Value {
         Ok(x as u64)
     }
 
+    /// The value as an exact usize, or an error.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_u64()? as usize)
     }
 
+    /// The value as a string slice, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -61,6 +72,7 @@ impl Value {
         }
     }
 
+    /// The value as a bool, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -68,6 +80,7 @@ impl Value {
         }
     }
 
+    /// The value as an array slice, or an error.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -75,6 +88,7 @@ impl Value {
         }
     }
 
+    /// The value as an object map, or an error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -87,6 +101,7 @@ impl Value {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Value> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.ws();
@@ -342,14 +357,17 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
     Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Shorthand: a number value.
 pub fn num(x: f64) -> Value {
     Value::Num(x)
 }
 
+/// Shorthand: a string value.
 pub fn s(x: impl Into<String>) -> Value {
     Value::Str(x.into())
 }
 
+/// Shorthand: an array value.
 pub fn arr(xs: Vec<Value>) -> Value {
     Value::Arr(xs)
 }

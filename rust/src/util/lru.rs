@@ -22,6 +22,7 @@ pub struct LruCache<K: Eq + Hash + Clone, V> {
 }
 
 impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Cache holding up to `capacity` entries (0 disables it).
     pub fn new(capacity: usize) -> Self {
         LruCache {
             capacity,
@@ -30,14 +31,17 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         }
     }
 
+    /// Configured capacity.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Resident entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

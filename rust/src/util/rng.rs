@@ -31,11 +31,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Generator starting at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next value of the stream.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(GOLDEN);
         mix(self.state)
@@ -59,6 +61,7 @@ impl Xoshiro256 {
     }
 
     #[inline]
+    /// Next value of the stream.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

@@ -7,17 +7,24 @@
 /// Summary of a set of timing samples (seconds or any unit).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median.
     pub median: f64,
     /// Median absolute deviation (scaled by 1.4826 for normal consistency).
     pub mad: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample set.
     pub fn of(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let n = samples.len();

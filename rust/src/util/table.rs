@@ -6,20 +6,27 @@
 /// Column alignment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Align {
+    /// Left-aligned column.
     Left,
+    /// Right-aligned column.
     Right,
 }
 
 /// A simple table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Per-column alignment (defaults to right).
     pub aligns: Vec<Align>,
+    /// Data rows.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Table with the given title and headers, right-aligned.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -29,12 +36,14 @@ impl Table {
         }
     }
 
+    /// Override the per-column alignment.
     pub fn align(mut self, aligns: &[Align]) -> Self {
         assert_eq!(aligns.len(), self.headers.len());
         self.aligns = aligns.to_vec();
         self
     }
 
+    /// Append one row (width-checked against the header).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),

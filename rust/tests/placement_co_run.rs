@@ -1,0 +1,140 @@
+//! End-to-end tests of cache-aware placement (PR 4 acceptance criteria):
+//! the adversarial two-artifact mix is split across workers while hash
+//! placement co-locates it, solo interference predictions agree exactly
+//! with `analysis::predict`, and `cachebound serve --placement cache-aware`
+//! runs the synthetic mix end to end through the real binary.
+
+use std::collections::BTreeMap;
+use std::process::Command;
+use std::sync::{Arc, OnceLock};
+
+use cachebound::analysis::InterferenceModel;
+use cachebound::coordinator::placement::{adversarial_mix, plan};
+use cachebound::coordinator::server::{
+    Request, ServeConfig, ShardedServer, SyntheticExecutor,
+};
+use cachebound::coordinator::{shard_for, PlacementPolicy};
+use cachebound::hw::profile_by_name;
+use cachebound::telemetry::{serving_mix_profiles, CacheProfile};
+
+/// The adversarial pair is traced once per test binary (replays are the
+/// slow part of these tests).
+fn adversarial() -> &'static Vec<(String, CacheProfile)> {
+    static ADV: OnceLock<Vec<(String, CacheProfile)>> = OnceLock::new();
+    ADV.get_or_init(|| {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        adversarial_mix(&cpu, 2, 8).expect("qualifying pair on the A53")
+    })
+}
+
+fn mix_profiles() -> Arc<BTreeMap<String, CacheProfile>> {
+    serving_mix_profiles(&profile_by_name("a53").unwrap().cpu)
+}
+
+/// The adversarial pair is real on the A53: hash co-locates it, demands
+/// straddle the L2, and the greedy plan splits it — while on the uniform
+/// serving mix the plan covers every artifact with finite cost.
+#[test]
+fn adversarial_mix_splits_but_uniform_mix_stays_covered() {
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let model = InterferenceModel::new(&cpu);
+
+    let adv = adversarial();
+    let (na, pa) = &adv[0];
+    let (nb, pb) = &adv[1];
+    assert_eq!(
+        shard_for(na, 8) % 2,
+        shard_for(nb, 8) % 2,
+        "hash must co-locate the adversarial pair"
+    );
+    let l2 = cpu.l2.size_bytes as u64;
+    assert!(model.demand_bytes(pa) + model.demand_bytes(pb) > l2);
+
+    let adv_map: BTreeMap<String, CacheProfile> =
+        adv.iter().cloned().collect();
+    let placement = plan(&model, &adv_map, 2);
+    assert_ne!(placement.worker_for(na), placement.worker_for(nb), "{placement:?}");
+    // split predicted cost is within noise of interference-free...
+    assert!(placement.total_slowdown < 2.0 + 1e-6, "{}", placement.total_slowdown);
+    // ...and never worse than forcing both onto one worker
+    assert!(placement.total_slowdown <= model.total_slowdown(&[pa, pb]) + 1e-12);
+
+    let profiles = mix_profiles();
+    let uniform = plan(&model, &profiles, 2);
+    assert_eq!(uniform.assignments.len(), profiles.len());
+    assert!(uniform.total_slowdown.is_finite());
+    assert!(uniform.total_slowdown >= profiles.len() as f64 - 1e-9);
+}
+
+/// Serving the adversarial stream through real servers: hash leaves one
+/// worker idle (both artifacts on one), cache-aware uses both.
+#[test]
+fn adversarial_stream_uses_both_workers_only_under_cache_aware() {
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let adv = adversarial();
+    let profiles: Arc<BTreeMap<String, CacheProfile>> =
+        Arc::new(adv.iter().cloned().collect());
+    let stream: Vec<String> = (0..24).map(|i| adv[i % 2].0.clone()).collect();
+
+    let workers_used = |placement: PlacementPolicy| -> usize {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_profiles(profiles.clone())
+                .with_placement(placement)
+                .with_cpu(cpu.clone()),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        for (id, artifact) in stream.iter().enumerate() {
+            srv.submit(Request { id: id as u64, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, stream.len() as u64);
+        out.metrics
+            .worker_pressure
+            .iter()
+            .filter(|p| p.artifacts > 0)
+            .count()
+    };
+
+    assert_eq!(workers_used(PlacementPolicy::Hash), 1, "hash co-locates the pair");
+    assert_eq!(workers_used(PlacementPolicy::CacheAware), 2, "the plan splits it");
+}
+
+/// The acceptance criterion's CLI path: `cachebound serve --synthetic
+/// --placement cache-aware` runs the synthetic mix end to end and prints
+/// the plan plus predicted-vs-observed pressure.
+#[test]
+fn cli_serve_cache_aware_runs_end_to_end() {
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "48",
+            "--placement",
+            "cache-aware",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "serve must exit 0: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("cache-aware placement"), "{stdout}");
+    assert!(stdout.contains("Cache-aware placement plan"), "{stdout}");
+    assert!(stdout.contains("predicted"), "{stdout}");
+    assert!(stdout.contains("served 48/48"), "{stdout}");
+
+    // an unknown policy is rejected loudly
+    let bad = Command::new(exe)
+        .args(["serve", "--synthetic", "--requests", "4", "--placement", "nope"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("placement"));
+}
