@@ -12,17 +12,23 @@
 //! worker and cache-aware placement must split them
 //! (`coordinator::placement::adversarial_mix`).
 //!
+//! A fourth section runs the drifting-mix A/B: a stream that starts on the
+//! uniform mix and drifts onto the adversarial pair, served (a) statically
+//! hash-placed, (b) with a drain-time re-plan between the phases, and
+//! (c) with live migration converging mid-stream — the
+//! `--rebalance off|drain|live` spectrum.
+//!
 //! Run: `cargo bench --bench bench_serve`
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use cachebound::analysis::InterferenceModel;
-use cachebound::coordinator::placement::adversarial_mix;
+use cachebound::coordinator::placement::{adversarial_mix, plan as placement_plan};
 use cachebound::coordinator::server::{
     ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
 };
-use cachebound::coordinator::PlacementPolicy;
+use cachebound::coordinator::{PlacementPolicy, RebalanceMode};
 use cachebound::hw::profile_by_name;
 use cachebound::operators::workloads;
 use cachebound::telemetry::CacheProfile;
@@ -184,5 +190,87 @@ fn main() {
         "adversarial mix:  hash {adv_hash:8.1} req/s   cache-aware {adv_aware:8.1} req/s   \
          ({:.2}x — hash serializes both on one worker, cache-aware splits them)",
         adv_aware / adv_hash
+    );
+
+    // -- drifting mix: static hash vs drain-rebalance vs live migration --
+    //
+    // Phase 1 is the uniform mix, phase 2 drifts onto the adversarial
+    // pair.  A static hash server stays co-located through phase 2; a
+    // drain-time rebalance only fixes the routing at the phase boundary
+    // (and pays a full stop-the-world drain there); live migration
+    // converges mid-phase while the stream keeps flowing.
+    println!("\n-- drifting mix: static hash vs drain-rebalance vs live migration (2 workers) --");
+    let mut all_profiles: BTreeMap<String, CacheProfile> =
+        mix_profiles.as_ref().clone();
+    all_profiles.extend(adv.iter().cloned());
+    let all_profiles = Arc::new(all_profiles);
+    let phase1: Vec<String> = stream[..REQUESTS / 2].to_vec();
+    let phase2: Vec<String> =
+        (0..REQUESTS / 2).map(|i| adv[i % 2].0.clone()).collect();
+    let drift_stream: Vec<String> =
+        phase1.iter().chain(&phase2).cloned().collect();
+
+    let serve_drift = |rebalance: RebalanceMode| -> (f64, usize) {
+        let mut best = 0.0f64;
+        let mut migrations = 0usize;
+        for _ in 0..RUNS {
+            let cfg = ServeConfig::new(2)
+                .with_profiles(all_profiles.clone())
+                .with_cpu(profile_by_name("a53").unwrap().cpu)
+                .with_rebalance(rebalance);
+            let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+                .serve_stream(drift_stream.iter().cloned());
+            assert_eq!(out.metrics.completed, drift_stream.len() as u64);
+            best = best.max(out.metrics.throughput(out.wall_seconds));
+            migrations = out.metrics.migrations.len();
+        }
+        (best, migrations)
+    };
+
+    // (a) static hash: no rebalancing at all
+    let (static_rps, _) = serve_drift(RebalanceMode::Off);
+
+    // (b) drain-rebalance: serve phase 1 hash-placed, drain, re-plan over
+    // what was observed, then serve phase 2 under the new plan — both
+    // walls count, the drain gap is this strategy's cost
+    let mut drain_best = 0.0f64;
+    for _ in 0..RUNS {
+        let cfg1 = ServeConfig::new(2)
+            .with_profiles(all_profiles.clone())
+            .with_cpu(profile_by_name("a53").unwrap().cpu)
+            .with_rebalance(RebalanceMode::Off);
+        let out1 = ShardedServer::start(cfg1, |_w| Ok(SyntheticExecutor::new()))
+            .serve_stream(phase1.iter().cloned());
+        assert_eq!(out1.metrics.completed, phase1.len() as u64);
+        // the drain-time re-plan over the artifacts phase 2 will serve
+        let observed: BTreeMap<String, CacheProfile> = adv.iter().cloned().collect();
+        let replanned = placement_plan(&model, &observed, 2);
+        let cfg2 = ServeConfig::new(2)
+            .with_profiles(all_profiles.clone())
+            .with_cpu(profile_by_name("a53").unwrap().cpu)
+            .with_plan(Arc::new(replanned))
+            .with_rebalance(RebalanceMode::Off);
+        let out2 = ShardedServer::start(cfg2, |_w| Ok(SyntheticExecutor::new()))
+            .serve_stream(phase2.iter().cloned());
+        assert_eq!(out2.metrics.completed, phase2.len() as u64);
+        let rps = (out1.metrics.completed + out2.metrics.completed) as f64
+            / (out1.wall_seconds + out2.wall_seconds);
+        drain_best = drain_best.max(rps);
+    }
+
+    // (c) live: hash start, divergence-triggered migration mid-stream
+    let (live_rps, live_migrations) = serve_drift(RebalanceMode::Live);
+
+    println!(
+        "static hash:      {static_rps:8.1} req/s   (pair stays co-located all of phase 2)"
+    );
+    println!(
+        "drain-rebalance:  {drain_best:8.1} req/s   (re-plan applied only at the phase boundary)"
+    );
+    println!(
+        "live migration:   {live_rps:8.1} req/s   ({live_migrations} migrations; \
+         {:.2}x vs static, {:.2}x vs drain — acceptance: live >= drain)",
+        live_rps / static_rps,
+        live_rps / drain_best
     );
 }

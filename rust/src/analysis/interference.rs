@@ -31,6 +31,8 @@
 //! The consumer is `coordinator::placement`, which packs artifacts onto
 //! serving workers by minimizing the summed predicted slowdown.
 
+use std::collections::BTreeMap;
+
 use crate::bench::sweep::CLASSIFY_SLACK;
 use crate::hw::CpuSpec;
 use crate::telemetry::{CacheProfile, PredictedRates};
@@ -56,6 +58,20 @@ pub struct CoRunPrediction {
     pub slowdown: f64,
     /// `analysis::classify` verdict at the effective capacity.
     pub class: String,
+}
+
+/// Predicted cost of a whole artifact→worker routing
+/// ([`InterferenceModel::routing_cost`]): the sums over every artifact of
+/// its co-run slowdown and predicted execution time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoutingCost {
+    /// Σ predicted slowdowns (one perfectly isolated artifact contributes
+    /// exactly 1.0 — the same objective [`crate::coordinator::placement::plan`]
+    /// minimizes).
+    pub slowdown: f64,
+    /// Σ predicted per-execution times at each artifact's effective L2
+    /// capacity, seconds.
+    pub time_s: f64,
 }
 
 /// The co-run interference model for one CPU profile.
@@ -119,6 +135,36 @@ impl InterferenceModel {
     /// co-resident set (an empty set costs 0, a solo resident 1).
     pub fn total_slowdown(&self, residents: &[&CacheProfile]) -> f64 {
         self.co_run(residents).iter().map(|c| c.slowdown).sum()
+    }
+
+    /// Price an *explicit* artifact→worker routing: group the profiled
+    /// artifacts into per-worker co-resident sets via `route` and run the
+    /// co-run model on each.  The `servedrift` bench records use this to
+    /// compare hash routing against the plan live rebalancing converges
+    /// to, through the *same* pricing as the plan itself.  (The server's
+    /// live trigger is deliberately *not* priced this way: it fires on
+    /// observed-vs-predicted residency divergence —
+    /// `Placement::divergence` — which also catches drifts the MRCs are
+    /// too flat to price, such as co-located streaming footprints.)
+    pub fn routing_cost(
+        &self,
+        profiles: &BTreeMap<String, CacheProfile>,
+        route: &dyn Fn(&str) -> usize,
+        workers: usize,
+    ) -> RoutingCost {
+        let mut groups: Vec<Vec<&CacheProfile>> = vec![Vec::new(); workers.max(1)];
+        for (name, p) in profiles {
+            let w = route(name).min(groups.len() - 1);
+            groups[w].push(p);
+        }
+        let mut cost = RoutingCost { slowdown: 0.0, time_s: 0.0 };
+        for group in &groups {
+            for c in self.co_run(group) {
+                cost.slowdown += c.slowdown;
+                cost.time_s += c.time_s;
+            }
+        }
+        cost
     }
 
     /// Re-read the profile's MRC with the L1 unchanged and the L2 reduced
@@ -354,6 +400,42 @@ mod tests {
         assert_eq!(co[0].time_s, 1e-3);
         // ...but its demand still squeezes the repriceable co-resident
         assert!(co[1].slowdown > 1.0);
+    }
+
+    #[test]
+    fn routing_cost_prices_colocation_above_a_split() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let profiles: BTreeMap<String, CacheProfile> = [
+            ("a".to_string(), step_profile("a", 300 * 1024, 0.9)),
+            ("b".to_string(), step_profile("b", 300 * 1024, 0.9)),
+        ]
+        .into();
+        let colocated = model.routing_cost(&profiles, &|_| 0, 2);
+        let split =
+            model.routing_cost(&profiles, &|name| usize::from(name == "b"), 2);
+        // a split routing is interference-free: slowdown sums to exactly 2
+        assert!((split.slowdown - 2.0).abs() < 1e-9, "{split:?}");
+        assert!(colocated.slowdown > split.slowdown + 0.1, "{colocated:?}");
+        assert!(colocated.time_s > split.time_s);
+        // the split routing agrees with what the co-run model says solo
+        let solo_sum: f64 =
+            profiles.values().map(|p| model.solo(p).time_s).sum();
+        assert!((split.time_s - solo_sum).abs() < 1e-15);
+    }
+
+    #[test]
+    fn routing_cost_of_empty_or_single_worker_degenerates_sanely() {
+        let cpu = a53();
+        let model = InterferenceModel::new(&cpu);
+        let empty: BTreeMap<String, CacheProfile> = BTreeMap::new();
+        let c = model.routing_cost(&empty, &|_| 0, 4);
+        assert_eq!(c, RoutingCost { slowdown: 0.0, time_s: 0.0 });
+        // out-of-range routes clamp to the last worker instead of panicking
+        let one: BTreeMap<String, CacheProfile> =
+            [("x".to_string(), step_profile("x", 64 * 1024, 0.9))].into();
+        let c = model.routing_cost(&one, &|_| 99, 2);
+        assert!((c.slowdown - 1.0).abs() < 1e-9);
     }
 
     #[test]

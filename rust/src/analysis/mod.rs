@@ -40,7 +40,7 @@ pub mod required_bw;
 
 pub use bounds::{gemm_bounds, workload_bounds, BoundSet};
 pub use classify::{classify, correlate_bounds, BoundClass, CorrelationReport};
-pub use interference::{CoRunPrediction, InterferenceModel};
+pub use interference::{CoRunPrediction, InterferenceModel, RoutingCost};
 pub use predict::{
     classify_traffic, predict_workload, traffic_from_rates, MrcPrediction, TraceMeta,
 };

@@ -89,7 +89,8 @@ pub struct BenchRecord {
     /// Stable result key ("bench/sim/cortex-a53/gemm/n512") — the identity
     /// `compare` matches runs on.
     pub key: String,
-    /// Operator family ("gemm", "conv", "qnn", "bitserial").
+    /// Operator family ("gemm", "conv", "qnn", "bitserial", or
+    /// "servedrift" for the drifting-mix serving records).
     pub family: String,
     /// Shape label ("n512", "C2", "n1024b2").
     pub shape: String,

@@ -21,15 +21,23 @@
 //! targets share ([`quick_flag`], [`bench_pipeline`], [`native_line`]) so
 //! each target is a thin wrapper instead of a copy of the boilerplate.
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Result};
 
 use crate::analysis::bounds::workload_bounds;
 use crate::analysis::classify::classify;
+use crate::analysis::InterferenceModel;
 use crate::coordinator::jobs::JobSpec;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+use crate::coordinator::placement::{adversarial_mix, plan as placement_plan};
+use crate::coordinator::shard_for;
 use crate::hw::{profile_by_name, CpuSpec};
-use crate::operators::workloads::{resnet18_layers, BenchWorkload, GEMM_TABLE_SIZES};
+use crate::operators::workloads::{
+    resnet18_layers, synthetic_gemm_n, BenchWorkload, GEMM_TABLE_SIZES,
+};
 use crate::report::paper;
+use crate::telemetry::CacheProfile;
 use crate::util::bench::{measure, report_line, BenchConfig};
 
 use super::record::{BenchRecord, BenchReport, HwRecord, TelemetryRecord, SCHEMA_VERSION};
@@ -171,6 +179,16 @@ pub fn run_sweep(pipeline: &mut Pipeline, cfg: &SweepConfig) -> Result<BenchRepo
             attach_telemetry(&mut records, &cpu.name, &workloads, &summaries);
         }
     }
+    // The drifting-mix serving records (synthetic sweeps over the standard
+    // grid only): deterministic interference-model pricing of the
+    // adversarial co-run pair under hash routing vs the plan live
+    // rebalancing converges to, putting the placement layer under the same
+    // CI regression gate as the operator grid.
+    if cfg.synthetic && cfg.workloads.is_none() {
+        for profile in &cfg.profiles {
+            records.extend(drift_records(profile)?);
+        }
+    }
     Ok(BenchReport {
         version: SCHEMA_VERSION,
         quick: cfg.quick,
@@ -223,6 +241,102 @@ pub fn score(cpu: &CpuSpec, w: BenchWorkload, key: &str, measured_s: f64) -> Ben
         pct_of_paper: paper_gflops.map(|p| gflops / p * 100.0),
         telemetry: None,
     }
+}
+
+/// Serve geometry the drift records price against (the default
+/// `cachebound serve` shape: 2 workers × 4 shards each).
+const DRIFT_WORKERS: usize = 2;
+/// Shard count of the drift-record geometry.
+const DRIFT_SHARDS: usize = 8;
+
+/// The drifting-mix serving records for one profile, cached per CPU (the
+/// budgeted traces behind `adversarial_mix` dominate the cost and are
+/// deterministic, so unit tests and repeated sweeps pay them once).
+///
+/// Two records per qualifying profile:
+/// `bench/sim/<cpu>/servedrift/hash` — the pair co-located the way hash
+/// placement routes it — and `.../servedrift/live` — the pair under the
+/// greedy plan a live rebalance converges to.  `measured_s` is the mean
+/// predicted per-request execution time from
+/// [`InterferenceModel::routing_cost`]; if greedy stops splitting the
+/// pair or the co-run pricing regresses, the `live` record jumps and the
+/// `bench compare` gate trips.  Profiles with no qualifying pair (the
+/// A72's larger L2) contribute no records.
+pub fn drift_records(profile_name: &str) -> Result<Vec<BenchRecord>> {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    static CACHE: OnceLock<Mutex<HashMap<String, Vec<BenchRecord>>>> = OnceLock::new();
+    let cpu = profile_by_name(profile_name)?.cpu;
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("drift-record cache poisoned");
+    if let Some(records) = guard.get(&cpu.name) {
+        return Ok(records.clone());
+    }
+    let records = build_drift_records(&cpu);
+    guard.insert(cpu.name.clone(), records.clone());
+    Ok(records)
+}
+
+/// Uncached worker of [`drift_records`].
+fn build_drift_records(cpu: &CpuSpec) -> Vec<BenchRecord> {
+    let Some(adv) = adversarial_mix(cpu, DRIFT_WORKERS, DRIFT_SHARDS) else {
+        return Vec::new();
+    };
+    let model = InterferenceModel::new(cpu);
+    let profiles: BTreeMap<String, CacheProfile> = adv.iter().cloned().collect();
+    let split = placement_plan(&model, &profiles, DRIFT_WORKERS);
+    let hash_cost = model.routing_cost(
+        &profiles,
+        &|name| shard_for(name, DRIFT_SHARDS) % DRIFT_WORKERS,
+        DRIFT_WORKERS,
+    );
+    let live_cost = model.routing_cost(
+        &profiles,
+        &|name| split.worker_for(name).unwrap_or(0),
+        DRIFT_WORKERS,
+    );
+    // the drifting phase alternates the two artifacts, so the mean
+    // per-request MACs/bytes pair with the mean predicted time
+    let pair: Vec<BenchWorkload> = adv
+        .iter()
+        .filter_map(|(name, _)| synthetic_gemm_n(name))
+        .map(|n| BenchWorkload::Gemm { n })
+        .collect();
+    if pair.len() != 2 {
+        // adversarial artifacts are synthetic GEMMs by construction; an
+        // unparseable name means the mix changed shape — skip, don't panic
+        return Vec::new();
+    }
+    let macs = pair.iter().map(|w| w.macs()).sum::<u64>() / pair.len() as u64;
+    let operand_bytes =
+        pair.iter().map(|w| w.operand_bytes()).sum::<f64>() / pair.len() as f64;
+    let b = workload_bounds(cpu, macs, operand_bytes, 32);
+    [("hash", hash_cost), ("live", live_cost)]
+        .into_iter()
+        .map(|(shape, cost)| {
+            let measured_s = cost.time_s / pair.len() as f64;
+            BenchRecord {
+                key: format!("bench/sim/{}/servedrift/{shape}", cpu.name),
+                family: "servedrift".to_string(),
+                shape: shape.to_string(),
+                profile: cpu.name.clone(),
+                macs,
+                elem_bits: 32,
+                measured_s,
+                gflops: 2.0 * macs as f64 / measured_s / 1e9,
+                compute_s: b.compute_s,
+                l1_read_s: b.l1_read_s,
+                l2_read_s: b.l2_read_s,
+                ram_read_s: b.ram_read_s,
+                class: classify(measured_s, &b, CLASSIFY_SLACK).name(),
+                pct_of_bound: b.floor_s() / measured_s * 100.0,
+                paper_gflops: None,
+                pct_of_paper: None,
+                telemetry: None,
+            }
+        })
+        .collect()
 }
 
 /// The paper's published tuned GFLOP/s for this workload, when one exists
@@ -305,7 +419,9 @@ mod tests {
             ..SweepConfig::new(true, true)
         };
         let rep = run_sweep(&mut p, &cfg).unwrap();
-        assert_eq!(rep.records.len(), workload_set(true).len());
+        // the operator grid plus the two servedrift records (the A53's
+        // adversarial pair qualifies — pinned by the placement tests)
+        assert_eq!(rep.records.len(), workload_set(true).len() + 2);
         assert_eq!(rep.hw.len(), 1);
         // the paper's central claim: midrange tuned GEMM is L1-read bound
         let g = rep.get("bench/sim/cortex-a53/gemm/n256").unwrap();
@@ -324,6 +440,43 @@ mod tests {
             .iter()
             .filter(|r| r.family != "gemm")
             .all(|r| r.paper_gflops.is_none()));
+    }
+
+    #[test]
+    fn drift_records_price_live_at_or_below_hash() {
+        let records = drift_records("a53").unwrap();
+        assert_eq!(records.len(), 2, "the A53 pair qualifies");
+        let by_shape = |s: &str| {
+            records
+                .iter()
+                .find(|r| r.shape == s)
+                .unwrap_or_else(|| panic!("missing servedrift/{s}"))
+        };
+        let (hash, live) = (by_shape("hash"), by_shape("live"));
+        assert_eq!(hash.key, "bench/sim/cortex-a53/servedrift/hash");
+        assert_eq!(live.key, "bench/sim/cortex-a53/servedrift/live");
+        assert!(hash.measured_s > 0.0 && live.measured_s > 0.0);
+        // the whole point of live rebalancing: the converged plan never
+        // predicts slower than the hash co-location (strictly faster
+        // whenever the pair's MRCs carry mass at the contended capacities)
+        assert!(
+            live.measured_s <= hash.measured_s * (1.0 + 1e-12),
+            "live {} vs hash {}",
+            live.measured_s,
+            hash.measured_s
+        );
+        // cached calls reproduce bit-identically (the determinism the CI
+        // diff relies on)
+        assert_eq!(records, drift_records("a53").unwrap());
+        // a sweep over a custom workload list stays drift-free
+        let mut p = quick_pipeline();
+        let cfg = SweepConfig {
+            profiles: vec!["a53".into()],
+            workloads: Some(vec![BenchWorkload::Gemm { n: 64 }]),
+            ..SweepConfig::new(true, true)
+        };
+        let rep = run_sweep(&mut p, &cfg).unwrap();
+        assert!(rep.records.iter().all(|r| r.family != "servedrift"));
     }
 
     #[test]

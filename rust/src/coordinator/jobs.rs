@@ -10,7 +10,7 @@ use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::{BenchWorkload, ConvLayer};
 
-use super::placement::PlacementPolicy;
+use super::placement::{PlacementPolicy, RebalanceMode};
 
 /// What to run.
 #[derive(Clone, Debug, PartialEq)]
@@ -94,7 +94,9 @@ pub enum JobSpec {
     /// Run the synthetic serving mix through the sharded server (CPU-pure:
     /// the synthetic executor serves native tiled GEMMs, no PJRT).
     /// `placement: CacheAware` traces the mix's cache profiles first and
-    /// routes by the greedy co-run plan instead of the artifact hash.
+    /// routes by the greedy co-run plan instead of the artifact hash;
+    /// `rebalance: Live` lets the server migrate artifacts mid-stream when
+    /// the observed pressure diverges from the plan.
     ServeMix {
         /// Worker threads.
         workers: usize,
@@ -106,6 +108,8 @@ pub enum JobSpec {
         cache_entries: usize,
         /// Artifact→worker policy (hash vs cache-aware).
         placement: PlacementPolicy,
+        /// Divergence response (off / drain suggestion / live migration).
+        rebalance: RebalanceMode,
     },
     /// One telemetry trace (`cachebound trace`, `bench --telemetry`):
     /// replay the workload through the hierarchy with a reuse-distance
@@ -189,10 +193,11 @@ impl JobSpec {
             }
             JobSpec::ArtifactValidate { name } => format!("validate/{name}"),
             JobSpec::ArtifactMeasure { name } => format!("measure/{name}"),
-            JobSpec::ServeMix { workers, requests, seed, cache_entries, placement } => {
+            JobSpec::ServeMix { workers, requests, seed, cache_entries, placement, rebalance } => {
                 format!(
-                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/p{}",
-                    placement.key_part()
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/p{}/rb{}",
+                    placement.key_part(),
+                    rebalance.key_part()
                 )
             }
             JobSpec::Trace { cpu, workload, max_rows } => {
@@ -264,6 +269,8 @@ pub enum JobOutput {
         failed: u64,
         /// Responses served from the LRU response cache.
         cache_hits: u64,
+        /// Artifacts migrated mid-stream by live rebalancing.
+        migrations: u64,
     },
     /// Job failed.
     Failed {
@@ -378,15 +385,17 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             );
             JobOutput::Traced { summary: report.summary() }
         }
-        JobSpec::ServeMix { workers, requests, seed, cache_entries, placement } => {
+        JobSpec::ServeMix { workers, requests, seed, cache_entries, placement, rebalance } => {
             use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
             let mut cfg = ServeConfig::new(*workers)
                 .with_cache(*cache_entries)
-                .with_placement(*placement);
-            if *placement == PlacementPolicy::CacheAware {
-                // the plan needs per-artifact profiles: the synthetic mix
-                // traced against the part the bounds are calibrated for
-                // (cached, so a scaling sweep pays the replays only once)
+                .with_placement(*placement)
+                .with_rebalance(*rebalance);
+            if *placement == PlacementPolicy::CacheAware || *rebalance == RebalanceMode::Live {
+                // both the upfront plan and the live divergence check need
+                // per-artifact profiles: the synthetic mix traced against
+                // the part the bounds are calibrated for (cached, so a
+                // scaling sweep pays the replays only once)
                 let cpu = crate::hw::profile_by_name("a53").expect("builtin profile").cpu;
                 cfg = cfg
                     .with_profiles(crate::telemetry::serving_mix_profiles(&cpu))
@@ -405,6 +414,7 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 completed: out.metrics.completed,
                 failed: out.metrics.failed,
                 cache_hits: out.metrics.cache_hits,
+                migrations: out.metrics.migrations.len() as u64,
             }
         }
         JobSpec::BenchSweep { cpu, workload, native, quick } => {
@@ -618,14 +628,16 @@ mod tests {
             seed: 7,
             cache_entries: 16,
             placement: PlacementPolicy::Hash,
+            rebalance: RebalanceMode::Drain,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/phash");
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/phash/rbdrain");
         let out = run_cpu_job(&spec);
         match out {
-            JobOutput::Served { throughput_rps, completed, failed, .. } => {
+            JobOutput::Served { throughput_rps, completed, failed, migrations, .. } => {
                 assert_eq!(completed, 24);
                 assert_eq!(failed, 0);
                 assert!(throughput_rps > 0.0);
+                assert_eq!(migrations, 0, "drain mode never migrates");
             }
             other => panic!("expected Served, got {other:?}"),
         }
@@ -639,11 +651,34 @@ mod tests {
             seed: 7,
             cache_entries: 0,
             placement: PlacementPolicy::CacheAware,
+            rebalance: RebalanceMode::Drain,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/pcache");
+        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/pcache/rbdrain");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 16);
+                assert_eq!(failed, 0);
+            }
+            other => panic!("expected Served, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_mix_job_runs_live_rebalancing_from_a_hash_start() {
+        // live mode attaches the mix profiles even under hash placement,
+        // so the divergence check has data to act on mid-stream
+        let spec = JobSpec::ServeMix {
+            workers: 2,
+            requests: 80,
+            seed: 7,
+            cache_entries: 0,
+            placement: PlacementPolicy::Hash,
+            rebalance: RebalanceMode::Live,
+        };
+        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/phash/rblive");
+        match run_cpu_job(&spec) {
+            JobOutput::Served { completed, failed, .. } => {
+                assert_eq!(completed, 80, "migrations must not lose or fail requests");
                 assert_eq!(failed, 0);
             }
             other => panic!("expected Served, got {other:?}"),

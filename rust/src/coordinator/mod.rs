@@ -17,7 +17,11 @@
 //! [`CacheProfile`]s feed the co-run interference model
 //! ([`crate::analysis::interference`]) and a greedy packer assigns
 //! artifacts to workers by predicted slowdown on the shared L2
-//! ([`PlacementPolicy::CacheAware`]).  Division of labor with the
+//! ([`PlacementPolicy::CacheAware`]); under [`RebalanceMode::Live`] the
+//! server acts on the same signal *mid-stream*, quiescing and migrating
+//! artifacts whose observed pressure diverges from the plan while
+//! preserving per-artifact FIFO (`server` module docs, §Live migration).
+//! Division of labor with the
 //! [`pool`]: the pool fans out *finite experiment batches* and routes
 //! PJRT-bound jobs to the leader; the sharded server runs *open-ended
 //! request streams* and sidesteps the leader bottleneck by giving every
@@ -49,11 +53,11 @@ pub mod shard;
 
 pub use jobs::{Job, JobOutput, JobSpec};
 pub use pipeline::{Pipeline, PipelineConfig};
-pub use placement::{Placement, PlacementPolicy, WorkerPlan};
+pub use placement::{Placement, PlacementPolicy, RebalanceMode, WorkerPlan};
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
 pub use server::{
-    BatchPolicy, Exec, Executor, Metrics, PjrtExecutor, Request, Response, ServeConfig,
-    ServeOutcome, Server, ShardedServer, SyntheticExecutor, WorkerPressure,
+    BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor, Request, Response,
+    ServeConfig, ServeOutcome, Server, ShardedServer, SyntheticExecutor, WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

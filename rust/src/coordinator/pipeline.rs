@@ -14,7 +14,7 @@ use crate::operators::workloads::{self, BenchWorkload, ConvLayer};
 use crate::runtime::Registry;
 
 use super::jobs::{Job, JobSpec, NativeGemmVariant};
-use super::placement::PlacementPolicy;
+use super::placement::{PlacementPolicy, RebalanceMode};
 use super::pool::WorkerPool;
 use super::results::ResultStore;
 
@@ -221,15 +221,18 @@ impl Pipeline {
 
     /// Serving-throughput scaling sweep (EXPERIMENTS.md §Serving): one
     /// `ServeMix` run per worker count over the identical request stream,
-    /// routed by `placement` (hash baseline or the cache-aware plan).
-    /// Runs on a *serial* pool — each job spawns its own sharded-server
-    /// worker threads, and concurrent servers would contend for cores and
-    /// corrupt the scaling measurement.
+    /// routed by `placement` (hash baseline or the cache-aware plan) with
+    /// `rebalance` deciding what a pressure divergence does (off / drain
+    /// suggestion / live migration).  Runs on a *serial* pool — each job
+    /// spawns its own sharded-server worker threads, and concurrent
+    /// servers would contend for cores and corrupt the scaling
+    /// measurement.
     pub fn serve_scaling(
         &mut self,
         worker_counts: &[usize],
         requests: usize,
         placement: PlacementPolicy,
+        rebalance: RebalanceMode,
     ) -> Result<()> {
         let specs: Vec<JobSpec> = worker_counts
             .iter()
@@ -239,6 +242,7 @@ impl Pipeline {
                 seed: 0xD15C,
                 cache_entries: 0,
                 placement,
+                rebalance,
             })
             .collect();
         let jobs: Vec<Job> = specs
@@ -415,11 +419,12 @@ mod tests {
     #[test]
     fn serve_scaling_populates_store() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[1, 2], 16, PlacementPolicy::Hash).unwrap();
+        p.serve_scaling(&[1, 2], 16, PlacementPolicy::Hash, RebalanceMode::Drain).unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 2);
         for (k, v) in rows {
-            assert!(k.ends_with("/phash"), "{k} must carry the placement policy");
+            assert!(k.contains("/phash"), "{k} must carry the placement policy");
+            assert!(k.ends_with("/rbdrain"), "{k} must carry the rebalance mode");
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
@@ -429,12 +434,24 @@ mod tests {
     #[test]
     fn serve_scaling_carries_cache_aware_policy() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[2], 12, PlacementPolicy::CacheAware).unwrap();
+        p.serve_scaling(&[2], 12, PlacementPolicy::CacheAware, RebalanceMode::Drain).unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
-        assert!(k.ends_with("/pcache"), "{k}");
+        assert!(k.contains("/pcache"), "{k}");
         assert_eq!(v.passed, Some(true), "{k} had failures");
+    }
+
+    #[test]
+    fn serve_scaling_accepts_live_rebalancing() {
+        let mut p = Pipeline::new(quick_config());
+        p.serve_scaling(&[2], 48, PlacementPolicy::Hash, RebalanceMode::Live).unwrap();
+        let rows = p.store.by_prefix("serve_mix/");
+        assert_eq!(rows.len(), 1);
+        let (k, v) = &rows[0];
+        assert!(k.ends_with("/rblive"), "{k}");
+        assert_eq!(v.passed, Some(true), "{k}: migrations must not fail requests");
+        assert!(v.detail.as_deref().unwrap().contains("migrations"), "{v:?}");
     }
 
     #[test]

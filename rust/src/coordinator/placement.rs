@@ -76,6 +76,49 @@ impl PlacementPolicy {
     }
 }
 
+/// When the sharded server acts on observed-vs-predicted pressure
+/// divergence (`ServeConfig::rebalance_threshold`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Never rebalance: no mid-stream checks, no drain-time suggestion.
+    Off,
+    /// Suggest a re-plan at drain time (`ServeOutcome::rebalanced`) but
+    /// never touch a live stream — the PR 4 behaviour, and the default.
+    #[default]
+    Drain,
+    /// Migrate mid-stream: when the divergence check fires, quiesce the
+    /// affected artifacts, move their executor/cache state to the workers
+    /// of a fresh plan and swap the routing atomically
+    /// (`ShardedServer::maybe_rebalance`).
+    Live,
+}
+
+impl RebalanceMode {
+    /// Parse a CLI flag value ("off" | "drain" | "live").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" | "none" => Ok(RebalanceMode::Off),
+            "drain" => Ok(RebalanceMode::Drain),
+            "live" => Ok(RebalanceMode::Live),
+            other => bail!("unknown rebalance mode '{other}' (off | drain | live)"),
+        }
+    }
+
+    /// Display name ("off" | "drain" | "live").
+    pub fn name(self) -> &'static str {
+        match self {
+            RebalanceMode::Off => "off",
+            RebalanceMode::Drain => "drain",
+            RebalanceMode::Live => "live",
+        }
+    }
+
+    /// Short fragment for job/result keys (same as [`Self::name`]).
+    pub fn key_part(self) -> &'static str {
+        self.name()
+    }
+}
+
 /// One worker's share of a [`Placement`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerPlan {
@@ -278,6 +321,17 @@ mod tests {
         assert_eq!(PlacementPolicy::default(), PlacementPolicy::Hash);
         assert_eq!(PlacementPolicy::CacheAware.name(), "cache-aware");
         assert_eq!(PlacementPolicy::CacheAware.key_part(), "cache");
+    }
+
+    #[test]
+    fn rebalance_mode_parses_and_names() {
+        assert_eq!(RebalanceMode::parse("off").unwrap(), RebalanceMode::Off);
+        assert_eq!(RebalanceMode::parse("drain").unwrap(), RebalanceMode::Drain);
+        assert_eq!(RebalanceMode::parse("live").unwrap(), RebalanceMode::Live);
+        assert!(RebalanceMode::parse("sometimes").is_err());
+        assert_eq!(RebalanceMode::default(), RebalanceMode::Drain);
+        assert_eq!(RebalanceMode::Live.name(), "live");
+        assert_eq!(RebalanceMode::Live.key_part(), "live");
     }
 
     #[test]

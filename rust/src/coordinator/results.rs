@@ -82,6 +82,7 @@ impl ResultStore {
                     completed,
                     failed,
                     cache_hits,
+                    migrations,
                 } => ResultValue {
                     // p50 end-to-end latency is the headline "seconds" of a
                     // serving run; the rest rides in `detail`.
@@ -90,7 +91,7 @@ impl ResultStore {
                     passed: Some(*failed == 0),
                     detail: Some(format!(
                         "{throughput_rps:.1} req/s, p99 {:.3} ms, {completed} ok / {failed} \
-                         failed, {cache_hits} cache hits",
+                         failed, {cache_hits} cache hits, {migrations} migrations",
                         p99_s * 1e3
                     )),
                 },

@@ -23,7 +23,8 @@
 //! `Arc`), while [`SyntheticExecutor`] serves native tiled-GEMM workloads
 //! from `operators::workloads::serving_mix`.
 //!
-//! Invariants (tested in `rust/tests/serve_multiworker.rs`):
+//! Invariants (tested in `rust/tests/serve_multiworker.rs` and, across
+//! live migrations, `rust/tests/serve_migration.rs`):
 //!
 //! * **per-artifact FIFO** — an artifact maps to one shard queue on one
 //!   (consistently chosen) worker, and each shard queue is drained
@@ -41,7 +42,37 @@
 //!   which never reach a shard;
 //! * **cache purity** — a cache hit returns a payload bit-identical to the
 //!   original execution, with `exec_seconds == 0` and `cached == true`.
+//!
+//! # Live migration
+//!
+//! [`RebalanceMode::Live`] closes the telemetry → scheduling feedback loop
+//! *mid-stream*: when the observed per-worker working-set pressure diverges
+//! from the active plan past `ServeConfig::rebalance_threshold`, the
+//! admission thread re-plans over the artifacts actually being served and
+//! moves the ones whose assignment changed ([`ShardedServer::maybe_rebalance`];
+//! [`ShardedServer::migrate`] is the forced variant the chaos tests drive).
+//! One artifact moves in three steps:
+//!
+//! 1. **quiesce** — a `Quiesce` fence is sent down the source worker's
+//!    request channel.  Channel FIFO means every request admitted before
+//!    the fence is already in the worker's local queues when the fence is
+//!    dequeued; the worker extracts and serves *only the migrating
+//!    artifact's* queued requests (other shard queues are untouched), then
+//!    exports the artifact's LRU response-cache entry and transferable
+//!    executor state ([`Executor::export_state`]) and acks;
+//! 2. **adopt** — the state is forwarded down the target worker's channel.
+//!    Channel FIFO again guarantees it is installed before any post-swap
+//!    request for the artifact reaches the target;
+//! 3. **swap** — only after the ack does the admission thread update its
+//!    routing table, so the first request routed to the target is
+//!    *causally after* the source's last response (the fence ack), which
+//!    is what preserves per-artifact FIFO end to end.
+//!
+//! No request is ever dropped or duplicated: quiesce serves queued work
+//! through the ordinary path and the route swap is a single-threaded
+//! in-memory update.  Every move is logged as a [`MigrationRecord`].
 
+use std::any::Any;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -61,7 +92,7 @@ use crate::telemetry::CacheProfile;
 use crate::util::lru::LruCache;
 use crate::util::stats::{percentile_sorted, Summary};
 
-use super::placement::{self, Placement, PlacementPolicy};
+use super::placement::{self, Placement, PlacementPolicy, RebalanceMode};
 use super::shard::{shard_for, ShardMetrics};
 
 /// One inference request.
@@ -129,6 +160,40 @@ pub struct Metrics {
     /// Per-worker working-set-pressure estimates (populated only when the
     /// server was started with per-artifact [`CacheProfile`]s).
     pub worker_pressure: Vec<WorkerPressure>,
+    /// Every live migration the run performed, in execution order (empty
+    /// unless [`RebalanceMode::Live`] fired or [`ShardedServer::migrate`]
+    /// was called).
+    pub migrations: Vec<MigrationRecord>,
+}
+
+/// One completed live migration: an artifact quiesced on its source
+/// worker, its state handed to the target, and the route swapped.  The
+/// log the CLI prints and the chaos suite reconciles against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MigrationRecord {
+    /// Admission count when the migration ran (the "seeded point" of the
+    /// chaos harness).
+    pub at_request: u64,
+    /// Artifact that moved.
+    pub artifact: String,
+    /// Worker the artifact was quiesced on.
+    pub from_worker: usize,
+    /// Worker that adopted the artifact.
+    pub to_worker: usize,
+    /// Requests for the artifact still queued at the source when the fence
+    /// arrived — served there, in order, before the handoff.
+    pub drained: u64,
+    /// Did an LRU response-cache entry move with the artifact?
+    pub cache_moved: bool,
+    /// Did transferable executor state move ([`Executor::export_state`])?
+    /// `false` means the target pays one [`Executor::prepare`] instead.
+    pub state_moved: bool,
+    /// Observed-vs-predicted pressure divergence that triggered the move
+    /// (0 for forced migrations).
+    pub divergence: f64,
+    /// `true` for [`ShardedServer::migrate`] calls, `false` for moves the
+    /// live divergence check decided.
+    pub forced: bool,
 }
 
 /// Cache working-set pressure of one worker: how many bytes of cache its
@@ -232,6 +297,24 @@ pub trait Executor {
 
     /// Execute `artifact` once on its protocol inputs.
     fn execute(&mut self, artifact: &str) -> Result<Exec>;
+
+    /// Export `artifact`'s transferable state for a live migration.  The
+    /// state *moves*: a non-`None` return must also forget the artifact
+    /// locally, so exactly one worker ever holds it.  The default returns
+    /// `None` — nothing transfers and the target worker rebuilds through
+    /// [`Executor::prepare`] on the artifact's next request.  That is the
+    /// honest contract for [`PjrtExecutor`]: the PJRT client (and its
+    /// loaded executables) is not `Send`, so compiled state never crosses
+    /// threads and migration costs one recompile on the target.
+    fn export_state(&mut self, _artifact: &str) -> Option<Box<dyn Any + Send>> {
+        None
+    }
+
+    /// Install state exported by [`Executor::export_state`] on the
+    /// artifact's previous worker.  Implementations must tolerate a
+    /// foreign payload (downcast and drop on mismatch); the default drops
+    /// it, falling back to a fresh [`Executor::prepare`].
+    fn import_state(&mut self, _artifact: &str, _state: Box<dyn Any + Send>) {}
 }
 
 /// PJRT-backed executor: serves compiled HLO artifacts via [`Registry`].
@@ -317,6 +400,20 @@ impl Executor for SyntheticExecutor {
         let seconds = t0.elapsed().as_secs_f64();
         let payload = c.data.iter().map(|x| *x as f64).sum();
         Ok(Exec { seconds, payload })
+    }
+
+    fn export_state(&mut self, artifact: &str) -> Option<Box<dyn Any + Send>> {
+        // the materialized input pair is the compile-once analog: handing
+        // it over spares the target the `prepare` warmup
+        self.inputs
+            .remove(artifact)
+            .map(|io| Box::new(io) as Box<dyn Any + Send>)
+    }
+
+    fn import_state(&mut self, artifact: &str, state: Box<dyn Any + Send>) {
+        if let Ok(io) = state.downcast::<(Tensor<f32>, Tensor<f32>)>() {
+            self.inputs.insert(artifact.to_string(), *io);
+        }
     }
 }
 
@@ -464,9 +561,24 @@ pub struct ServeConfig {
     /// against).
     pub cpu: Option<CpuSpec>,
     /// Observed-vs-predicted pressure divergence (fraction, `[0, 1]`)
-    /// beyond which [`ShardedServer::finish`] computes a rebalanced
-    /// placement ([`ServeOutcome::rebalanced`]).
+    /// beyond which the rebalance machinery acts: at drain time
+    /// ([`ServeOutcome::rebalanced`]) under [`RebalanceMode::Drain`], or
+    /// mid-stream ([`ShardedServer::maybe_rebalance`]) under
+    /// [`RebalanceMode::Live`].
     pub rebalance_threshold: f64,
+    /// What the server does when the divergence crosses the threshold:
+    /// nothing, a drain-time suggestion (default), or a live migration.
+    pub rebalance: RebalanceMode,
+    /// Admissions between live divergence checks ([`RebalanceMode::Live`]
+    /// only).  Checks are cheap (O(artifacts seen)), but re-planning and
+    /// migrating are not; the default of 32 keeps convergence fast without
+    /// thrashing on every request.
+    pub rebalance_check_every: usize,
+    /// Start from this explicit placement plan instead of planning from
+    /// `placement`/`profiles`.  This is how a drain-time suggestion from a
+    /// previous run ([`ServeOutcome::rebalanced`]) is applied to the next
+    /// one — the drain-rebalance leg of the `bench_serve` drifting-mix A/B.
+    pub plan: Option<Arc<Placement>>,
 }
 
 impl ServeConfig {
@@ -483,7 +595,25 @@ impl ServeConfig {
             placement: PlacementPolicy::default(),
             cpu: None,
             rebalance_threshold: 0.25,
+            rebalance: RebalanceMode::default(),
+            rebalance_check_every: 32,
+            plan: None,
         }
+    }
+
+    /// Select what happens on pressure divergence (off / drain / live).
+    pub fn with_rebalance(mut self, mode: RebalanceMode) -> Self {
+        self.rebalance = mode;
+        self
+    }
+
+    /// Start routing from an explicit plan (see [`ServeConfig::plan`]).
+    /// Assignments naming workers beyond this config's worker count fall
+    /// back to the hash route rather than panicking, so a plan from a
+    /// larger deployment degrades gracefully.
+    pub fn with_plan(mut self, plan: Arc<Placement>) -> Self {
+        self.plan = Some(plan);
+        self
     }
 
     /// Enable the per-worker LRU response cache with `entries` entries.
@@ -533,6 +663,35 @@ struct Envelope {
     shard: usize,
 }
 
+/// Everything the admission thread can send a worker: ordinary requests
+/// plus the two control messages of the migration protocol.  Channel FIFO
+/// is what makes the protocol correct — a `Quiesce` fence arrives after
+/// every pre-swap request, an `Adopt` before every post-swap one.
+enum WorkerMsg {
+    /// An admitted request.
+    Req(Envelope),
+    /// Migration fence: serve everything already queued for `artifact`,
+    /// export its state, ack on `reply`.
+    Quiesce {
+        artifact: String,
+        reply: mpsc::Sender<ArtifactState>,
+    },
+    /// Install state another worker exported for `state.artifact`.
+    Adopt { state: ArtifactState },
+}
+
+/// The transferable per-artifact state one worker hands another during a
+/// migration.
+struct ArtifactState {
+    artifact: String,
+    /// Requests served during the quiesce (for the migration log).
+    drained: u64,
+    /// The LRU response-cache entry, if one was resident.
+    cached: Option<f64>,
+    /// Opaque executor state ([`Executor::export_state`]).
+    executor: Option<Box<dyn Any + Send>>,
+}
+
 /// Everything a finished serving run produced.
 #[derive(Debug)]
 pub struct ServeOutcome {
@@ -560,16 +719,27 @@ pub struct ShardedServer {
     /// The cache-aware plan, when the config asked for one and profiles
     /// were available; None under hash placement.
     placement: Option<Arc<Placement>>,
+    /// The plan adopted by a live rebalance, superseding `placement` for
+    /// routing, pressure prediction and the drain-time hook.
+    live_plan: Option<Arc<Placement>>,
     /// CPU the plan was priced against (also used by the rebalance hook).
     cpu: CpuSpec,
     rebalance_threshold: f64,
-    senders: Vec<mpsc::Sender<Envelope>>,
+    rebalance: RebalanceMode,
+    check_every: u64,
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
     resp_rx: mpsc::Receiver<Response>,
     handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
     admitted: u64,
     rejected: Vec<Response>,
-    /// Distinct artifacts admitted per worker (working-set accounting).
+    /// The authoritative artifact→worker routing table: populated on an
+    /// artifact's first admission, mutated only by migrations.
+    routes: BTreeMap<String, usize>,
+    /// Distinct artifacts resident per worker (working-set accounting;
+    /// migrations move entries between sets).
     worker_artifacts: Vec<BTreeSet<String>>,
+    /// Completed migrations, in execution order.
+    migrations: Vec<MigrationRecord>,
     started: Instant,
 }
 
@@ -589,14 +759,14 @@ impl ShardedServer {
             .cpu
             .clone()
             .unwrap_or_else(|| profile_by_name("a53").expect("builtin profile").cpu);
-        // The cache-aware plan needs profiles; without them the policy
-        // silently degrades to hash (the CLI surfaces a note).
-        let placement_plan = match (config.placement, &config.profiles) {
-            (PlacementPolicy::CacheAware, Some(profiles)) => Some(Arc::new(placement::plan(
-                &InterferenceModel::new(&cpu),
-                profiles,
-                workers,
-            ))),
+        // An explicit plan wins; otherwise the cache-aware policy needs
+        // profiles to plan from — without them it silently degrades to
+        // hash (the CLI surfaces a note).
+        let placement_plan = match (config.plan, config.placement, &config.profiles) {
+            (Some(plan), _, _) => Some(plan),
+            (None, PlacementPolicy::CacheAware, Some(profiles)) => Some(Arc::new(
+                placement::plan(&InterferenceModel::new(&cpu), profiles, workers),
+            )),
             _ => None,
         };
         let factory = Arc::new(factory);
@@ -604,7 +774,7 @@ impl ShardedServer {
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = mpsc::channel::<Envelope>();
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
             senders.push(tx);
             let resp_tx = resp_tx.clone();
             let factory = factory.clone();
@@ -622,22 +792,44 @@ impl ShardedServer {
             catalog: config.catalog,
             profiles: config.profiles,
             placement: placement_plan,
+            live_plan: None,
             cpu,
             rebalance_threshold: config.rebalance_threshold,
+            rebalance: config.rebalance,
+            check_every: config.rebalance_check_every.max(1) as u64,
             senders,
             resp_rx,
             handles,
             admitted: 0,
             rejected: Vec::new(),
+            routes: BTreeMap::new(),
             worker_artifacts: vec![BTreeSet::new(); workers],
+            migrations: Vec::new(),
             started: Instant::now(),
         }
     }
 
-    /// The cache-aware plan this server routes by (None under hash
-    /// placement or when no profiles were attached).
+    /// The cache-aware plan this server started routing by (None under
+    /// hash placement or when no profiles were attached).
     pub fn placement(&self) -> Option<&Placement> {
         self.placement.as_deref()
+    }
+
+    /// The plan currently governing routing and pressure prediction: the
+    /// latest live-adopted plan, else the starting plan.
+    pub fn active_plan(&self) -> Option<&Placement> {
+        self.live_plan.as_deref().or(self.placement.as_deref())
+    }
+
+    /// Worker currently serving `artifact` (None before its first
+    /// admission, unless a forced migration pinned it).
+    pub fn route_of(&self, artifact: &str) -> Option<usize> {
+        self.routes.get(artifact).copied()
+    }
+
+    /// Migrations performed so far, in execution order.
+    pub fn migrations(&self) -> &[MigrationRecord] {
+        &self.migrations
     }
 
     /// Shard count of this server.
@@ -671,21 +863,176 @@ impl ShardedServer {
             }
         }
         let shard = shard_for(&req.artifact, self.n_shards);
-        // The plan overrides the shard→worker hash for artifacts it covers;
-        // per-artifact FIFO survives because an artifact still maps to one
-        // shard queue on one (consistently chosen) worker.
-        let worker = self
-            .placement
-            .as_ref()
-            .and_then(|p| p.worker_for(&req.artifact))
-            .unwrap_or(shard % self.workers);
+        // The routing table is authoritative: first admission computes the
+        // route (live plan, else starting plan, else the shard→worker
+        // hash) and pins it; only a migration's fenced swap may change it
+        // afterwards.
+        // Per-artifact FIFO survives because an artifact always maps to
+        // one shard queue on one (consistently chosen) worker.
+        let worker = match self.routes.get(&req.artifact) {
+            Some(&w) => w,
+            None => {
+                // Route by the live plan, then the starting plan (a live
+                // plan only covers artifacts observed when it was adopted,
+                // so the starting plan still speaks for late arrivals),
+                // then the hash.  An explicit plan built for a different
+                // worker count may name out-of-range workers; those
+                // assignments degrade to the hash route instead of
+                // indexing out of bounds.
+                let w = self
+                    .live_plan
+                    .as_deref()
+                    .and_then(|p| p.worker_for(&req.artifact))
+                    .or_else(|| {
+                        self.placement.as_deref().and_then(|p| p.worker_for(&req.artifact))
+                    })
+                    .filter(|&w| w < self.workers)
+                    .unwrap_or(shard % self.workers);
+                self.routes.insert(req.artifact.clone(), w);
+                self.worker_artifacts[w].insert(req.artifact.clone());
+                w
+            }
+        };
         self.admitted += 1;
-        if !self.worker_artifacts[worker].contains(&req.artifact) {
-            self.worker_artifacts[worker].insert(req.artifact.clone());
-        }
         self.senders[worker]
-            .send(Envelope { req, enqueued: Instant::now(), shard })
+            .send(WorkerMsg::Req(Envelope { req, enqueued: Instant::now(), shard }))
             .expect("serve worker alive");
+        if self.rebalance == RebalanceMode::Live && self.admitted % self.check_every == 0 {
+            self.maybe_rebalance();
+        }
+    }
+
+    /// The live divergence check ([`RebalanceMode::Live`]; run
+    /// automatically every `ServeConfig::rebalance_check_every`
+    /// admissions, callable directly for deterministic tests).  When the
+    /// observed per-worker residency diverges from the active plan past
+    /// the threshold, re-plan over the artifacts actually served and
+    /// migrate every artifact whose assignment changed.  Returns the
+    /// number of artifacts migrated.
+    ///
+    /// With no active plan (a hash-placed stream), any profiled residency
+    /// is a full divergence — the semantics of
+    /// [`Placement::divergence`][super::placement::Placement::divergence]
+    /// with an all-zero prediction — so a hash-started live server
+    /// converges to the cache-aware plan at its first check.
+    pub fn maybe_rebalance(&mut self) -> usize {
+        if self.rebalance != RebalanceMode::Live {
+            return 0;
+        }
+        let Some(profiles) = self.profiles.clone() else { return 0 };
+        if !self.routes.keys().any(|a| profiles.contains_key(a)) {
+            return 0; // nothing profiled has been served: nothing to plan
+        }
+        // the cheap gate first — a quiet check costs one pressure pass,
+        // no profile clones
+        let divergence = match self.active_plan() {
+            Some(plan) => {
+                plan.divergence(&pressure_rows(&self.worker_artifacts, &profiles, Some(plan)))
+            }
+            None => 1.0,
+        };
+        if divergence <= self.rebalance_threshold {
+            return 0;
+        }
+        let observed: BTreeMap<String, CacheProfile> = self
+            .routes
+            .keys()
+            .filter_map(|a| profiles.get(a).map(|p| (a.clone(), p.clone())))
+            .collect();
+        let candidate = placement::plan(
+            &InterferenceModel::new(&self.cpu),
+            &observed,
+            self.workers,
+        );
+        let moves: Vec<(String, usize)> = candidate
+            .assignments
+            .iter()
+            .filter(|(a, &w)| self.routes.get(a.as_str()).is_some_and(|&cur| cur != w))
+            .map(|(a, &w)| (a.clone(), w))
+            .collect();
+        // Adopt the candidate even when nothing moves: it covers exactly
+        // the observed set, so the divergence signal resets and the check
+        // stays quiet until the mix drifts again.
+        self.live_plan = Some(Arc::new(candidate));
+        for (artifact, to) in &moves {
+            self.migrate_with(artifact, *to, divergence, false);
+        }
+        moves.len()
+    }
+
+    /// Force-migrate `artifact` to `to_worker`, regardless of any plan —
+    /// the injection point of the migration chaos harness
+    /// (`rust/tests/serve_migration.rs`).  Returns the completed record,
+    /// or `None` when the artifact is already routed there.
+    ///
+    /// # Panics
+    /// When `to_worker` is out of range.
+    pub fn migrate(&mut self, artifact: &str, to_worker: usize) -> Option<MigrationRecord> {
+        assert!(to_worker < self.workers, "target worker {to_worker} out of range");
+        if self.routes.get(artifact) == Some(&to_worker) {
+            return None;
+        }
+        Some(self.migrate_with(artifact, to_worker, 0.0, true))
+    }
+
+    /// The three-step migration protocol (see the module docs): quiesce
+    /// the source, hand the state to the target, swap the route.
+    fn migrate_with(
+        &mut self,
+        artifact: &str,
+        to: usize,
+        divergence: f64,
+        forced: bool,
+    ) -> MigrationRecord {
+        let Some(&from) = self.routes.get(artifact) else {
+            // never admitted: nothing is queued or resident anywhere, so
+            // pinning the route *is* the whole migration
+            self.routes.insert(artifact.to_string(), to);
+            self.worker_artifacts[to].insert(artifact.to_string());
+            let rec = MigrationRecord {
+                at_request: self.admitted,
+                artifact: artifact.to_string(),
+                from_worker: to,
+                to_worker: to,
+                drained: 0,
+                cache_moved: false,
+                state_moved: false,
+                divergence,
+                forced,
+            };
+            self.migrations.push(rec.clone());
+            return rec;
+        };
+        debug_assert_ne!(from, to, "caller filters same-worker moves");
+        // 1. fence + quiesce: the source serves everything already queued
+        //    for the artifact (channel FIFO puts the fence after every
+        //    pre-swap request), then exports the transferable state
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.senders[from]
+            .send(WorkerMsg::Quiesce { artifact: artifact.to_string(), reply: reply_tx })
+            .expect("serve worker alive");
+        let state = reply_rx.recv().expect("quiesce ack");
+        let rec = MigrationRecord {
+            at_request: self.admitted,
+            artifact: artifact.to_string(),
+            from_worker: from,
+            to_worker: to,
+            drained: state.drained,
+            cache_moved: state.cached.is_some(),
+            state_moved: state.executor.is_some(),
+            divergence,
+            forced,
+        };
+        // 2. adopt: channel FIFO installs the state before any post-swap
+        //    request for the artifact reaches the target
+        self.senders[to].send(WorkerMsg::Adopt { state }).expect("serve worker alive");
+        // 3. swap the route — admission is single-threaded, so this is
+        //    atomic with respect to every future `submit`
+        self.routes.insert(artifact.to_string(), to);
+        self.worker_artifacts[from].remove(artifact);
+        self.worker_artifacts[to].insert(artifact.to_string());
+        self.migrations.push(rec.clone());
+        rec
     }
 
     /// Submit an entire request stream (ids assigned in stream order) and
@@ -722,11 +1069,18 @@ impl ShardedServer {
             started,
             profiles,
             placement,
+            live_plan,
             cpu,
             rebalance_threshold,
+            rebalance,
             worker_artifacts,
+            migrations,
             ..
         } = self;
+        // The active plan: pressure prediction and the drain-time hook
+        // must follow a live plan swap — a stale `placement` here is
+        // exactly the predicted-vs-observed bug the regression tests pin.
+        let active_plan = live_plan.or(placement);
         drop(senders); // workers drain their queues and exit
         let mut responses: Vec<Response> = resp_rx.iter().collect();
         // Keyed by (shard, worker), not shard alone: a cache-aware plan may
@@ -765,34 +1119,21 @@ impl ShardedServer {
         metrics.rejected = rejected.len() as u64;
         metrics.batches = per_shard.values().map(|s| s.batches).sum();
         metrics.per_shard = per_shard.into_values().collect();
+        metrics.migrations = migrations;
         if let Some(profiles) = &profiles {
-            metrics.worker_pressure = worker_artifacts
-                .iter()
-                .enumerate()
-                .map(|(worker, artifacts)| {
-                    let mut p = WorkerPressure {
-                        worker,
-                        artifacts: artifacts.len() as u64,
-                        predicted_bytes: placement
-                            .as_ref()
-                            .map_or(0, |pl| pl.predicted_bytes(worker)),
-                        ..WorkerPressure::default()
-                    };
-                    for a in artifacts {
-                        if let Some(profile) = profiles.get(a) {
-                            p.profiled += 1;
-                            p.resident_bytes += profile.working_set_bytes;
-                        }
-                    }
-                    p
-                })
-                .collect();
+            metrics.worker_pressure =
+                pressure_rows(&worker_artifacts, profiles, active_plan.as_deref());
         }
-        // The rebalance hook: when the plan's predicted pressure diverged
-        // from what this run actually put on each worker, re-plan over the
-        // artifacts that were really served.
-        let rebalanced = match (&placement, &profiles) {
-            (Some(plan), Some(profiles)) if !metrics.worker_pressure.is_empty() => {
+        // The drain-time rebalance hook: when the active plan's predicted
+        // pressure diverged from what this run actually put on each
+        // worker, re-plan over the artifacts that were really served.  A
+        // live run that converged shows no divergence here — its active
+        // plan *is* the re-plan — and `RebalanceMode::Off` disables the
+        // hook entirely.
+        let rebalanced = match (&active_plan, &profiles) {
+            (Some(plan), Some(profiles))
+                if rebalance != RebalanceMode::Off && !metrics.worker_pressure.is_empty() =>
+            {
                 let observed: BTreeMap<String, CacheProfile> = worker_artifacts
                     .iter()
                     .flatten()
@@ -812,31 +1153,81 @@ impl ShardedServer {
     }
 }
 
-/// One worker: drains its envelope channel into per-shard FIFO queues and
-/// serves them batch-by-batch, oldest shard head first.
+/// Observed per-worker pressure rows: residency summed from the profiled
+/// artifacts resident on each worker, prediction read off `plan` (0 with
+/// no plan).  Shared by the live divergence check and the drain rollup so
+/// both always price the *same* observation.
+fn pressure_rows(
+    worker_artifacts: &[BTreeSet<String>],
+    profiles: &BTreeMap<String, CacheProfile>,
+    plan: Option<&Placement>,
+) -> Vec<WorkerPressure> {
+    worker_artifacts
+        .iter()
+        .enumerate()
+        .map(|(worker, artifacts)| {
+            let mut p = WorkerPressure {
+                worker,
+                artifacts: artifacts.len() as u64,
+                predicted_bytes: plan.map_or(0, |pl| pl.predicted_bytes(worker)),
+                ..WorkerPressure::default()
+            };
+            for a in artifacts {
+                if let Some(profile) = profiles.get(a) {
+                    p.profiled += 1;
+                    p.resident_bytes += profile.working_set_bytes;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+/// The per-worker state `worker_loop` threads through its helpers: local
+/// shard queues, per-shard metrics, the LRU response cache and the
+/// (possibly failed) executor.
+struct WorkerState<E> {
+    worker: usize,
+    queues: BTreeMap<usize, VecDeque<Envelope>>,
+    metrics: BTreeMap<usize, ShardMetrics>,
+    cache: LruCache<String, f64>,
+    executor: Result<E>,
+    batch_policy: BatchPolicy,
+    resp_tx: mpsc::Sender<Response>,
+}
+
+/// One worker: drains its message channel into per-shard FIFO queues and
+/// serves them batch-by-batch, oldest shard head first.  `Quiesce` and
+/// `Adopt` control messages are handled the moment they are dequeued —
+/// channel FIFO makes that the correct fence point (see the module docs).
 fn worker_loop<E: Executor>(
     worker: usize,
-    rx: mpsc::Receiver<Envelope>,
+    rx: mpsc::Receiver<WorkerMsg>,
     resp_tx: mpsc::Sender<Response>,
     executor: Result<E>,
     batch_policy: BatchPolicy,
     cache_entries: usize,
 ) -> Vec<ShardMetrics> {
-    let mut executor = executor;
-    let mut queues: BTreeMap<usize, VecDeque<Envelope>> = BTreeMap::new();
-    let mut metrics: BTreeMap<usize, ShardMetrics> = BTreeMap::new();
-    let mut cache: LruCache<String, f64> = LruCache::new(cache_entries);
+    let mut st = WorkerState {
+        worker,
+        queues: BTreeMap::new(),
+        metrics: BTreeMap::new(),
+        cache: LruCache::new(cache_entries),
+        executor,
+        batch_policy,
+        resp_tx,
+    };
     let mut open = true;
 
     loop {
-        let queued = queues.values().map(|q| q.len()).sum::<usize>();
+        let queued = st.queues.values().map(|q| q.len()).sum::<usize>();
         if queued == 0 {
             if !open {
                 break;
             }
-            // idle: block for the next request (or channel close)
+            // idle: block for the next message (or channel close)
             match rx.recv() {
-                Ok(env) => queues.entry(env.shard).or_default().push_back(env),
+                Ok(msg) => handle_msg(&mut st, msg),
                 Err(_) => {
                     open = false;
                     continue;
@@ -846,7 +1237,7 @@ fn worker_loop<E: Executor>(
         // soak up whatever else has arrived, without blocking
         while open {
             match rx.try_recv() {
-                Ok(env) => queues.entry(env.shard).or_default().push_back(env),
+                Ok(msg) => handle_msg(&mut st, msg),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     open = false;
@@ -856,7 +1247,8 @@ fn worker_loop<E: Executor>(
         }
 
         // serve one batch from the shard whose head request is oldest
-        let Some(shard) = queues
+        let Some(shard) = st
+            .queues
             .iter()
             .filter(|(_, q)| !q.is_empty())
             .min_by_key(|(_, q)| q.front().unwrap().enqueued)
@@ -864,9 +1256,9 @@ fn worker_loop<E: Executor>(
         else {
             continue;
         };
-        let queue = queues.get_mut(&shard).unwrap();
+        let queue = st.queues.get_mut(&shard).unwrap();
         let mut batch = vec![queue.pop_front().unwrap()];
-        while batch.len() < batch_policy.max_batch {
+        while batch.len() < st.batch_policy.max_batch {
             match queue.front() {
                 Some(next) if next.req.artifact == batch[0].req.artifact => {
                     batch.push(queue.pop_front().unwrap());
@@ -874,84 +1266,156 @@ fn worker_loop<E: Executor>(
                 _ => break,
             }
         }
+        serve_batch(&mut st, batch);
+    }
+    st.metrics.into_values().collect()
+}
 
-        let artifact = batch[0].req.artifact.clone();
-        let sm = metrics
-            .entry(shard)
-            .or_insert_with(|| ShardMetrics::new(shard, worker));
-        sm.batches += 1;
-        sm.requests += batch.len() as u64;
-
-        // skip executor warmup when the whole batch will hit the cache
-        let prep = if cache.contains(&artifact) {
-            Ok(())
-        } else {
-            match &mut executor {
-                Ok(ex) => ex.prepare(&artifact),
-                Err(e) => Err(anyhow!("executor unavailable: {e:#}")),
+/// Dispatch one admission-channel message.
+fn handle_msg<E: Executor>(st: &mut WorkerState<E>, msg: WorkerMsg) {
+    match msg {
+        WorkerMsg::Req(env) => st.queues.entry(env.shard).or_default().push_back(env),
+        WorkerMsg::Quiesce { artifact, reply } => {
+            // Extract every queued request for the migrating artifact.
+            // The artifact lives on exactly one shard, and extraction
+            // preserves both its internal order (per-artifact FIFO) and
+            // the order of everything left behind; other shard queues are
+            // untouched — only the affected queue quiesces.
+            let mut pending: VecDeque<Envelope> = VecDeque::new();
+            for q in st.queues.values_mut() {
+                if !q.iter().any(|e| e.req.artifact == artifact) {
+                    continue;
+                }
+                let mut rest = VecDeque::with_capacity(q.len());
+                for env in q.drain(..) {
+                    if env.req.artifact == artifact {
+                        pending.push_back(env);
+                    } else {
+                        rest.push_back(env);
+                    }
+                }
+                *q = rest;
             }
-        };
-
-        for env in batch {
-            let latency = env.enqueued.elapsed().as_secs_f64();
-            if let Some(&payload) = cache.get(&env.req.artifact) {
-                sm.completed += 1;
-                sm.cache_hits += 1;
-                sm.latency.record(latency);
-                let _ = resp_tx.send(Response {
-                    id: env.req.id,
-                    artifact: env.req.artifact,
-                    exec_seconds: 0.0,
-                    latency_seconds: latency,
-                    ok: true,
-                    error: None,
-                    payload: Some(payload),
-                    cached: true,
-                    shard,
-                });
-                continue;
+            let drained = pending.len() as u64;
+            while !pending.is_empty() {
+                // max_batch == 0 means "no grouping" on the normal path
+                // (every batch still starts with one popped envelope);
+                // mirror that here or the drain would never advance
+                let take = pending.len().min(st.batch_policy.max_batch.max(1));
+                serve_batch(st, pending.drain(..take).collect());
             }
-            let result = match (&mut executor, &prep) {
-                (Ok(ex), Ok(())) => ex.execute(&env.req.artifact),
-                (_, Err(e)) => Err(anyhow!("{e:#}")),
-                (Err(e), _) => Err(anyhow!("executor unavailable: {e:#}")),
+            let cached = st.cache.remove(&artifact);
+            let executor = match &mut st.executor {
+                Ok(ex) => ex.export_state(&artifact),
+                Err(_) => None,
             };
-            match result {
-                Ok(exec) => {
-                    cache.put(env.req.artifact.clone(), exec.payload);
-                    let latency = env.enqueued.elapsed().as_secs_f64();
-                    sm.completed += 1;
-                    sm.latency.record(latency);
-                    let _ = resp_tx.send(Response {
-                        id: env.req.id,
-                        artifact: env.req.artifact,
-                        exec_seconds: exec.seconds,
-                        latency_seconds: latency,
-                        ok: true,
-                        error: None,
-                        payload: Some(exec.payload),
-                        cached: false,
-                        shard,
-                    });
-                }
-                Err(e) => {
-                    sm.failed += 1;
-                    let _ = resp_tx.send(Response {
-                        id: env.req.id,
-                        artifact: env.req.artifact,
-                        exec_seconds: 0.0,
-                        latency_seconds: env.enqueued.elapsed().as_secs_f64(),
-                        ok: false,
-                        error: Some(e.to_string()),
-                        payload: None,
-                        cached: false,
-                        shard,
-                    });
-                }
+            // a dropped reply means the admission side is gone; nothing
+            // left to do but keep serving
+            let _ = reply.send(ArtifactState { artifact, drained, cached, executor });
+        }
+        WorkerMsg::Adopt { state } => {
+            let ArtifactState { artifact, cached, executor, .. } = state;
+            if let (Some(s), Ok(ex)) = (executor, &mut st.executor) {
+                ex.import_state(&artifact, s);
+            }
+            if let Some(payload) = cached {
+                st.cache.put(artifact, payload);
             }
         }
     }
-    metrics.into_values().collect()
+}
+
+/// Serve one same-artifact batch: cache lookups, one shared warmup, then
+/// per-request execution — every response is sent exactly once.
+fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
+    debug_assert!(!batch.is_empty());
+    debug_assert!(batch.iter().all(|e| e.shard == batch[0].shard));
+    let shard = batch[0].shard;
+    let artifact = batch[0].req.artifact.clone();
+    let worker = st.worker;
+    let sm = st
+        .metrics
+        .entry(shard)
+        .or_insert_with(|| ShardMetrics::new(shard, worker));
+    sm.batches += 1;
+    sm.requests += batch.len() as u64;
+
+    // skip executor warmup when the whole batch will hit the cache
+    let prep = if st.cache.contains(&artifact) {
+        Ok(())
+    } else {
+        match &mut st.executor {
+            Ok(ex) => ex.prepare(&artifact),
+            Err(e) => Err(anyhow!("executor unavailable: {e:#}")),
+        }
+    };
+
+    for env in batch {
+        let sm = st
+            .metrics
+            .get_mut(&shard)
+            .expect("shard metrics row created above");
+        let latency = env.enqueued.elapsed().as_secs_f64();
+        if let Some(&payload) = st.cache.get(&env.req.artifact) {
+            sm.completed += 1;
+            sm.cache_hits += 1;
+            sm.latency.record(latency);
+            let _ = st.resp_tx.send(Response {
+                id: env.req.id,
+                artifact: env.req.artifact,
+                exec_seconds: 0.0,
+                latency_seconds: latency,
+                ok: true,
+                error: None,
+                payload: Some(payload),
+                cached: true,
+                shard,
+            });
+            continue;
+        }
+        let result = match (&mut st.executor, &prep) {
+            (Ok(ex), Ok(())) => ex.execute(&env.req.artifact),
+            (_, Err(e)) => Err(anyhow!("{e:#}")),
+            (Err(e), _) => Err(anyhow!("executor unavailable: {e:#}")),
+        };
+        let sm = st
+            .metrics
+            .get_mut(&shard)
+            .expect("shard metrics row created above");
+        match result {
+            Ok(exec) => {
+                st.cache.put(env.req.artifact.clone(), exec.payload);
+                let latency = env.enqueued.elapsed().as_secs_f64();
+                sm.completed += 1;
+                sm.latency.record(latency);
+                let _ = st.resp_tx.send(Response {
+                    id: env.req.id,
+                    artifact: env.req.artifact,
+                    exec_seconds: exec.seconds,
+                    latency_seconds: latency,
+                    ok: true,
+                    error: None,
+                    payload: Some(exec.payload),
+                    cached: false,
+                    shard,
+                });
+            }
+            Err(e) => {
+                sm.failed += 1;
+                let _ = st.resp_tx.send(Response {
+                    id: env.req.id,
+                    artifact: env.req.artifact,
+                    exec_seconds: 0.0,
+                    latency_seconds: env.enqueued.elapsed().as_secs_f64(),
+                    ok: false,
+                    error: Some(e.to_string()),
+                    payload: None,
+                    cached: false,
+                    shard,
+                });
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1181,6 +1645,162 @@ mod tests {
         let re = out.rebalanced.expect("one-artifact stream must diverge from the plan");
         assert_eq!(re.assignments.len(), 1, "re-planned over what was actually served");
         assert!(re.assignments.contains_key(&mix[0].artifact));
+    }
+
+    #[test]
+    fn live_rebalance_converges_and_refreshes_predicted_pressure() {
+        // Regression test for the stale-prediction bug: after a live plan
+        // swap, `WorkerPressure::predicted_bytes` must come from the
+        // *active* plan, not the one the server started with.
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mix = workloads::serving_mix();
+        let mut cfg = ServeConfig::new(2)
+            .with_profiles(mix_profiles())
+            .with_placement(PlacementPolicy::CacheAware)
+            .with_cpu(cpu)
+            .with_rebalance(RebalanceMode::Live);
+        cfg.rebalance_check_every = 8;
+        let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let initial = srv.placement().expect("cache-aware start").clone();
+        // the plan expected the whole mix; serve only two artifacts, so
+        // the divergence check must fire mid-stream and adopt a live plan
+        for id in 0..24u64 {
+            let artifact = mix[id as usize % 2].artifact.clone();
+            srv.submit(Request { id, artifact });
+        }
+        let live = srv.active_plan().expect("live plan adopted").clone();
+        assert_ne!(live, initial, "check must have re-planned over the observed pair");
+        assert_eq!(live.assignments.len(), 2, "re-planned over what was served");
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, 24);
+        for row in &out.metrics.worker_pressure {
+            assert_eq!(
+                row.predicted_bytes,
+                live.predicted_bytes(row.worker),
+                "worker {}: prediction must follow the live plan swap",
+                row.worker
+            );
+            assert_eq!(
+                row.resident_bytes, row.predicted_bytes,
+                "worker {}: converged run must agree with its own plan",
+                row.worker
+            );
+        }
+        assert!(
+            out.rebalanced.is_none(),
+            "a converged live run has nothing left to suggest"
+        );
+    }
+
+    #[test]
+    fn rebalance_off_suppresses_hook_and_migrations() {
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let mix = workloads::serving_mix();
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_profiles(mix_profiles())
+                .with_placement(PlacementPolicy::CacheAware)
+                .with_cpu(cpu)
+                .with_rebalance(RebalanceMode::Off),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        // the same divergent one-artifact stream that fires the Drain hook
+        for id in 0..8u64 {
+            srv.submit(Request { id, artifact: mix[0].artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, 8);
+        assert!(out.rebalanced.is_none(), "off means off");
+        assert!(out.metrics.migrations.is_empty());
+    }
+
+    #[test]
+    fn forced_migration_reroutes_and_logs() {
+        let mut srv = synthetic_server(2, 8);
+        let artifact = workloads::synthetic_artifact(32);
+        for id in 0..4u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let from = srv.route_of(&artifact).expect("routed at first admission");
+        let to = 1 - from;
+        // moving to the current worker is a no-op...
+        assert!(srv.migrate(&artifact, from).is_none());
+        // ...moving away quiesces, hands state over and swaps the route
+        let rec = srv.migrate(&artifact, to).expect("a real move");
+        assert_eq!((rec.from_worker, rec.to_worker), (from, to));
+        assert!(rec.forced);
+        assert_eq!(srv.route_of(&artifact), Some(to));
+        for id in 4..8u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), 8);
+        assert!(out.responses.iter().all(|r| r.ok));
+        assert_eq!(out.metrics.migrations.len(), 1);
+        // per-artifact FIFO across the migration
+        let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "{ids:?}");
+        ids.sort();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        // the artifact's one shard shows up under both owner epochs, and
+        // the rows still reconcile with the aggregate
+        let shard = out.responses[0].shard;
+        let owners: Vec<usize> = out
+            .metrics
+            .per_shard
+            .iter()
+            .filter(|s| s.shard == shard)
+            .map(|s| s.worker)
+            .collect();
+        assert_eq!(owners.len(), 2, "{:?}", out.metrics.per_shard);
+        let total: u64 = out.metrics.per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn forced_migration_of_unseen_artifact_pins_the_route() {
+        let mut srv = synthetic_server(2, 0);
+        let artifact = workloads::synthetic_artifact(48);
+        let natural = shard_for(&artifact, srv.n_shards()) % srv.workers();
+        let pinned = 1 - natural;
+        let rec = srv.migrate(&artifact, pinned).expect("pin counts as a move");
+        assert_eq!(rec.drained, 0);
+        srv.submit(Request { id: 0, artifact: artifact.clone() });
+        assert_eq!(srv.route_of(&artifact), Some(pinned));
+        let out = srv.finish();
+        assert!(out.responses[0].ok);
+        let row = out.metrics.per_shard.iter().find(|s| s.requests > 0).unwrap();
+        assert_eq!(row.worker, pinned, "the pinned route, not the hash, served it");
+    }
+
+    #[test]
+    fn migrated_cache_entry_keeps_hitting_on_the_target() {
+        let mut srv = synthetic_server(2, 8);
+        let artifact = workloads::synthetic_artifact(64);
+        for id in 0..3u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let from = srv.route_of(&artifact).unwrap();
+        let rec = srv.migrate(&artifact, 1 - from).expect("moves");
+        assert!(
+            rec.cache_moved,
+            "the response-cache entry must travel with the artifact: {rec:?}"
+        );
+        assert!(rec.state_moved, "synthetic inputs are transferable state");
+        for id in 3..6u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        assert!(out.responses.iter().all(|r| r.ok));
+        let by_id: BTreeMap<u64, &Response> =
+            out.responses.iter().map(|r| (r.id, r)).collect();
+        let payload = by_id[&0].payload.unwrap();
+        for id in 3..6u64 {
+            let r = by_id[&id];
+            assert!(r.cached, "request {id} must hit the migrated cache entry");
+            assert_eq!(r.exec_seconds, 0.0);
+            assert_eq!(r.payload, Some(payload), "bit-identical across the move");
+        }
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! ~2.3 minutes) cheap enough to update per request; [`ShardMetrics`]
 //! aggregates one shard's counters and histogram, and rolls up into the
 //! aggregate `Metrics` via [`ShardMetrics::merge`].
+//!
+//! A live migration ([`super::server::ShardedServer::migrate`]) moves an
+//! artifact's *worker*, never its shard — [`shard_for`] is a pure function
+//! of the name — so after a move the same shard id accumulates one
+//! [`ShardMetrics`] row per owner epoch, keyed `(shard, worker)`, and the
+//! rows still sum to the aggregate totals (the reconciliation the
+//! migration chaos suite asserts).
 
 use crate::util::rng::mix;
 
@@ -191,9 +198,13 @@ impl ShardMetrics {
         }
     }
 
-    /// Fold `other` (same shard id) into this record.
+    /// Fold `other` (same `(shard, worker)` row) into this record.
     pub fn merge(&mut self, other: &ShardMetrics) {
         debug_assert_eq!(self.shard, other.shard);
+        debug_assert_eq!(
+            self.worker, other.worker,
+            "rows from different owner epochs must stay separate"
+        );
         self.requests += other.requests;
         self.completed += other.completed;
         self.failed += other.failed;

@@ -29,7 +29,7 @@ use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
     BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
 };
-use cachebound::coordinator::PlacementPolicy;
+use cachebound::coordinator::{PlacementPolicy, RebalanceMode};
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
 use cachebound::operators::workloads::{self, BenchWorkload};
@@ -190,7 +190,7 @@ commands:
                               tuned GEMM, L1/L2 capacities marked
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
         [--max-batch B] [--shards M] [--synthetic]
-        [--placement hash|cache-aware]
+        [--placement hash|cache-aware] [--rebalance off|drain|live]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
                               when artifacts/ is absent or --synthetic is set;
@@ -198,7 +198,12 @@ commands:
                               and reports per-worker working-set pressure;
                               --placement cache-aware packs artifacts onto
                               workers by predicted co-run slowdown on the
-                              shared L2 instead of hashing)
+                              shared L2 instead of hashing; --rebalance live
+                              migrates artifacts mid-stream when observed
+                              pressure diverges from the plan — quiesce,
+                              state handoff, atomic route swap — and prints
+                              the migration log; drain (default) only
+                              suggests a re-plan at exit)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -655,10 +660,15 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         Some(v) => PlacementPolicy::parse(v)?,
         None => PlacementPolicy::Hash,
     };
+    let rebalance = match opts.get("rebalance") {
+        Some(v) => RebalanceMode::parse(v)?,
+        None => RebalanceMode::Drain,
+    };
     let mut cfg = ServeConfig::new(workers).with_cache(opts.usize("cache-entries", 64)?);
     cfg.batch = BatchPolicy { max_batch: opts.usize("max-batch", 8)? };
     cfg.shards = opts.usize("shards", 0)?;
     cfg.placement = placement;
+    cfg.rebalance = rebalance;
 
     // Fall back to the synthetic mix only when artifacts are genuinely
     // absent; a present-but-broken manifest is a hard error, not a silent
@@ -685,6 +695,12 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
                 println!(
                     "note: AOT artifacts carry no cache profiles — \
                      cache-aware placement falls back to hash"
+                );
+            }
+            if rebalance == RebalanceMode::Live {
+                println!(
+                    "note: AOT artifacts carry no cache profiles — \
+                     live rebalancing has no divergence signal to act on"
                 );
             }
             let stream = workloads::bursty_requests(&menu, n_requests, seed);
@@ -729,12 +745,13 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let m = &outcome.metrics;
     println!(
         "served {}/{} requests in {:.2}s -> {:.1} req/s  \
-         ({workers} workers, {mode}, {} placement)",
+         ({workers} workers, {mode}, {} placement, rebalance {})",
         m.completed,
         m.requests,
         outcome.wall_seconds,
         m.throughput(outcome.wall_seconds),
         placement.name(),
+        rebalance.name(),
     );
     println!(
         "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at admission)",
@@ -805,6 +822,35 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
                 },
                 format!("{:.1}x", p.resident_bytes as f64 / cpu.l1.size_bytes as f64),
                 format!("{:.2}x", p.resident_bytes as f64 / cpu.l2.size_bytes as f64),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    if !m.migrations.is_empty() {
+        let mut t = Table::new(
+            "Live migrations (quiesce → state handoff → route swap)",
+            &["at-req", "artifact", "move", "drained", "cache", "state", "divergence", "trigger"],
+        )
+        .align(&[
+            Align::Right,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+        for rec in &m.migrations {
+            t.row(vec![
+                rec.at_request.to_string(),
+                rec.artifact.clone(),
+                format!("{}→{}", rec.from_worker, rec.to_worker),
+                rec.drained.to_string(),
+                if rec.cache_moved { "moved" } else { "-" }.to_string(),
+                if rec.state_moved { "moved" } else { "recompile" }.to_string(),
+                format!("{:.2}", rec.divergence),
+                if rec.forced { "forced" } else { "divergence" }.to_string(),
             ]);
         }
         println!("{}", t.to_markdown());

@@ -61,6 +61,14 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.contains_key(key)
     }
 
+    /// Remove `key`, returning its value if it was resident.  The serving
+    /// core uses this to hand an artifact's response-cache entry to its new
+    /// worker during a live migration — the entry *moves*, it is never
+    /// duplicated.
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        self.map.remove(key).map(|(v, _)| v)
+    }
+
     /// Insert `key -> value`, evicting the least-recently-used entry if the
     /// cache is full.  Returns the evicted key, if any.
     pub fn put(&mut self, key: K, value: V) -> Option<K> {
@@ -119,6 +127,20 @@ mod tests {
         assert_eq!(c.put("a", 10), None);
         assert_eq!(c.len(), 2);
         assert_eq!(c.get(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn remove_takes_the_entry_out() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.remove(&"a"), Some(1));
+        assert_eq!(c.remove(&"a"), None, "an entry moves at most once");
+        assert!(!c.contains(&"a"));
+        assert_eq!(c.len(), 1);
+        // the freed slot is reusable without evicting the survivor
+        c.put("c", 3);
+        assert!(c.contains(&"b") && c.contains(&"c"));
     }
 
     #[test]

@@ -44,8 +44,24 @@ fn sweep_roundtrips_through_bench_json() {
         assert!(r.measured_s > 0.0, "{}", r.key);
         assert!(!r.class.is_empty(), "{}", r.key);
         assert!(r.l1_read_s < r.l2_read_s && r.l2_read_s < r.ram_read_s, "{}", r.key);
-        assert!(r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0, "{}: {}", r.key, r.pct_of_bound);
+        // servedrift records are MRC-predicted serving times, not
+        // bound-line measurements — the ≤105% clamp only applies to the
+        // operator grid
+        if r.family != "servedrift" {
+            assert!(
+                r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0,
+                "{}: {}",
+                r.key,
+                r.pct_of_bound
+            );
+        }
     }
+    // the drifting-mix records ride in the same report (both profiles
+    // swept; only the A53 pair qualifies)
+    assert_eq!(
+        report.records.iter().filter(|r| r.family == "servedrift").count(),
+        2
+    );
     let dir = temp_dir("roundtrip");
     let path = dir.join("BENCH.json");
     report.save(&path).unwrap();

@@ -6,6 +6,10 @@
 
 use cachebound::coordinator::jobs::{Job, JobSpec};
 use cachebound::coordinator::pool::WorkerPool;
+use cachebound::coordinator::server::{
+    Request, ServeConfig, ShardedServer, SyntheticExecutor,
+};
+use cachebound::coordinator::RebalanceMode;
 use cachebound::hw::profile_by_name;
 use cachebound::operators::bitserial;
 use cachebound::operators::conv::{self, ConvSchedule};
@@ -248,6 +252,137 @@ fn prop_result_store_ingest_is_keyed_correctly() {
         for key in keys {
             assert!(store.seconds(&key).is_some(), "missing {key}");
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serving invariants under arbitrary migration schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_serve_fifo_and_exactly_once_under_arbitrary_migrations() {
+    // Arbitrary request streams (including unknown artifacts, which fail
+    // on a worker) interleaved with arbitrary forced-migration schedules,
+    // with live rebalancing randomly on or off: per-artifact FIFO and
+    // exactly-one-response must hold regardless.
+    let mix = workloads::serving_mix();
+    let profiles =
+        cachebound::telemetry::serving_mix_profiles(&profile_by_name("a53").unwrap().cpu);
+    forall("serve_migration_schedules", 6, |rng| {
+        let workers = 1 + rng.below(4) as usize;
+        let live = rng.below(2) == 0;
+        let n = 60 + rng.below(60) as usize;
+        let mut cfg = ServeConfig::new(workers).with_cache(rng.below(6) as usize);
+        if live {
+            cfg = cfg
+                .with_profiles(profiles.clone())
+                .with_rebalance(RebalanceMode::Live);
+            cfg.rebalance_check_every = 8 + rng.below(24) as usize;
+        }
+        let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let mut expect_failures = 0u64;
+        for id in 0..n as u64 {
+            // ~1/12 of the schedule is a forced migration of a random
+            // artifact (possibly unseen, possibly a no-op move)
+            if rng.below(12) == 0 {
+                let artifact = &mix[rng.below(mix.len() as u64) as usize].artifact;
+                let target = rng.below(workers as u64) as usize;
+                let _ = srv.migrate(artifact, target);
+            }
+            let artifact = if rng.below(16) == 0 {
+                expect_failures += 1;
+                "prop_bogus_artifact".to_string()
+            } else {
+                mix[rng.below(mix.len() as u64) as usize].artifact.clone()
+            };
+            srv.submit(Request { id, artifact });
+        }
+        let out = srv.finish();
+        // exactly one response per request
+        let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        // per-artifact FIFO (failures included: they answer in order too)
+        let mut per_artifact: std::collections::HashMap<&str, Vec<u64>> =
+            std::collections::HashMap::new();
+        for r in &out.responses {
+            per_artifact.entry(r.artifact.as_str()).or_default().push(r.id);
+        }
+        for (artifact, ids) in per_artifact {
+            assert!(
+                ids.windows(2).all(|w| w[0] < w[1]),
+                "FIFO violated for {artifact}: {ids:?}"
+            );
+        }
+        // totals reconcile
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64);
+        assert_eq!(m.completed + m.failed, m.requests);
+        assert_eq!(m.failed, expect_failures);
+        assert_eq!(
+            m.per_shard.iter().map(|s| s.requests).sum::<u64>(),
+            m.requests
+        );
+        assert_eq!(
+            m.per_shard.iter().map(|s| s.latency.count()).sum::<u64>(),
+            m.completed
+        );
+    });
+}
+
+#[test]
+fn prop_placement_plans_deterministic_for_equal_inputs() {
+    use cachebound::analysis::{InterferenceModel, TraceMeta};
+    use cachebound::coordinator::placement::plan;
+    use cachebound::operators::workloads::BenchWorkload;
+    use cachebound::telemetry::CacheProfile;
+    use std::collections::BTreeMap;
+
+    // random profile populations: re-planning the identical input must be
+    // bit-identical (the property live rebalancing's convergence rests
+    // on), complete, and in worker range
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let model = InterferenceModel::new(&cpu);
+    forall("placement_determinism", 12, |rng| {
+        let n_profiles = 1 + rng.below(8) as usize;
+        let profiles: BTreeMap<String, CacheProfile> = (0..n_profiles)
+            .map(|i| {
+                let knee = 16 * 1024 * (1 + rng.below(24));
+                let peak = 0.5 + rng.below(50) as f64 / 100.0;
+                let accesses = 100_000 + rng.below(1_000_000);
+                let name = format!("prop_artifact_{i}");
+                let profile = CacheProfile {
+                    artifact: name.clone(),
+                    accesses,
+                    l1_hit_rate: 0.0,
+                    l2_hit_rate: peak,
+                    working_set_bytes: knee,
+                    footprint_bytes: knee + rng.below(knee),
+                    predicted_class: "RAM-read".into(),
+                    solo_time_s: 0.0,
+                    workload: Some(BenchWorkload::Gemm { n: 64 }),
+                    meta: Some(TraceMeta {
+                        traced_accesses: accesses,
+                        traced_bytes: accesses * 4,
+                        traced_write_accesses: 0,
+                        scale: 1.0,
+                    }),
+                    mrc_points: vec![(64, 0.0), (knee, peak)],
+                    knees: vec![],
+                };
+                (name, profile)
+            })
+            .collect();
+        let workers = 1 + rng.below(4) as usize;
+        let first = plan(&model, &profiles, workers);
+        for _ in 0..3 {
+            assert_eq!(plan(&model, &profiles, workers), first, "plan must be deterministic");
+        }
+        assert_eq!(first.assignments.len(), n_profiles, "every artifact assigned");
+        assert!(first.assignments.values().all(|&w| w < workers));
+        let planned: usize = first.plan.iter().map(|w| w.artifacts.len()).sum();
+        assert_eq!(planned, n_profiles, "assigned exactly once");
+        assert!(first.total_slowdown >= n_profiles as f64 - 1e-9);
     });
 }
 

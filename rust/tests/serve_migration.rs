@@ -1,0 +1,351 @@
+//! Migration chaos harness (DESIGN.md §Migration).
+//!
+//! The live-migration protocol claims three invariants survive *any*
+//! interleaving of requests and migrations: per-artifact FIFO, exactly
+//! one response per request, and metrics that reconcile across every
+//! `(shard, worker)` owner epoch.  This suite attacks the claim with a
+//! deterministic chaos driver: seeded drifting request streams,
+//! forced migrations injected at seeded points, and the automatic
+//! divergence trigger running on top.
+//!
+//! Seeds: every chaos test runs once per seed in
+//! `MIGRATION_CHAOS_SEEDS` (comma-separated, `0x` hex or decimal;
+//! default two seeds).  CI re-runs the suite with a 4-seed matrix.
+//!
+//! The convergence test pins the acceptance criterion: the adversarial
+//! co-run mix (`syn_gemm_n160` + `syn_gemm_n192`) started under *hash*
+//! placement converges to the cache-aware greedy plan mid-stream, with
+//! both workers busy afterwards.  (The throughput side of the criterion
+//! — live ≥ drain-time rebalance — is measured by the drifting-mix
+//! section of `benches/bench_serve.rs`; wall-clock assertions do not
+//! belong in a correctness suite.)
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use cachebound::analysis::InterferenceModel;
+use cachebound::coordinator::placement::{adversarial_mix, plan};
+use cachebound::coordinator::server::{
+    Request, Response, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
+};
+use cachebound::coordinator::RebalanceMode;
+use cachebound::hw::profile_by_name;
+use cachebound::operators::workloads;
+use cachebound::telemetry::{serving_mix_profiles, CacheProfile};
+use cachebound::util::rng::Xoshiro256;
+
+/// The chaos seed matrix: `MIGRATION_CHAOS_SEEDS` (comma-separated,
+/// decimal or `0x` hex), defaulting to two seeds so the suite is cheap in
+/// a plain `cargo test` and broad in CI.
+fn seeds() -> Vec<u64> {
+    match std::env::var("MIGRATION_CHAOS_SEEDS") {
+        Ok(raw) => raw
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.strip_prefix("0x")
+                    .map(|h| u64::from_str_radix(h, 16))
+                    .unwrap_or_else(|| s.parse())
+                    .unwrap_or_else(|e| panic!("bad chaos seed '{s}': {e}"))
+            })
+            .collect(),
+        Err(_) => vec![0xC0FFEE, 0x5EED_CAB5],
+    }
+}
+
+/// A drifting request stream: three phases drawn from different sub-menus
+/// of the serving mix, so the artifact population the server observes
+/// changes mid-stream (what the live divergence check exists to chase).
+fn drifting_stream(n: usize, seed: u64) -> Vec<String> {
+    let mix = workloads::serving_mix();
+    let menu = |idx: &[usize], weight_seed: u64| -> Vec<(String, u32)> {
+        idx.iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                (mix[m].artifact.clone(), 1 + ((weight_seed >> i) & 3) as u32)
+            })
+            .collect()
+    };
+    let phases: [Vec<(String, u32)>; 3] = [
+        menu(&[0, 1, 2], seed),
+        menu(&[2, 3, 4], seed >> 8),
+        menu(&[0, 4], seed >> 16),
+    ];
+    let per_phase = n / 3;
+    let mut out = Vec::with_capacity(n);
+    for (i, m) in phases.iter().enumerate() {
+        let want = if i == 2 { n - out.len() } else { per_phase };
+        out.extend(workloads::bursty_requests(m, want, seed ^ (i as u64 + 1)));
+    }
+    out
+}
+
+fn assert_exactly_once(out: &ServeOutcome, n: usize) {
+    let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(
+        ids,
+        (0..n as u64).collect::<Vec<_>>(),
+        "dropped or duplicated responses"
+    );
+}
+
+fn assert_per_artifact_fifo(responses: &[Response]) {
+    let mut per_artifact: HashMap<&str, Vec<u64>> = HashMap::new();
+    for r in responses {
+        per_artifact.entry(r.artifact.as_str()).or_default().push(r.id);
+    }
+    for (artifact, ids) in per_artifact {
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "FIFO violated for {artifact}: {ids:?}"
+        );
+    }
+}
+
+/// Aggregate totals must equal the sums over every `(shard, worker)` row —
+/// including the extra rows migrations mint when a shard changes owners.
+fn assert_metrics_reconcile(out: &ServeOutcome, n: usize) {
+    let m = &out.metrics;
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.completed + m.failed, m.requests);
+    let sums: [u64; 5] = [
+        m.per_shard.iter().map(|s| s.requests).sum(),
+        m.per_shard.iter().map(|s| s.completed).sum(),
+        m.per_shard.iter().map(|s| s.failed).sum(),
+        m.per_shard.iter().map(|s| s.cache_hits).sum(),
+        m.per_shard.iter().map(|s| s.latency.count()).sum(),
+    ];
+    assert_eq!(sums[0], m.requests - m.rejected, "per-shard requests");
+    assert_eq!(sums[1], m.completed, "per-shard completed");
+    assert_eq!(sums[2], m.failed - m.rejected, "per-shard failed");
+    assert_eq!(sums[3], m.cache_hits, "per-shard cache hits");
+    assert_eq!(sums[4], m.completed, "histograms record completed requests");
+    // an artifact migrates workers, never shards
+    let mut artifact_shard: HashMap<&str, usize> = HashMap::new();
+    for r in &out.responses {
+        if let Some(prev) = artifact_shard.insert(r.artifact.as_str(), r.shard) {
+            assert_eq!(prev, r.shard, "artifact {} changed shards", r.artifact);
+        }
+    }
+    // the migration log itself is well-formed: automatic moves always
+    // relocate and carry the divergence that triggered them; forced moves
+    // (including route pins, where from == to) log a zero divergence
+    for rec in &m.migrations {
+        assert!((0.0..=1.0).contains(&rec.divergence), "{rec:?}");
+        if rec.forced {
+            assert_eq!(rec.divergence, 0.0, "{rec:?}");
+        } else {
+            assert_ne!(rec.from_worker, rec.to_worker, "{rec:?}");
+            assert!(rec.divergence > 0.0, "{rec:?}");
+        }
+    }
+}
+
+/// The core chaos property: under seeded mix drift, forced migrations at
+/// seeded points *and* the automatic divergence trigger, every serving
+/// invariant holds and the payloads are bit-identical to an undisturbed
+/// baseline run.
+#[test]
+fn chaos_migrations_preserve_serving_invariants() {
+    let mix = workloads::serving_mix();
+    let profiles = serving_mix_profiles(&profile_by_name("a53").unwrap().cpu);
+    for seed in seeds() {
+        let mut rng = Xoshiro256::new(seed);
+        let workers = 2 + rng.below(3) as usize; // 2..=4
+        let n = 240;
+        let stream = drifting_stream(n, seed);
+
+        // the undisturbed baseline: same stream, no plans, no migrations
+        let baseline = ShardedServer::start(ServeConfig::new(workers), |_w| {
+            Ok(SyntheticExecutor::new())
+        })
+        .serve_stream(stream.iter().cloned());
+        assert_eq!(baseline.metrics.completed, n as u64, "seed {seed:#x}");
+
+        // the chaos run: live rebalancing plus forced moves at seeded points
+        let mut cfg = ServeConfig::new(workers)
+            .with_cache(1 + rng.below(8) as usize)
+            .with_profiles(profiles.clone())
+            .with_rebalance(RebalanceMode::Live);
+        cfg.rebalance_check_every = 16 + rng.below(32) as usize;
+        let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let mut forced = 0usize;
+        for (id, artifact) in stream.iter().enumerate() {
+            if rng.below(16) == 0 {
+                let victim = &mix[rng.below(mix.len() as u64) as usize].artifact;
+                let target = rng.below(workers as u64) as usize;
+                forced += usize::from(srv.migrate(victim, target).is_some());
+            }
+            srv.submit(Request { id: id as u64, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+
+        assert_exactly_once(&out, n);
+        assert_per_artifact_fifo(&out.responses);
+        assert_metrics_reconcile(&out, n);
+        assert_eq!(out.metrics.failed, 0, "seed {seed:#x}: {:?}",
+            out.responses.iter().find(|r| !r.ok));
+        assert!(
+            out.metrics.migrations.len() >= forced,
+            "seed {seed:#x}: log must cover every forced move ({} < {forced})",
+            out.metrics.migrations.len()
+        );
+
+        // purity across migrations: executor state and cache entries moved,
+        // never corrupted — every payload matches the undisturbed run
+        let payload = |o: &ServeOutcome| -> BTreeMap<u64, f64> {
+            o.responses.iter().map(|r| (r.id, r.payload.unwrap())).collect()
+        };
+        assert_eq!(
+            payload(&out),
+            payload(&baseline),
+            "seed {seed:#x}: migrations must not change any payload"
+        );
+    }
+}
+
+/// The acceptance criterion: the adversarial pair, started under hash
+/// placement, converges to the cache-aware greedy plan mid-stream — the
+/// routing after convergence *is* the plan's assignment, both workers end
+/// up busy, and the run has no residual rebalance suggestion.
+#[test]
+fn hash_start_converges_to_cache_aware_plan_mid_stream() {
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let adv = adversarial_mix(&cpu, 2, 8).expect("qualifying pair on the A53");
+    let profiles: BTreeMap<String, CacheProfile> = adv.iter().cloned().collect();
+    let expected = plan(&InterferenceModel::new(&cpu), &profiles, 2);
+    assert_ne!(
+        expected.worker_for(&adv[0].0),
+        expected.worker_for(&adv[1].0),
+        "the greedy plan splits the pair"
+    );
+
+    let mut cfg = ServeConfig::new(2)
+        .with_profiles(Arc::new(profiles))
+        .with_cpu(cpu)
+        .with_rebalance(RebalanceMode::Live);
+    cfg.rebalance_check_every = 8;
+    let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+    assert!(srv.placement().is_none(), "hash start: no upfront plan");
+    let n = 48usize;
+    for id in 0..n as u64 {
+        let artifact = adv[id as usize % 2].0.clone();
+        srv.submit(Request { id, artifact });
+    }
+    // convergence: the live routing now equals the greedy assignment
+    assert!(!srv.migrations().is_empty(), "the divergence check must have fired");
+    for (name, _) in &adv {
+        assert_eq!(
+            srv.route_of(name),
+            expected.worker_for(name),
+            "{name} must be routed by the converged plan"
+        );
+    }
+    let first_move = srv.migrations()[0].at_request;
+    assert!(
+        first_move < n as u64,
+        "migration happened mid-stream, not at drain ({first_move})"
+    );
+
+    let out = srv.finish();
+    assert_exactly_once(&out, n);
+    assert_per_artifact_fifo(&out.responses);
+    assert_metrics_reconcile(&out, n);
+    assert_eq!(out.metrics.failed, 0);
+    // both workers busy after the split
+    let busy = out
+        .metrics
+        .worker_pressure
+        .iter()
+        .filter(|p| p.artifacts > 0)
+        .count();
+    assert_eq!(busy, 2, "{:?}", out.metrics.worker_pressure);
+    // post-migration prediction agrees with observation (the stale
+    // predicted_bytes regression) and nothing is left to suggest
+    for row in &out.metrics.worker_pressure {
+        assert_eq!(row.predicted_bytes, row.resident_bytes, "worker {}", row.worker);
+    }
+    assert!(out.rebalanced.is_none(), "converged run suggests nothing");
+}
+
+/// Forced migrations with the response cache on: the cache entry moves
+/// with the artifact and keeps serving bit-identical hits on the target,
+/// under repeated ping-pong moves.
+#[test]
+fn migrated_state_survives_ping_pong_moves() {
+    let artifact = workloads::synthetic_artifact(96);
+    let mut srv = ShardedServer::start(
+        ServeConfig::new(2).with_cache(4),
+        |_w| Ok(SyntheticExecutor::new()),
+    );
+    let mut id = 0u64;
+    let mut submit_burst = |srv: &mut ShardedServer, k: u64| {
+        for _ in 0..k {
+            srv.submit(Request { id, artifact: artifact.clone() });
+            id += 1;
+        }
+    };
+    submit_burst(&mut srv, 3);
+    for _ in 0..4 {
+        let here = srv.route_of(&artifact).unwrap();
+        let rec = srv.migrate(&artifact, 1 - here).expect("a real move");
+        assert_eq!(rec.to_worker, 1 - here);
+        assert!(rec.cache_moved, "{rec:?}");
+        submit_burst(&mut srv, 3);
+    }
+    let n = id as usize;
+    let out = srv.finish();
+    assert_exactly_once(&out, n);
+    assert_per_artifact_fifo(&out.responses);
+    assert!(out.responses.iter().all(|r| r.ok));
+    assert_eq!(out.metrics.migrations.len(), 4);
+    // one cold execution, everything after hits a (possibly migrated) entry
+    let p0 = out.responses.iter().find(|r| r.id == 0).unwrap().payload.unwrap();
+    for r in &out.responses {
+        assert_eq!(r.payload, Some(p0), "bit-identical across every move");
+        if r.id > 0 {
+            assert!(r.cached, "request {} should hit the moved entry", r.id);
+            assert_eq!(r.exec_seconds, 0.0);
+        }
+    }
+    assert_eq!(out.metrics.cache_hits, n as u64 - 1);
+}
+
+/// The CLI surface: `cachebound serve --rebalance live` runs end to end
+/// and reports its mode; an unknown mode is rejected loudly.
+#[test]
+fn cli_serve_rebalance_flag_round_trips() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "64",
+            "--rebalance",
+            "live",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "serve --rebalance live must exit 0: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rebalance live"), "{stdout}");
+    assert!(stdout.contains("served 64/64"), "{stdout}");
+
+    let bad = Command::new(exe)
+        .args(["serve", "--synthetic", "--requests", "4", "--rebalance", "sometimes"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("rebalance"));
+}
