@@ -18,6 +18,13 @@
 //! (c) with live migration converging mid-stream — the
 //! `--rebalance off|drain|live` spectrum.
 //!
+//! A fifth section measures throughput-at-SLO: seeded open-loop Poisson
+//! arrivals walk a rate ladder upward under shed admission, and the last
+//! rung where nothing is shed and the p99 end-to-end latency meets the
+//! SLO is the max sustainable rate, per placement policy
+//! (EXPERIMENTS.md §Throughput-at-SLO; the deterministic counterpart
+//! lives in the sweep's `bench/sim/<cpu>/servslo/*` records).
+//!
 //! Run: `cargo bench --bench bench_serve`
 
 use std::collections::BTreeMap;
@@ -26,9 +33,9 @@ use std::sync::Arc;
 use cachebound::analysis::InterferenceModel;
 use cachebound::coordinator::placement::{adversarial_mix, plan as placement_plan};
 use cachebound::coordinator::server::{
-    ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
+    AdmissionMode, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
 };
-use cachebound::coordinator::{PlacementPolicy, RebalanceMode};
+use cachebound::coordinator::{ArrivalConfig, PlacementPolicy, RebalanceMode};
 use cachebound::hw::profile_by_name;
 use cachebound::operators::workloads;
 use cachebound::telemetry::CacheProfile;
@@ -159,6 +166,57 @@ fn main() {
          ({:+.1}% — expected within ±5%)",
         (aware_rps / hash_rps - 1.0) * 100.0
     );
+
+    // -- open-loop: max sustainable rate at a p99 SLO (2 workers, shed) --
+    //
+    // The closed-loop sections measure capacity; this one measures what a
+    // wall-clock arrival process can push through before queueing (not
+    // the operators) dominates the tail.  A seeded Poisson rate ladder
+    // walks upward; a rung is sustained when the admission layer sheds
+    // nothing and the p99 end-to-end latency meets the SLO.
+    const SLO_MS: f64 = 50.0;
+    const OPEN_REQUESTS: usize = 240;
+    println!(
+        "\n-- open-loop: max sustainable rate at p99 <= {SLO_MS} ms (2 workers, shed admission) --"
+    );
+    let open_stream = workloads::serving_requests(OPEN_REQUESTS, SEED);
+    for (label, placement) in
+        [("hash", PlacementPolicy::Hash), ("cache-aware", PlacementPolicy::CacheAware)]
+    {
+        let mut sustained: Option<f64> = None;
+        for rate in [200.0f64, 400.0, 800.0, 1600.0, 3200.0, 6400.0, 12800.0] {
+            let schedule =
+                ArrivalConfig::poisson(rate, OPEN_REQUESTS, SEED).schedule();
+            let cfg = ServeConfig::new(2)
+                .with_profiles(mix_profiles.clone())
+                .with_cpu(profile_by_name("a53").unwrap().cpu)
+                .with_placement(placement)
+                .with_admission(AdmissionMode::Shed);
+            let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+                .serve_open_loop(open_stream.iter().cloned(), &schedule);
+            let m = &out.metrics;
+            assert_eq!(m.completed + m.failed + m.shed, m.requests);
+            let p99 =
+                m.latency_percentiles(&[99.0]).map_or(f64::INFINITY, |p| p[0]);
+            let meets = m.shed == 0 && p99 * 1e3 <= SLO_MS;
+            println!(
+                "{label:>11} @ {rate:7.0} req/s:  p99 {}   {} shed   max depth {}   {}",
+                fmt_time(p99),
+                m.shed,
+                m.max_queue_depth(),
+                if meets { "ok" } else { "over SLO" },
+            );
+            if meets {
+                sustained = Some(rate);
+            } else {
+                break;
+            }
+        }
+        match sustained {
+            Some(rate) => println!("{label:>11}: sustains {rate:.0} req/s at the SLO\n"),
+            None => println!("{label:>11}: no ladder rung meets the SLO on this host\n"),
+        }
+    }
 
     // adversarial co-run mix: two artifacts that hash onto the same worker
     // and whose L2 demands sum past the A53's 512 KiB L2

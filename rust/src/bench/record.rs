@@ -89,8 +89,9 @@ pub struct BenchRecord {
     /// Stable result key ("bench/sim/cortex-a53/gemm/n512") — the identity
     /// `compare` matches runs on.
     pub key: String,
-    /// Operator family ("gemm", "conv", "qnn", "bitserial", or
-    /// "servedrift" for the drifting-mix serving records).
+    /// Operator family ("gemm", "conv", "qnn", "bitserial", or the
+    /// serving families: "servedrift" for the drifting-mix records,
+    /// "servslo" for the throughput-at-SLO records).
     pub family: String,
     /// Shape label ("n512", "C2", "n1024b2").
     pub shape: String,

@@ -11,6 +11,7 @@ use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::{BenchWorkload, ConvLayer};
 
 use super::placement::{PlacementPolicy, RebalanceMode};
+use super::server::AdmissionMode;
 
 /// What to run.
 #[derive(Clone, Debug, PartialEq)]
@@ -106,6 +107,13 @@ pub enum JobSpec {
         seed: u64,
         /// Per-worker LRU response-cache entries.
         cache_entries: usize,
+        /// Open-loop arrival rate, requests/second; 0 keeps the
+        /// closed-loop submit-and-drain drive (the pre-PR-6 behaviour).
+        /// Positive rates pace submissions on a seeded Poisson schedule
+        /// ([`crate::coordinator::loadgen::ArrivalConfig`], same `seed`).
+        arrival_rps: u32,
+        /// Admission-control policy (none / shed / degrade).
+        admission: AdmissionMode,
         /// Artifact→worker policy (hash vs cache-aware).
         placement: PlacementPolicy,
         /// Divergence response (off / drain suggestion / live migration).
@@ -193,9 +201,19 @@ impl JobSpec {
             }
             JobSpec::ArtifactValidate { name } => format!("validate/{name}"),
             JobSpec::ArtifactMeasure { name } => format!("measure/{name}"),
-            JobSpec::ServeMix { workers, requests, seed, cache_entries, placement, rebalance } => {
+            JobSpec::ServeMix {
+                workers,
+                requests,
+                seed,
+                cache_entries,
+                arrival_rps,
+                admission,
+                placement,
+                rebalance,
+            } => {
                 format!(
-                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/p{}/rb{}",
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}",
+                    admission.key_part(),
                     placement.key_part(),
                     rebalance.key_part()
                 )
@@ -267,6 +285,8 @@ pub enum JobOutput {
         completed: u64,
         /// Failed requests.
         failed: u64,
+        /// Requests shed by admission control (not failures).
+        shed: u64,
         /// Responses served from the LRU response cache.
         cache_hits: u64,
         /// Artifacts migrated mid-stream by live rebalancing.
@@ -385,12 +405,23 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             );
             JobOutput::Traced { summary: report.summary() }
         }
-        JobSpec::ServeMix { workers, requests, seed, cache_entries, placement, rebalance } => {
+        JobSpec::ServeMix {
+            workers,
+            requests,
+            seed,
+            cache_entries,
+            arrival_rps,
+            admission,
+            placement,
+            rebalance,
+        } => {
+            use super::loadgen::ArrivalConfig;
             use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
             let mut cfg = ServeConfig::new(*workers)
                 .with_cache(*cache_entries)
                 .with_placement(*placement)
-                .with_rebalance(*rebalance);
+                .with_rebalance(*rebalance)
+                .with_admission(*admission);
             if *placement == PlacementPolicy::CacheAware || *rebalance == RebalanceMode::Live {
                 // both the upfront plan and the live divergence check need
                 // per-artifact profiles: the synthetic mix traced against
@@ -401,8 +432,17 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                     .with_profiles(crate::telemetry::serving_mix_profiles(&cpu))
                     .with_cpu(cpu);
             }
-            let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
-                .serve_stream(crate::operators::workloads::serving_requests(*requests, *seed));
+            let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+            let stream = crate::operators::workloads::serving_requests(*requests, *seed);
+            let out = if *arrival_rps > 0 {
+                // open-loop: pace submissions on the seeded schedule (the
+                // same seed drives both the stream mix and the arrivals)
+                let schedule =
+                    ArrivalConfig::poisson(*arrival_rps as f64, *requests, *seed).schedule();
+                srv.serve_open_loop(stream, &schedule)
+            } else {
+                srv.serve_stream(stream)
+            };
             let (p50, p99) = match out.metrics.latency_percentiles(&[50.0, 99.0]).as_deref() {
                 Some([p50, p99]) => (*p50, *p99),
                 _ => (0.0, 0.0),
@@ -413,6 +453,7 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 p99_s: p99,
                 completed: out.metrics.completed,
                 failed: out.metrics.failed,
+                shed: out.metrics.shed,
                 cache_hits: out.metrics.cache_hits,
                 migrations: out.metrics.migrations.len() as u64,
             }
@@ -627,15 +668,18 @@ mod tests {
             requests: 24,
             seed: 7,
             cache_entries: 16,
+            arrival_rps: 0,
+            admission: AdmissionMode::None,
             placement: PlacementPolicy::Hash,
             rebalance: RebalanceMode::Drain,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/phash/rbdrain");
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain");
         let out = run_cpu_job(&spec);
         match out {
-            JobOutput::Served { throughput_rps, completed, failed, migrations, .. } => {
+            JobOutput::Served { throughput_rps, completed, failed, shed, migrations, .. } => {
                 assert_eq!(completed, 24);
                 assert_eq!(failed, 0);
+                assert_eq!(shed, 0, "no admission control, nothing shed");
                 assert!(throughput_rps > 0.0);
                 assert_eq!(migrations, 0, "drain mode never migrates");
             }
@@ -650,10 +694,12 @@ mod tests {
             requests: 16,
             seed: 7,
             cache_entries: 0,
+            arrival_rps: 0,
+            admission: AdmissionMode::None,
             placement: PlacementPolicy::CacheAware,
             rebalance: RebalanceMode::Drain,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/pcache/rbdrain");
+        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 16);
@@ -672,14 +718,41 @@ mod tests {
             requests: 80,
             seed: 7,
             cache_entries: 0,
+            arrival_rps: 0,
+            admission: AdmissionMode::None,
             placement: PlacementPolicy::Hash,
             rebalance: RebalanceMode::Live,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/phash/rblive");
+        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 80, "migrations must not lose or fail requests");
                 assert_eq!(failed, 0);
+            }
+            other => panic!("expected Served, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_mix_job_runs_open_loop_with_shedding() {
+        // open-loop at a rate far past what two workers sustain on the
+        // big variants: shed must engage, and every request must still
+        // get exactly one disposition
+        let spec = JobSpec::ServeMix {
+            workers: 2,
+            requests: 32,
+            seed: 7,
+            cache_entries: 0,
+            arrival_rps: 5000,
+            admission: AdmissionMode::Shed,
+            placement: PlacementPolicy::Hash,
+            rebalance: RebalanceMode::Drain,
+        };
+        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain");
+        match run_cpu_job(&spec) {
+            JobOutput::Served { completed, failed, shed, .. } => {
+                assert_eq!(completed + failed + shed, 32, "one disposition each");
+                assert_eq!(failed, 0, "sheds are not failures");
             }
             other => panic!("expected Served, got {other:?}"),
         }

@@ -1,0 +1,215 @@
+//! Seeded open-loop load generation.
+//!
+//! Every serve bench before this module was closed-loop: submit N
+//! requests, drain, divide.  Closed loops cannot exhibit queueing
+//! collapse — the submitter slows down with the server — so they
+//! structurally hide the regime where the paper's cache-boundness story
+//! becomes an SLO story (a cache-bound fp32 artifact saturates earlier
+//! than its quantized variant, which is what makes degrade routing a
+//! principled shedding policy; see DESIGN.md §Admission).
+//!
+//! [`ArrivalConfig::schedule`] turns a `u64` seed into a vector of
+//! arrival *offsets* (seconds from stream start).  The process is a
+//! non-homogeneous Poisson process sampled by thinning: candidate events
+//! are drawn at the peak rate from i.i.d. exponential gaps and accepted
+//! with probability `rate_at(t) / peak`, where the instantaneous rate is
+//!
+//! ```text
+//! rate_at(t) = base · (1 + A·sin(2πt/P)) · (m if t inside a flash crowd)
+//! ```
+//!
+//! — a diurnal drift term (amplitude `A`, period `P`) multiplied by
+//! seeded flash-crowd windows (`m`-fold rate for `flash_duration_s`
+//! starting at uniformly drawn instants).  Everything, including the
+//! flash-window positions, derives from the one seed, so the same config
+//! always produces the identical schedule (property-tested in
+//! `rust/tests/proptests.rs`), while wall-clock pacing of the submission
+//! loop lives with the caller ([`super::server::ShardedServer::serve_open_loop`]).
+
+use crate::util::rng::Xoshiro256;
+
+/// A seeded open-loop arrival process: Poisson base rate, optional
+/// diurnal drift, optional flash-crowd bursts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalConfig {
+    /// Base arrival rate, requests per second.  Must be positive.
+    pub rate_rps: f64,
+    /// Number of arrivals to schedule.
+    pub n: usize,
+    /// The one seed everything derives from.
+    pub seed: u64,
+    /// Diurnal drift amplitude in `[0, 1]`: the rate swings between
+    /// `base·(1−A)` and `base·(1+A)`.  0 disables drift.
+    pub diurnal_amplitude: f64,
+    /// Diurnal drift period, seconds.
+    pub diurnal_period_s: f64,
+    /// Number of flash-crowd windows, at seeded uniform positions over
+    /// the expected stream duration.  0 disables bursts.
+    pub flash_crowds: usize,
+    /// Rate multiplier inside a flash-crowd window (≥ 1).
+    pub flash_multiplier: f64,
+    /// Duration of each flash-crowd window, seconds.
+    pub flash_duration_s: f64,
+}
+
+impl ArrivalConfig {
+    /// A pure Poisson process: no drift, no flash crowds.  The builders
+    /// below layer the modulation on.
+    pub fn poisson(rate_rps: f64, n: usize, seed: u64) -> Self {
+        ArrivalConfig {
+            rate_rps,
+            n,
+            seed,
+            diurnal_amplitude: 0.0,
+            diurnal_period_s: 60.0,
+            flash_crowds: 0,
+            flash_multiplier: 4.0,
+            flash_duration_s: 1.0,
+        }
+    }
+
+    /// Add diurnal drift (`amplitude` clamped to `[0, 1]`).
+    pub fn with_diurnal(mut self, amplitude: f64, period_s: f64) -> Self {
+        self.diurnal_amplitude = amplitude.clamp(0.0, 1.0);
+        self.diurnal_period_s = period_s.max(1e-9);
+        self
+    }
+
+    /// Add `crowds` flash-crowd windows of `duration_s` seconds at
+    /// `multiplier`× the base rate (`multiplier` floored at 1).
+    pub fn with_flash(mut self, crowds: usize, multiplier: f64, duration_s: f64) -> Self {
+        self.flash_crowds = crowds;
+        self.flash_multiplier = multiplier.max(1.0);
+        self.flash_duration_s = duration_s.max(0.0);
+        self
+    }
+
+    /// The peak instantaneous rate — the thinning envelope.
+    pub fn peak_rate(&self) -> f64 {
+        let diurnal = 1.0 + self.diurnal_amplitude.clamp(0.0, 1.0);
+        let flash = if self.flash_crowds > 0 { self.flash_multiplier.max(1.0) } else { 1.0 };
+        self.rate_rps * diurnal * flash
+    }
+
+    /// Instantaneous rate at offset `t`, given the drawn flash-window
+    /// start times.
+    fn rate_at(&self, t: f64, flashes: &[f64]) -> f64 {
+        let amp = self.diurnal_amplitude.clamp(0.0, 1.0);
+        let mut rate = self.rate_rps
+            * (1.0 + amp * (std::f64::consts::TAU * t / self.diurnal_period_s).sin());
+        if flashes.iter().any(|&f| t >= f && t < f + self.flash_duration_s) {
+            rate *= self.flash_multiplier.max(1.0);
+        }
+        rate.max(0.0)
+    }
+
+    /// The arrival schedule: `n` strictly non-decreasing offsets in
+    /// seconds from stream start, fully determined by the config
+    /// (identical config ⇒ identical schedule, bit for bit).
+    ///
+    /// # Panics
+    /// When `rate_rps` is not positive.
+    pub fn schedule(&self) -> Vec<f64> {
+        assert!(self.rate_rps > 0.0, "arrival rate must be positive");
+        let mut rng = Xoshiro256::new(self.seed);
+        // flash windows land anywhere in the expected stream duration —
+        // drawn first so the same seed pins them regardless of how many
+        // candidates thinning later rejects
+        let horizon = self.n as f64 / self.rate_rps;
+        let flashes: Vec<f64> =
+            (0..self.flash_crowds).map(|_| rng.f64() * horizon).collect();
+        let peak = self.peak_rate();
+        let mut t = 0.0_f64;
+        let mut out = Vec::with_capacity(self.n);
+        while out.len() < self.n {
+            // exponential gap at the peak rate (inverse CDF; 1-u avoids
+            // ln(0) since f64() is in [0, 1))
+            t += -(1.0 - rng.f64()).ln() / peak;
+            // thin: accept with probability rate_at(t)/peak
+            if rng.f64() * peak <= self.rate_at(t, &flashes) {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+/// Observed mean rate of a schedule (events per second of span) — the
+/// quantity the rate-conservation property checks against `rate_rps`.
+pub fn observed_rate(schedule: &[f64]) -> f64 {
+    match schedule.last() {
+        Some(&last) if last > 0.0 => schedule.len() as f64 / last,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = ArrivalConfig::poisson(250.0, 512, 0xFACE)
+            .with_diurnal(0.5, 2.0)
+            .with_flash(2, 4.0, 0.25);
+        assert_eq!(cfg.schedule(), cfg.schedule());
+        let other = ArrivalConfig { seed: 0xFACE + 1, ..cfg.clone() };
+        assert_ne!(cfg.schedule(), other.schedule());
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_sized() {
+        let s = ArrivalConfig::poisson(1000.0, 256, 7).schedule();
+        assert_eq!(s.len(), 256);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        assert!(s[0] >= 0.0);
+    }
+
+    #[test]
+    fn pure_poisson_conserves_the_configured_rate() {
+        let s = ArrivalConfig::poisson(500.0, 4096, 0xABCD).schedule();
+        let observed = observed_rate(&s);
+        assert!(
+            (observed - 500.0).abs() / 500.0 < 0.1,
+            "observed {observed} req/s vs configured 500"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals() {
+        // with one seeded flash window at 8x, the densest window of the
+        // stream must be markedly denser than the base rate
+        let cfg = ArrivalConfig::poisson(200.0, 2048, 0x11).with_flash(1, 8.0, 1.0);
+        let s = cfg.schedule();
+        let dur = cfg.flash_duration_s;
+        let max_in_window = s
+            .iter()
+            .map(|&t0| s.iter().filter(|&&t| t >= t0 && t < t0 + dur).count())
+            .max()
+            .unwrap();
+        // base expectation is ~200 events per 1s window; the flash runs 8x
+        assert!(
+            max_in_window as f64 > 2.0 * 200.0 * dur,
+            "densest window held {max_in_window} events"
+        );
+    }
+
+    #[test]
+    fn diurnal_drift_modulates_but_keeps_determinism() {
+        let flat = ArrivalConfig::poisson(300.0, 1024, 3).schedule();
+        let wavy = ArrivalConfig::poisson(300.0, 1024, 3).with_diurnal(0.9, 0.5).schedule();
+        assert_ne!(flat, wavy, "drift must change the schedule");
+        // modulation averages out: long-run rate stays near base
+        let observed = observed_rate(&wavy);
+        assert!(
+            (observed - 300.0).abs() / 300.0 < 0.2,
+            "diurnal drift should conserve the mean rate, got {observed}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "arrival rate must be positive")]
+    fn zero_rate_panics() {
+        ArrivalConfig::poisson(0.0, 8, 1).schedule();
+    }
+}

@@ -44,6 +44,7 @@
 //! [`PlacementPolicy::CacheAware`]: placement::PlacementPolicy::CacheAware
 
 pub mod jobs;
+pub mod loadgen;
 pub mod pipeline;
 pub mod placement;
 pub mod pool;
@@ -52,12 +53,14 @@ pub mod server;
 pub mod shard;
 
 pub use jobs::{Job, JobOutput, JobSpec};
+pub use loadgen::ArrivalConfig;
 pub use pipeline::{Pipeline, PipelineConfig};
 pub use placement::{Placement, PlacementPolicy, RebalanceMode, WorkerPlan};
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
 pub use server::{
-    BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor, Request, Response,
-    ServeConfig, ServeOutcome, Server, ShardedServer, SyntheticExecutor, WorkerPressure,
+    AdmissionMode, BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor,
+    Request, Response, ServeConfig, ServeOutcome, Server, ShardedServer, SyntheticExecutor,
+    WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

@@ -15,6 +15,7 @@ use crate::runtime::Registry;
 
 use super::jobs::{Job, JobSpec, NativeGemmVariant};
 use super::placement::{PlacementPolicy, RebalanceMode};
+use super::server::AdmissionMode;
 use super::pool::WorkerPool;
 use super::results::ResultStore;
 
@@ -231,6 +232,8 @@ impl Pipeline {
         &mut self,
         worker_counts: &[usize],
         requests: usize,
+        arrival_rps: u32,
+        admission: AdmissionMode,
         placement: PlacementPolicy,
         rebalance: RebalanceMode,
     ) -> Result<()> {
@@ -241,6 +244,8 @@ impl Pipeline {
                 requests,
                 seed: 0xD15C,
                 cache_entries: 0,
+                arrival_rps,
+                admission,
                 placement,
                 rebalance,
             })
@@ -419,7 +424,8 @@ mod tests {
     #[test]
     fn serve_scaling_populates_store() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[1, 2], 16, PlacementPolicy::Hash, RebalanceMode::Drain).unwrap();
+        p.serve_scaling(&[1, 2], 16, 0, AdmissionMode::None, PlacementPolicy::Hash, RebalanceMode::Drain)
+            .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 2);
         for (k, v) in rows {
@@ -434,7 +440,8 @@ mod tests {
     #[test]
     fn serve_scaling_carries_cache_aware_policy() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[2], 12, PlacementPolicy::CacheAware, RebalanceMode::Drain).unwrap();
+        p.serve_scaling(&[2], 12, 0, AdmissionMode::None, PlacementPolicy::CacheAware, RebalanceMode::Drain)
+            .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
@@ -445,7 +452,8 @@ mod tests {
     #[test]
     fn serve_scaling_accepts_live_rebalancing() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[2], 48, PlacementPolicy::Hash, RebalanceMode::Live).unwrap();
+        p.serve_scaling(&[2], 48, 0, AdmissionMode::None, PlacementPolicy::Hash, RebalanceMode::Live)
+            .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];

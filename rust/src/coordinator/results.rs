@@ -81,17 +81,20 @@ impl ResultStore {
                     p99_s,
                     completed,
                     failed,
+                    shed,
                     cache_hits,
                     migrations,
                 } => ResultValue {
                     // p50 end-to-end latency is the headline "seconds" of a
-                    // serving run; the rest rides in `detail`.
+                    // serving run; the rest rides in `detail`.  Sheds are a
+                    // deliberate admission disposition, not failures, so
+                    // they don't affect `passed`.
                     seconds: Some(*p50_s),
                     bound: None,
                     passed: Some(*failed == 0),
                     detail: Some(format!(
                         "{throughput_rps:.1} req/s, p99 {:.3} ms, {completed} ok / {failed} \
-                         failed, {cache_hits} cache hits, {migrations} migrations",
+                         failed / {shed} shed, {cache_hits} cache hits, {migrations} migrations",
                         p99_s * 1e3
                     )),
                 },

@@ -33,13 +33,17 @@
 //!   hash placement a shard has exactly one owning worker; a cache-aware
 //!   plan may split a shard's artifacts across workers, in which case the
 //!   per-shard rollup keeps one [`ShardMetrics`] row per (shard, worker);
-//! * **exactly one response per request** — every admitted request is
-//!   answered (success, failure, or cache hit), and rejected requests are
-//!   answered at the front door;
-//! * **metrics totals** — `completed + failed == requests` in the
-//!   aggregate [`Metrics`], and the per-[`ShardMetrics`] sums equal the
-//!   aggregate minus admission-rejected requests (`Metrics::rejected`),
-//!   which never reach a shard;
+//! * **exactly one disposition per request** — every submitted request is
+//!   answered exactly once: served (success, failure, or cache hit),
+//!   shed at the front door by admission control, or served *degraded*
+//!   as a smaller synthetic variant.  Never silent, never duplicated;
+//! * **metrics totals** — `completed + failed + shed == requests` in the
+//!   aggregate [`Metrics`], the per-[`ShardMetrics`] sums equal the
+//!   aggregate minus front-door answers (`Metrics::rejected` +
+//!   `Metrics::shed`), which never reach a shard, and
+//!   `latency_seconds` holds one sample per disposition — shed requests
+//!   contribute their time-to-rejection instead of vanishing from the
+//!   percentile population;
 //! * **cache purity** — a cache hit returns a payload bit-identical to the
 //!   original execution, with `exec_seconds == 0` and `cached == true`.
 //!
@@ -71,15 +75,33 @@
 //! No request is ever dropped or duplicated: quiesce serves queued work
 //! through the ordinary path and the route swap is a single-threaded
 //! in-memory update.  Every move is logged as a [`MigrationRecord`].
+//!
+//! # Open-loop serving and admission control
+//!
+//! [`ShardedServer::serve_stream`] is closed-loop (submit all, drain) and
+//! cannot exhibit queueing collapse.  [`ShardedServer::serve_open_loop`]
+//! submits on the wall-clock schedule of a seeded arrival process
+//! ([`super::loadgen::ArrivalConfig`]) instead, which is the regime where
+//! [`AdmissionMode`] matters: when a request's target worker already has
+//! `ServeConfig::admission_limit` requests in flight (halved when the
+//! worker's profiled resident working set overflows the L2 — the
+//! [`WorkerPressure`] signal), `Shed` answers it at the front door with
+//! `Response::shed == true`, and `Degrade` reroutes it to the next-smaller
+//! synthetic variant ([`workloads::degrade_artifact`]) — the
+//! degrade-to-quantized policy of DESIGN.md §Admission — shedding only
+//! when no smaller variant exists.  Queue-depth samples, shed/degrade
+//! counters and tail percentiles land in [`Metrics`]; the overload chaos
+//! suite (`rust/tests/serve_overload.rs`) drives all of it over a seed
+//! matrix.
 
 use std::any::Any;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::analysis::InterferenceModel;
 use crate::hw::{profile_by_name, CpuSpec};
@@ -127,6 +149,16 @@ pub struct Response {
     pub cached: bool,
     /// Shard that owned the request (0 for the single-threaded [`Server`]).
     pub shard: usize,
+    /// Answered at the front door by admission control
+    /// ([`AdmissionMode::Shed`], or [`AdmissionMode::Degrade`] with no
+    /// smaller variant available).  Shed responses are not failures:
+    /// `ok` is `false` but they count in [`Metrics::shed`], not
+    /// [`Metrics::failed`].
+    pub shed: bool,
+    /// When admission control degraded this request, the artifact
+    /// originally asked for; `artifact` (and `payload`) describe the
+    /// smaller variant actually executed.
+    pub degraded_from: Option<String>,
 }
 
 /// Aggregate serving metrics.
@@ -135,11 +167,12 @@ pub struct Response {
 /// the single-threaded [`Server`] leaves `per_shard` empty.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    /// Requests admitted (including rejected ones).
+    /// Requests submitted (including rejected and shed ones).
     pub requests: u64,
-    /// Successfully answered requests.
+    /// Successfully answered requests (degraded ones included).
     pub completed: u64,
-    /// Failed requests (rejections included).
+    /// Failed requests (rejections included, shed ones NOT — a shed is a
+    /// deliberate disposition, not an error).
     pub failed: u64,
     /// Executor batches formed.
     pub batches: u64,
@@ -147,12 +180,29 @@ pub struct Metrics {
     pub cache_hits: u64,
     /// Requests rejected at admission (unknown artifact under a catalog) —
     /// a subset of `failed` that reaches no shard, so per-shard sums cover
-    /// `requests - rejected`.
+    /// `requests - rejected - shed`.
     pub rejected: u64,
-    /// Per-response execution times.
+    /// Requests shed by admission control ([`AdmissionMode::Shed`], or
+    /// `Degrade` with no smaller variant).  Disjoint from `completed` and
+    /// `failed`: `completed + failed + shed == requests`.
+    pub shed: u64,
+    /// Requests served as a smaller variant ([`AdmissionMode::Degrade`]) —
+    /// a subset of `completed`; each carries `Response::degraded_from`.
+    pub degraded: u64,
+    /// Per-response execution times (successful executions only).
     pub exec_seconds: Vec<f64>,
-    /// Per-response end-to-end latencies.
+    /// Per-response end-to-end latencies — one sample for *every*
+    /// disposition: executed, cache hit, failed, rejected and shed (a
+    /// shed's sample is its time-to-rejection), so
+    /// `latency_seconds.len() == requests` and overload cannot silently
+    /// thin the percentile population.
     pub latency_seconds: Vec<f64>,
+    /// Queue-depth time series: `(seconds since server start, total
+    /// in-flight requests)`, sampled at every submission.  Under the
+    /// open-loop drive this is the collapse signal the overload chaos
+    /// suite asserts on; under `serve_stream` it just records the
+    /// submit burst.
+    pub queue_depth: Vec<(f64, u64)>,
     /// Per-shard rollup (sharded server only): one row per
     /// (shard, worker) pair — a single row per shard under hash placement,
     /// possibly several when a cache-aware plan splits a shard's artifacts.
@@ -256,6 +306,13 @@ impl Metrics {
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Some(ps.iter().map(|&p| percentile_sorted(&sorted, p)).collect())
     }
+
+    /// Largest in-flight count the `queue_depth` series observed (0 when
+    /// the series is empty) — the bounded-queue invariant the overload
+    /// chaos suite asserts under [`AdmissionMode::Shed`].
+    pub fn max_queue_depth(&self) -> u64 {
+        self.queue_depth.iter().map(|&(_, d)| d).max().unwrap_or(0)
+    }
 }
 
 /// Batching policy.
@@ -268,6 +325,53 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy { max_batch: 8 }
+    }
+}
+
+/// What admission control does when a request's target worker is already
+/// at its in-flight limit (see `ServeConfig::admission_limit`).  The
+/// closed-loop drives work under any mode; the distinction matters under
+/// the open-loop drive, where arrivals do not wait for completions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Admit everything — queues grow without bound past saturation (the
+    /// collapse regime the overload chaos suite detects).
+    #[default]
+    None,
+    /// Answer over-limit requests at the front door with
+    /// `Response::shed == true` — bounded queues, explicit rejections.
+    Shed,
+    /// Reroute over-limit requests to the next-smaller synthetic variant
+    /// ([`workloads::degrade_artifact`]) — the degrade-to-quantized
+    /// policy: a smaller working set stays cache-resident and drains
+    /// faster on a pressured worker.  Falls back to shedding when no
+    /// smaller variant exists.
+    Degrade,
+}
+
+impl AdmissionMode {
+    /// Parse a CLI flag value ("none" | "shed" | "degrade").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" | "off" => Ok(AdmissionMode::None),
+            "shed" => Ok(AdmissionMode::Shed),
+            "degrade" => Ok(AdmissionMode::Degrade),
+            other => bail!("unknown admission mode '{other}' (none | shed | degrade)"),
+        }
+    }
+
+    /// Display name ("none" | "shed" | "degrade").
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionMode::None => "none",
+            AdmissionMode::Shed => "shed",
+            AdmissionMode::Degrade => "degrade",
+        }
+    }
+
+    /// Short fragment for job/result keys (same as [`Self::name`]).
+    pub fn key_part(self) -> &'static str {
+        self.name()
     }
 }
 
@@ -492,6 +596,8 @@ impl Server {
                                 payload: None,
                                 cached: false,
                                 shard: 0,
+                                shed: false,
+                                degraded_from: None,
                             });
                         }
                         Err(e) => responses.push(self.fail(req, enq, e.to_string())),
@@ -508,16 +614,22 @@ impl Server {
 
     fn fail(&mut self, req: Request, enq: Instant, error: String) -> Response {
         self.metrics.failed += 1;
+        let latency = enq.elapsed().as_secs_f64();
+        // failures count in the latency population too — every
+        // disposition contributes one sample (ISSUE 6 satellite)
+        self.metrics.latency_seconds.push(latency);
         Response {
             id: req.id,
             artifact: req.artifact,
             exec_seconds: 0.0,
-            latency_seconds: enq.elapsed().as_secs_f64(),
+            latency_seconds: latency,
             ok: false,
             error: Some(error),
             payload: None,
             cached: false,
             shard: 0,
+            shed: false,
+            degraded_from: None,
         }
     }
 
@@ -579,6 +691,16 @@ pub struct ServeConfig {
     /// previous run ([`ServeOutcome::rebalanced`]) is applied to the next
     /// one — the drain-rebalance leg of the `bench_serve` drifting-mix A/B.
     pub plan: Option<Arc<Placement>>,
+    /// What admission control does when a request's target worker is at
+    /// its in-flight limit (module docs, §Open-loop serving).  The
+    /// default `None` preserves the pre-admission behaviour exactly.
+    pub admission: AdmissionMode,
+    /// Per-worker in-flight request limit admission control acts at.
+    /// Halved for a worker whose profiled resident working set exceeds
+    /// the L2 — the [`WorkerPressure`] signal: a cache-pressured worker
+    /// drains slower, so it earns a shorter queue.  Ignored under
+    /// [`AdmissionMode::None`].
+    pub admission_limit: usize,
 }
 
 impl ServeConfig {
@@ -598,12 +720,27 @@ impl ServeConfig {
             rebalance: RebalanceMode::default(),
             rebalance_check_every: 32,
             plan: None,
+            admission: AdmissionMode::None,
+            admission_limit: 64,
         }
     }
 
     /// Select what happens on pressure divergence (off / drain / live).
     pub fn with_rebalance(mut self, mode: RebalanceMode) -> Self {
         self.rebalance = mode;
+        self
+    }
+
+    /// Select the admission-control policy (none / shed / degrade).
+    pub fn with_admission(mut self, mode: AdmissionMode) -> Self {
+        self.admission = mode;
+        self
+    }
+
+    /// Set the per-worker in-flight limit admission control acts at
+    /// (floored at 1).
+    pub fn with_admission_limit(mut self, limit: usize) -> Self {
+        self.admission_limit = limit.max(1);
         self
     }
 
@@ -661,6 +798,9 @@ struct Envelope {
     req: Request,
     enqueued: Instant,
     shard: usize,
+    /// Original artifact when admission control degraded this request;
+    /// `req.artifact` names the smaller variant actually executed.
+    degraded_from: Option<String>,
 }
 
 /// Everything the admission thread can send a worker: ordinary requests
@@ -732,6 +872,30 @@ pub struct ShardedServer {
     handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
     admitted: u64,
     rejected: Vec<Response>,
+    admission: AdmissionMode,
+    admission_limit: usize,
+    /// In-flight requests per worker: incremented at admission,
+    /// decremented when the worker's response is reaped — the queue-depth
+    /// signal admission control acts on.
+    in_flight: Vec<u64>,
+    /// Which worker each in-flight request id was admitted to, so the
+    /// decrement lands on the right counter even after a route swap
+    /// (envelopes never move between workers: a quiesce serves them at
+    /// the source).
+    in_flight_ids: HashMap<u64, usize>,
+    /// Responses admission control produced at the front door under
+    /// `Shed`/`Degrade`-without-a-variant.
+    shed: Vec<Response>,
+    /// Worker responses reaped before `finish` (open-loop pacing and the
+    /// admission check both drain the channel opportunistically).
+    collected: Vec<Response>,
+    /// `(seconds since start, total in-flight)` — one sample per
+    /// submission.
+    depth_samples: Vec<(f64, u64)>,
+    /// Σ `working_set_bytes` of each worker's profiled resident
+    /// artifacts, maintained incrementally on route pin and migration —
+    /// the cheap [`WorkerPressure`] signal the admission check reads.
+    resident_bytes: Vec<u64>,
     /// The authoritative artifact→worker routing table: populated on an
     /// artifact's first admission, mutated only by migrations.
     routes: BTreeMap<String, usize>,
@@ -802,6 +966,14 @@ impl ShardedServer {
             handles,
             admitted: 0,
             rejected: Vec::new(),
+            admission: config.admission,
+            admission_limit: config.admission_limit.max(1),
+            in_flight: vec![0; workers],
+            in_flight_ids: HashMap::new(),
+            shed: Vec::new(),
+            collected: Vec::new(),
+            depth_samples: Vec::new(),
+            resident_bytes: vec![0; workers],
             routes: BTreeMap::new(),
             worker_artifacts: vec![BTreeSet::new(); workers],
             migrations: Vec::new(),
@@ -842,64 +1014,167 @@ impl ShardedServer {
         self.workers
     }
 
-    /// Shard a request and hand it to the owning worker.  Unknown artifacts
-    /// (when a catalog is attached) are rejected here, producing their one
-    /// response without any worker round-trip.
+    /// Shard a request and hand it to the owning worker — or answer it at
+    /// the front door.  Unknown artifacts (when a catalog is attached)
+    /// are rejected; when admission control is on and the target worker
+    /// is at its in-flight limit, the request is shed or degraded
+    /// (module docs, §Open-loop serving).  Every submission gets exactly
+    /// one disposition and one queue-depth sample.  In-flight accounting
+    /// assumes caller-chosen ids are unique among concurrently live
+    /// requests (every built-in drive assigns ids from `enumerate`).
     pub fn submit(&mut self, req: Request) {
+        // reap finished responses first so the in-flight accounting —
+        // and therefore the admission decision and the depth sample —
+        // reflects work the workers have already retired
+        self.reap();
+        let enqueued = Instant::now();
         if let Some(cat) = &self.catalog {
             if cat.by_name(&req.artifact).is_none() {
                 self.rejected.push(Response {
                     id: req.id,
                     artifact: req.artifact,
                     exec_seconds: 0.0,
-                    latency_seconds: 0.0,
+                    latency_seconds: enqueued.elapsed().as_secs_f64(),
                     ok: false,
                     error: Some("artifact not in manifest (rejected at admission)".into()),
                     payload: None,
                     cached: false,
                     shard: 0,
+                    shed: false,
+                    degraded_from: None,
                 });
+                self.sample_depth();
                 return;
             }
         }
-        let shard = shard_for(&req.artifact, self.n_shards);
-        // The routing table is authoritative: first admission computes the
-        // route (live plan, else starting plan, else the shard→worker
-        // hash) and pins it; only a migration's fenced swap may change it
-        // afterwards.
-        // Per-artifact FIFO survives because an artifact always maps to
-        // one shard queue on one (consistently chosen) worker.
-        let worker = match self.routes.get(&req.artifact) {
-            Some(&w) => w,
-            None => {
-                // Route by the live plan, then the starting plan (a live
-                // plan only covers artifacts observed when it was adopted,
-                // so the starting plan still speaks for late arrivals),
-                // then the hash.  An explicit plan built for a different
-                // worker count may name out-of-range workers; those
-                // assignments degrade to the hash route instead of
-                // indexing out of bounds.
-                let w = self
-                    .live_plan
-                    .as_deref()
-                    .and_then(|p| p.worker_for(&req.artifact))
-                    .or_else(|| {
-                        self.placement.as_deref().and_then(|p| p.worker_for(&req.artifact))
-                    })
-                    .filter(|&w| w < self.workers)
-                    .unwrap_or(shard % self.workers);
-                self.routes.insert(req.artifact.clone(), w);
-                self.worker_artifacts[w].insert(req.artifact.clone());
-                w
+        let worker = self.route_for(&req.artifact);
+        if self.admission != AdmissionMode::None
+            && self.in_flight[worker] >= self.effective_limit(worker)
+        {
+            match self.admission {
+                AdmissionMode::Degrade => {
+                    // degrade-to-smaller-variant: reroute to the next
+                    // size down (its own route, possibly another
+                    // worker), remembering what was asked for
+                    if let Some(smaller) = workloads::degrade_artifact(&req.artifact) {
+                        let original = req.artifact;
+                        let degraded = Request { id: req.id, artifact: smaller };
+                        let worker = self.route_for(&degraded.artifact);
+                        self.dispatch(degraded, worker, enqueued, Some(original));
+                    } else {
+                        self.shed_now(req, enqueued);
+                    }
+                }
+                _ => self.shed_now(req, enqueued),
             }
-        };
+            self.sample_depth();
+            return;
+        }
+        self.dispatch(req, worker, enqueued, None);
+        self.sample_depth();
+    }
+
+    /// Worker for `artifact`, pinning the route on first admission.  The
+    /// routing table is authoritative: first admission computes the route
+    /// (live plan, else starting plan, else the shard→worker hash) and
+    /// pins it; only a migration's fenced swap may change it afterwards.
+    /// Per-artifact FIFO survives because an artifact always maps to one
+    /// shard queue on one (consistently chosen) worker.
+    fn route_for(&mut self, artifact: &str) -> usize {
+        if let Some(&w) = self.routes.get(artifact) {
+            return w;
+        }
+        // Route by the live plan, then the starting plan (a live plan
+        // only covers artifacts observed when it was adopted, so the
+        // starting plan still speaks for late arrivals), then the hash.
+        // An explicit plan built for a different worker count may name
+        // out-of-range workers; those assignments degrade to the hash
+        // route instead of indexing out of bounds.
+        let shard = shard_for(artifact, self.n_shards);
+        let w = self
+            .live_plan
+            .as_deref()
+            .and_then(|p| p.worker_for(artifact))
+            .or_else(|| self.placement.as_deref().and_then(|p| p.worker_for(artifact)))
+            .filter(|&w| w < self.workers)
+            .unwrap_or(shard % self.workers);
+        self.routes.insert(artifact.to_string(), w);
+        self.worker_artifacts[w].insert(artifact.to_string());
+        if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
+            self.resident_bytes[w] += p.working_set_bytes;
+        }
+        w
+    }
+
+    /// Send one admitted request down its worker's channel, maintaining
+    /// the in-flight accounting and the live-rebalance cadence.
+    fn dispatch(
+        &mut self,
+        req: Request,
+        worker: usize,
+        enqueued: Instant,
+        degraded_from: Option<String>,
+    ) {
+        let shard = shard_for(&req.artifact, self.n_shards);
         self.admitted += 1;
+        self.in_flight[worker] += 1;
+        self.in_flight_ids.insert(req.id, worker);
         self.senders[worker]
-            .send(WorkerMsg::Req(Envelope { req, enqueued: Instant::now(), shard }))
+            .send(WorkerMsg::Req(Envelope { req, enqueued, shard, degraded_from }))
             .expect("serve worker alive");
         if self.rebalance == RebalanceMode::Live && self.admitted % self.check_every == 0 {
             self.maybe_rebalance();
         }
+    }
+
+    /// Answer a request at the front door with the shed disposition.
+    fn shed_now(&mut self, req: Request, enqueued: Instant) {
+        self.shed.push(Response {
+            id: req.id,
+            artifact: req.artifact,
+            exec_seconds: 0.0,
+            // the shed's latency sample is its time-to-rejection — tiny,
+            // but a real measurement, so shed traffic stays visible in
+            // the percentile population
+            latency_seconds: enqueued.elapsed().as_secs_f64(),
+            ok: false,
+            error: Some("shed by admission control (worker at in-flight limit)".into()),
+            payload: None,
+            cached: false,
+            shard: 0,
+            shed: true,
+            degraded_from: None,
+        });
+    }
+
+    /// The in-flight limit for `worker` right now: the configured limit,
+    /// halved when the worker's profiled resident working set overflows
+    /// the L2 — a cache-pressured worker drains slower, so it earns a
+    /// shorter queue (the [`WorkerPressure`] signal feeding admission).
+    fn effective_limit(&self, worker: usize) -> u64 {
+        let limit = self.admission_limit as u64;
+        if self.resident_bytes[worker] > self.cpu.l2.size_bytes as u64 {
+            (limit / 2).max(1)
+        } else {
+            limit
+        }
+    }
+
+    /// Drain every response already sitting in the channel, updating the
+    /// in-flight accounting.
+    fn reap(&mut self) {
+        while let Ok(r) = self.resp_rx.try_recv() {
+            if let Some(w) = self.in_flight_ids.remove(&r.id) {
+                self.in_flight[w] = self.in_flight[w].saturating_sub(1);
+            }
+            self.collected.push(r);
+        }
+    }
+
+    /// Record one `(elapsed, total in-flight)` sample.
+    fn sample_depth(&mut self) {
+        let depth: u64 = self.in_flight.iter().sum();
+        self.depth_samples.push((self.started.elapsed().as_secs_f64(), depth));
     }
 
     /// The live divergence check ([`RebalanceMode::Live`]; run
@@ -989,6 +1264,9 @@ impl ShardedServer {
             // pinning the route *is* the whole migration
             self.routes.insert(artifact.to_string(), to);
             self.worker_artifacts[to].insert(artifact.to_string());
+            if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
+                self.resident_bytes[to] += p.working_set_bytes;
+            }
             let rec = MigrationRecord {
                 at_request: self.admitted,
                 artifact: artifact.to_string(),
@@ -1031,6 +1309,11 @@ impl ShardedServer {
         self.routes.insert(artifact.to_string(), to);
         self.worker_artifacts[from].remove(artifact);
         self.worker_artifacts[to].insert(artifact.to_string());
+        if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
+            self.resident_bytes[from] =
+                self.resident_bytes[from].saturating_sub(p.working_set_bytes);
+            self.resident_bytes[to] += p.working_set_bytes;
+        }
         self.migrations.push(rec.clone());
         rec
     }
@@ -1048,13 +1331,43 @@ impl ShardedServer {
         self.finish()
     }
 
-    /// Collect any responses already available, without blocking.
-    pub fn poll_responses(&mut self) -> Vec<Response> {
-        let mut out = Vec::new();
-        while let Ok(r) = self.resp_rx.try_recv() {
-            out.push(r);
+    /// Submit `stream` on the wall-clock `arrivals` schedule (offsets in
+    /// seconds from drive start — see
+    /// [`ArrivalConfig::schedule`][super::loadgen::ArrivalConfig::schedule])
+    /// and drain.  This is the open-loop drive: submissions never wait for
+    /// completions, so queues genuinely build once the offered rate passes
+    /// capacity — the regime admission control exists for, and the one the
+    /// closed-loop [`ShardedServer::serve_stream`] structurally cannot
+    /// reach.  Ids are assigned in stream order; the stream is truncated
+    /// to the schedule's length.
+    pub fn serve_open_loop<I>(mut self, stream: I, arrivals: &[f64]) -> ServeOutcome
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let t0 = Instant::now();
+        for (id, (artifact, &at)) in stream.into_iter().zip(arrivals).enumerate() {
+            loop {
+                let now = t0.elapsed().as_secs_f64();
+                if now >= at {
+                    break;
+                }
+                // reap while pacing so in-flight stays honest even when
+                // the schedule leaves long gaps between submissions
+                self.reap();
+                thread::sleep(Duration::from_secs_f64((at - now).min(1e-3)));
+            }
+            self.submit(Request { id: id as u64, artifact });
         }
-        out
+        self.finish()
+    }
+
+    /// Drain any responses already available, without blocking.  The
+    /// returned values are clones: the originals stay with the server so
+    /// [`ShardedServer::finish`] still accounts for every disposition.
+    pub fn poll_responses(&mut self) -> Vec<Response> {
+        let before = self.collected.len();
+        self.reap();
+        self.collected[before..].to_vec()
     }
 
     /// Close admission, drain every in-flight request, join the workers and
@@ -1066,6 +1379,9 @@ impl ShardedServer {
             handles,
             admitted,
             rejected,
+            shed,
+            collected,
+            depth_samples,
             started,
             profiles,
             placement,
@@ -1082,7 +1398,10 @@ impl ShardedServer {
         // exactly the predicted-vs-observed bug the regression tests pin.
         let active_plan = live_plan.or(placement);
         drop(senders); // workers drain their queues and exit
-        let mut responses: Vec<Response> = resp_rx.iter().collect();
+        // worker responses: whatever open-loop pacing already reaped,
+        // then the channel's remainder
+        let mut responses: Vec<Response> = collected;
+        responses.extend(resp_rx.iter());
         // Keyed by (shard, worker), not shard alone: a cache-aware plan may
         // route two same-shard artifacts to different workers, and folding
         // those rows together would misattribute the owning worker.  Under
@@ -1100,14 +1419,22 @@ impl ShardedServer {
         let wall_seconds = started.elapsed().as_secs_f64();
 
         let mut metrics = Metrics {
-            requests: admitted + rejected.len() as u64,
+            requests: admitted + (rejected.len() + shed.len()) as u64,
             ..Metrics::default()
         };
+        // Every disposition contributes exactly one latency sample —
+        // served at full latency, rejected and shed at time-to-rejection
+        // — so `latency_seconds.len() == requests` and the percentile
+        // population hides nothing (ISSUE 6 satellite; pinned by
+        // `latency_population_covers_every_disposition`).
         for r in &responses {
+            metrics.latency_seconds.push(r.latency_seconds);
+            if r.degraded_from.is_some() {
+                metrics.degraded += 1;
+            }
             if r.ok {
                 metrics.completed += 1;
                 metrics.exec_seconds.push(r.exec_seconds);
-                metrics.latency_seconds.push(r.latency_seconds);
                 if r.cached {
                     metrics.cache_hits += 1;
                 }
@@ -1115,8 +1442,13 @@ impl ShardedServer {
                 metrics.failed += 1;
             }
         }
+        for r in rejected.iter().chain(&shed) {
+            metrics.latency_seconds.push(r.latency_seconds);
+        }
         metrics.failed += rejected.len() as u64;
         metrics.rejected = rejected.len() as u64;
+        metrics.shed = shed.len() as u64;
+        metrics.queue_depth = depth_samples;
         metrics.batches = per_shard.values().map(|s| s.batches).sum();
         metrics.per_shard = per_shard.into_values().collect();
         metrics.migrations = migrations;
@@ -1149,6 +1481,7 @@ impl ShardedServer {
             _ => None,
         };
         responses.extend(rejected);
+        responses.extend(shed);
         ServeOutcome { responses, metrics, wall_seconds, rebalanced }
     }
 }
@@ -1370,6 +1703,8 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                 payload: Some(payload),
                 cached: true,
                 shard,
+                shed: false,
+                degraded_from: env.degraded_from,
             });
             continue;
         }
@@ -1398,6 +1733,8 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                     payload: Some(exec.payload),
                     cached: false,
                     shard,
+                    shed: false,
+                    degraded_from: env.degraded_from,
                 });
             }
             Err(e) => {
@@ -1412,6 +1749,8 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                     payload: None,
                     cached: false,
                     shard,
+                    shed: false,
+                    degraded_from: env.degraded_from,
                 });
             }
         }
@@ -1816,5 +2155,161 @@ mod tests {
         assert!(out.responses.iter().all(|r| !r.ok));
         assert_eq!(out.metrics.failed, 4);
         assert!(out.responses[0].error.as_deref().unwrap().contains("no backend"));
+        // failures still contribute latency samples (every disposition does)
+        assert_eq!(out.metrics.latency_seconds.len() as u64, out.metrics.requests);
+    }
+
+    // -- admission control and the open-loop drive --
+
+    #[test]
+    fn admission_mode_parses_and_names() {
+        assert_eq!(AdmissionMode::parse("none").unwrap(), AdmissionMode::None);
+        assert_eq!(AdmissionMode::parse("off").unwrap(), AdmissionMode::None);
+        assert_eq!(AdmissionMode::parse("shed").unwrap(), AdmissionMode::Shed);
+        assert_eq!(AdmissionMode::parse("degrade").unwrap(), AdmissionMode::Degrade);
+        assert!(AdmissionMode::parse("drop").is_err());
+        assert_eq!(AdmissionMode::Shed.name(), "shed");
+        assert_eq!(AdmissionMode::Degrade.key_part(), "degrade");
+    }
+
+    #[test]
+    fn shed_mode_bounds_the_queue_and_reconciles_dispositions() {
+        // one big artifact routed to one worker, limit 1: a fast submit
+        // burst must shed nearly everything while the worker chews
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2).with_admission(AdmissionMode::Shed).with_admission_limit(1),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let artifact = workloads::synthetic_artifact(128);
+        let n = 30u64;
+        for id in 0..n {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        let m = &out.metrics;
+        assert_eq!(m.requests, n);
+        assert_eq!(out.responses.len() as u64, n, "exactly one disposition each");
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert_eq!(m.latency_seconds.len() as u64, m.requests);
+        assert!(m.shed > 0, "a burst past limit 1 must shed: {m:?}");
+        assert!(m.failed == 0, "sheds are not failures");
+        // with a per-worker limit of 1, total in-flight never exceeds the
+        // worker count
+        assert!(
+            m.max_queue_depth() <= 2,
+            "bounded queue under Shed, saw {}",
+            m.max_queue_depth()
+        );
+        for r in out.responses.iter().filter(|r| r.shed) {
+            assert!(!r.ok);
+            assert!(r.error.as_deref().unwrap().contains("shed"));
+        }
+        // served responses stay FIFO per artifact even mid-overload
+        let served: Vec<u64> =
+            out.responses.iter().filter(|r| r.ok).map(|r| r.id).collect();
+        assert!(served.windows(2).all(|w| w[0] < w[1]), "{served:?}");
+    }
+
+    #[test]
+    fn degrade_mode_serves_smaller_variants_and_counts_them() {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_admission(AdmissionMode::Degrade)
+                .with_admission_limit(1),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let artifact = workloads::synthetic_artifact(128);
+        let n = 16u64;
+        for id in 0..n {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        let m = &out.metrics;
+        assert_eq!(m.requests, n);
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert_eq!(m.latency_seconds.len() as u64, m.requests);
+        assert!(m.degraded > 0, "a burst past limit 1 must degrade: {m:?}");
+        assert!(m.degraded <= m.completed, "degraded is a subset of completed");
+        let degraded: Vec<&Response> =
+            out.responses.iter().filter(|r| r.degraded_from.is_some()).collect();
+        assert_eq!(degraded.len() as u64, m.degraded);
+        for r in &degraded {
+            assert!(r.ok);
+            assert_eq!(r.degraded_from.as_deref(), Some(artifact.as_str()));
+            assert_eq!(r.artifact, workloads::synthetic_artifact(96), "next size down");
+        }
+    }
+
+    #[test]
+    fn degrade_falls_back_to_shed_at_the_smallest_variant() {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(1)
+                .with_admission(AdmissionMode::Degrade)
+                .with_admission_limit(1),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        // n32 has no smaller variant, so over-limit requests must shed
+        let artifact = workloads::synthetic_artifact(32);
+        for id in 0..20u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        let m = &out.metrics;
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert_eq!(m.degraded, 0, "nothing below n32 to degrade to");
+        assert!(m.shed > 0, "over-limit n32 requests must shed: {m:?}");
+    }
+
+    #[test]
+    fn open_loop_drive_answers_every_arrival() {
+        use super::super::loadgen::ArrivalConfig;
+
+        let srv = synthetic_server(2, 0);
+        let n = 16;
+        let schedule = ArrivalConfig::poisson(2000.0, n, 5).schedule();
+        let names = workloads::serving_mix();
+        let stream =
+            (0..n).map(|i| names[i % names.len()].artifact.clone()).collect::<Vec<_>>();
+        let out = srv.serve_open_loop(stream, &schedule);
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64);
+        assert_eq!(out.responses.len(), n);
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert_eq!(m.latency_seconds.len(), n);
+        assert_eq!(m.queue_depth.len(), n, "one depth sample per submission");
+        // the drive paced submissions, so the run spans the schedule
+        assert!(out.wall_seconds >= *schedule.last().unwrap());
+    }
+
+    #[test]
+    fn latency_percentiles_edge_cases() {
+        let m = Metrics::default();
+        assert!(m.latency_percentiles(&[50.0]).is_none(), "empty set has no percentiles");
+
+        let one = Metrics { latency_seconds: vec![5.0], ..Metrics::default() };
+        assert_eq!(
+            one.latency_percentiles(&[0.0, 50.0, 99.9, 100.0]).unwrap(),
+            vec![5.0; 4],
+            "single sample answers every percentile"
+        );
+
+        let many = Metrics {
+            latency_seconds: (1..=100).map(|i| i as f64).collect(),
+            ..Metrics::default()
+        };
+        let ps = many.latency_percentiles(&[0.0, 99.0, 99.9, 100.0]).unwrap();
+        assert_eq!(ps[0], 1.0);
+        assert_eq!(ps[3], 100.0);
+        assert!(ps[1] < ps[2] && ps[2] < ps[3], "p99 < p999 < max: {ps:?}");
+    }
+
+    #[test]
+    fn max_queue_depth_of_empty_series_is_zero() {
+        assert_eq!(Metrics::default().max_queue_depth(), 0);
+        let m = Metrics {
+            queue_depth: vec![(0.0, 1), (0.1, 5), (0.2, 3)],
+            ..Metrics::default()
+        };
+        assert_eq!(m.max_queue_depth(), 5);
     }
 }

@@ -14,7 +14,8 @@
 //! cachebound bench compare a.json b.json  perf-regression gate (CI)
 //! cachebound trace <family> [flags] [--json PATH]   reuse histograms + MRC + prediction
 //! cachebound figmrc [--profile P] [--n N] miss-ratio-curve figure (CSV)
-//! cachebound serve --workers N [--placement cache-aware]   sharded multi-worker serving
+//! cachebound serve --workers N [--placement cache-aware] [--arrival-rate RPS --admission shed]
+//!                                         sharded multi-worker serving (open-loop + admission)
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
 //! ```
@@ -27,9 +28,9 @@ use anyhow::{anyhow, bail, Result};
 use cachebound::bench::{self, BenchReport};
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
-    BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
+    AdmissionMode, BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
 };
-use cachebound::coordinator::{PlacementPolicy, RebalanceMode};
+use cachebound::coordinator::{ArrivalConfig, PlacementPolicy, RebalanceMode};
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
 use cachebound::operators::workloads::{self, BenchWorkload};
@@ -191,6 +192,8 @@ commands:
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
         [--max-batch B] [--shards M] [--synthetic]
         [--placement hash|cache-aware] [--rebalance off|drain|live]
+        [--arrival-rate RPS] [--slo-ms MS] [--admission none|shed|degrade]
+        [--admission-limit L]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
                               when artifacts/ is absent or --synthetic is set;
@@ -203,7 +206,14 @@ commands:
                               pressure diverges from the plan — quiesce,
                               state handoff, atomic route swap — and prints
                               the migration log; drain (default) only
-                              suggests a re-plan at exit)
+                              suggests a re-plan at exit;
+                              --arrival-rate paces submission open-loop on a
+                              seeded Poisson schedule instead of closed-loop,
+                              reporting p99/p99.9 against --slo-ms (def. 50);
+                              --admission shed rejects new work at a
+                              per-worker in-flight limit (L, def. 64, halved
+                              when the worker's resident set overflows L2),
+                              degrade reroutes to a smaller GEMM variant)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -664,11 +674,33 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         Some(v) => RebalanceMode::parse(v)?,
         None => RebalanceMode::Drain,
     };
+    let admission = match opts.get("admission") {
+        Some(v) => AdmissionMode::parse(v)?,
+        None => AdmissionMode::None,
+    };
+    // 0 = closed-loop (submit as fast as the server accepts); positive =
+    // open-loop wall-clock pacing on a seeded Poisson schedule
+    let arrival_rate: f64 = match opts.get("arrival-rate") {
+        Some(v) => {
+            let r: f64 = v.parse()?;
+            if !(r > 0.0) {
+                bail!("--arrival-rate must be a positive req/s figure, got {v}");
+            }
+            r
+        }
+        None => 0.0,
+    };
+    let slo_ms: f64 = match opts.get("slo-ms") {
+        Some(v) => v.parse()?,
+        None => 50.0,
+    };
     let mut cfg = ServeConfig::new(workers).with_cache(opts.usize("cache-entries", 64)?);
     cfg.batch = BatchPolicy { max_batch: opts.usize("max-batch", 8)? };
     cfg.shards = opts.usize("shards", 0)?;
     cfg.placement = placement;
     cfg.rebalance = rebalance;
+    cfg.admission = admission;
+    cfg.admission_limit = opts.usize("admission-limit", cfg.admission_limit)?;
 
     // Fall back to the synthetic mix only when artifacts are genuinely
     // absent; a present-but-broken manifest is a hard error, not a silent
@@ -709,7 +741,14 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             let srv = ShardedServer::start(cfg, move |_w| {
                 PjrtExecutor::with_manifest(exec_manifest.clone())
             });
-            (srv.serve_stream(stream), "pjrt artifacts")
+            let out = if arrival_rate > 0.0 {
+                let schedule =
+                    ArrivalConfig::poisson(arrival_rate, n_requests, seed).schedule();
+                srv.serve_open_loop(stream, &schedule)
+            } else {
+                srv.serve_stream(stream)
+            };
+            (out, "pjrt artifacts")
         }
         None => {
             // telemetry cache profiles for the synthetic mix: traced once
@@ -738,37 +777,61 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
                 }
                 println!("{}", t.to_markdown());
             }
-            (srv.serve_stream(stream), "synthetic native-GEMM mix")
+            let out = if arrival_rate > 0.0 {
+                let schedule =
+                    ArrivalConfig::poisson(arrival_rate, n_requests, seed).schedule();
+                srv.serve_open_loop(stream, &schedule)
+            } else {
+                srv.serve_stream(stream)
+            };
+            (out, "synthetic native-GEMM mix")
         }
     };
 
     let m = &outcome.metrics;
     println!(
         "served {}/{} requests in {:.2}s -> {:.1} req/s  \
-         ({workers} workers, {mode}, {} placement, rebalance {})",
+         ({workers} workers, {mode}, {} placement, rebalance {}, admission {})",
         m.completed,
         m.requests,
         outcome.wall_seconds,
         m.throughput(outcome.wall_seconds),
         placement.name(),
         rebalance.name(),
+        admission.name(),
     );
     println!(
-        "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at admission)",
+        "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at catalog)  \
+         shed {}  degraded {}  max queue depth {}",
         m.batches,
         m.cache_hits,
         m.cache_hit_rate() * 100.0,
         m.failed,
-        m.rejected
+        m.rejected,
+        m.shed,
+        m.degraded,
+        m.max_queue_depth(),
     );
-    if let Some(p) = m.latency_percentiles(&[50.0, 95.0, 99.0, 100.0]) {
+    if let Some(p) = m.latency_percentiles(&[50.0, 95.0, 99.0, 99.9, 100.0]) {
         println!(
-            "latency p50 {}  p95 {}  p99 {}  max {}",
+            "latency p50 {}  p95 {}  p99 {}  p99.9 {}  max {}",
             fmt_time(p[0]),
             fmt_time(p[1]),
             fmt_time(p[2]),
             fmt_time(p[3]),
+            fmt_time(p[4]),
         );
+        if arrival_rate > 0.0 {
+            // the open-loop verdict: did this arrival rate meet the SLO?
+            let p99_ms = p[2] * 1e3;
+            println!(
+                "SLO: p99 {:.3} ms vs {:.1} ms target at {:.0} req/s offered — {}",
+                p99_ms,
+                slo_ms,
+                arrival_rate,
+                if m.shed == 0 && p99_ms <= slo_ms { "met" } else { "MISSED" },
+            );
+        }
     }
 
     let mut table = Table::new(
@@ -866,8 +929,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         }
     }
     if m.failed > 0 {
-        // surface the root cause, not just the count
-        if let Some(r) = outcome.responses.iter().find(|r| !r.ok) {
+        // surface the root cause, not just the count (sheds are a
+        // deliberate admission disposition, not failures — skip them)
+        if let Some(r) = outcome.responses.iter().find(|r| !r.ok && !r.shed) {
             eprintln!(
                 "first failure ({}): {}",
                 r.artifact,

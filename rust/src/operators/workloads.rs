@@ -232,6 +232,23 @@ pub fn synthetic_gemm_n(name: &str) -> Option<usize> {
     (n > 0 && n <= 4096).then_some(n)
 }
 
+/// The next-smaller synthetic serving variant — the degrade-to-quantized
+/// analog admission control reroutes to under overload
+/// (`AdmissionMode::Degrade`): a smaller square GEMM has a strictly
+/// smaller working set, so it stays cache-resident and drains faster on a
+/// pressured worker (the paper's Figs 4/5 story turned into a shedding
+/// policy).  Returns the largest mix size strictly below the artifact's
+/// own, or `None` when the artifact is not synthetic or is already the
+/// smallest variant (callers shed instead).
+pub fn degrade_artifact(artifact: &str) -> Option<String> {
+    let n = synthetic_gemm_n(artifact)?;
+    SERVING_GEMM_SIZES
+        .iter()
+        .rev()
+        .find(|&&s| s < n)
+        .map(|&s| synthetic_artifact(s))
+}
+
 /// The synthetic serving mix: small GEMMs dominate (real inference traffic
 /// skews toward the cheap, popular models), big ones are the tail.
 pub fn serving_mix() -> Vec<ServeItem> {
@@ -351,6 +368,18 @@ mod tests {
     #[test]
     fn gemm_macs_cubic() {
         assert_eq!(gemm_macs(128), 128u64.pow(3));
+    }
+
+    #[test]
+    fn degrade_steps_down_the_mix_ladder() {
+        assert_eq!(degrade_artifact("syn_gemm_n128"), Some("syn_gemm_n96".into()));
+        assert_eq!(degrade_artifact("syn_gemm_n48"), Some("syn_gemm_n32".into()));
+        // off-mix sizes (the adversarial pair) degrade to the largest
+        // mix variant below them
+        assert_eq!(degrade_artifact("syn_gemm_n160"), Some("syn_gemm_n128".into()));
+        // the smallest variant and non-synthetic names have nowhere to go
+        assert_eq!(degrade_artifact("syn_gemm_n32"), None);
+        assert_eq!(degrade_artifact("resnet50"), None);
     }
 
     #[test]

@@ -49,12 +49,17 @@ impl Summary {
     }
 }
 
-/// Linear-interpolated percentile of a pre-sorted slice, p in [0, 100].
+/// Linear-interpolated percentile of a pre-sorted slice.  `p` is clamped
+/// to `[0, 100]`: any `p > 100` used to compute `hi > len - 1` and index
+/// past the end of the slice (a panic), and `p < 0` only behaved by the
+/// accident of saturating float→int casts.  Both now pin to the boundary
+/// samples (pinned by `percentile_out_of_range_clamps`).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
     if sorted.len() == 1 {
         return sorted[0];
     }
+    let p = p.clamp(0.0, 100.0);
     let rank = p / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -131,6 +136,41 @@ mod tests {
         assert_eq!(percentile_sorted(&v, 0.0), 0.0);
         assert_eq!(percentile_sorted(&v, 50.0), 5.0);
         assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample_for_any_p() {
+        let v = [42.0];
+        for p in [-5.0, 0.0, 50.0, 99.9, 100.0, 250.0] {
+            assert_eq!(percentile_sorted(&v, p), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentile_two_sample_interpolation_is_linear() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 25.0), 2.5);
+        assert_eq!(percentile_sorted(&v, 75.0), 7.5);
+        assert!((percentile_sorted(&v, 99.9) - 9.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_p999_sits_between_p99_and_max() {
+        let v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let p99 = percentile_sorted(&v, 99.0);
+        let p999 = percentile_sorted(&v, 99.9);
+        let max = percentile_sorted(&v, 100.0);
+        assert!(p99 < p999 && p999 < max, "{p99} {p999} {max}");
+        assert_eq!(max, 999.0);
+    }
+
+    #[test]
+    fn percentile_out_of_range_clamps() {
+        // regression: p > 100 indexed past the end of the slice
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&v, 150.0), 3.0);
+        assert_eq!(percentile_sorted(&v, 100.0 + 1e-9), 3.0);
+        assert_eq!(percentile_sorted(&v, -10.0), 1.0);
     }
 
     #[test]

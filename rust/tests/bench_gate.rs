@@ -44,10 +44,11 @@ fn sweep_roundtrips_through_bench_json() {
         assert!(r.measured_s > 0.0, "{}", r.key);
         assert!(!r.class.is_empty(), "{}", r.key);
         assert!(r.l1_read_s < r.l2_read_s && r.l2_read_s < r.ram_read_s, "{}", r.key);
-        // servedrift records are MRC-predicted serving times, not
-        // bound-line measurements — the ≤105% clamp only applies to the
-        // operator grid
-        if r.family != "servedrift" {
+        // serving records (servedrift: MRC-predicted per-request times;
+        // servslo: 1/max-sustainable-rate) are not bound-line
+        // measurements — the ≤105% clamp only applies to the operator
+        // grid
+        if r.family != "servedrift" && r.family != "servslo" {
             assert!(
                 r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0,
                 "{}: {}",
@@ -56,10 +57,14 @@ fn sweep_roundtrips_through_bench_json() {
             );
         }
     }
-    // the drifting-mix records ride in the same report (both profiles
-    // swept; only the A53 pair qualifies)
+    // the serving records ride in the same report (both profiles swept;
+    // only the A53 pair qualifies)
     assert_eq!(
         report.records.iter().filter(|r| r.family == "servedrift").count(),
+        2
+    );
+    assert_eq!(
+        report.records.iter().filter(|r| r.family == "servslo").count(),
         2
     );
     let dir = temp_dir("roundtrip");

@@ -5,9 +5,10 @@
 //! cases per property, and failures print the offending case for replay.
 
 use cachebound::coordinator::jobs::{Job, JobSpec};
+use cachebound::coordinator::loadgen::{observed_rate, ArrivalConfig};
 use cachebound::coordinator::pool::WorkerPool;
 use cachebound::coordinator::server::{
-    Request, ServeConfig, ShardedServer, SyntheticExecutor,
+    AdmissionMode, Request, ServeConfig, ShardedServer, SyntheticExecutor,
 };
 use cachebound::coordinator::RebalanceMode;
 use cachebound::hw::profile_by_name;
@@ -15,6 +16,7 @@ use cachebound::operators::bitserial;
 use cachebound::operators::conv::{self, ConvSchedule};
 use cachebound::operators::gemm::{self, GemmSchedule};
 use cachebound::operators::tensor::max_abs_diff;
+use cachebound::operators::workloads;
 use cachebound::operators::Tensor;
 use cachebound::sim::cache::{AccessKind, SetAssocCache};
 use cachebound::util::json;
@@ -327,6 +329,104 @@ fn prop_serve_fifo_and_exactly_once_under_arbitrary_migrations() {
             m.per_shard.iter().map(|s| s.latency.count()).sum::<u64>(),
             m.completed
         );
+    });
+}
+
+#[test]
+fn prop_arrival_schedules_deterministic_sorted_and_rate_conserving() {
+    // The open-loop contract (DESIGN.md §Admission): the same config
+    // yields the identical schedule bit for bit, offsets are sorted and
+    // non-negative, the stream has exactly `n` arrivals — and a pure
+    // Poisson draw conserves the configured rate (thinning at amplitude 0
+    // accepts every candidate, so the mean gap is exactly 1/rate).
+    forall("arrival_schedules", 10, |rng| {
+        let rate = 50.0 * (1.0 + rng.below(100) as f64);
+        let n = 256 + rng.below(256) as usize;
+        let seed = rng.below(u64::MAX);
+        let mut cfg = ArrivalConfig::poisson(rate, n, seed);
+        if rng.below(2) == 0 {
+            cfg = cfg.with_diurnal(
+                rng.below(100) as f64 / 100.0,
+                0.001 * (1.0 + rng.below(1000) as f64),
+            );
+        }
+        if rng.below(2) == 0 {
+            cfg = cfg.with_flash(
+                1 + rng.below(3) as usize,
+                1.0 + rng.below(8) as f64,
+                n as f64 / rate / 16.0,
+            );
+        }
+        let s = cfg.schedule();
+        assert_eq!(s, cfg.schedule(), "same config must replay bit-identically");
+        assert_eq!(s.len(), n);
+        assert!(s[0] >= 0.0 && s.iter().all(|t| t.is_finite()));
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "offsets must be sorted");
+        // rate conservation on the unmodulated process (modulated draws
+        // legitimately run above base rate, bounded by the peak envelope)
+        let flat = ArrivalConfig::poisson(rate, n, seed).schedule();
+        let observed = observed_rate(&flat);
+        assert!(
+            (observed - rate).abs() / rate < 0.5,
+            "observed {observed} req/s vs configured {rate} over {n} arrivals"
+        );
+        assert!(
+            observed_rate(&s) <= cfg.peak_rate() * 1.5,
+            "modulated rate must stay near the thinning envelope"
+        );
+    });
+}
+
+#[test]
+fn prop_admission_dispositions_reconcile() {
+    // Arbitrary streams (including unknown artifacts) under arbitrary
+    // admission modes and in-flight limits: every submitted request gets
+    // exactly one disposition, served + failed + shed covers the stream,
+    // degraded requests are a subset of the served, and every
+    // disposition leaves a latency sample.
+    let mix = workloads::serving_mix();
+    forall("admission_reconciliation", 6, |rng| {
+        let workers = 1 + rng.below(3) as usize;
+        let mode = *rng.choose(&[
+            AdmissionMode::None,
+            AdmissionMode::Shed,
+            AdmissionMode::Degrade,
+        ]);
+        let n = 40 + rng.below(60) as usize;
+        let cfg = ServeConfig::new(workers)
+            .with_admission(mode)
+            .with_admission_limit(1 + rng.below(8) as usize);
+        let stream: Vec<String> = (0..n)
+            .map(|_| {
+                if rng.below(16) == 0 {
+                    "prop_bogus_artifact".to_string()
+                } else {
+                    mix[rng.below(mix.len() as u64) as usize].artifact.clone()
+                }
+            })
+            .collect();
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_stream(stream.into_iter());
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64);
+        assert_eq!(
+            m.completed + m.failed + m.shed,
+            m.requests,
+            "mode {mode:?}: served + failed + shed must cover every request"
+        );
+        assert!(m.degraded <= m.completed, "degraded requests are served");
+        if mode == AdmissionMode::None {
+            assert_eq!(m.shed, 0, "no admission, no sheds");
+            assert_eq!(m.degraded, 0);
+        }
+        assert_eq!(
+            m.latency_seconds.len(),
+            m.requests as usize,
+            "every disposition must leave a latency sample"
+        );
+        let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "exactly one disposition");
     });
 }
 

@@ -1,0 +1,301 @@
+//! Overload chaos harness (DESIGN.md §Admission).
+//!
+//! The open-loop serving layer claims three invariants survive *any*
+//! seeded overload episode: every submitted request gets exactly one
+//! disposition (served, shed, or degraded — never silently dropped),
+//! the admission layer bounds the queue (`Shed`) or visibly fails to
+//! (`None`), and per-artifact FIFO holds among the served requests.
+//! This suite attacks the claim with seeded arrival schedules — Poisson
+//! base rates far past capacity, flash crowds injected at seeded points
+//! — driven wall-clock through `serve_open_loop`, composed with forced
+//! live migrations mid-overload.
+//!
+//! Seeds: every chaos test runs once per seed in
+//! `OVERLOAD_CHAOS_SEEDS` (comma-separated, `0x` hex or decimal;
+//! default two seeds).  CI re-runs the suite with a 4-seed matrix.
+//!
+//! The artifacts are the large synthetic GEMMs (n96/n128, ms-scale
+//! native execution on any host), so a µs-scale arrival schedule is
+//! overload by construction — the assertions hold on fast and slow
+//! hosts alike because they compare dispositions and depth bounds, not
+//! wall-clock figures.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use cachebound::coordinator::server::{
+    AdmissionMode, Request, Response, ServeConfig, ServeOutcome, ShardedServer,
+    SyntheticExecutor,
+};
+use cachebound::coordinator::ArrivalConfig;
+use cachebound::operators::workloads;
+use cachebound::util::rng::Xoshiro256;
+
+/// The chaos seed matrix: `OVERLOAD_CHAOS_SEEDS` (comma-separated,
+/// decimal or `0x` hex), defaulting to two seeds so the suite is cheap
+/// in a plain `cargo test` and broad in CI.
+fn seeds() -> Vec<u64> {
+    match std::env::var("OVERLOAD_CHAOS_SEEDS") {
+        Ok(raw) => raw
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.strip_prefix("0x")
+                    .map(|h| u64::from_str_radix(h, 16))
+                    .unwrap_or_else(|| s.parse())
+                    .unwrap_or_else(|e| panic!("bad chaos seed '{s}': {e}"))
+            })
+            .collect(),
+        Err(_) => vec![0xF00D, 0xBEEF42],
+    }
+}
+
+/// An overload stream: the two largest synthetic GEMMs, alternating —
+/// ms-scale service times against the µs-scale arrival schedules below.
+fn overload_stream(n: usize, seed: u64) -> Vec<String> {
+    let pair = [workloads::synthetic_artifact(96), workloads::synthetic_artifact(128)];
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| pair[rng.below(2) as usize].clone()).collect()
+}
+
+/// A schedule far past capacity: base Poisson at `rate` req/s with a
+/// seeded flash crowd on top.
+fn overload_schedule(rate: f64, n: usize, seed: u64) -> Vec<f64> {
+    ArrivalConfig::poisson(rate, n, seed)
+        .with_flash(1, 3.0, 0.002)
+        .schedule()
+}
+
+/// Every submitted request got exactly one disposition, and every
+/// disposition left a latency sample — the "never silent" invariant.
+fn assert_dispositions_reconcile(out: &ServeOutcome, n: usize, seed: u64) {
+    let m = &out.metrics;
+    assert_eq!(m.requests, n as u64, "seed {seed:#x}");
+    assert_eq!(
+        m.completed + m.failed + m.shed,
+        m.requests,
+        "seed {seed:#x}: served + failed + shed must cover every request"
+    );
+    assert!(m.degraded <= m.completed, "seed {seed:#x}: degraded requests are served");
+    assert_eq!(
+        m.latency_seconds.len(),
+        m.requests as usize,
+        "seed {seed:#x}: every disposition must leave a latency sample"
+    );
+    let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(
+        ids,
+        (0..n as u64).collect::<Vec<_>>(),
+        "seed {seed:#x}: dropped or duplicated responses"
+    );
+}
+
+/// Per-artifact FIFO among the *served* responses (sheds are emitted at
+/// the front door and do not join any queue).
+fn assert_served_fifo(responses: &[Response], seed: u64) {
+    let mut per_artifact: HashMap<&str, Vec<u64>> = HashMap::new();
+    for r in responses.iter().filter(|r| r.ok) {
+        per_artifact.entry(r.artifact.as_str()).or_default().push(r.id);
+    }
+    for (artifact, ids) in per_artifact {
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "seed {seed:#x}: FIFO violated for {artifact}: {ids:?}"
+        );
+    }
+}
+
+/// The core overload property: under `Shed`, a seeded flash-crowd
+/// schedule far past capacity sheds visibly, keeps the in-flight queue
+/// within `workers x limit`, and every disposition reconciles.
+#[test]
+fn shed_bounds_the_queue_under_seeded_overload() {
+    for seed in seeds() {
+        let mut rng = Xoshiro256::new(seed);
+        let workers = 2usize;
+        let limit = 4 + rng.below(5) as usize; // 4..=8
+        let n = 240;
+        let stream = overload_stream(n, seed);
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(workers)
+            .with_admission(AdmissionMode::Shed)
+            .with_admission_limit(limit);
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        assert_served_fifo(&out.responses, seed);
+        let m = &out.metrics;
+        assert_eq!(m.failed, 0, "seed {seed:#x}: sheds are not failures");
+        assert!(
+            m.shed > 0,
+            "seed {seed:#x}: a 200k req/s burst into ms-scale service must shed"
+        );
+        assert!(
+            m.max_queue_depth() <= (workers * limit) as u64,
+            "seed {seed:#x}: depth {} exceeds the admission bound {}",
+            m.max_queue_depth(),
+            workers * limit
+        );
+        // shed responses are loud: not ok, flagged, and say why
+        for r in out.responses.iter().filter(|r| r.shed) {
+            assert!(!r.ok, "seed {seed:#x}: {r:?}");
+            assert!(
+                r.error.as_deref().is_some_and(|e| e.contains("shed")),
+                "seed {seed:#x}: {r:?}"
+            );
+            assert!(r.latency_seconds >= 0.0, "seed {seed:#x}: {r:?}");
+        }
+    }
+}
+
+/// The control experiment: the same overload with admission off serves
+/// everything eventually — and the queue-depth series records the
+/// unbounded growth the admission layer exists to prevent.
+#[test]
+fn none_mode_records_unbounded_queue_growth() {
+    for seed in seeds() {
+        let workers = 2usize;
+        let limit = 8usize; // the bound the Shed run would have enforced
+        let n = 240;
+        let stream = overload_stream(n, seed);
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(workers); // AdmissionMode::None default
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        let m = &out.metrics;
+        assert_eq!(m.completed, n as u64, "seed {seed:#x}: nothing is refused");
+        assert_eq!(m.shed, 0, "seed {seed:#x}");
+        assert!(
+            m.max_queue_depth() > (4 * workers * limit) as u64,
+            "seed {seed:#x}: open-loop overload without admission must pile up \
+             far past the Shed bound (depth {})",
+            m.max_queue_depth()
+        );
+    }
+}
+
+/// `Degrade` under the same overload: excess requests are served as the
+/// next-smaller GEMM variant instead of dropped — every degraded
+/// response is an *ok* response that names its original artifact.
+#[test]
+fn degrade_serves_smaller_variants_under_overload() {
+    for seed in seeds() {
+        let n = 160;
+        // all-n128 stream so every degradation is the n128 -> n96 step
+        let big = workloads::synthetic_artifact(128);
+        let stream: Vec<String> = (0..n).map(|_| big.clone()).collect();
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(4);
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        let m = &out.metrics;
+        assert_eq!(m.failed, 0, "seed {seed:#x}");
+        assert!(
+            m.degraded > 0,
+            "seed {seed:#x}: overload past the limit must degrade something"
+        );
+        for r in out.responses.iter().filter(|r| r.degraded_from.is_some()) {
+            assert!(r.ok, "seed {seed:#x}: degraded requests are served: {r:?}");
+            assert_eq!(r.degraded_from.as_deref(), Some(big.as_str()), "seed {seed:#x}");
+            assert_eq!(r.artifact, workloads::synthetic_artifact(96), "seed {seed:#x}");
+        }
+    }
+}
+
+/// Overload composed with live migration: forced moves injected at
+/// seeded points *during* a shedding episode must not break any
+/// disposition or FIFO invariant (the pacing loop reproduces
+/// `serve_open_loop` by hand because migration needs `&mut` access
+/// between submissions).
+#[test]
+fn forced_migrations_during_overload_preserve_invariants() {
+    for seed in seeds() {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 160;
+        let stream = overload_stream(n, seed);
+        let schedule = overload_schedule(20_000.0, n, seed);
+        let pair = [workloads::synthetic_artifact(96), workloads::synthetic_artifact(128)];
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Shed)
+            .with_admission_limit(4);
+        let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let mut forced = 0usize;
+        let t0 = Instant::now();
+        for (id, (artifact, at)) in stream.into_iter().zip(&schedule).enumerate() {
+            while t0.elapsed().as_secs_f64() < *at {
+                std::hint::spin_loop();
+            }
+            if rng.below(16) == 0 {
+                let victim = &pair[rng.below(2) as usize];
+                let target = rng.below(2) as usize;
+                forced += usize::from(srv.migrate(victim, target).is_some());
+            }
+            srv.submit(Request { id: id as u64, artifact });
+        }
+        let out = srv.finish();
+
+        assert_dispositions_reconcile(&out, n, seed);
+        assert_served_fifo(&out.responses, seed);
+        assert_eq!(out.metrics.failed, 0, "seed {seed:#x}");
+        assert!(
+            out.metrics.migrations.len() >= forced,
+            "seed {seed:#x}: log must cover every forced move ({} < {forced})",
+            out.metrics.migrations.len()
+        );
+    }
+}
+
+/// The CLI surface: `cachebound serve --arrival-rate ... --admission
+/// shed` runs open-loop end to end, reports its admission mode and an
+/// SLO verdict; an unknown admission mode is rejected loudly.
+#[test]
+fn cli_serve_open_loop_flags_round_trip() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "64",
+            "--arrival-rate",
+            "400",
+            "--slo-ms",
+            "50",
+            "--admission",
+            "shed",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "open-loop serve must exit 0 (sheds are not failures): {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("admission shed"), "{stdout}");
+    assert!(stdout.contains("SLO:"), "{stdout}");
+
+    let bad = Command::new(exe)
+        .args(["serve", "--synthetic", "--requests", "4", "--admission", "maybe"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("admission"));
+}
