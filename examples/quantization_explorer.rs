@@ -11,13 +11,24 @@
 //! profile, the eq. (5) required bandwidth (is it cache-bound?), the
 //! native-operator numerics (quantization error vs float32 on real data),
 //! and a latency-vs-precision Pareto summary.
+//!
+//! A final section turns to the serving tiers (DESIGN.md §Tiers): for the
+//! synthetic serving menu it prints each artifact's traced L2 demand, how
+//! many copies fit per worker, its downshift target on the precision
+//! lattice, and the interference-free worker count per tier — the numbers
+//! behind the `servtier` bench records and `serve --tiers`.
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 use cachebound::analysis::required_bw::{bitserial_d, required_bandwidth};
+use cachebound::analysis::InterferenceModel;
+use cachebound::coordinator::min_workers_interference_free;
 use cachebound::hw::{profile_by_name, MemLevel};
-use cachebound::operators::workloads::layer_by_name;
+use cachebound::operators::workloads::{self, layer_by_name, Tier};
 use cachebound::operators::{bitserial, conv, qnn, Tensor};
 use cachebound::sim::timing;
+use cachebound::telemetry::{serving_tier_mix_profiles, CacheProfile};
 use cachebound::util::csv::Csv;
 use cachebound::util::table::{Align, Table};
 
@@ -136,6 +147,54 @@ fn main() -> Result<()> {
         assert_eq!(dot, expect, "bit-serial arithmetic exact at {bits} bits");
         println!("  bs-{bits}bit popcount dot == integer dot over {k} real quantized values ✓");
     }
+
+    // --- serving tiers: traced L2 demand, density, downshift walk ----------
+    println!(
+        "\nserving tiers (DESIGN.md §Tiers): the same precision story at the \
+         serving layer\nprofiling the tiered serving menu (telemetry traces)..."
+    );
+    let model = InterferenceModel::new(&cpu);
+    let profiles = serving_tier_mix_profiles(&cpu);
+    let mut tiers = Table::new(
+        format!(
+            "Tiered serving menu on {} ({} KiB shared L2)",
+            cpu.name,
+            cpu.l2.size_bytes / 1024
+        ),
+        &["artifact", "tier", "demand KiB", "fit/worker", "downshift ->"],
+    )
+    .align(&[Align::Left, Align::Left, Align::Right, Align::Right, Align::Left]);
+    for (name, prof) in profiles.iter() {
+        let Some((tier, _)) = workloads::synthetic_tier(name) else { continue };
+        let d = model.demand_bytes(prof);
+        tiers.row(vec![
+            name.clone(),
+            tier.name().into(),
+            format!("{}", d / 1024),
+            format!("{}", (cpu.l2.size_bytes as u64 / d.max(1)).max(1)),
+            workloads::degrade_artifact(name).unwrap_or_else(|| "(shed: floor)".into()),
+        ]);
+    }
+    println!("{}", tiers.to_markdown());
+    let tail = |tier: Tier| -> BTreeMap<String, CacheProfile> {
+        [64usize, 96, 128]
+            .iter()
+            .filter_map(|&n| {
+                let a = workloads::tier_artifact(tier, n);
+                profiles.get(&a).map(|p| (a, p.clone()))
+            })
+            .collect()
+    };
+    println!(
+        "interference-free workers for the n∈{{64,96,128}} tail: fp32 {}  int8 {}  bit-serial {}",
+        min_workers_interference_free(&model, &tail(Tier::F32), 0.05),
+        min_workers_interference_free(&model, &tail(Tier::Int8), 0.05),
+        min_workers_interference_free(&model, &tail(Tier::BitSerial), 0.05),
+    );
+    println!(
+        "serve it: cachebound serve --synthetic --tiers --tier-policy downshift \
+         --admission degrade"
+    );
 
     println!("\nwrote results/quantization_explorer_{}_{}.csv", cpu.name, layer.name);
     Ok(())

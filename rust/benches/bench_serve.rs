@@ -25,6 +25,14 @@
 //! (EXPERIMENTS.md §Throughput-at-SLO; the deterministic counterpart
 //! lives in the sweep's `bench/sim/<cpu>/servslo/*` records).
 //!
+//! A sixth section covers the quantized serving tiers (DESIGN.md §Tiers):
+//! per-size packing density of int8 twins vs their fp32 equivalents (the
+//! cache-aware packer must fit strictly more quantized artifacts per
+//! worker), interference-free worker counts per tier for the L2-heavy
+//! tail, and a wall-clock fp32-only vs mixed-tier throughput A/B on the
+//! same weighted stream (deterministic counterpart:
+//! `bench/sim/<cpu>/servtier/*`).
+//!
 //! Run: `cargo bench --bench bench_serve`
 
 use std::collections::BTreeMap;
@@ -35,9 +43,11 @@ use cachebound::coordinator::placement::{adversarial_mix, plan as placement_plan
 use cachebound::coordinator::server::{
     AdmissionMode, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
 };
-use cachebound::coordinator::{ArrivalConfig, PlacementPolicy, RebalanceMode};
+use cachebound::coordinator::{
+    min_workers_interference_free, ArrivalConfig, PlacementPolicy, RebalanceMode,
+};
 use cachebound::hw::profile_by_name;
-use cachebound::operators::workloads;
+use cachebound::operators::workloads::{self, Tier};
 use cachebound::telemetry::CacheProfile;
 use cachebound::util::table::fmt_time;
 
@@ -217,6 +227,78 @@ fn main() {
             None => println!("{label:>11}: no ladder rung meets the SLO on this host\n"),
         }
     }
+
+    // -- quantized tiers: packing density + mixed-tier serving (2 workers) --
+    //
+    // The serving tiers exist because each lattice step shrinks the
+    // working set (4 bytes -> 1 byte -> 2 bits per element), so the
+    // cache-aware packer fits more artifacts per worker before the shared
+    // L2 saturates.  The wall-clock A/B below serves the same weighted
+    // stream twice: fp32-only, then with the L2-straddling tail (n >= 96)
+    // downshifted to its int8 twin.  The deterministic counterpart lives
+    // in the sweep's `bench/sim/<cpu>/servtier/*` records.
+    println!("\n-- quantized tiers: packing density and mixed-tier serving (2 workers) --");
+    println!("profiling the tiered serving mix (telemetry traces)...");
+    let tier_model = InterferenceModel::new(&cpu);
+    let tier_profiles = cachebound::telemetry::serving_tier_mix_profiles(&cpu);
+    for item in workloads::serving_mix() {
+        let twin = workloads::tier_artifact(Tier::Int8, item.n);
+        let (Some(f), Some(q)) =
+            (tier_profiles.get(&item.artifact), tier_profiles.get(&twin))
+        else {
+            continue; // the small sizes have no quantized twin in the menu
+        };
+        let (df, dq) = (tier_model.demand_bytes(f), tier_model.demand_bytes(q));
+        let per_worker = |d: u64| (cpu.l2.size_bytes as u64 / d.max(1)).max(1);
+        println!(
+            "n{:>4}: fp32 demand {:>4} KiB ({:>2} per worker)   \
+             int8 demand {:>4} KiB ({:>2} per worker)",
+            item.n,
+            df / 1024,
+            per_worker(df),
+            dq / 1024,
+            per_worker(dq),
+        );
+        assert!(dq < df, "int8 twin of n{} must demand less L2 than fp32", item.n);
+        assert!(
+            per_worker(dq) > per_worker(df),
+            "the packer must fit strictly more int8 n{} twins per worker",
+            item.n
+        );
+    }
+    let tail_set = |tier: Tier| -> BTreeMap<String, CacheProfile> {
+        [64usize, 96, 128]
+            .iter()
+            .filter_map(|&n| {
+                let name = workloads::tier_artifact(tier, n);
+                tier_profiles.get(&name).map(|p| (name, p.clone()))
+            })
+            .collect()
+    };
+    println!(
+        "interference-free workers for the L2-heavy tail (n64/96/128): \
+         fp32 {}   int8 {}   bit-serial {}",
+        min_workers_interference_free(&tier_model, &tail_set(Tier::F32), 0.05),
+        min_workers_interference_free(&tier_model, &tail_set(Tier::Int8), 0.05),
+        min_workers_interference_free(&tier_model, &tail_set(Tier::BitSerial), 0.05),
+    );
+    let mixed_stream: Vec<String> = stream
+        .iter()
+        .map(|a| match workloads::synthetic_tier(a) {
+            Some((Tier::F32, n)) if n >= 96 => {
+                workloads::degrade_artifact(a).expect("fp32 always downshifts")
+            }
+            _ => a.clone(),
+        })
+        .collect();
+    let f32_rps = best_placed_rps(2, &stream, PlacementPolicy::CacheAware, &tier_profiles);
+    let mixed_rps =
+        best_placed_rps(2, &mixed_stream, PlacementPolicy::CacheAware, &tier_profiles);
+    println!(
+        "fp32-only:        {f32_rps:8.1} req/s   mixed-tier {mixed_rps:8.1} req/s   \
+         ({:.2}x — the n>=96 tail served as int8 twins)",
+        mixed_rps / f32_rps
+    );
 
     // adversarial co-run mix: two artifacts that hash onto the same worker
     // and whose L2 demands sum past the A53's 512 KiB L2

@@ -75,6 +75,15 @@ pub fn workload_compute(cpu: &CpuSpec, w: &BenchWorkload) -> (f64, f64, f64) {
                 cpu.thread_overhead_s,
             )
         }
+        BenchWorkload::QnnGemm { .. } => {
+            // same tiled loop nest as `Gemm`, int8 lanes (4× the SIMD width)
+            let s = GemmSchedule::default_tuned();
+            (
+                flops / gemm_compute_rate(cpu, s, 8),
+                gemm_mlp(cpu, s, 8),
+                cpu.thread_overhead_s,
+            )
+        }
         BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
             let elem_bits = w.elem_bits();
             let lanes = cpu.simd_lanes(elem_bits);
@@ -190,7 +199,10 @@ pub fn predict_workload(
 /// Full-shape output footprint (the C array), for the write-stream level.
 fn output_footprint_bytes(w: &BenchWorkload) -> f64 {
     match w {
-        BenchWorkload::Gemm { n } | BenchWorkload::Bitserial { n, .. } => (n * n * 4) as f64,
+        // QnnGemm and Bitserial accumulate into i32 — 4-byte outputs all round
+        BenchWorkload::Gemm { n }
+        | BenchWorkload::QnnGemm { n }
+        | BenchWorkload::Bitserial { n, .. } => (n * n * 4) as f64,
         BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
             (layer.cout * layer.ho() * layer.wo() * 4) as f64
         }

@@ -91,7 +91,8 @@ pub struct BenchRecord {
     pub key: String,
     /// Operator family ("gemm", "conv", "qnn", "bitserial", or the
     /// serving families: "servedrift" for the drifting-mix records,
-    /// "servslo" for the throughput-at-SLO records).
+    /// "servslo" for the throughput-at-SLO records, "servtier" for the
+    /// quantized-tier A/B at a matched SLO).
     pub family: String,
     /// Shape label ("n512", "C2", "n1024b2").
     pub shape: String,

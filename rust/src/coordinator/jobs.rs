@@ -11,7 +11,7 @@ use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::{BenchWorkload, ConvLayer};
 
 use super::placement::{PlacementPolicy, RebalanceMode};
-use super::server::AdmissionMode;
+use super::server::{AdmissionMode, TierPolicy};
 
 /// What to run.
 #[derive(Clone, Debug, PartialEq)]
@@ -118,6 +118,13 @@ pub enum JobSpec {
         placement: PlacementPolicy,
         /// Divergence response (off / drain suggestion / live migration).
         rebalance: RebalanceMode,
+        /// Serve the full precision-tier menu
+        /// ([`crate::operators::workloads::serving_mix_tiered`]: fp32 +
+        /// int8 + packed bit-serial) instead of the fp32-only mix.
+        tiers: bool,
+        /// Which axis [`AdmissionMode::Degrade`] shrinks (shape ladder vs
+        /// precision lattice).
+        tier_policy: TierPolicy,
     },
     /// One telemetry trace (`cachebound trace`, `bench --telemetry`):
     /// replay the workload through the hierarchy with a reuse-distance
@@ -210,12 +217,16 @@ impl JobSpec {
                 admission,
                 placement,
                 rebalance,
+                tiers,
+                tier_policy,
             } => {
                 format!(
-                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}",
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}/t{}/tp{}",
                     admission.key_part(),
                     placement.key_part(),
-                    rebalance.key_part()
+                    rebalance.key_part(),
+                    *tiers as u8,
+                    tier_policy.key_part()
                 )
             }
             JobSpec::Trace { cpu, workload, max_rows } => {
@@ -414,6 +425,8 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             admission,
             placement,
             rebalance,
+            tiers,
+            tier_policy,
         } => {
             use super::loadgen::ArrivalConfig;
             use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
@@ -421,19 +434,29 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 .with_cache(*cache_entries)
                 .with_placement(*placement)
                 .with_rebalance(*rebalance)
-                .with_admission(*admission);
+                .with_admission(*admission)
+                .with_tier_policy(*tier_policy);
             if *placement == PlacementPolicy::CacheAware || *rebalance == RebalanceMode::Live {
                 // both the upfront plan and the live divergence check need
                 // per-artifact profiles: the synthetic mix traced against
                 // the part the bounds are calibrated for (cached, so a
-                // scaling sweep pays the replays only once)
+                // scaling sweep pays the replays only once); the tiered
+                // menu hands the packer the int8/bit-serial profiles too,
+                // which is how quantized artifacts pack denser
                 let cpu = crate::hw::profile_by_name("a53").expect("builtin profile").cpu;
-                cfg = cfg
-                    .with_profiles(crate::telemetry::serving_mix_profiles(&cpu))
-                    .with_cpu(cpu);
+                let profiles = if *tiers {
+                    crate::telemetry::serving_tier_mix_profiles(&cpu)
+                } else {
+                    crate::telemetry::serving_mix_profiles(&cpu)
+                };
+                cfg = cfg.with_profiles(profiles).with_cpu(cpu);
             }
             let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
-            let stream = crate::operators::workloads::serving_requests(*requests, *seed);
+            let stream = if *tiers {
+                crate::operators::workloads::serving_requests_tiered(*requests, *seed)
+            } else {
+                crate::operators::workloads::serving_requests(*requests, *seed)
+            };
             let out = if *arrival_rps > 0 {
                 // open-loop: pace submissions on the seeded schedule (the
                 // same seed drives both the stream mix and the arrivals)
@@ -483,6 +506,14 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                         super::pipeline::default_conv_schedule(),
                         8,
                     ),
+                    BenchWorkload::QnnGemm { n } => timing::simulate_gemm_time(
+                        cpu,
+                        *n,
+                        *n,
+                        *n,
+                        super::pipeline::default_tuned_schedule(),
+                        8,
+                    ),
                     BenchWorkload::Bitserial { n, bits } => {
                         timing::simulate_bitserial_gemm_time(cpu, *n, *n, *n, *bits, *bits, true)
                     }
@@ -526,6 +557,11 @@ fn run_native_bench(workload: &BenchWorkload, quick: bool) -> JobOutput {
             let x = Tensor::rand_i8(&[l.b, l.cin, l.h, l.w], 25);
             let w = Tensor::rand_i8(&[l.cout, l.cin, l.k, l.k], 26);
             crate::util::bench::measure(&cfg, || qnn::conv2d(&x, &w, l.stride, l.pad))
+        }
+        BenchWorkload::QnnGemm { n } => {
+            let a = Tensor::rand_i8(&[*n, *n], 25);
+            let b = Tensor::rand_i8(&[*n, *n], 26);
+            crate::util::bench::measure(&cfg, || qnn::gemm_blocked(&a, &b))
         }
         BenchWorkload::Bitserial { n, bits } => {
             let a = Tensor::rand_unipolar(&[*n, *n], *bits as u32, 27);
@@ -672,8 +708,10 @@ mod tests {
             admission: AdmissionMode::None,
             placement: PlacementPolicy::Hash,
             rebalance: RebalanceMode::Drain,
+            tiers: false,
+            tier_policy: TierPolicy::Pinned,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain");
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain/t0/tppin");
         let out = run_cpu_job(&spec);
         match out {
             JobOutput::Served { throughput_rps, completed, failed, shed, migrations, .. } => {
@@ -698,8 +736,10 @@ mod tests {
             admission: AdmissionMode::None,
             placement: PlacementPolicy::CacheAware,
             rebalance: RebalanceMode::Drain,
+            tiers: false,
+            tier_policy: TierPolicy::Pinned,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain");
+        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain/t0/tppin");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 16);
@@ -722,8 +762,10 @@ mod tests {
             admission: AdmissionMode::None,
             placement: PlacementPolicy::Hash,
             rebalance: RebalanceMode::Live,
+            tiers: false,
+            tier_policy: TierPolicy::Pinned,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive");
+        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive/t0/tppin");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 80, "migrations must not lose or fail requests");
@@ -747,8 +789,10 @@ mod tests {
             admission: AdmissionMode::Shed,
             placement: PlacementPolicy::Hash,
             rebalance: RebalanceMode::Drain,
+            tiers: false,
+            tier_policy: TierPolicy::Pinned,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain");
+        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain/t0/tppin");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, shed, .. } => {
                 assert_eq!(completed + failed + shed, 32, "one disposition each");

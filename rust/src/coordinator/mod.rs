@@ -55,12 +55,14 @@ pub mod shard;
 pub use jobs::{Job, JobOutput, JobSpec};
 pub use loadgen::ArrivalConfig;
 pub use pipeline::{Pipeline, PipelineConfig};
-pub use placement::{Placement, PlacementPolicy, RebalanceMode, WorkerPlan};
+pub use placement::{
+    min_workers_interference_free, Placement, PlacementPolicy, RebalanceMode, WorkerPlan,
+};
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
 pub use server::{
     AdmissionMode, BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor,
     Request, Response, ServeConfig, ServeOutcome, Server, ShardedServer, SyntheticExecutor,
-    WorkerPressure,
+    TierPolicy, WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

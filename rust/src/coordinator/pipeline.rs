@@ -15,7 +15,7 @@ use crate::runtime::Registry;
 
 use super::jobs::{Job, JobSpec, NativeGemmVariant};
 use super::placement::{PlacementPolicy, RebalanceMode};
-use super::server::AdmissionMode;
+use super::server::{AdmissionMode, TierPolicy};
 use super::pool::WorkerPool;
 use super::results::ResultStore;
 
@@ -228,6 +228,12 @@ impl Pipeline {
     /// spawns its own sharded-server worker threads, and concurrent
     /// servers would contend for cores and corrupt the scaling
     /// measurement.
+    /// `tiers` swaps the fp32-only stream for the full precision-tier
+    /// menu ([`workloads::serving_mix_tiered`]) and hands the packer the
+    /// int8/bit-serial cache profiles; `tier_policy` picks which axis
+    /// `AdmissionMode::Degrade` shrinks (shape ladder vs precision
+    /// lattice — DESIGN.md §Tiers).
+    #[allow(clippy::too_many_arguments)]
     pub fn serve_scaling(
         &mut self,
         worker_counts: &[usize],
@@ -236,6 +242,8 @@ impl Pipeline {
         admission: AdmissionMode,
         placement: PlacementPolicy,
         rebalance: RebalanceMode,
+        tiers: bool,
+        tier_policy: TierPolicy,
     ) -> Result<()> {
         let specs: Vec<JobSpec> = worker_counts
             .iter()
@@ -248,6 +256,8 @@ impl Pipeline {
                 admission,
                 placement,
                 rebalance,
+                tiers,
+                tier_policy,
             })
             .collect();
         let jobs: Vec<Job> = specs
@@ -424,13 +434,23 @@ mod tests {
     #[test]
     fn serve_scaling_populates_store() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[1, 2], 16, 0, AdmissionMode::None, PlacementPolicy::Hash, RebalanceMode::Drain)
-            .unwrap();
+        p.serve_scaling(
+            &[1, 2],
+            16,
+            0,
+            AdmissionMode::None,
+            PlacementPolicy::Hash,
+            RebalanceMode::Drain,
+            false,
+            TierPolicy::Pinned,
+        )
+        .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 2);
         for (k, v) in rows {
             assert!(k.contains("/phash"), "{k} must carry the placement policy");
-            assert!(k.ends_with("/rbdrain"), "{k} must carry the rebalance mode");
+            assert!(k.contains("/rbdrain"), "{k} must carry the rebalance mode");
+            assert!(k.ends_with("/t0/tppin"), "{k} must carry the tier config");
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
@@ -440,8 +460,17 @@ mod tests {
     #[test]
     fn serve_scaling_carries_cache_aware_policy() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[2], 12, 0, AdmissionMode::None, PlacementPolicy::CacheAware, RebalanceMode::Drain)
-            .unwrap();
+        p.serve_scaling(
+            &[2],
+            12,
+            0,
+            AdmissionMode::None,
+            PlacementPolicy::CacheAware,
+            RebalanceMode::Drain,
+            false,
+            TierPolicy::Pinned,
+        )
+        .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
@@ -452,14 +481,44 @@ mod tests {
     #[test]
     fn serve_scaling_accepts_live_rebalancing() {
         let mut p = Pipeline::new(quick_config());
-        p.serve_scaling(&[2], 48, 0, AdmissionMode::None, PlacementPolicy::Hash, RebalanceMode::Live)
-            .unwrap();
+        p.serve_scaling(
+            &[2],
+            48,
+            0,
+            AdmissionMode::None,
+            PlacementPolicy::Hash,
+            RebalanceMode::Live,
+            false,
+            TierPolicy::Pinned,
+        )
+        .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
-        assert!(k.ends_with("/rblive"), "{k}");
+        assert!(k.contains("/rblive"), "{k}");
         assert_eq!(v.passed, Some(true), "{k}: migrations must not fail requests");
         assert!(v.detail.as_deref().unwrap().contains("migrations"), "{v:?}");
+    }
+
+    #[test]
+    fn serve_scaling_runs_the_tiered_menu_with_downshift() {
+        let mut p = Pipeline::new(quick_config());
+        p.serve_scaling(
+            &[2],
+            24,
+            0,
+            AdmissionMode::None,
+            PlacementPolicy::CacheAware,
+            RebalanceMode::Drain,
+            true,
+            TierPolicy::DownshiftOnPressure,
+        )
+        .unwrap();
+        let rows = p.store.by_prefix("serve_mix/");
+        assert_eq!(rows.len(), 1);
+        let (k, v) = &rows[0];
+        assert!(k.ends_with("/t1/tpdown"), "{k} must carry the tier config");
+        assert_eq!(v.passed, Some(true), "{k}: tiered serving had failures");
     }
 
     #[test]

@@ -256,6 +256,32 @@ impl Placement {
     }
 }
 
+/// Smallest worker count for which the greedy [`plan`] predicts an
+/// (approximately) interference-free deployment: total slowdown within
+/// `tol` of the ideal `profiles.len() × 1.0`.  Scans worker counts
+/// upward; one artifact per worker can never interfere, so the scan
+/// terminates at `profiles.len()` (and returns 1 for an empty map).
+///
+/// This is the per-tier "how many workers does this mix cost?" figure of
+/// merit behind the quantized-tier A/B (DESIGN.md §Tiers): a lower
+/// precision tier shrinks every operand working set, so the packer fits
+/// more artifacts per worker before the co-run model prices in L2
+/// contention — fewer workers for the same predicted interference.
+pub fn min_workers_interference_free(
+    model: &InterferenceModel,
+    profiles: &BTreeMap<String, CacheProfile>,
+    tol: f64,
+) -> usize {
+    let n = profiles.len().max(1);
+    let ideal = profiles.len() as f64;
+    for workers in 1..n {
+        if plan(model, profiles, workers).total_slowdown <= ideal + tol {
+            return workers;
+        }
+    }
+    n
+}
+
 /// Candidate sizes for [`adversarial_mix`], profiled lazily in order.
 const ADVERSARIAL_CANDIDATES: [usize; 4] = [160, 192, 224, 256];
 
@@ -444,6 +470,39 @@ mod tests {
         let re = p.rebalance(&model, &profiles, &skewed, 0.25).expect("rebalance fires");
         assert_eq!(re.assignments.len(), 2);
         assert_ne!(re.worker_for("a"), re.worker_for("b"));
+    }
+
+    #[test]
+    fn quantized_tiers_need_fewer_interference_free_workers() {
+        let model = InterferenceModel::new(&a53());
+        // four fp32-scale artifacts at 300 KiB: any pair spills the
+        // 512 KiB L2, so interference-free costs one worker each...
+        let f32_mix = profile_map(
+            (0..4)
+                .map(|i| step_profile(&format!("f32_{i}"), 300 * 1024, 0.9))
+                .collect(),
+        );
+        // ...while their int8 twins, at a quarter the working set, all
+        // fit one worker's L2 together — the tier-demand math of
+        // DESIGN.md §Tiers
+        let i8_mix = profile_map(
+            (0..4)
+                .map(|i| step_profile(&format!("i8_{i}"), 75 * 1024, 0.9))
+                .collect(),
+        );
+        let need_f32 = min_workers_interference_free(&model, &f32_mix, 1e-9);
+        let need_i8 = min_workers_interference_free(&model, &i8_mix, 1e-9);
+        assert_eq!(need_f32, 4, "every fp32 pair interferes");
+        assert_eq!(need_i8, 1, "the whole int8 mix is co-residable");
+        assert!(need_i8 < need_f32, "quantizing must save workers");
+        // sanity at the edges: the adversarial pair needs exactly 2, and
+        // an empty mix prices as a single idle worker
+        let pair = profile_map(vec![
+            step_profile("big_a", 300 * 1024, 0.9),
+            step_profile("big_b", 300 * 1024, 0.9),
+        ]);
+        assert_eq!(min_workers_interference_free(&model, &pair, 1e-9), 2);
+        assert_eq!(min_workers_interference_free(&model, &BTreeMap::new(), 1e-9), 1);
     }
 
     #[test]

@@ -20,8 +20,9 @@
 //! benchmarkable without AOT artifacts: [`PjrtExecutor`] serves compiled
 //! HLO through the PJRT registry (constructed *inside* each worker thread —
 //! the PJRT client is not `Send`, only the parsed manifest is shared, via
-//! `Arc`), while [`SyntheticExecutor`] serves native tiled-GEMM workloads
-//! from `operators::workloads::serving_mix`.
+//! `Arc`), while [`SyntheticExecutor`] serves the native synthetic
+//! workloads of `operators::workloads::serving_mix_tiered` — tiled f32
+//! GEMM plus its int8 and packed bit-serial precision-tier twins.
 //!
 //! Invariants (tested in `rust/tests/serve_multiworker.rs` and, across
 //! live migrations, `rust/tests/serve_migration.rs`):
@@ -86,10 +87,14 @@
 //! `ServeConfig::admission_limit` requests in flight (halved when the
 //! worker's profiled resident working set overflows the L2 — the
 //! [`WorkerPressure`] signal), `Shed` answers it at the front door with
-//! `Response::shed == true`, and `Degrade` reroutes it to the next-smaller
-//! synthetic variant ([`workloads::degrade_artifact`]) — the
-//! degrade-to-quantized policy of DESIGN.md §Admission — shedding only
-//! when no smaller variant exists.  Queue-depth samples, shed/degrade
+//! `Response::shed == true`, and `Degrade` reroutes it to a smaller
+//! synthetic variant — down the size ladder of its own precision tier
+//! ([`workloads::degrade_artifact_within_tier`], the default
+//! [`TierPolicy::Pinned`]) or down the precision lattice fp32 → int8 →
+//! bit-serial at the same N ([`workloads::degrade_artifact`], under
+//! [`TierPolicy::DownshiftOnPressure`]) — the degrade-to-quantized policy
+//! of DESIGN.md §Admission and §Tiers — shedding only when no smaller
+//! variant exists.  Queue-depth samples, shed/degrade
 //! counters and tail percentiles land in [`Metrics`]; the overload chaos
 //! suite (`rust/tests/serve_overload.rs`) drives all of it over a seed
 //! matrix.
@@ -105,9 +110,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::analysis::InterferenceModel;
 use crate::hw::{profile_by_name, CpuSpec};
+use crate::operators::bitserial::{self, Packed};
 use crate::operators::gemm::{self, GemmSchedule};
-use crate::operators::workloads;
-use crate::operators::Tensor;
+use crate::operators::workloads::{self, Tier};
+use crate::operators::{qnn, Tensor};
 use crate::runtime::inputs::literal_checksum;
 use crate::runtime::{Manifest, Registry};
 use crate::telemetry::CacheProfile;
@@ -341,11 +347,12 @@ pub enum AdmissionMode {
     /// Answer over-limit requests at the front door with
     /// `Response::shed == true` — bounded queues, explicit rejections.
     Shed,
-    /// Reroute over-limit requests to the next-smaller synthetic variant
-    /// ([`workloads::degrade_artifact`]) — the degrade-to-quantized
-    /// policy: a smaller working set stays cache-resident and drains
-    /// faster on a pressured worker.  Falls back to shedding when no
-    /// smaller variant exists.
+    /// Reroute over-limit requests to a smaller synthetic variant — the
+    /// degrade-to-quantized policy: a smaller working set stays
+    /// cache-resident and drains faster on a pressured worker.  Which
+    /// axis shrinks (size ladder vs precision lattice) is the
+    /// [`TierPolicy`]; falls back to shedding when no smaller variant
+    /// exists.
     Degrade,
 }
 
@@ -372,6 +379,59 @@ impl AdmissionMode {
     /// Short fragment for job/result keys (same as [`Self::name`]).
     pub fn key_part(self) -> &'static str {
         self.name()
+    }
+}
+
+/// How [`AdmissionMode::Degrade`] picks the smaller variant for an
+/// over-limit request (DESIGN.md §Tiers).  Both policies shrink the
+/// working set; they differ in *which axis* shrinks:
+///
+/// * [`TierPolicy::Pinned`] keeps the request's precision tier and steps
+///   down the size ladder of its own tier's serving mix — the pre-tier
+///   behaviour, and the default.
+/// * [`TierPolicy::DownshiftOnPressure`] keeps N and walks the precision
+///   lattice down instead: fp32 → int8 → bit-serial.  The answer is for
+///   the *same model size* at lower precision — usually the better trade
+///   when callers care about the shape of the output, and the bigger
+///   working-set reduction per step (4 B → 1 B → 0.25 B per operand
+///   element).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TierPolicy {
+    /// Degrade to the next-smaller N inside the request's own precision
+    /// tier ([`workloads::degrade_artifact_within_tier`]); shed below the
+    /// tier's smallest variant.
+    #[default]
+    Pinned,
+    /// Downshift precision at the same N
+    /// ([`workloads::degrade_artifact`]); shed only below the bit-serial
+    /// floor.
+    DownshiftOnPressure,
+}
+
+impl TierPolicy {
+    /// Parse a CLI flag value ("pinned" | "downshift").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pinned" | "pin" => Ok(TierPolicy::Pinned),
+            "downshift" | "down" => Ok(TierPolicy::DownshiftOnPressure),
+            other => bail!("unknown tier policy '{other}' (pinned | downshift)"),
+        }
+    }
+
+    /// Display name ("pinned" | "downshift").
+    pub fn name(self) -> &'static str {
+        match self {
+            TierPolicy::Pinned => "pinned",
+            TierPolicy::DownshiftOnPressure => "downshift",
+        }
+    }
+
+    /// Short fragment for job/result keys ("pin" | "down").
+    pub fn key_part(self) -> &'static str {
+        match self {
+            TierPolicy::Pinned => "pin",
+            TierPolicy::DownshiftOnPressure => "down",
+        }
     }
 }
 
@@ -457,15 +517,42 @@ impl Executor for PjrtExecutor {
     }
 }
 
-/// Artifact-free executor: serves the synthetic tiled-GEMM workloads named
-/// by [`workloads::synthetic_artifact`].  Inputs are generated
-/// deterministically per artifact (the compile-once analog: first request
-/// pays materialization), so payloads are bit-identical across runs,
-/// workers and worker counts — which is what the determinism and cache
-/// tests assert.
+/// Materialized inputs of one synthetic artifact, by precision tier.
+/// Bit-serial operands are stored *packed* — packing happens once in
+/// [`Executor::prepare`] (the quantized analog of compilation) and the
+/// packed planes are what migrate with the artifact.
+enum SynState {
+    F32(Tensor<f32>, Tensor<f32>),
+    Int8(Tensor<i8>, Tensor<i8>),
+    BitSerial(Packed, Packed),
+}
+
+/// Deterministic unipolar operand for the bit-serial tier: n rows whose
+/// reduction axis is zero-padded up to the next multiple of 32
+/// (`pack_unipolar` requires word-aligned K; zero columns contribute
+/// nothing to any AND/popcount dot product, so the padded GEMM is exact).
+fn padded_unipolar(n: usize, bits: usize, seed: u64) -> Tensor<i32> {
+    let kp = n.div_ceil(bitserial::LANES) * bitserial::LANES;
+    let mut t = Tensor::rand_unipolar(&[n, kp], bits as u32, seed);
+    for r in 0..n {
+        for c in n..kp {
+            t.data[r * kp + c] = 0;
+        }
+    }
+    t
+}
+
+/// Artifact-free executor: serves the synthetic workloads named by
+/// [`workloads::tier_artifact`] — tiled f32 GEMM (`syn_gemm_n*`),
+/// register-blocked int8 GEMM (`syn_gemm_i8_n*`) and packed bit-serial
+/// GEMM (`syn_gemm_bs_n*`).  Inputs are generated deterministically per
+/// artifact (the compile-once analog: first request pays materialization,
+/// and for bit-serial also bit-plane packing), so payloads are
+/// bit-identical across runs, workers and worker counts — which is what
+/// the determinism and cache tests assert.
 pub struct SyntheticExecutor {
     schedule: GemmSchedule,
-    inputs: HashMap<String, (Tensor<f32>, Tensor<f32>)>,
+    inputs: HashMap<String, SynState>,
 }
 
 impl SyntheticExecutor {
@@ -486,36 +573,64 @@ impl Default for SyntheticExecutor {
 
 impl Executor for SyntheticExecutor {
     fn prepare(&mut self, artifact: &str) -> Result<()> {
-        let n = workloads::synthetic_gemm_n(artifact)
+        let (tier, n) = workloads::synthetic_tier(artifact)
             .ok_or_else(|| anyhow!("'{artifact}' is not a synthetic serving artifact"))?;
         if !self.inputs.contains_key(artifact) {
-            let a = Tensor::rand_f32(&[n, n], 0xA0 + n as u64);
-            let b = Tensor::rand_f32(&[n, n], 0xB0 + n as u64);
-            self.inputs.insert(artifact.to_string(), (a, b));
+            let (sa, sb) = (0xA0 + n as u64, 0xB0 + n as u64);
+            let state = match tier {
+                Tier::F32 => SynState::F32(
+                    Tensor::rand_f32(&[n, n], sa),
+                    Tensor::rand_f32(&[n, n], sb),
+                ),
+                Tier::Int8 => SynState::Int8(
+                    Tensor::rand_i8(&[n, n], sa),
+                    Tensor::rand_i8(&[n, n], sb),
+                ),
+                Tier::BitSerial => {
+                    let bits = workloads::SERVING_BITSERIAL_BITS;
+                    SynState::BitSerial(
+                        bitserial::pack_unipolar(&padded_unipolar(n, bits, sa), bits),
+                        bitserial::pack_unipolar(&padded_unipolar(n, bits, sb), bits),
+                    )
+                }
+            };
+            self.inputs.insert(artifact.to_string(), state);
         }
         Ok(())
     }
 
     fn execute(&mut self, artifact: &str) -> Result<Exec> {
         self.prepare(artifact)?;
-        let (a, b) = &self.inputs[artifact];
         let t0 = Instant::now();
-        let c = gemm::tiled(a, b, self.schedule);
+        let payload = match &self.inputs[artifact] {
+            SynState::F32(a, b) => {
+                let c = gemm::tiled(a, b, self.schedule);
+                c.data.iter().map(|x| *x as f64).sum()
+            }
+            SynState::Int8(a, b) => {
+                let c = qnn::gemm_blocked(a, b);
+                c.data.iter().map(|x| *x as f64).sum()
+            }
+            SynState::BitSerial(a, w) => {
+                let c = bitserial::gemm_unipolar(a, w);
+                c.data.iter().map(|x| *x as f64).sum()
+            }
+        };
         let seconds = t0.elapsed().as_secs_f64();
-        let payload = c.data.iter().map(|x| *x as f64).sum();
         Ok(Exec { seconds, payload })
     }
 
     fn export_state(&mut self, artifact: &str) -> Option<Box<dyn Any + Send>> {
-        // the materialized input pair is the compile-once analog: handing
-        // it over spares the target the `prepare` warmup
+        // the materialized (for bit-serial: packed) input pair is the
+        // compile-once analog: handing it over spares the target the
+        // `prepare` warmup
         self.inputs
             .remove(artifact)
             .map(|io| Box::new(io) as Box<dyn Any + Send>)
     }
 
     fn import_state(&mut self, artifact: &str, state: Box<dyn Any + Send>) {
-        if let Ok(io) = state.downcast::<(Tensor<f32>, Tensor<f32>)>() {
+        if let Ok(io) = state.downcast::<SynState>() {
             self.inputs.insert(artifact.to_string(), *io);
         }
     }
@@ -701,6 +816,11 @@ pub struct ServeConfig {
     /// drains slower, so it earns a shorter queue.  Ignored under
     /// [`AdmissionMode::None`].
     pub admission_limit: usize,
+    /// Which axis [`AdmissionMode::Degrade`] shrinks: the size ladder
+    /// within the request's precision tier (default), or the precision
+    /// lattice fp32 → int8 → bit-serial at the same N.  Ignored under the
+    /// other admission modes.
+    pub tier_policy: TierPolicy,
 }
 
 impl ServeConfig {
@@ -722,6 +842,7 @@ impl ServeConfig {
             plan: None,
             admission: AdmissionMode::None,
             admission_limit: 64,
+            tier_policy: TierPolicy::Pinned,
         }
     }
 
@@ -741,6 +862,13 @@ impl ServeConfig {
     /// (floored at 1).
     pub fn with_admission_limit(mut self, limit: usize) -> Self {
         self.admission_limit = limit.max(1);
+        self
+    }
+
+    /// Select the degrade axis (pinned-tier size ladder / precision
+    /// downshift) — see [`TierPolicy`].
+    pub fn with_tier_policy(mut self, policy: TierPolicy) -> Self {
+        self.tier_policy = policy;
         self
     }
 
@@ -874,6 +1002,7 @@ pub struct ShardedServer {
     rejected: Vec<Response>,
     admission: AdmissionMode,
     admission_limit: usize,
+    tier_policy: TierPolicy,
     /// In-flight requests per worker: incremented at admission,
     /// decremented when the worker's response is reaped — the queue-depth
     /// signal admission control acts on.
@@ -968,6 +1097,7 @@ impl ShardedServer {
             rejected: Vec::new(),
             admission: config.admission,
             admission_limit: config.admission_limit.max(1),
+            tier_policy: config.tier_policy,
             in_flight: vec![0; workers],
             in_flight_ids: HashMap::new(),
             shed: Vec::new(),
@@ -1053,10 +1183,20 @@ impl ShardedServer {
         {
             match self.admission {
                 AdmissionMode::Degrade => {
-                    // degrade-to-smaller-variant: reroute to the next
-                    // size down (its own route, possibly another
-                    // worker), remembering what was asked for
-                    if let Some(smaller) = workloads::degrade_artifact(&req.artifact) {
+                    // degrade-to-smaller-variant: reroute to whatever the
+                    // tier policy picks — the next size down in the same
+                    // tier, or the same N one precision tier down (its
+                    // own route, possibly another worker), remembering
+                    // what was asked for
+                    let smaller = match self.tier_policy {
+                        TierPolicy::Pinned => {
+                            workloads::degrade_artifact_within_tier(&req.artifact)
+                        }
+                        TierPolicy::DownshiftOnPressure => {
+                            workloads::degrade_artifact(&req.artifact)
+                        }
+                    };
+                    if let Some(smaller) = smaller {
                         let original = req.artifact;
                         let degraded = Request { id: req.id, artifact: smaller };
                         let worker = self.route_for(&degraded.artifact);
@@ -2258,6 +2398,91 @@ mod tests {
         assert_eq!(m.completed + m.failed + m.shed, m.requests);
         assert_eq!(m.degraded, 0, "nothing below n32 to degrade to");
         assert!(m.shed > 0, "over-limit n32 requests must shed: {m:?}");
+    }
+
+    #[test]
+    fn tier_policy_parses_and_names() {
+        assert_eq!(TierPolicy::parse("pinned").unwrap(), TierPolicy::Pinned);
+        assert_eq!(TierPolicy::parse("pin").unwrap(), TierPolicy::Pinned);
+        assert_eq!(
+            TierPolicy::parse("downshift").unwrap(),
+            TierPolicy::DownshiftOnPressure
+        );
+        assert_eq!(TierPolicy::parse("down").unwrap(), TierPolicy::DownshiftOnPressure);
+        assert!(TierPolicy::parse("quantize").is_err());
+        assert_eq!(TierPolicy::default(), TierPolicy::Pinned);
+        assert_eq!(TierPolicy::Pinned.name(), "pinned");
+        assert_eq!(TierPolicy::Pinned.key_part(), "pin");
+        assert_eq!(TierPolicy::DownshiftOnPressure.name(), "downshift");
+        assert_eq!(TierPolicy::DownshiftOnPressure.key_part(), "down");
+    }
+
+    #[test]
+    fn sharded_serves_the_tiered_mix_across_all_precisions() {
+        let mut srv = synthetic_server(2, 0);
+        let mix = workloads::serving_mix_tiered();
+        for (id, item) in mix.iter().enumerate() {
+            srv.submit(Request { id: id as u64, artifact: item.artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), mix.len());
+        assert!(out.responses.iter().all(|r| r.ok), "{:?}", out.responses);
+        assert_eq!(out.metrics.completed, mix.len() as u64);
+        // every tier produced a real payload, int8 and bit-serial included
+        for item in &mix {
+            let r = out.responses.iter().find(|r| r.artifact == item.artifact).unwrap();
+            assert!(r.payload.is_some(), "{} returned no payload", item.artifact);
+        }
+    }
+
+    #[test]
+    fn downshift_policy_degrades_precision_at_the_same_n() {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2)
+                .with_admission(AdmissionMode::Degrade)
+                .with_admission_limit(1)
+                .with_tier_policy(TierPolicy::DownshiftOnPressure),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let artifact = workloads::synthetic_artifact(128);
+        let n = 16u64;
+        for id in 0..n {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        let m = &out.metrics;
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert!(m.degraded > 0, "a burst past limit 1 must downshift: {m:?}");
+        for r in out.responses.iter().filter(|r| r.degraded_from.is_some()) {
+            assert!(r.ok);
+            assert_eq!(r.degraded_from.as_deref(), Some(artifact.as_str()));
+            assert_eq!(
+                r.artifact,
+                workloads::tier_artifact(Tier::Int8, 128),
+                "precision drops, N stays"
+            );
+        }
+    }
+
+    #[test]
+    fn downshift_sheds_below_the_bitserial_floor() {
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(1)
+                .with_admission(AdmissionMode::Degrade)
+                .with_admission_limit(1)
+                .with_tier_policy(TierPolicy::DownshiftOnPressure),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        // bit-serial is the lattice floor: nothing below it to downshift to
+        let artifact = workloads::tier_artifact(Tier::BitSerial, 96);
+        for id in 0..16u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        let m = &out.metrics;
+        assert_eq!(m.completed + m.failed + m.shed, m.requests);
+        assert_eq!(m.degraded, 0, "nothing below the bit-serial floor");
+        assert!(m.shed > 0, "over-limit floor requests must shed: {m:?}");
     }
 
     #[test]

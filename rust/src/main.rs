@@ -29,6 +29,7 @@ use cachebound::bench::{self, BenchReport};
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
     AdmissionMode, BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
+    TierPolicy,
 };
 use cachebound::coordinator::{ArrivalConfig, PlacementPolicy, RebalanceMode};
 use cachebound::hw::{builtin_profiles, profile_by_name};
@@ -193,7 +194,7 @@ commands:
         [--max-batch B] [--shards M] [--synthetic]
         [--placement hash|cache-aware] [--rebalance off|drain|live]
         [--arrival-rate RPS] [--slo-ms MS] [--admission none|shed|degrade]
-        [--admission-limit L]
+        [--admission-limit L] [--tiers] [--tier-policy pinned|downshift]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
                               when artifacts/ is absent or --synthetic is set;
@@ -213,7 +214,14 @@ commands:
                               --admission shed rejects new work at a
                               per-worker in-flight limit (L, def. 64, halved
                               when the worker's resident set overflows L2),
-                              degrade reroutes to a smaller GEMM variant)
+                              degrade reroutes to a smaller GEMM variant;
+                              --tiers serves the full precision-tier menu —
+                              fp32 + int8 + packed bit-serial twins — so the
+                              cache-aware packer can exploit the smaller
+                              quantized working sets; --tier-policy downshift
+                              makes degrade step down the precision lattice
+                              (fp32 -> int8 -> bit-serial) at the same shape
+                              instead of shrinking N)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -678,6 +686,11 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         Some(v) => AdmissionMode::parse(v)?,
         None => AdmissionMode::None,
     };
+    let tiers = opts.has("tiers");
+    let tier_policy = match opts.get("tier-policy") {
+        Some(v) => TierPolicy::parse(v)?,
+        None => TierPolicy::Pinned,
+    };
     // 0 = closed-loop (submit as fast as the server accepts); positive =
     // open-loop wall-clock pacing on a seeded Poisson schedule
     let arrival_rate: f64 = match opts.get("arrival-rate") {
@@ -701,6 +714,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     cfg.rebalance = rebalance;
     cfg.admission = admission;
     cfg.admission_limit = opts.usize("admission-limit", cfg.admission_limit)?;
+    cfg.tier_policy = tier_policy;
 
     // Fall back to the synthetic mix only when artifacts are genuinely
     // absent; a present-but-broken manifest is a hard error, not a silent
@@ -735,6 +749,12 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
                      live rebalancing has no divergence signal to act on"
                 );
             }
+            if tiers {
+                println!(
+                    "note: AOT artifacts have no precision-tier twins — \
+                     --tiers applies to the synthetic mix only"
+                );
+            }
             let stream = workloads::bursty_requests(&menu, n_requests, seed);
             cfg.catalog = Some(m.clone());
             let exec_manifest = m.clone();
@@ -757,9 +777,17 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             // part — and, under --placement cache-aware, feed the greedy
             // co-run planner
             let cpu = profile_by_name(&opts.profile("a53"))?.cpu;
-            cfg.profiles = Some(telemetry::serving_mix_profiles(&cpu));
+            cfg.profiles = Some(if tiers {
+                telemetry::serving_tier_mix_profiles(&cpu)
+            } else {
+                telemetry::serving_mix_profiles(&cpu)
+            });
             cfg.cpu = Some(cpu);
-            let stream = workloads::serving_requests(n_requests, seed);
+            let stream = if tiers {
+                workloads::serving_requests_tiered(n_requests, seed)
+            } else {
+                workloads::serving_requests(n_requests, seed)
+            };
             let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
             if let Some(plan) = srv.placement() {
                 let mut t = Table::new(
@@ -791,7 +819,8 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let m = &outcome.metrics;
     println!(
         "served {}/{} requests in {:.2}s -> {:.1} req/s  \
-         ({workers} workers, {mode}, {} placement, rebalance {}, admission {})",
+         ({workers} workers, {mode}, {} placement, rebalance {}, admission {}, \
+         tier policy {})",
         m.completed,
         m.requests,
         outcome.wall_seconds,
@@ -799,6 +828,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         placement.name(),
         rebalance.name(),
         admission.name(),
+        tier_policy.name(),
     );
     println!(
         "batches {}  cache hits {} ({:.0}%)  failed {} (of which {} rejected at catalog)  \

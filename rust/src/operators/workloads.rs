@@ -133,6 +133,13 @@ pub enum BenchWorkload {
         /// The layer geometry.
         layer: ConvLayer,
     },
+    /// Int8 QNN square GEMM of size `n` (register-tiled `qnn::gemm_blocked`)
+    /// — the serving-tier counterpart of `Gemm`, with the same MACs at a
+    /// quarter of the operand traffic (Figs 4/5 int8 line).
+    QnnGemm {
+        /// Square matrix size.
+        n: usize,
+    },
     /// Unipolar bit-serial GEMM of size `n` at `bits` activation/weight bits
     /// (runtime activation packing included, §V-A).
     Bitserial {
@@ -149,7 +156,7 @@ impl BenchWorkload {
         match self {
             BenchWorkload::Gemm { .. } => "gemm",
             BenchWorkload::Conv { .. } => "conv",
-            BenchWorkload::QnnConv { .. } => "qnn",
+            BenchWorkload::QnnConv { .. } | BenchWorkload::QnnGemm { .. } => "qnn",
             BenchWorkload::Bitserial { .. } => "bitserial",
         }
     }
@@ -157,7 +164,7 @@ impl BenchWorkload {
     /// Human/CSV shape label ("n512", "C2", "n1024b2").
     pub fn shape(&self) -> String {
         match self {
-            BenchWorkload::Gemm { n } => format!("n{n}"),
+            BenchWorkload::Gemm { n } | BenchWorkload::QnnGemm { n } => format!("n{n}"),
             BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
                 layer.name.to_string()
             }
@@ -174,7 +181,9 @@ impl BenchWorkload {
     /// conv — the Table III column).
     pub fn macs(&self) -> u64 {
         match self {
-            BenchWorkload::Gemm { n } | BenchWorkload::Bitserial { n, .. } => gemm_macs(*n),
+            BenchWorkload::Gemm { n }
+            | BenchWorkload::QnnGemm { n }
+            | BenchWorkload::Bitserial { n, .. } => gemm_macs(*n),
             BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => layer.macs(),
         }
     }
@@ -184,7 +193,7 @@ impl BenchWorkload {
     pub fn elem_bits(&self) -> usize {
         match self {
             BenchWorkload::Gemm { .. } | BenchWorkload::Conv { .. } => 32,
-            BenchWorkload::QnnConv { .. } => 8,
+            BenchWorkload::QnnConv { .. } | BenchWorkload::QnnGemm { .. } => 8,
             BenchWorkload::Bitserial { bits, .. } => *bits,
         }
     }
@@ -194,7 +203,7 @@ impl BenchWorkload {
     pub fn operand_bytes(&self) -> f64 {
         match self {
             BenchWorkload::Gemm { .. } | BenchWorkload::Conv { .. } => 4.0,
-            BenchWorkload::QnnConv { .. } => 1.0,
+            BenchWorkload::QnnConv { .. } | BenchWorkload::QnnGemm { .. } => 1.0,
             BenchWorkload::Bitserial { bits, .. } => *bits as f64 / 8.0,
         }
     }
@@ -204,14 +213,96 @@ impl BenchWorkload {
 // Synthetic serving mix (coordinator::server, bench_serve)
 // ---------------------------------------------------------------------------
 
-/// One entry of the synthetic serving mix: a native tiled-GEMM "model"
-/// with a traffic weight.
+/// Numeric serving tier of a synthetic artifact — the paper's Figs 4/5
+/// precision ladder turned into a serving dimension.  Ordered from the
+/// most to the least precise: each step down shrinks the operand working
+/// set (4 bytes/elem → 1 → bits/8), which is exactly what the placement
+/// interference model prices and what `DownshiftOnPressure` exploits
+/// under overload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Float32 tiled GEMM (`gemm::tiled`) — the seed serving tier.
+    #[default]
+    F32,
+    /// Int8 register-tiled GEMM (`qnn::gemm_blocked`), i32 accumulators.
+    Int8,
+    /// Unipolar bit-serial GEMM (`bitserial::gemm_unipolar`) at
+    /// [`SERVING_BITSERIAL_BITS`] activation/weight bits.
+    BitSerial,
+}
+
+/// Bit width served at the bit-serial tier.  2 bits sits left of the
+/// paper's Fig 4/5 crossover on both A53 and A72 (1–2 bit-serial beats
+/// even int8 on traffic; ≥4 bits loses to the byte-parallel kernels), so
+/// it is the only bit-serial point the serving mix exposes.
+pub const SERVING_BITSERIAL_BITS: usize = 2;
+
+impl Tier {
+    /// All tiers, most- to least-precise (the downshift order).
+    pub const ALL: [Tier; 3] = [Tier::F32, Tier::Int8, Tier::BitSerial];
+
+    /// Human-readable tier label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::F32 => "f32",
+            Tier::Int8 => "int8",
+            Tier::BitSerial => "bitserial",
+        }
+    }
+
+    /// Parse a tier label (`f32` / `int8` / `bitserial`).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "f32" => Some(Tier::F32),
+            "int8" | "i8" => Some(Tier::Int8),
+            "bitserial" | "bs" => Some(Tier::BitSerial),
+            _ => None,
+        }
+    }
+
+    /// The next tier down the fp32 → int8 → bit-serial lattice, or `None`
+    /// at the bit-serial floor.
+    pub fn next_down(&self) -> Option<Tier> {
+        match self {
+            Tier::F32 => Some(Tier::Int8),
+            Tier::Int8 => Some(Tier::BitSerial),
+            Tier::BitSerial => None,
+        }
+    }
+
+    /// Operand bytes per element at this tier (the `d` of eq. 5 — what
+    /// shrinks the traced working set as precision drops).
+    pub fn operand_bytes(&self) -> f64 {
+        match self {
+            Tier::F32 => 4.0,
+            Tier::Int8 => 1.0,
+            Tier::BitSerial => SERVING_BITSERIAL_BITS as f64 / 8.0,
+        }
+    }
+
+    /// The bench workload a size-`n` serving artifact of this tier maps to
+    /// — the single dispatch point the telemetry tracer and the analytic
+    /// predictor share, so tiers can never drift between the two.
+    pub fn workload(&self, n: usize) -> BenchWorkload {
+        match self {
+            Tier::F32 => BenchWorkload::Gemm { n },
+            Tier::Int8 => BenchWorkload::QnnGemm { n },
+            Tier::BitSerial => BenchWorkload::Bitserial { n, bits: SERVING_BITSERIAL_BITS },
+        }
+    }
+}
+
+/// One entry of the synthetic serving mix: a native GEMM "model" at one
+/// numeric tier, with a traffic weight.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServeItem {
-    /// Artifact name understood by `SyntheticExecutor` (`syn_gemm_n<N>`).
+    /// Artifact name understood by `SyntheticExecutor`
+    /// (`syn_gemm_n<N>` / `syn_gemm_i8_n<N>` / `syn_gemm_bs_n<N>`).
     pub artifact: String,
     /// Square GEMM size.
     pub n: usize,
+    /// Numeric tier the artifact executes at.
+    pub tier: Tier,
     /// Relative traffic share (requests are drawn ∝ weight).
     pub weight: u32,
 }
@@ -221,36 +312,78 @@ pub struct ServeItem {
 /// small-operator regime.
 pub const SERVING_GEMM_SIZES: [usize; 5] = [32, 48, 64, 96, 128];
 
-/// Artifact name for the synthetic square-GEMM "model" of size `n`.
+/// Artifact name for the synthetic f32 square-GEMM "model" of size `n`.
 pub fn synthetic_artifact(n: usize) -> String {
     format!("syn_gemm_n{n}")
 }
 
+/// Artifact name for the synthetic square-GEMM "model" of size `n` at
+/// `tier` — f32 keeps the historic `syn_gemm_n<N>` spelling, the
+/// quantized tiers insert an `i8`/`bs` infix.
+pub fn tier_artifact(tier: Tier, n: usize) -> String {
+    match tier {
+        Tier::F32 => format!("syn_gemm_n{n}"),
+        Tier::Int8 => format!("syn_gemm_i8_n{n}"),
+        Tier::BitSerial => format!("syn_gemm_bs_n{n}"),
+    }
+}
+
 /// Inverse of [`synthetic_artifact`]: `syn_gemm_n64` → `Some(64)`.
+/// Matches only the f32 spelling; use [`synthetic_tier`] for the full
+/// tiered namespace.
 pub fn synthetic_gemm_n(name: &str) -> Option<usize> {
     let n: usize = name.strip_prefix("syn_gemm_n")?.parse().ok()?;
     (n > 0 && n <= 4096).then_some(n)
 }
 
-/// The next-smaller synthetic serving variant — the degrade-to-quantized
-/// analog admission control reroutes to under overload
-/// (`AdmissionMode::Degrade`): a smaller square GEMM has a strictly
-/// smaller working set, so it stays cache-resident and drains faster on a
-/// pressured worker (the paper's Figs 4/5 story turned into a shedding
-/// policy).  Returns the largest mix size strictly below the artifact's
-/// own, or `None` when the artifact is not synthetic or is already the
-/// smallest variant (callers shed instead).
+/// Inverse of [`tier_artifact`] over the whole tiered namespace:
+/// `syn_gemm_i8_n64` → `Some((Tier::Int8, 64))`.
+pub fn synthetic_tier(name: &str) -> Option<(Tier, usize)> {
+    let rest = name.strip_prefix("syn_gemm_")?;
+    let (tier, digits) = if let Some(d) = rest.strip_prefix("i8_n") {
+        (Tier::Int8, d)
+    } else if let Some(d) = rest.strip_prefix("bs_n") {
+        (Tier::BitSerial, d)
+    } else if let Some(d) = rest.strip_prefix('n') {
+        (Tier::F32, d)
+    } else {
+        return None;
+    };
+    let n: usize = digits.parse().ok()?;
+    (n > 0 && n <= 4096).then_some((tier, n))
+}
+
+/// Cross-tier downshift — the generalized degrade lattice
+/// (`TierPolicy::DownshiftOnPressure`): the same model size re-served one
+/// precision tier down (fp32 → int8 → bit-serial), shrinking operand
+/// traffic 4× then another 4× at 2 bits while keeping N — the paper's
+/// Figs 4/5 speedup story turned into an overload response.  Returns
+/// `None` at the bit-serial floor and for non-synthetic names (callers
+/// shed instead).
 pub fn degrade_artifact(artifact: &str) -> Option<String> {
-    let n = synthetic_gemm_n(artifact)?;
+    let (tier, n) = synthetic_tier(artifact)?;
+    tier.next_down().map(|t| tier_artifact(t, n))
+}
+
+/// Within-tier downshift — the pre-tier degrade behaviour
+/// (`TierPolicy::Pinned`): the largest mix size strictly below the
+/// artifact's own, at the artifact's own tier.  A smaller square GEMM has
+/// a strictly smaller working set, so it stays cache-resident and drains
+/// faster on a pressured worker.  `None` when the artifact is not
+/// synthetic or is already the smallest variant.
+pub fn degrade_artifact_within_tier(artifact: &str) -> Option<String> {
+    let (tier, n) = synthetic_tier(artifact)?;
     SERVING_GEMM_SIZES
         .iter()
         .rev()
         .find(|&&s| s < n)
-        .map(|&s| synthetic_artifact(s))
+        .map(|&s| tier_artifact(tier, s))
 }
 
-/// The synthetic serving mix: small GEMMs dominate (real inference traffic
-/// skews toward the cheap, popular models), big ones are the tail.
+/// The synthetic serving mix: small f32 GEMMs dominate (real inference
+/// traffic skews toward the cheap, popular models), big ones are the
+/// tail.  All-f32 — the pre-tier mix the legacy serving paths and the
+/// `servslo`/`servedrift` bench records are pinned to.
 pub fn serving_mix() -> Vec<ServeItem> {
     let weights = [8u32, 6, 4, 2, 1];
     SERVING_GEMM_SIZES
@@ -259,9 +392,36 @@ pub fn serving_mix() -> Vec<ServeItem> {
         .map(|(&n, weight)| ServeItem {
             artifact: synthetic_artifact(n),
             n,
+            tier: Tier::F32,
             weight,
         })
         .collect()
+}
+
+/// The mixed-tier serving mix: the f32 mix plus int8 variants of the
+/// three largest models and 2-bit bit-serial variants of the two largest
+/// — quantization only pays where the f32 working set presses on L2
+/// (small models are already cache-resident, per the paper's Fig 4/5
+/// crossover), so only the pressured tail gets quantized twins.
+pub fn serving_mix_tiered() -> Vec<ServeItem> {
+    let mut mix = serving_mix();
+    for (&n, weight) in SERVING_GEMM_SIZES[2..].iter().zip([3u32, 2, 1]) {
+        mix.push(ServeItem {
+            artifact: tier_artifact(Tier::Int8, n),
+            n,
+            tier: Tier::Int8,
+            weight,
+        });
+    }
+    for &n in &SERVING_GEMM_SIZES[3..] {
+        mix.push(ServeItem {
+            artifact: tier_artifact(Tier::BitSerial, n),
+            n,
+            tier: Tier::BitSerial,
+            weight: 1,
+        });
+    }
+    mix
 }
 
 /// A deterministic, bursty, weighted request stream over an arbitrary
@@ -303,6 +463,18 @@ pub fn bursty_requests(menu: &[(String, u32)], n_requests: usize, seed: u64) -> 
 /// [`bursty_requests`] over the synthetic [`serving_mix`].
 pub fn serving_requests(n_requests: usize, seed: u64) -> Vec<String> {
     let menu: Vec<(String, u32)> = serving_mix()
+        .into_iter()
+        .map(|m| (m.artifact, m.weight))
+        .collect();
+    bursty_requests(&menu, n_requests, seed)
+}
+
+/// The tiered analogue of [`serving_requests`]: the same bursty drawing
+/// over the full [`serving_mix_tiered`] menu, so the stream carries fp32,
+/// int8, and packed bit-serial artifacts weight-proportionally (`cachebound
+/// serve --tiers`, `JobSpec::ServeMix { tiers: true, .. }`).
+pub fn serving_requests_tiered(n_requests: usize, seed: u64) -> Vec<String> {
+    let menu: Vec<(String, u32)> = serving_mix_tiered()
         .into_iter()
         .map(|m| (m.artifact, m.weight))
         .collect();
@@ -371,15 +543,58 @@ mod tests {
     }
 
     #[test]
-    fn degrade_steps_down_the_mix_ladder() {
-        assert_eq!(degrade_artifact("syn_gemm_n128"), Some("syn_gemm_n96".into()));
-        assert_eq!(degrade_artifact("syn_gemm_n48"), Some("syn_gemm_n32".into()));
+    fn within_tier_degrade_steps_down_the_mix_ladder() {
+        let d = degrade_artifact_within_tier;
+        assert_eq!(d("syn_gemm_n128"), Some("syn_gemm_n96".into()));
+        assert_eq!(d("syn_gemm_n48"), Some("syn_gemm_n32".into()));
         // off-mix sizes (the adversarial pair) degrade to the largest
         // mix variant below them
-        assert_eq!(degrade_artifact("syn_gemm_n160"), Some("syn_gemm_n128".into()));
+        assert_eq!(d("syn_gemm_n160"), Some("syn_gemm_n128".into()));
+        // quantized artifacts stay at their own tier
+        assert_eq!(d("syn_gemm_i8_n128"), Some("syn_gemm_i8_n96".into()));
+        assert_eq!(d("syn_gemm_bs_n96"), Some("syn_gemm_bs_n64".into()));
         // the smallest variant and non-synthetic names have nowhere to go
-        assert_eq!(degrade_artifact("syn_gemm_n32"), None);
+        assert_eq!(d("syn_gemm_n32"), None);
+        assert_eq!(d("resnet50"), None);
+    }
+
+    #[test]
+    fn cross_tier_degrade_walks_the_lattice_to_the_bitserial_floor() {
+        // fp32 → int8 → bit-serial at constant N, then None (shed)
+        assert_eq!(degrade_artifact("syn_gemm_n128"), Some("syn_gemm_i8_n128".into()));
+        assert_eq!(degrade_artifact("syn_gemm_i8_n128"), Some("syn_gemm_bs_n128".into()));
+        assert_eq!(degrade_artifact("syn_gemm_bs_n128"), None, "bit-serial is the floor");
+        // off-mix sizes downshift too (the adversarial pair under pressure)
+        assert_eq!(degrade_artifact("syn_gemm_n160"), Some("syn_gemm_i8_n160".into()));
+        // non-synthetic names have no tier to shift
         assert_eq!(degrade_artifact("resnet50"), None);
+        // determinism: the lattice is a pure function of the name
+        for item in serving_mix_tiered() {
+            assert_eq!(degrade_artifact(&item.artifact), degrade_artifact(&item.artifact));
+        }
+    }
+
+    #[test]
+    fn tier_lattice_orders_and_terminates() {
+        assert_eq!(Tier::F32.next_down(), Some(Tier::Int8));
+        assert_eq!(Tier::Int8.next_down(), Some(Tier::BitSerial));
+        assert_eq!(Tier::BitSerial.next_down(), None);
+        // every chain from any tier reaches the floor in ≤ 2 steps
+        for t in Tier::ALL {
+            let mut cur = Some(t);
+            let mut steps = 0;
+            while let Some(c) = cur {
+                cur = c.next_down();
+                steps += 1;
+                assert!(steps <= 3);
+            }
+        }
+        // operand bytes shrink strictly down the lattice
+        assert!(Tier::F32.operand_bytes() > Tier::Int8.operand_bytes());
+        assert!(Tier::Int8.operand_bytes() > Tier::BitSerial.operand_bytes());
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
     }
 
     #[test]
@@ -390,6 +605,47 @@ mod tests {
         assert_eq!(synthetic_gemm_n("gemm_f32_tuned_n32"), None);
         assert_eq!(synthetic_gemm_n("syn_gemm_n"), None);
         assert_eq!(synthetic_gemm_n("syn_gemm_n0"), None);
+        // the f32 parser must NOT match quantized names (the servslo /
+        // servedrift pair extraction is pinned to the f32 namespace)
+        assert_eq!(synthetic_gemm_n("syn_gemm_i8_n64"), None);
+        assert_eq!(synthetic_gemm_n("syn_gemm_bs_n64"), None);
+    }
+
+    #[test]
+    fn tier_artifact_roundtrips_across_the_namespace() {
+        for tier in Tier::ALL {
+            for n in SERVING_GEMM_SIZES {
+                assert_eq!(synthetic_tier(&tier_artifact(tier, n)), Some((tier, n)));
+            }
+        }
+        assert_eq!(synthetic_tier("syn_gemm_n64"), Some((Tier::F32, 64)));
+        assert_eq!(synthetic_tier("syn_gemm_i8_n0"), None);
+        assert_eq!(synthetic_tier("syn_gemm_bs_n"), None);
+        assert_eq!(synthetic_tier("resnet50"), None);
+    }
+
+    #[test]
+    fn tiered_mix_extends_the_f32_mix_with_quantized_tail_twins() {
+        let base = serving_mix();
+        let tiered = serving_mix_tiered();
+        assert_eq!(&tiered[..base.len()], &base[..], "f32 mix is a prefix");
+        assert!(base.iter().all(|i| i.tier == Tier::F32));
+        let int8: Vec<usize> =
+            tiered.iter().filter(|i| i.tier == Tier::Int8).map(|i| i.n).collect();
+        let bs: Vec<usize> =
+            tiered.iter().filter(|i| i.tier == Tier::BitSerial).map(|i| i.n).collect();
+        assert_eq!(int8, vec![64, 96, 128], "int8 twins of the pressured tail");
+        assert_eq!(bs, vec![96, 128], "bit-serial twins of the largest two");
+        // artifact names are unique across the whole tiered mix
+        let mut names: Vec<&str> = tiered.iter().map(|i| i.artifact.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), tiered.len());
+        // every tiered artifact maps back to its own (tier, n)
+        for item in &tiered {
+            assert_eq!(synthetic_tier(&item.artifact), Some((item.tier, item.n)));
+            assert!(item.tier.workload(item.n).elem_bits() > 0);
+        }
     }
 
     #[test]
@@ -404,6 +660,11 @@ mod tests {
         assert_eq!(q.macs(), c2.macs());
         assert_eq!(q.key_part(), "qnn/C2");
         assert_eq!((q.elem_bits(), q.operand_bytes()), (8, 1.0));
+
+        let qg = BenchWorkload::QnnGemm { n: 128 };
+        assert_eq!(qg.macs(), 128u64.pow(3), "same MACs as the f32 GEMM");
+        assert_eq!(qg.key_part(), "qnn/n128");
+        assert_eq!((qg.elem_bits(), qg.operand_bytes()), (8, 1.0));
 
         let b = BenchWorkload::Bitserial { n: 1024, bits: 2 };
         assert_eq!(b.key_part(), "bitserial/n1024b2");
@@ -423,5 +684,23 @@ mod tests {
             assert!(synthetic_gemm_n(name).is_some(), "{name}");
         }
         assert!(count("syn_gemm_n32") > count("syn_gemm_n128"));
+    }
+
+    #[test]
+    fn tiered_serving_requests_cover_every_tier() {
+        let a = serving_requests_tiered(600, 42);
+        assert_eq!(a, serving_requests_tiered(600, 42));
+        assert_eq!(a.len(), 600);
+        // every name parses through the tier namespace, and each tier of
+        // the menu actually shows up in a stream this long
+        for tier in [Tier::F32, Tier::Int8, Tier::BitSerial] {
+            assert!(
+                a.iter().any(|x| synthetic_tier(x).map(|(t, _)| t) == Some(tier)),
+                "{tier:?} missing from the tiered stream"
+            );
+        }
+        for name in &a {
+            assert!(synthetic_tier(name).is_some(), "{name}");
+        }
     }
 }

@@ -55,8 +55,9 @@ pub mod sink;
 pub use event::{CacheEvent, EventKind, Operand};
 pub use misscurve::{Knee, MissRatioCurve, PredictedRates};
 pub use profile::{
-    serving_mix_profiles, synthetic_gemm_profile, synthetic_gemm_profile_budgeted,
-    trace_workload, CacheProfile, TraceBudget, TraceReport, TraceSummary,
+    serving_mix_profiles, serving_tier_mix_profiles, synthetic_gemm_profile,
+    synthetic_gemm_profile_budgeted, synthetic_tier_profile, trace_workload, CacheProfile,
+    TraceBudget, TraceReport, TraceSummary,
 };
 pub use reuse::{ReuseAnalyzer, ReuseHistogram};
 pub use sink::{CountingSink, EventSink, NullSink, TeeSink, VecSink};

@@ -137,9 +137,22 @@ pub fn trace_workload(cpu: &CpuSpec, w: &BenchWorkload, budget: TraceBudget) -> 
     let mut h = Hierarchy::new(cpu);
     let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
     let (scale, max_rows) = match w {
-        BenchWorkload::Gemm { n } => {
+        BenchWorkload::Gemm { n } | BenchWorkload::QnnGemm { n } => {
+            // int8 shares the tiled loop nest at 1-byte operands (the C
+            // accumulator stays 4 bytes — i32), which is the layout story
+            // the serving tiers rest on: same MACs, a quarter the panel
+            // traffic
+            let elem = if matches!(w, BenchWorkload::QnnGemm { .. }) { 1 } else { 4 };
             let m = (*n).min(budget.max_rows);
-            replay_gemm_traced(&mut h, m, *n, *n, GemmSchedule::default_tuned(), 4, &mut analyzer);
+            replay_gemm_traced(
+                &mut h,
+                m,
+                *n,
+                *n,
+                GemmSchedule::default_tuned(),
+                elem,
+                &mut analyzer,
+            );
             (*n as f64 / m as f64, m)
         }
         BenchWorkload::Conv { layer } | BenchWorkload::QnnConv { layer } => {
@@ -475,6 +488,18 @@ pub fn synthetic_gemm_profile(cpu: &CpuSpec, artifact: &str, n: usize) -> CacheP
     trace_workload(cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(n)).cache_profile(artifact)
 }
 
+/// Profile a synthetic serving artifact of *any* tier
+/// (`syn_gemm_n<N>` / `syn_gemm_i8_n<N>` / `syn_gemm_bs_n<N>`) by tracing
+/// its tier's kernel untruncated — the tier-aware generalization of
+/// [`synthetic_gemm_profile`].  The tier ↔ workload mapping lives on
+/// [`crate::operators::workloads::Tier::workload`], so the traced replay,
+/// the analytic predictor and the serving executor can never disagree
+/// about what an artifact runs.  `None` for non-synthetic names.
+pub fn synthetic_tier_profile(cpu: &CpuSpec, artifact: &str) -> Option<CacheProfile> {
+    let (tier, n) = crate::operators::workloads::synthetic_tier(artifact)?;
+    Some(trace_workload(cpu, &tier.workload(n), TraceBudget::new(n)).cache_profile(artifact))
+}
+
 /// Cache profiles for the whole synthetic serving mix
 /// (`operators::workloads::serving_mix`), traced once per CPU profile
 /// *name* and shared behind an `Arc` — the single map every cache-aware
@@ -501,6 +526,40 @@ pub fn serving_mix_profiles(
             .into_iter()
             .map(|m| {
                 let p = synthetic_gemm_profile(cpu, &m.artifact, m.n);
+                (m.artifact, p)
+            })
+            .collect(),
+    );
+    guard.insert(cpu.name.clone(), profiles.clone());
+    profiles
+}
+
+/// Cache profiles for the mixed-tier serving mix
+/// (`operators::workloads::serving_mix_tiered`), traced once per CPU
+/// profile name like [`serving_mix_profiles`].  The quantized twins trace
+/// through their own kernels (`QnnGemm` / `Bitserial`), so their smaller
+/// working sets are visible to the interference model and the greedy
+/// packer — quantized artifacts pack denser per worker, which is the
+/// whole point of the tiered mix.
+pub fn serving_tier_mix_profiles(
+    cpu: &CpuSpec,
+) -> std::sync::Arc<std::collections::BTreeMap<String, CacheProfile>> {
+    use std::collections::{BTreeMap, HashMap};
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    type MixMap = Arc<BTreeMap<String, CacheProfile>>;
+    static CACHE: OnceLock<Mutex<HashMap<String, MixMap>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("tier-mix profile cache poisoned");
+    if let Some(profiles) = guard.get(&cpu.name) {
+        return profiles.clone();
+    }
+    let profiles: MixMap = Arc::new(
+        crate::operators::workloads::serving_mix_tiered()
+            .into_iter()
+            .map(|m| {
+                let p = synthetic_tier_profile(cpu, &m.artifact)
+                    .expect("tiered mix artifacts are always synthetic");
                 (m.artifact, p)
             })
             .collect(),
@@ -574,6 +633,7 @@ mod tests {
             BenchWorkload::Gemm { n: 48 },
             BenchWorkload::Conv { layer },
             BenchWorkload::QnnConv { layer },
+            BenchWorkload::QnnGemm { n: 48 },
             BenchWorkload::Bitserial { n: 48, bits: 2 },
         ];
         for w in &workloads {
@@ -610,6 +670,52 @@ mod tests {
         let p = r.cache_profile("syn_gemm_n64");
         assert_eq!(p.artifact, "syn_gemm_n64");
         assert_eq!(p.working_set_bytes, r.working_set_bytes);
+    }
+
+    #[test]
+    fn tier_profiles_shrink_down_the_precision_lattice() {
+        // the placement story: at the same N, each quantization step must
+        // show the packer a strictly smaller working set *and* footprint
+        use crate::operators::workloads::{tier_artifact, Tier};
+        let cpu = a53();
+        let f32p = synthetic_tier_profile(&cpu, &tier_artifact(Tier::F32, 128)).unwrap();
+        let i8p = synthetic_tier_profile(&cpu, &tier_artifact(Tier::Int8, 128)).unwrap();
+        let bsp = synthetic_tier_profile(&cpu, &tier_artifact(Tier::BitSerial, 128)).unwrap();
+        assert!(
+            i8p.working_set_bytes < f32p.working_set_bytes,
+            "int8 ws {} vs f32 ws {}",
+            i8p.working_set_bytes,
+            f32p.working_set_bytes
+        );
+        assert!(i8p.footprint_bytes < f32p.footprint_bytes);
+        assert!(
+            bsp.footprint_bytes < i8p.footprint_bytes,
+            "2-bit planes {} vs int8 panels {}",
+            bsp.footprint_bytes,
+            i8p.footprint_bytes
+        );
+        // all three are repriceable by the interference model
+        for p in [&f32p, &i8p, &bsp] {
+            assert!(p.repriceable(), "{}", p.artifact);
+        }
+        // non-synthetic names have no tier profile
+        assert!(synthetic_tier_profile(&cpu, "resnet50").is_none());
+    }
+
+    #[test]
+    fn tier_mix_profiles_cover_the_tiered_mix() {
+        use crate::operators::workloads::serving_mix_tiered;
+        let cpu = a53();
+        let profiles = serving_tier_mix_profiles(&cpu);
+        let mix = serving_mix_tiered();
+        assert_eq!(profiles.len(), mix.len());
+        for item in &mix {
+            let p = profiles.get(&item.artifact).expect("every mix artifact profiled");
+            assert_eq!(p.artifact, item.artifact);
+            assert!(p.working_set_bytes > 0);
+        }
+        // cached: the second call returns the same Arc
+        assert!(std::sync::Arc::ptr_eq(&profiles, &serving_tier_mix_profiles(&cpu)));
     }
 
     #[test]

@@ -8,7 +8,7 @@ use cachebound::coordinator::jobs::{Job, JobSpec};
 use cachebound::coordinator::loadgen::{observed_rate, ArrivalConfig};
 use cachebound::coordinator::pool::WorkerPool;
 use cachebound::coordinator::server::{
-    AdmissionMode, Request, ServeConfig, ShardedServer, SyntheticExecutor,
+    AdmissionMode, Request, ServeConfig, ShardedServer, SyntheticExecutor, TierPolicy,
 };
 use cachebound::coordinator::RebalanceMode;
 use cachebound::hw::profile_by_name;
@@ -427,6 +427,66 @@ fn prop_admission_dispositions_reconcile() {
         let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
         ids.sort();
         assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "exactly one disposition");
+    });
+}
+
+#[test]
+fn prop_tier_downshift_dispositions_reconcile() {
+    // The tier generalization of the admission property: arbitrary
+    // streams over the full precision-tier menu, under either tier
+    // policy and arbitrary in-flight limits, still give every request
+    // exactly one disposition — and every cross-tier downshift is one
+    // lattice step at the same GEMM size.
+    let mix = workloads::serving_mix_tiered();
+    forall("tier_downshift_reconciliation", 6, |rng| {
+        let workers = 1 + rng.below(3) as usize;
+        let policy = *rng.choose(&[TierPolicy::Pinned, TierPolicy::DownshiftOnPressure]);
+        let n = 40 + rng.below(60) as usize;
+        let cfg = ServeConfig::new(workers)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(1 + rng.below(4) as usize)
+            .with_tier_policy(policy);
+        let stream: Vec<String> = (0..n)
+            .map(|_| mix[rng.below(mix.len() as u64) as usize].artifact.clone())
+            .collect();
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_stream(stream.into_iter());
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64);
+        assert_eq!(
+            m.completed + m.failed + m.shed,
+            m.requests,
+            "policy {policy:?}: served + failed + shed must cover every request"
+        );
+        assert_eq!(m.failed, 0, "policy {policy:?}: the tiered menu never fails");
+        assert!(m.degraded <= m.completed, "degraded requests are served");
+        assert_eq!(
+            m.latency_seconds.len(),
+            m.requests as usize,
+            "every disposition must leave a latency sample"
+        );
+        let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "exactly one disposition");
+        for r in out.responses.iter().filter(|r| r.degraded_from.is_some()) {
+            let (from_tier, from_n) =
+                workloads::synthetic_tier(r.degraded_from.as_deref().unwrap()).unwrap();
+            let (to_tier, to_n) = workloads::synthetic_tier(&r.artifact).unwrap();
+            match policy {
+                TierPolicy::Pinned => {
+                    assert_eq!(to_tier, from_tier, "pinned must not cross tiers: {r:?}");
+                    assert!(to_n < from_n, "pinned degrade shrinks the shape: {r:?}");
+                }
+                TierPolicy::DownshiftOnPressure => {
+                    assert_eq!(to_n, from_n, "downshift keeps the shape: {r:?}");
+                    assert_eq!(
+                        Some(to_tier),
+                        from_tier.next_down(),
+                        "downshift is one lattice step: {r:?}"
+                    );
+                }
+            }
+        }
     });
 }
 

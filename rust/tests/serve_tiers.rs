@@ -1,0 +1,313 @@
+//! Tier-downshift chaos harness (DESIGN.md §Tiers, §Admission).
+//!
+//! `TierPolicy::DownshiftOnPressure` claims the open-loop invariants of
+//! the overload suite survive *precision* degradation exactly as they
+//! survive shape degradation: every submitted request gets exactly one
+//! disposition (served, shed, or degraded — never silently dropped),
+//! every downshift is one step down the tier lattice at the *same* GEMM
+//! size, the bit-serial floor sheds instead of inventing a lower tier,
+//! and per-artifact FIFO holds among the served responses.  This suite
+//! attacks those claims with seeded overload schedules driven wall-clock
+//! through `serve_open_loop`, composed with forced live migrations
+//! mid-downshift.
+//!
+//! Seeds: every chaos test runs once per seed in `TIER_CHAOS_SEEDS`
+//! (comma-separated, `0x` hex or decimal; default two seeds).  CI
+//! re-runs the suite with a 4-seed matrix.
+//!
+//! The artifacts are the large synthetic GEMMs (n96/n128 across all
+//! three tiers, ms-scale native execution on any host), so a µs-scale
+//! arrival schedule is overload by construction — the assertions compare
+//! dispositions and lattice steps, not wall-clock figures.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use cachebound::coordinator::server::{
+    AdmissionMode, Request, Response, ServeConfig, ServeOutcome, ShardedServer,
+    SyntheticExecutor, TierPolicy,
+};
+use cachebound::coordinator::ArrivalConfig;
+use cachebound::operators::workloads::{self, Tier};
+use cachebound::util::rng::Xoshiro256;
+
+/// The chaos seed matrix: `TIER_CHAOS_SEEDS` (comma-separated, decimal
+/// or `0x` hex), defaulting to two seeds so the suite is cheap in a
+/// plain `cargo test` and broad in CI.
+fn seeds() -> Vec<u64> {
+    match std::env::var("TIER_CHAOS_SEEDS") {
+        Ok(raw) => raw
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.strip_prefix("0x")
+                    .map(|h| u64::from_str_radix(h, 16))
+                    .unwrap_or_else(|| s.parse())
+                    .unwrap_or_else(|e| panic!("bad chaos seed '{s}': {e}"))
+            })
+            .collect(),
+        Err(_) => vec![0x7135, 0xD0E5],
+    }
+}
+
+/// An overload stream over the big end of the tiered menu: the n96/n128
+/// fp32 artifacts and their int8 twins, drawn seeded.
+fn tiered_overload_stream(n: usize, seed: u64) -> Vec<String> {
+    let menu = [
+        workloads::tier_artifact(Tier::F32, 96),
+        workloads::tier_artifact(Tier::F32, 128),
+        workloads::tier_artifact(Tier::Int8, 96),
+        workloads::tier_artifact(Tier::Int8, 128),
+    ];
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| menu[rng.below(4) as usize].clone()).collect()
+}
+
+/// A schedule far past capacity: base Poisson at `rate` req/s with a
+/// seeded flash crowd on top.
+fn overload_schedule(rate: f64, n: usize, seed: u64) -> Vec<f64> {
+    ArrivalConfig::poisson(rate, n, seed)
+        .with_flash(1, 3.0, 0.002)
+        .schedule()
+}
+
+/// Every submitted request got exactly one disposition, and every
+/// disposition left a latency sample — the "never silent" invariant.
+fn assert_dispositions_reconcile(out: &ServeOutcome, n: usize, seed: u64) {
+    let m = &out.metrics;
+    assert_eq!(m.requests, n as u64, "seed {seed:#x}");
+    assert_eq!(
+        m.completed + m.failed + m.shed,
+        m.requests,
+        "seed {seed:#x}: served + failed + shed must cover every request"
+    );
+    assert!(m.degraded <= m.completed, "seed {seed:#x}: degraded requests are served");
+    assert_eq!(
+        m.latency_seconds.len(),
+        m.requests as usize,
+        "seed {seed:#x}: every disposition must leave a latency sample"
+    );
+    let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(
+        ids,
+        (0..n as u64).collect::<Vec<_>>(),
+        "seed {seed:#x}: dropped or duplicated responses"
+    );
+}
+
+/// Every degraded response took exactly one step down the tier lattice
+/// at an unchanged GEMM size — the downshift analogue of the overload
+/// suite's shape check.
+fn assert_downshifts_walk_the_lattice(responses: &[Response], seed: u64) {
+    for r in responses.iter().filter(|r| r.degraded_from.is_some()) {
+        assert!(r.ok, "seed {seed:#x}: degraded requests are served: {r:?}");
+        let from = r.degraded_from.as_deref().unwrap();
+        let (from_tier, from_n) =
+            workloads::synthetic_tier(from).unwrap_or_else(|| panic!("seed {seed:#x}: {r:?}"));
+        let (to_tier, to_n) = workloads::synthetic_tier(&r.artifact)
+            .unwrap_or_else(|| panic!("seed {seed:#x}: {r:?}"));
+        assert_eq!(to_n, from_n, "seed {seed:#x}: downshift must keep the shape: {r:?}");
+        assert_eq!(
+            Some(to_tier),
+            from_tier.next_down(),
+            "seed {seed:#x}: downshift must be one lattice step: {r:?}"
+        );
+    }
+}
+
+/// Per-artifact FIFO among the *served* responses (sheds are emitted at
+/// the front door and do not join any queue).
+fn assert_served_fifo(responses: &[Response], seed: u64) {
+    let mut per_artifact: HashMap<&str, Vec<u64>> = HashMap::new();
+    for r in responses.iter().filter(|r| r.ok) {
+        per_artifact.entry(r.artifact.as_str()).or_default().push(r.id);
+    }
+    for (artifact, ids) in per_artifact {
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "seed {seed:#x}: FIFO violated for {artifact}: {ids:?}"
+        );
+    }
+}
+
+/// The core property: under `Degrade` + `DownshiftOnPressure`, a seeded
+/// flash-crowd schedule far past capacity downshifts visibly, every
+/// downshift is one lattice step at the same shape, and every request
+/// reconciles to exactly one disposition.
+#[test]
+fn downshift_preserves_dispositions_under_seeded_overload() {
+    for seed in seeds() {
+        let n = 160;
+        let stream = tiered_overload_stream(n, seed);
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(4)
+            .with_tier_policy(TierPolicy::DownshiftOnPressure);
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        assert_downshifts_walk_the_lattice(&out.responses, seed);
+        assert_served_fifo(&out.responses, seed);
+        let m = &out.metrics;
+        assert_eq!(m.failed, 0, "seed {seed:#x}: downshifts are not failures");
+        assert!(
+            m.degraded > 0,
+            "seed {seed:#x}: a 200k req/s burst into ms-scale service must downshift"
+        );
+    }
+}
+
+/// The lattice floor: an all-bit-serial overload has nowhere lower to
+/// go, so `Degrade` must shed loudly — never fabricate a tier below
+/// bit-serial, never drop silently.
+#[test]
+fn bitserial_floor_sheds_instead_of_downshifting() {
+    for seed in seeds() {
+        let n = 120;
+        let menu =
+            [workloads::tier_artifact(Tier::BitSerial, 96), workloads::tier_artifact(Tier::BitSerial, 128)];
+        let mut rng = Xoshiro256::new(seed);
+        let stream: Vec<String> =
+            (0..n).map(|_| menu[rng.below(2) as usize].clone()).collect();
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(4)
+            .with_tier_policy(TierPolicy::DownshiftOnPressure);
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        let m = &out.metrics;
+        assert_eq!(m.degraded, 0, "seed {seed:#x}: bit-serial has no lower tier");
+        assert_eq!(m.failed, 0, "seed {seed:#x}: floor sheds are not failures");
+        assert!(
+            m.shed > 0,
+            "seed {seed:#x}: overload at the lattice floor must shed visibly"
+        );
+    }
+}
+
+/// Downshift composed with forced live migration: seeded moves injected
+/// *during* a downshifting episode must not break any disposition,
+/// lattice, or FIFO invariant (the pacing loop reproduces
+/// `serve_open_loop` by hand because migration needs `&mut` access
+/// between submissions).
+#[test]
+fn forced_migrations_during_downshift_preserve_invariants() {
+    for seed in seeds() {
+        let mut rng = Xoshiro256::new(seed);
+        let n = 160;
+        let stream = tiered_overload_stream(n, seed);
+        let schedule = overload_schedule(20_000.0, n, seed);
+        let victims = [
+            workloads::tier_artifact(Tier::F32, 128),
+            workloads::tier_artifact(Tier::Int8, 128),
+        ];
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(4)
+            .with_tier_policy(TierPolicy::DownshiftOnPressure);
+        let mut srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let mut forced = 0usize;
+        let t0 = Instant::now();
+        for (id, (artifact, at)) in stream.into_iter().zip(&schedule).enumerate() {
+            while t0.elapsed().as_secs_f64() < *at {
+                std::hint::spin_loop();
+            }
+            if rng.below(16) == 0 {
+                let victim = &victims[rng.below(2) as usize];
+                let target = rng.below(2) as usize;
+                forced += usize::from(srv.migrate(victim, target).is_some());
+            }
+            srv.submit(Request { id: id as u64, artifact });
+        }
+        let out = srv.finish();
+
+        assert_dispositions_reconcile(&out, n, seed);
+        assert_downshifts_walk_the_lattice(&out.responses, seed);
+        assert_served_fifo(&out.responses, seed);
+        assert_eq!(out.metrics.failed, 0, "seed {seed:#x}");
+        assert!(
+            out.metrics.migrations.len() >= forced,
+            "seed {seed:#x}: log must cover every forced move ({} < {forced})",
+            out.metrics.migrations.len()
+        );
+    }
+}
+
+/// The pinned-policy control: the same tiered overload under the default
+/// `TierPolicy::Pinned` never crosses tiers — every degradation shrinks
+/// the shape inside its own tier, so the two degrade axes stay disjoint.
+#[test]
+fn pinned_policy_keeps_every_tier_in_place() {
+    for seed in seeds() {
+        let n = 120;
+        let stream = tiered_overload_stream(n, seed);
+        let schedule = overload_schedule(200_000.0, n, seed);
+
+        let cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Degrade)
+            .with_admission_limit(4); // TierPolicy::Pinned default
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_open_loop(stream.into_iter(), &schedule);
+
+        assert_dispositions_reconcile(&out, n, seed);
+        for r in out.responses.iter().filter(|r| r.degraded_from.is_some()) {
+            let from = r.degraded_from.as_deref().unwrap();
+            let (from_tier, from_n) = workloads::synthetic_tier(from).unwrap();
+            let (to_tier, to_n) = workloads::synthetic_tier(&r.artifact).unwrap();
+            assert_eq!(to_tier, from_tier, "seed {seed:#x}: pinned must not cross tiers: {r:?}");
+            assert!(to_n < from_n, "seed {seed:#x}: pinned degrade shrinks the shape: {r:?}");
+        }
+    }
+}
+
+/// The CLI surface: `cachebound serve --tiers --tier-policy downshift`
+/// runs the tiered menu end to end and reports its tier policy; an
+/// unknown policy is rejected loudly.
+#[test]
+fn cli_serve_tier_flags_round_trip() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "48",
+            "--tiers",
+            "--tier-policy",
+            "downshift",
+            "--arrival-rate",
+            "400",
+            "--admission",
+            "degrade",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "tiered serve must exit 0 (downshifts are not failures): {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("tier policy downshift"), "{stdout}");
+
+    let bad = Command::new(exe)
+        .args(["serve", "--synthetic", "--requests", "4", "--tier-policy", "sideways"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("tier policy"));
+}

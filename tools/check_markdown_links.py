@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Dependency-free markdown link checker for the book-keeping documents.
+
+For every ``[text](target)`` link in the given files:
+
+* ``http(s)://`` and ``mailto:`` targets are skipped (offline CI);
+* a relative path target must exist on disk, resolved against the
+  linking file's directory;
+* a ``#anchor`` (bare, or after a path) must match a heading in the
+  target file under GitHub's slugging rules (lowercase; drop everything
+  that is not alphanumeric, hyphen, underscore or space; spaces become
+  hyphens).
+
+Exit status is the number of broken links, so CI fails on any.
+
+Usage: check_markdown_links.py FILE.md [FILE.md ...]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE = re.compile(r"^(```|~~~)")
+
+
+def strip_fences(text):
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE.match(line.strip()):
+            fenced = not fenced
+            continue
+        out.append(line if not fenced else "")
+    return "\n".join(out)
+
+
+def slugify(heading):
+    heading = re.sub(r"`", "", heading).strip().lower()
+    out = []
+    for ch in heading:
+        if ch.isalnum() or ch in "_-":
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+    return "".join(out)
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        text = strip_fences(path.read_text(encoding="utf-8"))
+        cache[path] = {
+            slugify(m.group(1)) for line in text.splitlines() if (m := HEADING.match(line))
+        }
+    return cache[path]
+
+
+def check(md):
+    broken = []
+    text = strip_fences(md.read_text(encoding="utf-8"))
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part)
+        if not dest.exists():
+            broken.append(f"{md}: missing file target '{target}'")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in anchors_of(dest):
+            broken.append(f"{md}: anchor '#{anchor}' not found in {dest}")
+    return broken
+
+
+def main(argv):
+    broken = []
+    for name in argv:
+        md = Path(name)
+        if not md.exists():
+            broken.append(f"{md}: file to check does not exist")
+            continue
+        broken.extend(check(md))
+    for b in broken:
+        print(f"BROKEN  {b}")
+    total = sum(1 for name in argv if Path(name).exists())
+    print(f"checked {total} file(s): {len(broken)} broken link(s)")
+    return min(len(broken), 120)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
