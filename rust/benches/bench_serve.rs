@@ -33,6 +33,13 @@
 //! same weighted stream (deterministic counterpart:
 //! `bench/sim/<cpu>/servtier/*`).
 //!
+//! A seventh section A/Bs cold vs pre-warmed startup through the
+//! persistent compiled-artifact cache (DESIGN.md §Artifact cache): the
+//! same stream served twice against one cache root — the cold pass
+//! compiles and stores every first-touch artifact, the warm pass loads
+//! them all from disk with zero compiles (deterministic counterpart:
+//! `bench/sim/<cpu>/servcache/*`).
+//!
 //! Run: `cargo bench --bench bench_serve`
 
 use std::collections::BTreeMap;
@@ -41,7 +48,7 @@ use std::sync::Arc;
 use cachebound::analysis::InterferenceModel;
 use cachebound::coordinator::placement::{adversarial_mix, plan as placement_plan};
 use cachebound::coordinator::server::{
-    AdmissionMode, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
+    AdmissionMode, PrepSource, ServeConfig, ServeOutcome, ShardedServer, SyntheticExecutor,
 };
 use cachebound::coordinator::{
     min_workers_interference_free, ArrivalConfig, PlacementPolicy, RebalanceMode,
@@ -299,6 +306,46 @@ fn main() {
          ({:.2}x — the n>=96 tail served as int8 twins)",
         mixed_rps / f32_rps
     );
+
+    // -- artifact cache: cold vs pre-warmed startup (2 workers) --
+    //
+    // The persistent compiled-artifact cache turns first-touch prepares
+    // into disk loads.  Same stream, same cache root, two passes: the
+    // cold pass compiles and stores, the warm pass must perform zero
+    // compiles — every prep is a disk hit.
+    println!("\n-- artifact cache: cold vs pre-warmed startup (2 workers) --");
+    let cache_root = std::env::temp_dir().join("cachebound_bench_serve_cache");
+    let _ = std::fs::remove_dir_all(&cache_root);
+    let serve_cached = || {
+        let cfg = ServeConfig::new(2).with_cache_dir(cache_root.clone());
+        let out = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()))
+            .serve_stream(stream.iter().cloned());
+        assert_eq!(out.metrics.completed, stream.len() as u64);
+        let compiled = out
+            .metrics
+            .prep
+            .iter()
+            .filter(|p| p.source == PrepSource::Compiled)
+            .count();
+        let loaded = out.metrics.prep.len() - compiled;
+        let prep_s: f64 = out.metrics.prep.iter().map(|p| p.seconds).sum();
+        (out.metrics.throughput(out.wall_seconds), compiled, loaded, prep_s)
+    };
+    let (cold_rps, cold_compiled, cold_loaded, cold_prep) = serve_cached();
+    let (warm_rps, warm_compiled, warm_loaded, warm_prep) = serve_cached();
+    assert_eq!(cold_loaded, 0, "the first pass starts from an empty cache");
+    assert_eq!(warm_compiled, 0, "the pre-warmed pass must perform zero compiles");
+    assert_eq!(warm_loaded, cold_compiled, "every cold compile becomes a warm disk hit");
+    println!(
+        "cold start:       {cold_rps:8.1} req/s   ({cold_compiled} compiled, total prep {})",
+        fmt_time(cold_prep)
+    );
+    println!(
+        "pre-warmed start: {warm_rps:8.1} req/s   ({warm_loaded} disk-warm, total prep {} — \
+         acceptance: zero compiles on the warm pass)",
+        fmt_time(warm_prep)
+    );
+    let _ = std::fs::remove_dir_all(&cache_root);
 
     // adversarial co-run mix: two artifacts that hash onto the same worker
     // and whose L2 demands sum past the A53's 512 KiB L2

@@ -92,7 +92,8 @@ pub struct BenchRecord {
     /// Operator family ("gemm", "conv", "qnn", "bitserial", or the
     /// serving families: "servedrift" for the drifting-mix records,
     /// "servslo" for the throughput-at-SLO records, "servtier" for the
-    /// quantized-tier A/B at a matched SLO).
+    /// quantized-tier A/B at a matched SLO, "servcache" for the
+    /// cold-vs-warm artifact-cache startup A/B).
     pub family: String,
     /// Shape label ("n512", "C2", "n1024b2").
     pub shape: String,

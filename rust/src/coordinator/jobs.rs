@@ -5,6 +5,8 @@
 //! thread; `Artifact*` jobs touch the PJRT client and are routed to the
 //! leader thread by the pool (the routing invariant is property-tested).
 
+use std::path::PathBuf;
+
 use crate::hw::CpuSpec;
 use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
@@ -125,6 +127,11 @@ pub enum JobSpec {
         /// Which axis [`AdmissionMode::Degrade`] shrinks (shape ladder vs
         /// precision lattice).
         tier_policy: TierPolicy,
+        /// Root of the persistent compiled-artifact cache
+        /// ([`crate::runtime::ArtifactCache`]); `None` keeps the
+        /// compile-always behaviour.  The key records only presence —
+        /// the digest scheme makes the contents path-independent.
+        cache_dir: Option<PathBuf>,
     },
     /// One telemetry trace (`cachebound trace`, `bench --telemetry`):
     /// replay the workload through the hierarchy with a reuse-distance
@@ -219,14 +226,16 @@ impl JobSpec {
                 rebalance,
                 tiers,
                 tier_policy,
+                cache_dir,
             } => {
                 format!(
-                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}/t{}/tp{}",
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}/t{}/tp{}/cd{}",
                     admission.key_part(),
                     placement.key_part(),
                     rebalance.key_part(),
                     *tiers as u8,
-                    tier_policy.key_part()
+                    tier_policy.key_part(),
+                    cache_dir.is_some() as u8
                 )
             }
             JobSpec::Trace { cpu, workload, max_rows } => {
@@ -302,6 +311,11 @@ pub enum JobOutput {
         cache_hits: u64,
         /// Artifacts migrated mid-stream by live rebalancing.
         migrations: u64,
+        /// First-touch preparations compiled from scratch.
+        compiled: u64,
+        /// First-touch preparations loaded warm from the persistent
+        /// artifact cache (nonzero only with a `cache_dir`).
+        disk_warm: u64,
     },
     /// Job failed.
     Failed {
@@ -427,15 +441,19 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             rebalance,
             tiers,
             tier_policy,
+            cache_dir,
         } => {
             use super::loadgen::ArrivalConfig;
-            use super::server::{ServeConfig, ShardedServer, SyntheticExecutor};
+            use super::server::{PrepSource, ServeConfig, ShardedServer, SyntheticExecutor};
             let mut cfg = ServeConfig::new(*workers)
                 .with_cache(*cache_entries)
                 .with_placement(*placement)
                 .with_rebalance(*rebalance)
                 .with_admission(*admission)
                 .with_tier_policy(*tier_policy);
+            if let Some(dir) = cache_dir {
+                cfg = cfg.with_cache_dir(dir.clone());
+            }
             if *placement == PlacementPolicy::CacheAware || *rebalance == RebalanceMode::Live {
                 // both the upfront plan and the live divergence check need
                 // per-artifact profiles: the synthetic mix traced against
@@ -479,6 +497,18 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 shed: out.metrics.shed,
                 cache_hits: out.metrics.cache_hits,
                 migrations: out.metrics.migrations.len() as u64,
+                compiled: out
+                    .metrics
+                    .prep
+                    .iter()
+                    .filter(|p| p.source == PrepSource::Compiled)
+                    .count() as u64,
+                disk_warm: out
+                    .metrics
+                    .prep
+                    .iter()
+                    .filter(|p| p.source == PrepSource::DiskWarm)
+                    .count() as u64,
             }
         }
         JobSpec::BenchSweep { cpu, workload, native, quick } => {
@@ -710,8 +740,9 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain/t0/tppin");
+        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain/t0/tppin/cd0");
         let out = run_cpu_job(&spec);
         match out {
             JobOutput::Served { throughput_rps, completed, failed, shed, migrations, .. } => {
@@ -738,8 +769,9 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain/t0/tppin");
+        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain/t0/tppin/cd0");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 16);
@@ -764,8 +796,9 @@ mod tests {
             rebalance: RebalanceMode::Live,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive/t0/tppin");
+        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive/t0/tppin/cd0");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 80, "migrations must not lose or fail requests");
@@ -791,8 +824,9 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain/t0/tppin");
+        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain/t0/tppin/cd0");
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, shed, .. } => {
                 assert_eq!(completed + failed + shed, 32, "one disposition each");

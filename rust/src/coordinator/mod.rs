@@ -62,7 +62,7 @@ pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
 pub use server::{
     AdmissionMode, BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor,
-    Request, Response, ServeConfig, ServeOutcome, Server, ShardedServer, SyntheticExecutor,
-    TierPolicy, WorkerPressure,
+    PrepRecord, PrepSource, Request, Response, ServeConfig, ServeOutcome, Server,
+    ShardedServer, SyntheticExecutor, TierPolicy, WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

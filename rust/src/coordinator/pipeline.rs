@@ -233,6 +233,10 @@ impl Pipeline {
     /// int8/bit-serial cache profiles; `tier_policy` picks which axis
     /// `AdmissionMode::Degrade` shrinks (shape ladder vs precision
     /// lattice — DESIGN.md §Tiers).
+    /// `cache_dir` attaches the persistent compiled-artifact cache to
+    /// every run in the sweep, so later worker counts (and later sweeps
+    /// over the same root) start warm — the restart-cost story of
+    /// DESIGN.md §Artifact cache.
     #[allow(clippy::too_many_arguments)]
     pub fn serve_scaling(
         &mut self,
@@ -244,6 +248,7 @@ impl Pipeline {
         rebalance: RebalanceMode,
         tiers: bool,
         tier_policy: TierPolicy,
+        cache_dir: Option<std::path::PathBuf>,
     ) -> Result<()> {
         let specs: Vec<JobSpec> = worker_counts
             .iter()
@@ -258,6 +263,7 @@ impl Pipeline {
                 rebalance,
                 tiers,
                 tier_policy,
+                cache_dir: cache_dir.clone(),
             })
             .collect();
         let jobs: Vec<Job> = specs
@@ -443,6 +449,7 @@ mod tests {
             RebalanceMode::Drain,
             false,
             TierPolicy::Pinned,
+            None,
         )
         .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
@@ -450,7 +457,7 @@ mod tests {
         for (k, v) in rows {
             assert!(k.contains("/phash"), "{k} must carry the placement policy");
             assert!(k.contains("/rbdrain"), "{k} must carry the rebalance mode");
-            assert!(k.ends_with("/t0/tppin"), "{k} must carry the tier config");
+            assert!(k.ends_with("/t0/tppin/cd0"), "{k} must carry the tier+cache config");
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
@@ -469,6 +476,7 @@ mod tests {
             RebalanceMode::Drain,
             false,
             TierPolicy::Pinned,
+            None,
         )
         .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
@@ -490,6 +498,7 @@ mod tests {
             RebalanceMode::Live,
             false,
             TierPolicy::Pinned,
+            None,
         )
         .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
@@ -512,12 +521,13 @@ mod tests {
             RebalanceMode::Drain,
             true,
             TierPolicy::DownshiftOnPressure,
+            None,
         )
         .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
-        assert!(k.ends_with("/t1/tpdown"), "{k} must carry the tier config");
+        assert!(k.ends_with("/t1/tpdown/cd0"), "{k} must carry the tier config");
         assert_eq!(v.passed, Some(true), "{k}: tiered serving had failures");
     }
 

@@ -84,6 +84,8 @@ impl ResultStore {
                     shed,
                     cache_hits,
                     migrations,
+                    compiled,
+                    disk_warm,
                 } => ResultValue {
                     // p50 end-to-end latency is the headline "seconds" of a
                     // serving run; the rest rides in `detail`.  Sheds are a
@@ -94,7 +96,8 @@ impl ResultStore {
                     passed: Some(*failed == 0),
                     detail: Some(format!(
                         "{throughput_rps:.1} req/s, p99 {:.3} ms, {completed} ok / {failed} \
-                         failed / {shed} shed, {cache_hits} cache hits, {migrations} migrations",
+                         failed / {shed} shed, {cache_hits} cache hits, {migrations} migrations, \
+                         {compiled} compiled / {disk_warm} disk-warm",
                         p99_s * 1e3
                     )),
                 },

@@ -101,6 +101,7 @@
 
 use std::any::Any;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -114,6 +115,7 @@ use crate::operators::bitserial::{self, Packed};
 use crate::operators::gemm::{self, GemmSchedule};
 use crate::operators::workloads::{self, Tier};
 use crate::operators::{qnn, Tensor};
+use crate::runtime::artifact_cache::{digest_hex, ArtifactCache, TOOLCHAIN_TAG};
 use crate::runtime::inputs::literal_checksum;
 use crate::runtime::{Manifest, Registry};
 use crate::telemetry::CacheProfile;
@@ -220,6 +222,47 @@ pub struct Metrics {
     /// unless [`RebalanceMode::Live`] fired or [`ShardedServer::migrate`]
     /// was called).
     pub migrations: Vec<MigrationRecord>,
+    /// Per-artifact preparation log (sharded server only): one row per
+    /// (worker, artifact) first touch, recording how long the artifact
+    /// took to become servable and whether it was compiled from scratch
+    /// or loaded warm from the persistent artifact cache.  This is the
+    /// cold-vs-warm observability surface the CLI summary prints.
+    pub prep: Vec<PrepRecord>,
+}
+
+/// How an artifact became servable on a worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrepSource {
+    /// Compiled/materialized from scratch (a cache miss, or no cache).
+    Compiled,
+    /// Loaded from the persistent artifact cache on disk.
+    DiskWarm,
+}
+
+impl PrepSource {
+    /// Stable lowercase label for logs and CLI summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            PrepSource::Compiled => "compiled",
+            PrepSource::DiskWarm => "disk-warm",
+        }
+    }
+}
+
+/// One artifact becoming servable on one worker: the first-touch
+/// preparation (compile or warm load), timed.  Pre-warmed migration
+/// targets also log a row here — their load happens *before* the quiesce
+/// fence, which is exactly the pause this record makes visible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrepRecord {
+    /// Worker the artifact was prepared on.
+    pub worker: usize,
+    /// Artifact name.
+    pub artifact: String,
+    /// Wall time of the preparation (compile or disk load + install).
+    pub seconds: f64,
+    /// Compiled fresh, or loaded warm from disk.
+    pub source: PrepSource,
 }
 
 /// One completed live migration: an artifact quiesced on its source
@@ -479,6 +522,36 @@ pub trait Executor {
     /// foreign payload (downcast and drop on mismatch); the default drops
     /// it, falling back to a fresh [`Executor::prepare`].
     fn import_state(&mut self, _artifact: &str, _state: Box<dyn Any + Send>) {}
+
+    /// Stable content digest of `artifact`'s compiled form — the key the
+    /// persistent artifact cache stores it under (DESIGN.md §Artifact
+    /// cache).  Must cover everything the compiled bytes depend on (name,
+    /// tier, shape, manifest entry, toolchain tag): a digest change *is*
+    /// the invalidation rule.  The default `None` opts the executor out
+    /// of disk caching entirely.
+    fn artifact_digest(&self, _artifact: &str) -> Option<String> {
+        None
+    }
+
+    /// Serialize `artifact`'s compiled form for the persistent cache —
+    /// called after a fresh [`Executor::prepare`] so the next process can
+    /// [`Executor::load_compiled`] instead of compiling.  The synthetic
+    /// executor persists its materialized (bit-serial: packed) inputs;
+    /// the PJRT executor persists the HLO program text.  `None` means
+    /// nothing to persist (not prepared, or caching unsupported).
+    fn store_compiled(&mut self, _artifact: &str) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Install a compiled form previously produced by
+    /// [`Executor::store_compiled`] (same digest, possibly another
+    /// process).  Returns `Ok(true)` when the artifact is now warm —
+    /// the following [`Executor::prepare`] must be a no-op — and
+    /// `Ok(false)` when the payload was not usable (the caller compiles
+    /// fresh; never an error path for stale bytes).
+    fn load_compiled(&mut self, _artifact: &str, _bytes: &[u8]) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// PJRT-backed executor: serves compiled HLO artifacts via [`Registry`].
@@ -515,6 +588,39 @@ impl Executor for PjrtExecutor {
         }
         Ok(Exec { seconds: out.seconds, payload })
     }
+
+    fn artifact_digest(&self, artifact: &str) -> Option<String> {
+        let spec = self.registry.manifest.by_name(artifact)?;
+        let macs = spec.macs.to_string();
+        let inputs: String = spec
+            .inputs
+            .iter()
+            .map(|i| format!("{:?}:{}:{}", i.shape, i.dtype, i.seed))
+            .collect::<Vec<_>>()
+            .join(",");
+        Some(digest_hex(&[
+            "pjrt",
+            &spec.name,
+            &spec.file,
+            &spec.kind,
+            &macs,
+            &inputs,
+            TOOLCHAIN_TAG,
+        ]))
+    }
+
+    fn store_compiled(&mut self, artifact: &str) -> Option<Vec<u8>> {
+        // The portable compiled form the xla crate gives us is the HLO
+        // program text (no serialized-executable API); a warm load stages
+        // it back through one PJRT compile without touching the manifest
+        // or the artifacts directory.
+        self.registry.hlo_bytes(artifact).ok()
+    }
+
+    fn load_compiled(&mut self, artifact: &str, bytes: &[u8]) -> Result<bool> {
+        self.registry.install_hlo_text(artifact, bytes)?;
+        Ok(true)
+    }
 }
 
 /// Materialized inputs of one synthetic artifact, by precision tier.
@@ -540,6 +646,131 @@ fn padded_unipolar(n: usize, bits: usize, seed: u64) -> Tensor<i32> {
         }
     }
     t
+}
+
+/// Byte-serialize one [`SynState`] for the persistent artifact cache:
+/// a leading tier tag, then the two operands little-endian.  This is the
+/// synthetic analog of compiled-executable bytes — materialization (and
+/// for bit-serial, bit-plane packing) is the prepare-time cost a warm
+/// load skips.
+fn syn_state_to_bytes(state: &SynState) -> Vec<u8> {
+    fn dims(out: &mut Vec<u8>, shape: &[usize]) {
+        out.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+    }
+    let mut out = Vec::new();
+    match state {
+        SynState::F32(a, b) => {
+            out.push(0);
+            for t in [a, b] {
+                dims(&mut out, &t.shape);
+                out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+                for &x in &t.data {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        SynState::Int8(a, b) => {
+            out.push(1);
+            for t in [a, b] {
+                dims(&mut out, &t.shape);
+                out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+                out.extend(t.data.iter().map(|&x| x as u8));
+            }
+        }
+        SynState::BitSerial(a, b) => {
+            out.push(2);
+            for p in [a, b] {
+                for field in [p.bits, p.rows, p.kw, p.k] {
+                    out.extend_from_slice(&(field as u32).to_le_bytes());
+                }
+                out.extend_from_slice(&(p.data.len() as u64).to_le_bytes());
+                for &x in &p.data {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`syn_state_to_bytes`].  `None` on any structural mismatch
+/// — the caller falls back to a fresh materialization, never panics on
+/// foreign bytes.
+fn syn_state_from_bytes(bytes: &[u8]) -> Option<SynState> {
+    struct R<'a> {
+        b: &'a [u8],
+        at: usize,
+    }
+    impl R<'_> {
+        fn take(&mut self, n: usize) -> Option<&[u8]> {
+            let chunk = self.b.get(self.at..self.at + n)?;
+            self.at += n;
+            Some(chunk)
+        }
+        fn u32(&mut self) -> Option<u32> {
+            Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+        }
+        fn u64(&mut self) -> Option<u64> {
+            Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+        }
+        fn shape(&mut self) -> Option<Vec<usize>> {
+            let ndim = self.u32()? as usize;
+            (ndim <= 8).then_some(())?;
+            (0..ndim).map(|_| Some(self.u32()? as usize)).collect()
+        }
+    }
+    let mut r = R { b: bytes, at: 0 };
+    let tag = *r.take(1)?.first()?;
+    let state = match tag {
+        0 => {
+            let mut ts = Vec::with_capacity(2);
+            for _ in 0..2 {
+                let shape = r.shape()?;
+                let len = r.u64()? as usize;
+                (len == shape.iter().product::<usize>()).then_some(())?;
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(f32::from_le_bytes(r.take(4)?.try_into().ok()?));
+                }
+                ts.push(Tensor { shape, data });
+            }
+            let b = ts.pop()?;
+            SynState::F32(ts.pop()?, b)
+        }
+        1 => {
+            let mut ts = Vec::with_capacity(2);
+            for _ in 0..2 {
+                let shape = r.shape()?;
+                let len = r.u64()? as usize;
+                (len == shape.iter().product::<usize>()).then_some(())?;
+                let data = r.take(len)?.iter().map(|&x| x as i8).collect();
+                ts.push(Tensor { shape, data });
+            }
+            let b = ts.pop()?;
+            SynState::Int8(ts.pop()?, b)
+        }
+        2 => {
+            let mut ps = Vec::with_capacity(2);
+            for _ in 0..2 {
+                let (bits, rows, kw, k) =
+                    (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+                let len = r.u64()? as usize;
+                (len == bits * rows * kw).then_some(())?;
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(r.u32()?);
+                }
+                ps.push(Packed { bits, rows, kw, k, data });
+            }
+            let b = ps.pop()?;
+            SynState::BitSerial(ps.pop()?, b)
+        }
+        _ => return None,
+    };
+    (r.at == bytes.len()).then_some(state)
 }
 
 /// Artifact-free executor: serves the synthetic workloads named by
@@ -632,6 +863,31 @@ impl Executor for SyntheticExecutor {
     fn import_state(&mut self, artifact: &str, state: Box<dyn Any + Send>) {
         if let Ok(io) = state.downcast::<SynState>() {
             self.inputs.insert(artifact.to_string(), *io);
+        }
+    }
+
+    fn artifact_digest(&self, artifact: &str) -> Option<String> {
+        let (tier, n) = workloads::synthetic_tier(artifact)?;
+        let n_s = n.to_string();
+        let bits = workloads::SERVING_BITSERIAL_BITS.to_string();
+        let sched = format!(
+            "t{}x{}x{}u{}",
+            self.schedule.bm, self.schedule.bn, self.schedule.bk, self.schedule.unroll
+        );
+        Some(digest_hex(&["syn", artifact, tier.name(), &n_s, &bits, &sched, TOOLCHAIN_TAG]))
+    }
+
+    fn store_compiled(&mut self, artifact: &str) -> Option<Vec<u8>> {
+        self.inputs.get(artifact).map(syn_state_to_bytes)
+    }
+
+    fn load_compiled(&mut self, artifact: &str, bytes: &[u8]) -> Result<bool> {
+        match syn_state_from_bytes(bytes) {
+            Some(state) => {
+                self.inputs.insert(artifact.to_string(), state);
+                Ok(true)
+            }
+            None => Ok(false),
         }
     }
 }
@@ -821,6 +1077,14 @@ pub struct ServeConfig {
     /// lattice fp32 → int8 → bit-serial at the same N.  Ignored under the
     /// other admission modes.
     pub tier_policy: TierPolicy,
+    /// Root of the persistent compiled-artifact cache
+    /// ([`crate::runtime::ArtifactCache`]).  When set, each worker opens
+    /// the store on startup: first-touch preparation loads warm artifacts
+    /// from disk instead of compiling, fresh compiles are written back,
+    /// and live-migration targets pre-warm from disk before the quiesce
+    /// fence.  `None` (the default) preserves the compile-always
+    /// behaviour exactly.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl ServeConfig {
@@ -843,6 +1107,7 @@ impl ServeConfig {
             admission: AdmissionMode::None,
             admission_limit: 64,
             tier_policy: TierPolicy::Pinned,
+            cache_dir: None,
         }
     }
 
@@ -884,6 +1149,13 @@ impl ServeConfig {
     /// Enable the per-worker LRU response cache with `entries` entries.
     pub fn with_cache(mut self, entries: usize) -> Self {
         self.cache_entries = entries;
+        self
+    }
+
+    /// Attach the persistent compiled-artifact cache rooted at `dir`
+    /// (see [`ServeConfig::cache_dir`]).
+    pub fn with_cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
         self
     }
 
@@ -946,6 +1218,12 @@ enum WorkerMsg {
     },
     /// Install state another worker exported for `state.artifact`.
     Adopt { state: ArtifactState },
+    /// Migration pre-warm: load `artifact` from the persistent artifact
+    /// cache *now*, ahead of the `Adopt` that will follow, so the target
+    /// is compiled before the source even begins to quiesce.  Strictly
+    /// best-effort — a miss (or no cache) is a no-op, and the `Adopt`
+    /// still carries the authoritative state.
+    Prewarm { artifact: String },
 }
 
 /// The transferable per-artifact state one worker hands another during a
@@ -997,7 +1275,7 @@ pub struct ShardedServer {
     check_every: u64,
     senders: Vec<mpsc::Sender<WorkerMsg>>,
     resp_rx: mpsc::Receiver<Response>,
-    handles: Vec<thread::JoinHandle<Vec<ShardMetrics>>>,
+    handles: Vec<thread::JoinHandle<(Vec<ShardMetrics>, Vec<PrepRecord>)>>,
     admitted: u64,
     rejected: Vec<Response>,
     admission: AdmissionMode,
@@ -1073,9 +1351,12 @@ impl ShardedServer {
             let factory = factory.clone();
             let batch = config.batch;
             let cache_entries = config.cache_entries;
+            let cache_dir = config.cache_dir.clone();
             let handle = thread::Builder::new()
                 .name(format!("serve-worker-{w}"))
-                .spawn(move || worker_loop(w, rx, resp_tx, (*factory)(w), batch, cache_entries))
+                .spawn(move || {
+                    worker_loop(w, rx, resp_tx, (*factory)(w), batch, cache_entries, cache_dir)
+                })
                 .expect("spawn serve worker");
             handles.push(handle);
         }
@@ -1422,6 +1703,15 @@ impl ShardedServer {
             return rec;
         };
         debug_assert_ne!(from, to, "caller filters same-worker moves");
+        // 0. pre-warm: tell the target to load the compiled artifact from
+        //    the persistent cache *before* the source quiesces, so the
+        //    adopt step installs state into an already-compiled executor
+        //    and the migration pause excludes the compile.  Best-effort:
+        //    without a cache (or on a miss) this is a no-op and the
+        //    protocol behaves exactly as before.
+        self.senders[to]
+            .send(WorkerMsg::Prewarm { artifact: artifact.to_string() })
+            .expect("serve worker alive");
         // 1. fence + quiesce: the source serves everything already queued
         //    for the artifact (channel FIFO puts the fence after every
         //    pre-swap request), then exports the transferable state
@@ -1548,13 +1838,16 @@ impl ShardedServer {
         // hash placement a shard has exactly one owner, so the keys — and
         // the rollup — are identical to the shard-only version.
         let mut per_shard: BTreeMap<(usize, usize), ShardMetrics> = BTreeMap::new();
+        let mut prep: Vec<PrepRecord> = Vec::new();
         for h in handles {
-            for sm in h.join().expect("serve worker panicked") {
+            let (shard_rows, prep_rows) = h.join().expect("serve worker panicked");
+            for sm in shard_rows {
                 per_shard
                     .entry((sm.shard, sm.worker))
                     .and_modify(|acc| acc.merge(&sm))
                     .or_insert(sm);
             }
+            prep.extend(prep_rows);
         }
         let wall_seconds = started.elapsed().as_secs_f64();
 
@@ -1592,6 +1885,7 @@ impl ShardedServer {
         metrics.batches = per_shard.values().map(|s| s.batches).sum();
         metrics.per_shard = per_shard.into_values().collect();
         metrics.migrations = migrations;
+        metrics.prep = prep;
         if let Some(profiles) = &profiles {
             metrics.worker_pressure =
                 pressure_rows(&worker_artifacts, profiles, active_plan.as_deref());
@@ -1667,6 +1961,16 @@ struct WorkerState<E> {
     executor: Result<E>,
     batch_policy: BatchPolicy,
     resp_tx: mpsc::Sender<Response>,
+    /// Persistent compiled-artifact store, when `ServeConfig::cache_dir`
+    /// was set and the root opened cleanly (an open failure degrades to
+    /// compile-always rather than failing the worker).
+    artifact_cache: Option<ArtifactCache>,
+    /// Artifacts already warmed (loaded or compiled+stored) on this
+    /// worker — first-touch bookkeeping for the prep log.
+    warmed: BTreeSet<String>,
+    /// First-touch preparation log, returned to `finish` with the shard
+    /// metrics.
+    prep: Vec<PrepRecord>,
 }
 
 /// One worker: drains its message channel into per-shard FIFO queues and
@@ -1680,7 +1984,8 @@ fn worker_loop<E: Executor>(
     executor: Result<E>,
     batch_policy: BatchPolicy,
     cache_entries: usize,
-) -> Vec<ShardMetrics> {
+    cache_dir: Option<PathBuf>,
+) -> (Vec<ShardMetrics>, Vec<PrepRecord>) {
     let mut st = WorkerState {
         worker,
         queues: BTreeMap::new(),
@@ -1689,6 +1994,9 @@ fn worker_loop<E: Executor>(
         executor,
         batch_policy,
         resp_tx,
+        artifact_cache: cache_dir.and_then(|d| ArtifactCache::open(d).ok()),
+        warmed: BTreeSet::new(),
+        prep: Vec::new(),
     };
     let mut open = true;
 
@@ -1741,7 +2049,7 @@ fn worker_loop<E: Executor>(
         }
         serve_batch(&mut st, batch);
     }
-    st.metrics.into_values().collect()
+    (st.metrics.into_values().collect(), st.prep)
 }
 
 /// Dispatch one admission-channel message.
@@ -1795,7 +2103,91 @@ fn handle_msg<E: Executor>(st: &mut WorkerState<E>, msg: WorkerMsg) {
                 st.cache.put(artifact, payload);
             }
         }
+        WorkerMsg::Prewarm { artifact } => prewarm_from_disk(st, &artifact),
     }
+}
+
+/// Migration pre-warm: load `artifact` from the persistent cache and
+/// install it, *without* ever compiling.  A miss — no cache attached, no
+/// digest, not on disk, or the executor declined the bytes — is a no-op:
+/// the `Adopt` that follows (and the ordinary first-request path) still
+/// make the artifact servable; pre-warming only moves the compile out of
+/// the migration pause when the cache can oblige.
+fn prewarm_from_disk<E: Executor>(st: &mut WorkerState<E>, artifact: &str) {
+    if st.warmed.contains(artifact) {
+        return;
+    }
+    let (Ok(ex), Some(cache)) = (&mut st.executor, &mut st.artifact_cache) else {
+        return;
+    };
+    let Some(digest) = ex.artifact_digest(artifact) else {
+        return;
+    };
+    let t0 = Instant::now();
+    if let Some(bytes) = cache.load(&digest) {
+        if matches!(ex.load_compiled(artifact, &bytes), Ok(true)) {
+            st.warmed.insert(artifact.to_string());
+            st.prep.push(PrepRecord {
+                worker: st.worker,
+                artifact: artifact.to_string(),
+                seconds: t0.elapsed().as_secs_f64(),
+                source: PrepSource::DiskWarm,
+            });
+        }
+    }
+}
+
+/// First-touch preparation: make `artifact` servable on this worker,
+/// preferring a warm load from the persistent cache over a fresh
+/// compile, and write fresh compiles back to disk for the next start.
+/// Exactly one [`PrepRecord`] is logged per (worker, artifact) first
+/// touch; subsequent touches are plain `prepare` calls (idempotent and
+/// unlogged, matching the pre-cache behaviour).
+fn warm_artifact<E: Executor>(st: &mut WorkerState<E>, artifact: &str) -> Result<()> {
+    let ex = match &mut st.executor {
+        Ok(ex) => ex,
+        Err(e) => return Err(anyhow!("executor unavailable: {e:#}")),
+    };
+    if st.warmed.contains(artifact) {
+        return ex.prepare(artifact);
+    }
+    let digest = ex.artifact_digest(artifact);
+    let t0 = Instant::now();
+    // warm path: cached bytes the executor accepts make prepare a no-op
+    if let (Some(digest), Some(cache)) = (&digest, &mut st.artifact_cache) {
+        if let Some(bytes) = cache.load(digest) {
+            if matches!(ex.load_compiled(artifact, &bytes), Ok(true)) {
+                ex.prepare(artifact)?;
+                st.warmed.insert(artifact.to_string());
+                st.prep.push(PrepRecord {
+                    worker: st.worker,
+                    artifact: artifact.to_string(),
+                    seconds: t0.elapsed().as_secs_f64(),
+                    source: PrepSource::DiskWarm,
+                });
+                return Ok(());
+            }
+        }
+    }
+    // cold path: compile, then persist the compiled form for next time
+    ex.prepare(artifact)?;
+    let seconds = t0.elapsed().as_secs_f64();
+    if let (Some(digest), Some(cache)) = (&digest, &mut st.artifact_cache) {
+        if let Some(bytes) = ex.store_compiled(artifact) {
+            let tier = workloads::synthetic_tier(artifact)
+                .map(|(t, _)| t.name())
+                .unwrap_or("pjrt");
+            let _ = cache.store(digest, artifact, tier, &bytes);
+        }
+    }
+    st.warmed.insert(artifact.to_string());
+    st.prep.push(PrepRecord {
+        worker: st.worker,
+        artifact: artifact.to_string(),
+        seconds,
+        source: PrepSource::Compiled,
+    });
+    Ok(())
 }
 
 /// Serve one same-artifact batch: cache lookups, one shared warmup, then
@@ -1817,10 +2209,7 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
     let prep = if st.cache.contains(&artifact) {
         Ok(())
     } else {
-        match &mut st.executor {
-            Ok(ex) => ex.prepare(&artifact),
-            Err(e) => Err(anyhow!("executor unavailable: {e:#}")),
-        }
+        warm_artifact(st, &artifact)
     };
 
     for env in batch {
@@ -2049,6 +2438,136 @@ mod tests {
         srv.submit(Request { id: 0, artifact: workloads::synthetic_artifact(32) });
         let out = srv.finish();
         assert!(out.metrics.worker_pressure.is_empty());
+    }
+
+    // -- persistent artifact cache wiring (ISSUE 8 tentpole; the
+    //    real-binary round trip lives in rust/tests/serve_cache.rs) --
+
+    fn serve_cache_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cachebound_serve_cache_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn syn_state_codec_round_trips_every_tier() {
+        let mut cold = SyntheticExecutor::new();
+        let mut warm = SyntheticExecutor::new();
+        for artifact in [
+            workloads::tier_artifact(Tier::F32, 32),
+            workloads::tier_artifact(Tier::Int8, 64),
+            workloads::tier_artifact(Tier::BitSerial, 96),
+        ] {
+            cold.prepare(&artifact).unwrap();
+            let bytes = cold.store_compiled(&artifact).unwrap();
+            assert!(
+                warm.load_compiled(&artifact, &bytes).unwrap(),
+                "{artifact}: codec bytes accepted"
+            );
+            let a = cold.execute(&artifact).unwrap().payload;
+            let b = warm.execute(&artifact).unwrap().payload;
+            assert_eq!(a.to_bits(), b.to_bits(), "{artifact}: warm payload bit-identical");
+        }
+        // foreign bytes are declined (fall back to compile), never a panic
+        assert!(!warm.load_compiled("syn_gemm_n32", b"not a payload").unwrap());
+        // digests separate tiers sharing an N and are schedule-sensitive
+        let d_f32 = warm.artifact_digest("syn_gemm_n64").unwrap();
+        let d_i8 = warm.artifact_digest("syn_gemm_i8_n64").unwrap();
+        assert_ne!(d_f32, d_i8);
+        assert!(warm.artifact_digest("not_synthetic").is_none());
+    }
+
+    #[test]
+    fn warm_server_start_performs_zero_compiles() {
+        let root = serve_cache_root("warm_start");
+        let run = || {
+            let mut srv = ShardedServer::start(
+                ServeConfig::new(2).with_cache_dir(root.clone()),
+                |_w| Ok(SyntheticExecutor::new()),
+            );
+            let names: Vec<String> = workloads::serving_mix_tiered()
+                .iter()
+                .map(|m| m.artifact.clone())
+                .collect();
+            for (id, artifact) in names.iter().cycle().take(2 * names.len()).enumerate() {
+                srv.submit(Request { id: id as u64, artifact: artifact.clone() });
+            }
+            srv.finish()
+        };
+        let cold = run();
+        assert!(cold.responses.iter().all(|r| r.ok), "{:?}", cold.responses);
+        assert!(!cold.metrics.prep.is_empty());
+        assert!(
+            cold.metrics.prep.iter().all(|p| p.source == PrepSource::Compiled),
+            "first start compiles everything: {:?}",
+            cold.metrics.prep
+        );
+        let warm = run();
+        assert!(warm.responses.iter().all(|r| r.ok), "{:?}", warm.responses);
+        assert_eq!(warm.metrics.prep.len(), cold.metrics.prep.len());
+        assert_eq!(
+            warm.metrics.prep.iter().filter(|p| p.source == PrepSource::Compiled).count(),
+            0,
+            "second start loads every artifact from disk: {:?}",
+            warm.metrics.prep
+        );
+        // warm responses are bit-identical to cold ones, per artifact
+        let payload_of = |out: &ServeOutcome| -> BTreeMap<String, u64> {
+            out.responses
+                .iter()
+                .map(|r| (r.artifact.clone(), r.payload.unwrap().to_bits()))
+                .collect()
+        };
+        assert_eq!(payload_of(&cold), payload_of(&warm));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn migration_prewarms_target_from_disk() {
+        let root = serve_cache_root("prewarm");
+        let mut srv = ShardedServer::start(
+            ServeConfig::new(2).with_cache_dir(root.clone()),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let artifact = workloads::synthetic_artifact(48);
+        for id in 0..4u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        // wait for the responses: once they are in, the source's
+        // first-touch compile *and* its disk store have happened
+        let mut got = 0;
+        while got < 4 {
+            got += srv.poll_responses().len();
+            thread::sleep(Duration::from_millis(1));
+        }
+        let from = srv.route_of(&artifact).expect("artifact routed");
+        let to = (from + 1) % 2;
+        let rec = srv.migrate(&artifact, to).expect("migration ran");
+        assert_eq!((rec.from_worker, rec.to_worker), (from, to));
+        assert!(rec.state_moved, "adopt still ships the authoritative state");
+        for id in 4..8u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+        }
+        let out = srv.finish();
+        assert_eq!(out.responses.len(), 8);
+        assert!(out.responses.iter().all(|r| r.ok), "{:?}", out.responses);
+        // exactly one payload value across the move (cache purity)
+        let bits: BTreeSet<u64> =
+            out.responses.iter().map(|r| r.payload.unwrap().to_bits()).collect();
+        assert_eq!(bits.len(), 1, "payloads bit-identical across the migration");
+        // the target pre-warmed from disk: a DiskWarm prep row on `to`,
+        // logged by the Prewarm control message that precedes the fence
+        assert!(
+            out.metrics
+                .prep
+                .iter()
+                .any(|p| p.worker == to
+                    && p.artifact == artifact
+                    && p.source == PrepSource::DiskWarm),
+            "no pre-warm row on the target: {:?}",
+            out.metrics.prep
+        );
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     /// The shared (cached) serving-mix profiles — the replays dominate

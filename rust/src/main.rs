@@ -16,6 +16,7 @@
 //! cachebound figmrc [--profile P] [--n N] miss-ratio-curve figure (CSV)
 //! cachebound serve --workers N [--placement cache-aware] [--arrival-rate RPS --admission shed]
 //!                                         sharded multi-worker serving (open-loop + admission)
+//! cachebound cache warmup|doctor|prune [--cache-dir DIR]   persistent compiled-artifact cache
 //! cachebound tune --n N [--profile P] [--tuner gbt|random] [--trials T]
 //! cachebound report-all [--out DIR]       everything: tables, figures, CSVs
 //! ```
@@ -28,15 +29,15 @@ use anyhow::{anyhow, bail, Result};
 use cachebound::bench::{self, BenchReport};
 use cachebound::coordinator::pipeline::{Pipeline, PipelineConfig};
 use cachebound::coordinator::server::{
-    AdmissionMode, BatchPolicy, PjrtExecutor, ServeConfig, ShardedServer, SyntheticExecutor,
-    TierPolicy,
+    AdmissionMode, BatchPolicy, Executor, PjrtExecutor, PrepSource, ServeConfig, ShardedServer,
+    SyntheticExecutor, TierPolicy,
 };
 use cachebound::coordinator::{ArrivalConfig, PlacementPolicy, RebalanceMode};
 use cachebound::hw::{builtin_profiles, profile_by_name};
 use cachebound::membench;
 use cachebound::operators::workloads::{self, BenchWorkload};
 use cachebound::report;
-use cachebound::runtime::{Manifest, Registry};
+use cachebound::runtime::{ArtifactCache, Manifest, Registry};
 use cachebound::telemetry::{self, TraceBudget};
 use cachebound::tuner;
 use cachebound::util::table::{fmt_gflops, fmt_mibs, fmt_time, Align, Table};
@@ -146,6 +147,7 @@ fn run(args: &[String]) -> Result<()> {
         "trace" => cmd_trace(&opts),
         "figmrc" => cmd_figmrc(&opts),
         "serve" => cmd_serve(&opts),
+        "cache" => cmd_cache(&args[1..]),
         "tune" => cmd_tune(&opts),
         "report-all" => cmd_report_all(&opts),
         "help" | "--help" | "-h" => {
@@ -191,7 +193,7 @@ commands:
   figmrc [--profile P] [--n N] miss-ratio-curve figure data (CSV) for a
                               tuned GEMM, L1/L2 capacities marked
   serve [--workers N] [--cache-entries K] [--requests R] [--seed S]
-        [--max-batch B] [--shards M] [--synthetic]
+        [--max-batch B] [--shards M] [--synthetic] [--cache-dir DIR]
         [--placement hash|cache-aware] [--rebalance off|drain|live]
         [--arrival-rate RPS] [--slo-ms MS] [--admission none|shed|degrade]
         [--admission-limit L] [--tiers] [--tier-policy pinned|downshift]
@@ -221,7 +223,27 @@ commands:
                               quantized working sets; --tier-policy downshift
                               makes degrade step down the precision lattice
                               (fp32 -> int8 -> bit-serial) at the same shape
-                              instead of shrinking N)
+                              instead of shrinking N;
+                              --cache-dir attaches the persistent compiled-
+                              artifact cache: workers load compiled artifacts
+                              from disk instead of compiling, store fresh
+                              compiles back, and the summary reports the
+                              per-artifact compile/load times)
+  cache warmup [--synthetic] [--tiers] [--artifacts DIR] [--cache-dir DIR]
+  cache doctor [--cache-dir DIR]
+  cache prune --max-bytes B [--dry-run] [--cache-dir DIR]
+                              persistent compiled-artifact cache (digest-keyed
+                              disk store under --cache-dir, default
+                              .cachebound-cache): warmup pre-compiles the
+                              serving mix — AOT artifacts when a manifest is
+                              present, the synthetic native-GEMM mix otherwise
+                              (--tiers adds the int8/bit-serial twins) — so
+                              the next `serve --cache-dir` start performs zero
+                              compiles; doctor prints resident entries/bytes,
+                              lifetime hit/miss counters, and per-tier usage;
+                              prune evicts least-recently-used entries until
+                              resident bytes fit --max-bytes (--dry-run lists
+                              the victims without deleting anything)
   tune --n N [--profile P] [--tuner gbt|random] [--trials T]
   report-all [--out DIR]      regenerate every table & figure, write CSVs
 
@@ -715,6 +737,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     cfg.admission = admission;
     cfg.admission_limit = opts.usize("admission-limit", cfg.admission_limit)?;
     cfg.tier_policy = tier_policy;
+    if let Some(dir) = opts.get("cache-dir") {
+        cfg = cfg.with_cache_dir(dir);
+    }
 
     // Fall back to the synthetic mix only when artifacts are genuinely
     // absent; a present-but-broken manifest is a hard error, not a silent
@@ -863,6 +888,26 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             );
         }
     }
+    // The cold-vs-warm story in one place: every first-touch artifact prep,
+    // with whether it was compiled from scratch or loaded from the
+    // persistent artifact cache, and what each cost.
+    if !m.prep.is_empty() {
+        for p in &m.prep {
+            println!(
+                "prep: worker {} {} {} in {}",
+                p.worker,
+                if p.source == PrepSource::Compiled { "compiled" } else { "disk-warmed" },
+                p.artifact,
+                fmt_time(p.seconds),
+            );
+        }
+        let compiled = m.prep.iter().filter(|p| p.source == PrepSource::Compiled).count();
+        println!(
+            "artifact prep: compiled {} artifact(s), loaded {} from cache",
+            compiled,
+            m.prep.len() - compiled,
+        );
+    }
 
     let mut table = Table::new(
         "Per-shard serving metrics",
@@ -970,6 +1015,148 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         }
         bail!("{} requests failed", m.failed);
     }
+    Ok(())
+}
+
+/// `cachebound cache warmup|doctor|prune` — operate the persistent
+/// compiled-artifact cache (DESIGN.md §Artifact cache) outside a serve run.
+fn cmd_cache(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str).unwrap_or("doctor");
+    let opts = Opts::parse(&args[1.min(args.len())..]);
+    let root = opts.get("cache-dir").unwrap_or(".cachebound-cache").to_string();
+    let mut cache = ArtifactCache::open(&root)?;
+    match sub {
+        "warmup" => cmd_cache_warmup(&opts, &mut cache),
+        "doctor" => cmd_cache_doctor(&cache),
+        "prune" => cmd_cache_prune(&opts, &mut cache),
+        other => bail!("unknown cache subcommand '{other}' — try warmup|doctor|prune"),
+    }
+}
+
+/// Pre-compile the serving mix into the cache so the next `serve
+/// --cache-dir` start (or a live-migration pre-warm) performs zero
+/// compiles.  Artifact source resolution mirrors `serve`: AOT artifacts
+/// when a manifest is present, the synthetic native-GEMM mix otherwise.
+fn cmd_cache_warmup(opts: &Opts, cache: &mut ArtifactCache) -> Result<()> {
+    let manifest = if opts.has("synthetic") {
+        None
+    } else {
+        let dir = artifacts_dir(opts);
+        if std::path::Path::new(&dir).join("manifest.json").exists() {
+            Some(Arc::new(Manifest::load(&dir)?))
+        } else {
+            println!("note: no {dir}/manifest.json — warming the synthetic native-GEMM mix");
+            None
+        }
+    };
+    let (mut executor, names, mode): (Box<dyn Executor>, Vec<String>, &str) = match manifest {
+        Some(m) => {
+            let names: Vec<String> = m.artifacts.iter().map(|a| a.name.clone()).collect();
+            if names.is_empty() {
+                bail!("manifest has no artifacts — run `make artifacts`");
+            }
+            (Box::new(PjrtExecutor::with_manifest(m)?), names, "pjrt artifacts")
+        }
+        None => {
+            let mix = if opts.has("tiers") {
+                workloads::serving_mix_tiered()
+            } else {
+                workloads::serving_mix()
+            };
+            let names = mix.into_iter().map(|it| it.artifact).collect();
+            (Box::new(SyntheticExecutor::new()), names, "synthetic native-GEMM mix")
+        }
+    };
+    let (mut stored, mut warm, mut skipped) = (0usize, 0usize, 0usize);
+    for name in &names {
+        let Some(digest) = executor.artifact_digest(name) else {
+            println!("  {name}: no digest — not cacheable, skipped");
+            skipped += 1;
+            continue;
+        };
+        if cache.contains(&digest) {
+            println!("  {name}: already warm ({digest})");
+            warm += 1;
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        executor.prepare(name)?;
+        let Some(bytes) = executor.store_compiled(name) else {
+            println!("  {name}: compiled but exports no payload — skipped");
+            skipped += 1;
+            continue;
+        };
+        let tier = workloads::synthetic_tier(name).map(|(t, _)| t.name()).unwrap_or("pjrt");
+        cache.store(&digest, name, tier, &bytes)?;
+        println!(
+            "  {name}: compiled + stored {} bytes in {} ({digest})",
+            bytes.len(),
+            fmt_time(t0.elapsed().as_secs_f64()),
+        );
+        stored += 1;
+    }
+    println!(
+        "warmup ({mode}): {stored} stored, {warm} already warm, {skipped} skipped — \
+         {} entries / {} bytes at {}",
+        cache.len(),
+        cache.total_bytes(),
+        cache.root().display(),
+    );
+    Ok(())
+}
+
+/// Print the cache health report: residency, lifetime counters, per-tier
+/// usage.  Read-only — doctor never mutates the store.
+fn cmd_cache_doctor(cache: &ArtifactCache) -> Result<()> {
+    let d = cache.doctor();
+    println!(
+        "cache {}: {} entries, {} bytes resident, {} quarantined",
+        d.root.display(),
+        d.entries,
+        d.total_bytes,
+        d.quarantined,
+    );
+    println!(
+        "lifetime: {} hits / {} misses / {} stores / {} corrupt — \
+         {} bytes read / {} bytes written",
+        d.stats.hits,
+        d.stats.misses,
+        d.stats.stores,
+        d.stats.corrupt,
+        d.stats.bytes_read,
+        d.stats.bytes_written,
+    );
+    if !d.per_tier.is_empty() {
+        let mut t = Table::new("Cache usage by precision tier", &["tier", "entries", "bytes"])
+            .align(&[Align::Left, Align::Right, Align::Right]);
+        for (tier, u) in &d.per_tier {
+            t.row(vec![tier.clone(), u.entries.to_string(), u.bytes.to_string()]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    Ok(())
+}
+
+/// Evict least-recently-used entries until resident bytes fit the budget.
+fn cmd_cache_prune(opts: &Opts, cache: &mut ArtifactCache) -> Result<()> {
+    let max_bytes: u64 = match opts.get("max-bytes") {
+        Some(v) => v.parse()?,
+        None => bail!("cache prune needs --max-bytes BYTES (add --dry-run to preview)"),
+    };
+    let r = cache.prune(max_bytes, opts.has("dry-run"));
+    for (digest, artifact, bytes) in &r.evicted {
+        println!(
+            "  {} {artifact}: {bytes} bytes ({digest})",
+            if r.dry_run { "would evict" } else { "evicted" },
+        );
+    }
+    println!(
+        "prune to {max_bytes} bytes{}: {} -> {} resident bytes, {} victim(s)",
+        if r.dry_run { " (dry run)" } else { "" },
+        r.bytes_before,
+        r.bytes_after,
+        r.evicted.len(),
+    );
     Ok(())
 }
 

@@ -1,0 +1,654 @@
+//! Persistent compiled-artifact cache: a digest-keyed disk store.
+//!
+//! Regenerating compiled artifacts is the expensive part of deployment —
+//! the paper's tuned schedules exist *because* compilation per
+//! shape/schedule is costly, and the `Tier` lattice multiplies the
+//! artifact space further.  This module makes that work durable: an
+//! executor's compiled form (materialized synthetic inputs, or the HLO
+//! program text behind a PJRT executable) is stored on disk under a
+//! stable content digest, so server restarts, `cache warmup` runs and
+//! live-migration targets *load* instead of compiling.
+//!
+//! Design (exercised by the `cachebound cache warmup|doctor|prune` CLI
+//! and the serving stack via `ServeConfig::cache_dir`):
+//!
+//! * **digest keys** — [`digest_hex`] hashes the artifact's identity
+//!   tuple (name, tier, shape/manifest descriptor, toolchain/CPU tag)
+//!   with FNV-1a; any change to the inputs produces a new key, which *is*
+//!   the invalidation rule.
+//! * **self-verifying payloads** — each object file carries a 16-hex-char
+//!   FNV-1a digest of its body as a header; [`ArtifactCache::load`]
+//!   re-verifies on every read, and a mismatch quarantines the file and
+//!   reports a miss instead of serving corrupt bytes.
+//! * **atomic persistence** — objects and the index are written to a
+//!   temp file and `rename`d into place, so a crashed writer can leave a
+//!   stale temp file but never a torn object.
+//! * **deterministic prune** — [`ArtifactCache::prune`] evicts by
+//!   (logical last-use clock, digest) ascending until the byte budget
+//!   holds; a logical clock (not wall time) keeps the order reproducible.
+//!
+//! Several workers may share one cache root: object files are
+//! digest-named and self-verifying, so concurrent stores of the same
+//! content are idempotent; the index is advisory metadata reconciled
+//! against the objects directory on open (last writer wins).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, arr, num, obj, s, Value};
+
+/// Tag mixed into every digest so payloads from a different build of this
+/// crate never collide with the current one (the toolchain half of the
+/// invalidation rule; the CPU profile half is the caller's job).
+pub const TOOLCHAIN_TAG: &str = concat!("cachebound-", env!("CARGO_PKG_VERSION"));
+
+/// 64-bit FNV-1a over `bytes` — tiny, dependency-free, and stable across
+/// platforms; collision resistance at cache scale (tens of artifacts) is
+/// ample, and payloads are re-verified on load anyway.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable content digest over an identity tuple: the parts are joined
+/// with an unambiguous separator and FNV-hashed to 16 lowercase hex
+/// chars.  Digests are strings end to end (JSON numbers are f64 and
+/// cannot carry a full u64).
+pub fn digest_hex(parts: &[&str]) -> String {
+    let joined = parts.join("\u{1f}");
+    format!("{:016x}", fnv1a64(joined.as_bytes()))
+}
+
+/// Hit/miss/byte accounting, cumulative across sessions (persisted in the
+/// index so `cache doctor` reports lifetime counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Loads that returned a verified payload.
+    pub hits: u64,
+    /// Loads that found nothing (corrupt entries count here too).
+    pub misses: u64,
+    /// Payloads written.
+    pub stores: u64,
+    /// Payloads that failed digest re-verification and were quarantined.
+    pub corrupt: u64,
+    /// Payload bytes returned by hits.
+    pub bytes_read: u64,
+    /// Payload bytes written by stores.
+    pub bytes_written: u64,
+}
+
+/// One resident cache entry (index metadata; the payload lives in
+/// `objects/<digest>.bin`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheEntry {
+    /// Content digest — the key and the object file stem.
+    pub digest: String,
+    /// Artifact the payload belongs to (display/debug metadata).
+    pub artifact: String,
+    /// Precision-tier label ("f32" | "int8" | "bitserial" | "pjrt" | "?").
+    pub tier: String,
+    /// Payload body bytes (header excluded).
+    pub bytes: u64,
+    /// Logical last-use stamp (monotone per cache; drives LRU prune).
+    pub last_used: u64,
+}
+
+/// What [`ArtifactCache::prune`] did (or would do, under `--dry-run`).
+#[derive(Clone, Debug, Default)]
+pub struct PruneReport {
+    /// Resident payload bytes before pruning.
+    pub bytes_before: u64,
+    /// Resident payload bytes after (equals `bytes_before` on a dry run
+    /// that found victims — the report lists them, the disk keeps them).
+    pub bytes_after: u64,
+    /// `(digest, artifact, bytes)` of each victim, in eviction order.
+    pub evicted: Vec<(String, String, u64)>,
+    /// True when nothing was deleted (dry run).
+    pub dry_run: bool,
+}
+
+/// Per-tier usage row of a [`DoctorReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierUsage {
+    /// Entries of this tier.
+    pub entries: u64,
+    /// Payload bytes of this tier.
+    pub bytes: u64,
+}
+
+/// Everything `cachebound cache doctor` prints.
+#[derive(Clone, Debug)]
+pub struct DoctorReport {
+    /// Cache root directory.
+    pub root: PathBuf,
+    /// Resident entries.
+    pub entries: u64,
+    /// Resident payload bytes.
+    pub total_bytes: u64,
+    /// Quarantined object files (failed digest re-verification).
+    pub quarantined: u64,
+    /// Lifetime hit/miss/byte counters.
+    pub stats: CacheStats,
+    /// Usage by precision-tier label.
+    pub per_tier: BTreeMap<String, TierUsage>,
+}
+
+/// The disk-backed, digest-keyed artifact cache (module docs).
+#[derive(Debug)]
+pub struct ArtifactCache {
+    root: PathBuf,
+    index: BTreeMap<String, CacheEntry>,
+    clock: u64,
+    stats: CacheStats,
+}
+
+/// Payload header: 16 ASCII hex chars of the body's FNV-1a digest.
+const HEADER_LEN: usize = 16;
+
+impl ArtifactCache {
+    /// Open (creating if needed) the cache rooted at `root`, loading the
+    /// persisted index and reconciling it against the objects directory:
+    /// indexed entries whose object vanished are dropped; unindexed
+    /// objects are adopted with placeholder metadata (they stay loadable
+    /// — payloads are self-verifying).
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactCache> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("creating cache root {}", root.display()))?;
+        fs::create_dir_all(root.join("quarantine"))?;
+        let mut cache = ArtifactCache {
+            root,
+            index: BTreeMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        };
+        cache.load_index();
+        cache.reconcile()?;
+        Ok(cache)
+    }
+
+    /// Cache root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no entry is resident.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Resident payload bytes (headers excluded).
+    pub fn total_bytes(&self) -> u64 {
+        self.index.values().map(|e| e.bytes).sum()
+    }
+
+    /// Is a payload resident under `digest`?  (No recency touch, no IO.)
+    pub fn contains(&self, digest: &str) -> bool {
+        self.index.contains_key(digest)
+    }
+
+    /// Lifetime hit/miss/byte counters.
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn object_path(&self, digest: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{digest}.bin"))
+    }
+
+    /// Load the payload stored under `digest`, re-verifying its content
+    /// hash.  A missing entry is a miss; a corrupt one is quarantined
+    /// (moved to `quarantine/`, dropped from the index) and reported as a
+    /// miss — the caller compiles fresh and may re-store.
+    pub fn load(&mut self, digest: &str) -> Option<Vec<u8>> {
+        if !self.index.contains_key(digest) && !self.adopt_from_disk(digest) {
+            self.stats.misses += 1;
+            return None;
+        }
+        let path = self.object_path(digest);
+        let raw = match fs::read(&path) {
+            Ok(raw) if raw.len() >= HEADER_LEN => raw,
+            _ => {
+                // vanished or truncated below even a header: quarantine
+                // whatever is left and miss
+                self.quarantine(digest);
+                return None;
+            }
+        };
+        let (header, body) = raw.split_at(HEADER_LEN);
+        let expect = String::from_utf8_lossy(header).to_string();
+        let actual = format!("{:016x}", fnv1a64(body));
+        if expect != actual {
+            self.quarantine(digest);
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.index.get_mut(digest).expect("checked above");
+        entry.last_used = clock;
+        self.stats.hits += 1;
+        self.stats.bytes_read += body.len() as u64;
+        self.persist_index();
+        Some(body.to_vec())
+    }
+
+    /// A sibling cache instance sharing this root (another worker, or a
+    /// `cache warmup` run) may have stored `digest` after our `open`:
+    /// probe the objects directory and adopt the entry if the file is
+    /// there.  This is what lets a live-migration target pre-warm from an
+    /// object its source worker wrote moments ago.  Metadata is the same
+    /// placeholder `reconcile` uses; the payload stays self-verifying.
+    fn adopt_from_disk(&mut self, digest: &str) -> bool {
+        match fs::metadata(self.object_path(digest)) {
+            Ok(m) => {
+                self.index.insert(
+                    digest.to_string(),
+                    CacheEntry {
+                        digest: digest.to_string(),
+                        artifact: "(unindexed)".to_string(),
+                        tier: "?".to_string(),
+                        bytes: m.len().saturating_sub(HEADER_LEN as u64),
+                        last_used: self.clock,
+                    },
+                );
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Move `digest`'s object into `quarantine/` and forget it,
+    /// accounting the event as corruption *and* a miss.
+    fn quarantine(&mut self, digest: &str) {
+        let from = self.object_path(digest);
+        let to = self.root.join("quarantine").join(format!("{digest}.bin"));
+        let _ = fs::rename(&from, &to); // best effort; removal also suffices
+        if !to.exists() {
+            let _ = fs::remove_file(&from);
+        }
+        self.index.remove(digest);
+        self.stats.corrupt += 1;
+        self.stats.misses += 1;
+        self.persist_index();
+    }
+
+    /// Store `body` under `digest` with write-then-rename atomicity.
+    /// Re-storing an existing digest is idempotent (same content ⇒ same
+    /// digest ⇒ same bytes).
+    pub fn store(&mut self, digest: &str, artifact: &str, tier: &str, body: &[u8]) -> Result<()> {
+        let path = self.object_path(digest);
+        let tmp = self.root.join("objects").join(format!(".tmp-{digest}"));
+        let mut raw = Vec::with_capacity(HEADER_LEN + body.len());
+        raw.extend_from_slice(format!("{:016x}", fnv1a64(body)).as_bytes());
+        raw.extend_from_slice(body);
+        fs::write(&tmp, &raw).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path).with_context(|| format!("renaming into {}", path.display()))?;
+        self.clock += 1;
+        self.index.insert(
+            digest.to_string(),
+            CacheEntry {
+                digest: digest.to_string(),
+                artifact: artifact.to_string(),
+                tier: tier.to_string(),
+                bytes: body.len() as u64,
+                last_used: self.clock,
+            },
+        );
+        self.stats.stores += 1;
+        self.stats.bytes_written += body.len() as u64;
+        self.persist_index();
+        Ok(())
+    }
+
+    /// Evict least-recently-used entries (ties broken by digest, so the
+    /// order — and therefore the surviving set — is deterministic) until
+    /// resident payload bytes fit `max_bytes`.  `dry_run` reports the
+    /// victims without deleting anything.
+    pub fn prune(&mut self, max_bytes: u64, dry_run: bool) -> PruneReport {
+        let bytes_before = self.total_bytes();
+        let mut order: Vec<(u64, String, String, u64)> = self
+            .index
+            .values()
+            .map(|e| (e.last_used, e.digest.clone(), e.artifact.clone(), e.bytes))
+            .collect();
+        order.sort();
+        let mut remaining = bytes_before;
+        let mut evicted = Vec::new();
+        for (_, digest, artifact, bytes) in order {
+            if remaining <= max_bytes {
+                break;
+            }
+            remaining -= bytes;
+            evicted.push((digest, artifact, bytes));
+        }
+        if !dry_run {
+            for (digest, _, _) in &evicted {
+                let _ = fs::remove_file(self.object_path(digest));
+                self.index.remove(digest);
+            }
+            self.persist_index();
+        }
+        PruneReport {
+            bytes_before,
+            bytes_after: if dry_run { bytes_before } else { remaining },
+            evicted,
+            dry_run,
+        }
+    }
+
+    /// Usage snapshot for `cachebound cache doctor`.
+    pub fn doctor(&self) -> DoctorReport {
+        let mut per_tier: BTreeMap<String, TierUsage> = BTreeMap::new();
+        for e in self.index.values() {
+            let row = per_tier.entry(e.tier.clone()).or_default();
+            row.entries += 1;
+            row.bytes += e.bytes;
+        }
+        let quarantined = fs::read_dir(self.root.join("quarantine"))
+            .map(|d| d.filter_map(|e| e.ok()).count() as u64)
+            .unwrap_or(0);
+        DoctorReport {
+            root: self.root.clone(),
+            entries: self.index.len() as u64,
+            total_bytes: self.total_bytes(),
+            quarantined,
+            stats: self.stats,
+            per_tier,
+        }
+    }
+
+    /// Entries in digest order (stable iteration for reports/tests).
+    pub fn entries(&self) -> impl Iterator<Item = &CacheEntry> {
+        self.index.values()
+    }
+
+    // -- index persistence ------------------------------------------------
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join("index.json")
+    }
+
+    fn load_index(&mut self) {
+        let Ok(text) = fs::read_to_string(self.index_path()) else { return };
+        let Ok(v) = json::parse(&text) else { return };
+        self.clock = v.get("clock").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+        if let Some(st) = v.get("stats") {
+            let f = |k: &str| st.get(k).and_then(|x| x.as_u64().ok()).unwrap_or(0);
+            self.stats = CacheStats {
+                hits: f("hits"),
+                misses: f("misses"),
+                stores: f("stores"),
+                corrupt: f("corrupt"),
+                bytes_read: f("bytes_read"),
+                bytes_written: f("bytes_written"),
+            };
+        }
+        let Some(Ok(entries)) = v.get("entries").map(|e| e.as_arr()) else { return };
+        for e in entries {
+            let (Some(digest), Some(artifact), Some(tier)) = (
+                e.get("digest").and_then(|x| x.as_str().ok()),
+                e.get("artifact").and_then(|x| x.as_str().ok()),
+                e.get("tier").and_then(|x| x.as_str().ok()),
+            ) else {
+                continue;
+            };
+            self.index.insert(
+                digest.to_string(),
+                CacheEntry {
+                    digest: digest.to_string(),
+                    artifact: artifact.to_string(),
+                    tier: tier.to_string(),
+                    bytes: e.get("bytes").and_then(|x| x.as_u64().ok()).unwrap_or(0),
+                    last_used: e.get("last_used").and_then(|x| x.as_u64().ok()).unwrap_or(0),
+                },
+            );
+        }
+    }
+
+    /// Drop indexed entries whose object vanished; adopt unindexed
+    /// objects with placeholder metadata.
+    fn reconcile(&mut self) -> Result<()> {
+        let stale: Vec<String> = self
+            .index
+            .keys()
+            .filter(|d| !self.object_path(d).exists())
+            .cloned()
+            .collect();
+        for d in stale {
+            self.index.remove(&d);
+        }
+        for entry in fs::read_dir(self.root.join("objects"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            let Some(digest) = name.strip_suffix(".bin") else { continue };
+            if self.index.contains_key(digest) {
+                continue;
+            }
+            let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+            self.index.insert(
+                digest.to_string(),
+                CacheEntry {
+                    digest: digest.to_string(),
+                    artifact: "(unindexed)".to_string(),
+                    tier: "?".to_string(),
+                    bytes: bytes.saturating_sub(HEADER_LEN as u64),
+                    last_used: 0,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Atomically persist the index (advisory metadata; benign to lose —
+    /// `reconcile` rebuilds residency from the objects directory).
+    fn persist_index(&self) {
+        let entries: Vec<Value> = self
+            .index
+            .values()
+            .map(|e| {
+                obj(vec![
+                    ("digest", s(e.digest.clone())),
+                    ("artifact", s(e.artifact.clone())),
+                    ("tier", s(e.tier.clone())),
+                    ("bytes", num(e.bytes as f64)),
+                    ("last_used", num(e.last_used as f64)),
+                ])
+            })
+            .collect();
+        let v = obj(vec![
+            ("version", num(1.0)),
+            ("clock", num(self.clock as f64)),
+            (
+                "stats",
+                obj(vec![
+                    ("hits", num(self.stats.hits as f64)),
+                    ("misses", num(self.stats.misses as f64)),
+                    ("stores", num(self.stats.stores as f64)),
+                    ("corrupt", num(self.stats.corrupt as f64)),
+                    ("bytes_read", num(self.stats.bytes_read as f64)),
+                    ("bytes_written", num(self.stats.bytes_written as f64)),
+                ]),
+            ),
+            ("entries", arr(entries)),
+        ]);
+        let tmp = self.root.join(".index.tmp");
+        if fs::write(&tmp, json::to_string_pretty(&v)).is_ok() {
+            let _ = fs::rename(&tmp, self.index_path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cachebound_artifact_cache_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn digest_is_stable_and_separator_safe() {
+        let d = digest_hex(&["a", "b"]);
+        assert_eq!(d.len(), 16);
+        assert_eq!(d, digest_hex(&["a", "b"]), "pure function");
+        // the separator keeps ("ab","") distinct from ("a","b")
+        assert_ne!(digest_hex(&["ab", ""]), digest_hex(&["a", "b"]));
+        assert_ne!(digest_hex(&["a"]), digest_hex(&["a", ""]));
+    }
+
+    #[test]
+    fn store_load_round_trip_with_accounting() {
+        let root = temp_root("roundtrip");
+        let mut c = ArtifactCache::open(&root).unwrap();
+        let d = digest_hex(&["syn", "gemm", "32"]);
+        assert_eq!(c.load(&d), None, "cold cache misses");
+        c.store(&d, "syn_gemm_n32", "f32", b"payload-bytes").unwrap();
+        assert!(c.contains(&d));
+        assert_eq!(c.load(&d).as_deref(), Some(b"payload-bytes".as_ref()));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.stores), (1, 1, 1));
+        assert_eq!(st.bytes_written, 13);
+        assert_eq!(st.bytes_read, 13);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn index_and_stats_survive_reopen() {
+        let root = temp_root("reopen");
+        {
+            let mut c = ArtifactCache::open(&root).unwrap();
+            let d = digest_hex(&["x"]);
+            c.store(&d, "x", "f32", b"abc").unwrap();
+            assert!(c.load(&d).is_some());
+        }
+        let mut c = ArtifactCache::open(&root).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total_bytes(), 3);
+        assert_eq!(c.stats().hits, 1, "counters are lifetime, not session");
+        let d = digest_hex(&["x"]);
+        assert_eq!(c.load(&d).as_deref(), Some(b"abc".as_ref()), "warm across restart");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_payload_is_quarantined_and_misses() {
+        let root = temp_root("corrupt");
+        let mut c = ArtifactCache::open(&root).unwrap();
+        let d = digest_hex(&["victim"]);
+        c.store(&d, "victim", "int8", b"good-bytes").unwrap();
+        // flip a body byte on disk behind the cache's back
+        let path = root.join("objects").join(format!("{d}.bin"));
+        let mut raw = fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        fs::write(&path, &raw).unwrap();
+        assert_eq!(c.load(&d), None, "corruption is a miss, not bad bytes");
+        assert!(!c.contains(&d));
+        assert_eq!(c.stats().corrupt, 1);
+        assert_eq!(c.stats().misses, 1);
+        assert!(
+            root.join("quarantine").join(format!("{d}.bin")).exists(),
+            "corrupt object moved aside for diagnosis"
+        );
+        // doctor sees the quarantine row
+        assert_eq!(c.doctor().quarantined, 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn prune_enforces_budget_deterministically_in_lru_order() {
+        let root = temp_root("prune");
+        let mut c = ArtifactCache::open(&root).unwrap();
+        for name in ["a", "b", "c"] {
+            c.store(&digest_hex(&[name]), name, "f32", &[0u8; 100]).unwrap();
+        }
+        // touch "a" so "b" is the coldest entry
+        assert!(c.load(&digest_hex(&["a"])).is_some());
+        // dry run: reports victims, deletes nothing
+        let dry = c.prune(150, true);
+        assert!(dry.dry_run);
+        assert_eq!(dry.evicted.len(), 2);
+        assert_eq!(dry.evicted[0].1, "b", "LRU first");
+        assert_eq!(c.len(), 3, "dry run keeps everything");
+        // real prune: same victims, enforced budget
+        let rep = c.prune(150, false);
+        assert_eq!(
+            rep.evicted.iter().map(|e| e.1.as_str()).collect::<Vec<_>>(),
+            dry.evicted.iter().map(|e| e.1.as_str()).collect::<Vec<_>>(),
+            "dry run predicted the real eviction order"
+        );
+        assert_eq!(rep.bytes_before, 300);
+        assert_eq!(rep.bytes_after, 100);
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(&digest_hex(&["a"])), "the touched entry survives");
+        assert!(!root.join("objects").join(format!("{}.bin", digest_hex(&["b"]))).exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn doctor_breaks_usage_down_by_tier() {
+        let root = temp_root("doctor");
+        let mut c = ArtifactCache::open(&root).unwrap();
+        c.store(&digest_hex(&["f1"]), "f1", "f32", &[0u8; 10]).unwrap();
+        c.store(&digest_hex(&["f2"]), "f2", "f32", &[0u8; 20]).unwrap();
+        c.store(&digest_hex(&["q1"]), "q1", "int8", &[0u8; 5]).unwrap();
+        let rep = c.doctor();
+        assert_eq!(rep.entries, 3);
+        assert_eq!(rep.total_bytes, 35);
+        assert_eq!(rep.per_tier["f32"], TierUsage { entries: 2, bytes: 30 });
+        assert_eq!(rep.per_tier["int8"], TierUsage { entries: 1, bytes: 5 });
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unindexed_objects_are_adopted_on_open() {
+        let root = temp_root("adopt");
+        {
+            let mut c = ArtifactCache::open(&root).unwrap();
+            c.store(&digest_hex(&["orphan"]), "orphan", "f32", b"body").unwrap();
+        }
+        // lose the index; the object must still be loadable
+        fs::remove_file(root.join("index.json")).unwrap();
+        let mut c = ArtifactCache::open(&root).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(
+            c.load(&digest_hex(&["orphan"])).as_deref(),
+            Some(b"body".as_ref()),
+            "self-verifying payloads survive index loss"
+        );
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sibling_store_is_visible_without_reopen() {
+        // Two instances share one root (the per-worker topology of the
+        // sharded server): a store through one must be loadable through
+        // the other without reopening — the migration pre-warm path.
+        let root = temp_root("sibling");
+        let mut a = ArtifactCache::open(&root).unwrap();
+        let mut b = ArtifactCache::open(&root).unwrap();
+        let d = digest_hex(&["shared"]);
+        a.store(&d, "shared", "f32", b"late-arrival").unwrap();
+        assert_eq!(
+            b.load(&d).as_deref(),
+            Some(b"late-arrival".as_ref()),
+            "adopt-from-disk sees objects stored after open"
+        );
+        assert_eq!(b.stats().hits, 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -7,6 +7,10 @@
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (inputs, seeds,
 //!   expected output checksums, workload metadata).
+//! * [`artifact_cache`] — the persistent compiled-artifact store: a
+//!   digest-keyed, self-verifying disk cache that lets server restarts,
+//!   `cachebound cache warmup` and live-migration targets *load*
+//!   compiled artifacts instead of recompiling them.
 //! * [`inputs`] — regenerates each artifact's inputs bit-identically from
 //!   the SplitMix64 protocol shared with `aot.py`.
 //! * [`client`] — the `xla`-crate wrapper: HLO text → `XlaComputation` →
@@ -21,11 +25,13 @@
 //! (`coordinator::server`) builds one `Registry` inside each worker thread
 //! for exactly this reason.
 
+pub mod artifact_cache;
 pub mod client;
 pub mod inputs;
 pub mod manifest;
 pub mod registry;
 
+pub use artifact_cache::{ArtifactCache, CacheStats, DoctorReport, PruneReport};
 pub use client::{RunOutput, Runtime};
 pub use manifest::{ArtifactSpec, InputSpec, Manifest, OutputSpec};
 pub use registry::Registry;

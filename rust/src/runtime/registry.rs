@@ -91,6 +91,42 @@ impl Registry {
         Ok(&self.executables[name])
     }
 
+    /// Is `name`'s executable already compiled in this registry?
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// The bytes of `name`'s HLO program text — the payload the artifact
+    /// cache persists for PJRT artifacts (the `xla` crate exposes no
+    /// serialized-executable form, so the program text is the portable
+    /// compiled form we can store and reload).
+    pub fn hlo_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        let spec = self.spec(name)?;
+        std::fs::read(self.manifest.hlo_path(&spec))
+            .with_context(|| format!("reading HLO text of {name}"))
+    }
+
+    /// Compile `name` from HLO program text handed in as bytes (an
+    /// artifact-cache payload) instead of the manifest's file path.  The
+    /// bytes are staged to a temp file because the PJRT wrapper parses
+    /// HLO from a file.  On success the executable is cached exactly as
+    /// if [`Registry::executable`] had compiled it.
+    pub fn install_hlo_text(&mut self, name: &str, bytes: &[u8]) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let staged = std::env::temp_dir().join(format!("cachebound-warm-{name}.hlo.txt"));
+        std::fs::write(&staged, bytes)
+            .with_context(|| format!("staging warm HLO for {name}"))?;
+        let exe = self
+            .runtime
+            .compile_hlo_file(&staged)
+            .with_context(|| format!("compiling warm artifact {name}"))?;
+        let _ = std::fs::remove_file(&staged);
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
     /// Generate (or fetch cached) the protocol inputs for an artifact.
     pub fn inputs(&mut self, name: &str) -> Result<&[Literal]> {
         if !self.input_cache.contains_key(name) {

@@ -144,6 +144,48 @@ mod tests {
     }
 
     #[test]
+    fn remove_then_reinsert_accounts_capacity_once() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.remove(&"a"), Some(1));
+        // reinserting the removed key occupies one slot, not two: the
+        // cache is exactly full again and the next fresh insert evicts
+        // exactly one entry
+        assert_eq!(c.put("a", 10), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"a"), Some(&10), "reinsert carries the new value");
+        let evicted = c.put("c", 3);
+        assert_eq!(evicted, Some("b"), "the untouched survivor is the LRU victim");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn remove_of_missing_key_is_a_clean_miss() {
+        let mut c: LruCache<&str, i32> = LruCache::new(2);
+        assert_eq!(c.remove(&"ghost"), None, "empty cache");
+        c.put("a", 1);
+        assert_eq!(c.remove(&"ghost"), None, "never-inserted key");
+        assert_eq!(c.len(), 1, "a miss must not disturb residents");
+        assert_eq!(c.get(&"a"), Some(&1));
+    }
+
+    #[test]
+    fn eviction_order_skips_removed_entries() {
+        let mut c = LruCache::new(3);
+        c.put("a", 1);
+        c.put("b", 2);
+        c.put("c", 3);
+        // "a" is the LRU — but removing it must hand eviction pressure to
+        // the next-oldest survivor, not dangle on the departed key
+        assert_eq!(c.remove(&"a"), Some(1));
+        assert_eq!(c.put("d", 4), None, "removal freed a slot");
+        let evicted = c.put("e", 5);
+        assert_eq!(evicted, Some("b"), "oldest *surviving* entry is the victim");
+        assert!(c.contains(&"c") && c.contains(&"d") && c.contains(&"e"));
+    }
+
+    #[test]
     fn zero_capacity_disables() {
         let mut c = LruCache::new(0);
         assert_eq!(c.put("a", 1), None);

@@ -45,10 +45,14 @@ fn sweep_roundtrips_through_bench_json() {
         assert!(!r.class.is_empty(), "{}", r.key);
         assert!(r.l1_read_s < r.l2_read_s && r.l2_read_s < r.ram_read_s, "{}", r.key);
         // serving records (servedrift: MRC-predicted per-request times;
-        // servslo/servtier: 1/max-sustainable-rate) are not bound-line
-        // measurements — the ≤105% clamp only applies to the operator
-        // grid
-        if r.family != "servedrift" && r.family != "servslo" && r.family != "servtier" {
+        // servslo/servtier: 1/max-sustainable-rate; servcache: total
+        // startup time) are not bound-line measurements — the ≤105%
+        // clamp only applies to the operator grid
+        if r.family != "servedrift"
+            && r.family != "servslo"
+            && r.family != "servtier"
+            && r.family != "servcache"
+        {
             assert!(
                 r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0,
                 "{}: {}",
@@ -70,6 +74,11 @@ fn sweep_roundtrips_through_bench_json() {
     // the quantized-tier A/B qualifies on both profiles: two legs each
     assert_eq!(
         report.records.iter().filter(|r| r.family == "servtier").count(),
+        4
+    );
+    // so does the cold-vs-warm artifact-cache A/B
+    assert_eq!(
+        report.records.iter().filter(|r| r.family == "servcache").count(),
         4
     );
     let dir = temp_dir("roundtrip");

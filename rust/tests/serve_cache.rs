@@ -1,0 +1,182 @@
+//! End-to-end tests of the persistent compiled-artifact cache through the
+//! real binary: `cache warmup` fills the store, a `serve --cache-dir` run
+//! against it performs zero compiles, `cache prune` enforces a byte
+//! budget, and `cache doctor` reports counts consistent with all of it.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn temp_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cachebound_serve_cache_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn run(args: &[&str], cache_dir: &Path) -> String {
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe).args(args).arg(cache_dir).output().unwrap();
+    assert!(
+        out.status.success(),
+        "`cachebound {}` failed:\n{}{}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// The integer immediately following `prefix` on the first line that
+/// contains it.
+fn count_after(stdout: &str, prefix: &str) -> u64 {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains(prefix))
+        .unwrap_or_else(|| panic!("no line contains {prefix:?} in:\n{stdout}"));
+    let rest = &line[line.find(prefix).unwrap() + prefix.len()..];
+    rest.split_whitespace()
+        .next()
+        .and_then(|w| w.parse().ok())
+        .unwrap_or_else(|| panic!("no integer after {prefix:?} in {line:?}"))
+}
+
+/// The integer immediately preceding `suffix` on the first line that
+/// contains it (e.g. `count_before(doc, " entries,")` on the doctor line
+/// "cache <root>: 5 entries, 396593 bytes resident, 0 quarantined").
+fn count_before(stdout: &str, suffix: &str) -> u64 {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains(suffix))
+        .unwrap_or_else(|| panic!("no line contains {suffix:?} in:\n{stdout}"));
+    let head = &line[..line.find(suffix).unwrap()];
+    head.split_whitespace()
+        .last()
+        .and_then(|w| w.parse().ok())
+        .unwrap_or_else(|| panic!("no integer before {suffix:?} in {line:?}"))
+}
+
+/// The tentpole acceptance path: a cold serve compiles and stores, the
+/// second start against the warm cache performs zero compiles — every
+/// first-touch prep is a disk hit.
+#[test]
+fn second_serve_start_performs_zero_compiles() {
+    let cache = temp_root("zero_compiles");
+    let serve = [
+        "serve",
+        "--synthetic",
+        "--workers",
+        "2",
+        "--requests",
+        "96",
+        "--cache-dir",
+    ];
+    let cold = run(&serve, &cache);
+    let cold_compiled = count_after(&cold, "artifact prep: compiled ");
+    let cold_loaded = count_after(&cold, "loaded ");
+    assert!(cold_compiled > 0, "cold start must compile:\n{cold}");
+    assert_eq!(cold_loaded, 0, "nothing to load on a cold start:\n{cold}");
+
+    let warm = run(&serve, &cache);
+    let warm_compiled = count_after(&warm, "artifact prep: compiled ");
+    let warm_loaded = count_after(&warm, "loaded ");
+    assert_eq!(warm_compiled, 0, "warm start must not compile:\n{warm}");
+    assert_eq!(
+        warm_loaded, cold_compiled,
+        "same seed, same artifacts — every cold compile is a warm load:\n{warm}"
+    );
+    assert!(warm.contains("disk-warmed"), "per-artifact prep lines:\n{warm}");
+
+    // doctor agrees: one resident entry per cold compile, and the warm
+    // run's loads registered as lifetime hits
+    let doc = run(&["cache", "doctor", "--cache-dir"], &cache);
+    assert_eq!(
+        count_before(&doc, " entries,"),
+        cold_compiled,
+        "one cache entry per compiled artifact:\n{doc}"
+    );
+    assert!(
+        count_before(&doc, " hits /") >= warm_loaded,
+        "warm loads are lifetime hits:\n{doc}"
+    );
+    let _ = fs::remove_dir_all(&cache);
+}
+
+/// `cache warmup --synthetic` pre-fills the store so even the *first*
+/// serve start is warm, and a repeated warmup is a no-op.
+#[test]
+fn warmup_makes_the_first_serve_start_warm() {
+    let cache = temp_root("warmup");
+    let wu = run(&["cache", "warmup", "--synthetic", "--cache-dir"], &cache);
+    let stored = count_after(&wu, "warmup (synthetic native-GEMM mix): ");
+    assert_eq!(stored, 5, "the f32 serving mix has five artifacts:\n{wu}");
+
+    let again = run(&["cache", "warmup", "--synthetic", "--cache-dir"], &cache);
+    assert_eq!(
+        count_after(&again, "warmup (synthetic native-GEMM mix): "),
+        0,
+        "second warmup stores nothing:\n{again}"
+    );
+    assert_eq!(count_after(&again, "stored, "), 5, "all five already warm:\n{again}");
+
+    let serve = run(
+        &[
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "64",
+            "--cache-dir",
+        ],
+        &cache,
+    );
+    assert_eq!(
+        count_after(&serve, "artifact prep: compiled "),
+        0,
+        "warmed cache makes the first start compile-free:\n{serve}"
+    );
+    let _ = fs::remove_dir_all(&cache);
+}
+
+/// `cache prune --max-bytes` deterministically enforces the budget:
+/// dry-run lists victims without deleting, the real run evicts
+/// least-recently-used entries down to the budget, and doctor reflects
+/// the post-prune state.
+#[test]
+fn prune_enforces_the_byte_budget_and_doctor_agrees() {
+    let cache = temp_root("prune");
+    run(&["cache", "warmup", "--synthetic", "--cache-dir"], &cache);
+
+    let resident =
+        |out: &str| -> u64 { count_before(out, " bytes resident") };
+    let before = resident(&run(&["cache", "doctor", "--cache-dir"], &cache));
+    // five f32 payloads (three n² tensors each, n up to 128) comfortably
+    // exceed the budget, while the largest single payload fits under it
+    let budget = "250000";
+    assert!(before > 250_000, "mix payload exceeds the budget ({before} bytes)");
+
+    // dry run: victims listed, nothing deleted
+    let dry = run(
+        &["cache", "prune", "--max-bytes", budget, "--dry-run", "--cache-dir"],
+        &cache,
+    );
+    assert!(dry.contains("would evict"), "{dry}");
+    assert!(dry.contains("(dry run)"), "{dry}");
+    assert_eq!(
+        resident(&run(&["cache", "doctor", "--cache-dir"], &cache)),
+        before,
+        "dry run must not delete"
+    );
+
+    // the real prune: budget enforced, doctor consistent
+    let pruned = run(&["cache", "prune", "--max-bytes", budget, "--cache-dir"], &cache);
+    assert!(pruned.contains("evicted"), "{pruned}");
+    let after = resident(&run(&["cache", "doctor", "--cache-dir"], &cache));
+    assert!(after <= 250_000, "budget enforced: {after} bytes resident");
+    assert!(after > 0, "the most recently stored payload fits the budget");
+
+    // pruning is deterministic: the same budget again evicts nothing
+    let again = run(&["cache", "prune", "--max-bytes", budget, "--cache-dir"], &cache);
+    assert!(again.contains("0 victim(s)"), "already under budget:\n{again}");
+    let _ = fs::remove_dir_all(&cache);
+}
