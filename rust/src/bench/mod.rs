@@ -53,6 +53,6 @@ pub mod sweep;
 pub use compare::{compare, CompareReport, Delta, DEFAULT_THRESHOLD_PCT};
 pub use record::{BenchRecord, BenchReport, HwRecord, TelemetryRecord, SCHEMA_VERSION};
 pub use sweep::{
-    bench_pipeline, native_line, quick_flag, run_sweep, score, servtier_records,
-    workload_set, SweepConfig, DEFAULT_TRACE_ROWS,
+    bench_pipeline, native_line, quick_flag, run_sweep, score, servadm_records,
+    servtier_records, workload_set, SweepConfig, DEFAULT_TRACE_ROWS,
 };

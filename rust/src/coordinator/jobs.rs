@@ -127,6 +127,10 @@ pub enum JobSpec {
         /// Which axis [`AdmissionMode::Degrade`] shrinks (shape ladder vs
         /// precision lattice).
         tier_policy: TierPolicy,
+        /// Admission threads (>1 partitions the stream by artifact hash
+        /// and admits concurrently against route-table snapshots —
+        /// `coordinator::routing`; 1 keeps the single-threaded drive).
+        admission_threads: usize,
         /// Root of the persistent compiled-artifact cache
         /// ([`crate::runtime::ArtifactCache`]); `None` keeps the
         /// compile-always behaviour.  The key records only presence —
@@ -226,15 +230,17 @@ impl JobSpec {
                 rebalance,
                 tiers,
                 tier_policy,
+                admission_threads,
                 cache_dir,
             } => {
                 format!(
-                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}/t{}/tp{}/cd{}",
+                    "serve_mix/w{workers}/r{requests}/s{seed}/c{cache_entries}/a{arrival_rps}/ad{}/p{}/rb{}/t{}/tp{}/at{}/cd{}",
                     admission.key_part(),
                     placement.key_part(),
                     rebalance.key_part(),
                     *tiers as u8,
                     tier_policy.key_part(),
+                    admission_threads,
                     cache_dir.is_some() as u8
                 )
             }
@@ -441,6 +447,7 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
             rebalance,
             tiers,
             tier_policy,
+            admission_threads,
             cache_dir,
         } => {
             use super::loadgen::ArrivalConfig;
@@ -450,7 +457,8 @@ pub fn run_cpu_job(spec: &JobSpec) -> JobOutput {
                 .with_placement(*placement)
                 .with_rebalance(*rebalance)
                 .with_admission(*admission)
-                .with_tier_policy(*tier_policy);
+                .with_tier_policy(*tier_policy)
+                .with_admission_threads(*admission_threads);
             if let Some(dir) = cache_dir {
                 cfg = cfg.with_cache_dir(dir.clone());
             }
@@ -740,9 +748,13 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            admission_threads: 1,
             cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain/t0/tppin/cd0");
+        assert_eq!(
+            spec.key(),
+            "serve_mix/w2/r24/s7/c16/a0/adnone/phash/rbdrain/t0/tppin/at1/cd0"
+        );
         let out = run_cpu_job(&spec);
         match out {
             JobOutput::Served { throughput_rps, completed, failed, shed, migrations, .. } => {
@@ -769,9 +781,13 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            admission_threads: 1,
             cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain/t0/tppin/cd0");
+        assert_eq!(
+            spec.key(),
+            "serve_mix/w2/r16/s7/c0/a0/adnone/pcache/rbdrain/t0/tppin/at1/cd0"
+        );
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 16);
@@ -796,9 +812,13 @@ mod tests {
             rebalance: RebalanceMode::Live,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            admission_threads: 4,
             cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive/t0/tppin/cd0");
+        assert_eq!(
+            spec.key(),
+            "serve_mix/w2/r80/s7/c0/a0/adnone/phash/rblive/t0/tppin/at4/cd0"
+        );
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, .. } => {
                 assert_eq!(completed, 80, "migrations must not lose or fail requests");
@@ -824,9 +844,13 @@ mod tests {
             rebalance: RebalanceMode::Drain,
             tiers: false,
             tier_policy: TierPolicy::Pinned,
+            admission_threads: 1,
             cache_dir: None,
         };
-        assert_eq!(spec.key(), "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain/t0/tppin/cd0");
+        assert_eq!(
+            spec.key(),
+            "serve_mix/w2/r32/s7/c0/a5000/adshed/phash/rbdrain/t0/tppin/at1/cd0"
+        );
         match run_cpu_job(&spec) {
             JobOutput::Served { completed, failed, shed, .. } => {
                 assert_eq!(completed + failed + shed, 32, "one disposition each");

@@ -21,6 +21,10 @@
 //! server acts on the same signal *mid-stream*, quiescing and migrating
 //! artifacts whose observed pressure diverges from the plan while
 //! preserving per-artifact FIFO (`server` module docs, §Live migration).
+//! [`routing`] epoch-versions the artifact→worker table so N admission
+//! threads route by lock-free snapshots (`serve --admission-threads`)
+//! while migrations keep their fenced atomic swap (`server` module docs,
+//! §Admission concurrency).
 //! Division of labor with the
 //! [`pool`]: the pool fans out *finite experiment batches* and routes
 //! PJRT-bound jobs to the leader; the sharded server runs *open-ended
@@ -49,6 +53,7 @@ pub mod pipeline;
 pub mod placement;
 pub mod pool;
 pub mod results;
+pub mod routing;
 pub mod server;
 pub mod shard;
 
@@ -60,9 +65,10 @@ pub use placement::{
 };
 pub use pool::WorkerPool;
 pub use results::{ResultKey, ResultStore, ResultValue};
+pub use routing::{RouteReader, RouteTable, RouteWriter, Snapshot};
 pub use server::{
-    AdmissionMode, BatchPolicy, Exec, Executor, Metrics, MigrationRecord, PjrtExecutor,
-    PrepRecord, PrepSource, Request, Response, ServeConfig, ServeOutcome, Server,
-    ShardedServer, SyntheticExecutor, TierPolicy, WorkerPressure,
+    AdmissionHandle, AdmissionMode, AdmissionOutcome, BatchPolicy, Exec, Executor, Metrics,
+    MigrationRecord, PjrtExecutor, PrepRecord, PrepSource, Request, Response, ServeConfig,
+    ServeOutcome, Server, ShardedServer, SyntheticExecutor, TierPolicy, WorkerPressure,
 };
 pub use shard::{shard_for, LatencyHistogram, ShardMetrics};

@@ -237,6 +237,9 @@ impl Pipeline {
     /// every run in the sweep, so later worker counts (and later sweeps
     /// over the same root) start warm — the restart-cost story of
     /// DESIGN.md §Artifact cache.
+    /// `admission_threads` > 1 switches every run to the concurrent
+    /// admission drive (stream partitioned by artifact hash, routes read
+    /// from epoch snapshots — `coordinator::routing`).
     #[allow(clippy::too_many_arguments)]
     pub fn serve_scaling(
         &mut self,
@@ -248,6 +251,7 @@ impl Pipeline {
         rebalance: RebalanceMode,
         tiers: bool,
         tier_policy: TierPolicy,
+        admission_threads: usize,
         cache_dir: Option<std::path::PathBuf>,
     ) -> Result<()> {
         let specs: Vec<JobSpec> = worker_counts
@@ -263,6 +267,7 @@ impl Pipeline {
                 rebalance,
                 tiers,
                 tier_policy,
+                admission_threads,
                 cache_dir: cache_dir.clone(),
             })
             .collect();
@@ -449,6 +454,7 @@ mod tests {
             RebalanceMode::Drain,
             false,
             TierPolicy::Pinned,
+            1,
             None,
         )
         .unwrap();
@@ -457,7 +463,10 @@ mod tests {
         for (k, v) in rows {
             assert!(k.contains("/phash"), "{k} must carry the placement policy");
             assert!(k.contains("/rbdrain"), "{k} must carry the rebalance mode");
-            assert!(k.ends_with("/t0/tppin/cd0"), "{k} must carry the tier+cache config");
+            assert!(
+                k.ends_with("/t0/tppin/at1/cd0"),
+                "{k} must carry the tier+admission+cache config"
+            );
             assert!(v.seconds.is_some(), "{k} missing p50");
             assert_eq!(v.passed, Some(true), "{k} had failures");
             assert!(v.detail.as_deref().unwrap().contains("req/s"));
@@ -476,6 +485,7 @@ mod tests {
             RebalanceMode::Drain,
             false,
             TierPolicy::Pinned,
+            1,
             None,
         )
         .unwrap();
@@ -498,6 +508,7 @@ mod tests {
             RebalanceMode::Live,
             false,
             TierPolicy::Pinned,
+            4,
             None,
         )
         .unwrap();
@@ -505,6 +516,7 @@ mod tests {
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
         assert!(k.contains("/rblive"), "{k}");
+        assert!(k.contains("/at4/"), "{k} must carry the admission-thread count");
         assert_eq!(v.passed, Some(true), "{k}: migrations must not fail requests");
         assert!(v.detail.as_deref().unwrap().contains("migrations"), "{v:?}");
     }
@@ -521,13 +533,14 @@ mod tests {
             RebalanceMode::Drain,
             true,
             TierPolicy::DownshiftOnPressure,
+            1,
             None,
         )
         .unwrap();
         let rows = p.store.by_prefix("serve_mix/");
         assert_eq!(rows.len(), 1);
         let (k, v) = &rows[0];
-        assert!(k.ends_with("/t1/tpdown/cd0"), "{k} must carry the tier config");
+        assert!(k.ends_with("/t1/tpdown/at1/cd0"), "{k} must carry the tier config");
         assert_eq!(v.passed, Some(true), "{k}: tiered serving had failures");
     }
 

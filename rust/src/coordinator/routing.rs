@@ -1,0 +1,454 @@
+//! Epoch-versioned route snapshots: lock-free admission reads, single-writer
+//! publishes (DESIGN.md §Admission concurrency).
+//!
+//! The sharded server routes every request by artifact name.  Before this
+//! module the authoritative `routes: BTreeMap<String, usize>` lived behind
+//! the coordinator thread, so admission, the rebalance check and the
+//! migration protocol all serialized on it — the next throughput ceiling
+//! once the operators themselves run at the cache bound.  The fix is the
+//! classic read-copy-update shape, hand-rolled on `std` only (the build is
+//! offline, no `arc-swap` crate):
+//!
+//! * [`RouteTable`] is an **immutable** value: a pin set (artifact →
+//!   worker, written only by migrations and plan adoptions) over a
+//!   deterministic fallback chain (start placement, then the artifact
+//!   hash).  Resolving a route never mutates anything, which is what kills
+//!   the old `routes.get` + re-insert double lookup on the admit hot path.
+//! * [`RouteWriter`] is the **single writer** (the coordinator thread).
+//!   [`RouteWriter::publish`] swaps in a new `Arc<RouteTable>` with one
+//!   atomic pointer store and bumps the epoch counter; old tables are
+//!   retired but kept alive for the router's lifetime, so readers may
+//!   dereference the current-table pointer without a reclamation scheme
+//!   (tables are a few hundred bytes and epochs advance only on
+//!   migrations — dozens per run, not millions).
+//! * [`RouteReader`] is a per-thread handle.  [`RouteReader::pin`] takes a
+//!   [`Snapshot`] with one atomic load plus an epoch announcement in the
+//!   reader's own slot; the whole admission decision (classify, route,
+//!   shed/degrade, enqueue) runs against that one immutable table.
+//!
+//! The migration fence rides on the epoch slots.  Publication order is
+//! *pointer first, epoch second*, and the pin loop is the store-load
+//! (Dekker) pattern under `SeqCst`: a reader announces the epoch it
+//! observed, then re-validates it before trusting the pointer.  In the
+//! sequentially-consistent total order, a reader that re-validated an old
+//! epoch made its slot visible *before* the writer's epoch bump, so
+//! [`RouteWriter::wait_for_readers`]`(e)` returning guarantees every
+//! in-flight admission that could still be routing by a pre-`e` table has
+//! unpinned — the quiesce fence of the migration protocol
+//! (`server` module docs, §Live migration) is then safe to drop.  A pinned
+//! snapshot may resolve by a table *newer* than its announced epoch (the
+//! writer raced the pointer load); that is conservative in the only
+//! direction that matters: a slot value of `e` never hides a table older
+//! than `e`.
+//!
+//! Invariants (property-tested in `rust/tests/proptests.rs`):
+//! snapshots never observe a partially applied swap (a `RouteTable` is
+//! immutable after construction), epochs are monotone, and a reader pinned
+//! across any number of writer publishes still resolves every artifact it
+//! saw at pin time, to the same worker.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::placement::Placement;
+use super::shard::shard_for;
+
+/// Slot value of a reader that is not currently pinned.
+const IDLE: u64 = u64::MAX;
+
+/// One immutable routing epoch: the complete artifact → worker function.
+///
+/// Resolution order is pins → start placement → artifact hash.  Pins are
+/// written only by the single writer (migrations pin the artifact at its
+/// new worker; plan adoptions pin every planned artifact at its *current*
+/// worker so adopting a plan changes zero routes — only the fenced
+/// migrations that follow do).
+#[derive(Clone, Debug)]
+pub struct RouteTable {
+    epoch: u64,
+    pins: BTreeMap<String, usize>,
+    placement: Option<Arc<Placement>>,
+    workers: usize,
+    n_shards: usize,
+}
+
+impl RouteTable {
+    /// The epoch this table was published at (0 for the initial table).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Worker count the table routes over.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Resolve `artifact` to its worker: pinned route, else the start
+    /// placement's assignment (ignored when it names a worker outside the
+    /// pool), else the deterministic artifact hash.  Total and pure — the
+    /// same table resolves the same name to the same worker forever.
+    pub fn worker_for(&self, artifact: &str) -> usize {
+        if let Some(&w) = self.pins.get(artifact) {
+            return w;
+        }
+        self.placement
+            .as_ref()
+            .and_then(|p| p.worker_for(artifact))
+            .filter(|&w| w < self.workers)
+            .unwrap_or_else(|| shard_for(artifact, self.n_shards) % self.workers)
+    }
+
+    /// The pinned route for `artifact`, when one exists.
+    pub fn pinned(&self, artifact: &str) -> Option<usize> {
+        self.pins.get(artifact).copied()
+    }
+
+    /// Every pinned route, in name order.
+    pub fn pins(&self) -> &BTreeMap<String, usize> {
+        &self.pins
+    }
+}
+
+/// State shared between the writer and every reader handle.
+struct RouterShared {
+    /// Borrow of the most recently published table.  Valid to dereference
+    /// for the shared state's whole lifetime: `retired` owns every table
+    /// ever published and is only drained on drop.
+    current: AtomicPtr<RouteTable>,
+    /// Epoch of the most recently published table.  Published *after* the
+    /// pointer, so a reader that observed epoch `e` loads a table of epoch
+    /// ≥ `e` — never older.
+    epoch: AtomicU64,
+    /// Owns every published table (keeps `current` dereferenceable).
+    retired: Mutex<Vec<Arc<RouteTable>>>,
+    /// One epoch-announcement slot per reader handle ever registered
+    /// (`IDLE` when the reader is between pins or dropped).
+    slots: Mutex<Vec<Arc<AtomicU64>>>,
+}
+
+impl Drop for RouterShared {
+    fn drop(&mut self) {
+        // invalidate the raw pointer before the retired list frees its
+        // target; nothing can be pinned here (readers hold the Arc)
+        self.current = AtomicPtr::new(std::ptr::null_mut());
+    }
+}
+
+/// The single-writer handle: owns route publication and the reader fence.
+///
+/// Exactly one exists per server (the coordinator thread).  Readers are
+/// minted with [`RouteWriter::reader`] and may be moved to other threads.
+pub struct RouteWriter {
+    shared: Arc<RouterShared>,
+    /// Writer-side clone of the latest table (spares the writer the
+    /// raw-pointer dance; it is the only thread that replaces it).
+    latest: Arc<RouteTable>,
+}
+
+impl RouteWriter {
+    /// A router at epoch 0 with no pins: `placement` (when given) over the
+    /// `shard_for(name, n_shards) % workers` hash.
+    pub fn new(workers: usize, n_shards: usize, placement: Option<Arc<Placement>>) -> RouteWriter {
+        assert!(workers > 0, "a router needs at least one worker");
+        let latest = Arc::new(RouteTable {
+            epoch: 0,
+            pins: BTreeMap::new(),
+            placement,
+            workers,
+            n_shards: n_shards.max(1),
+        });
+        let shared = Arc::new(RouterShared {
+            current: AtomicPtr::new(Arc::as_ptr(&latest) as *mut RouteTable),
+            epoch: AtomicU64::new(0),
+            retired: Mutex::new(vec![latest.clone()]),
+            slots: Mutex::new(Vec::new()),
+        });
+        RouteWriter { shared, latest }
+    }
+
+    /// The current table, writer-side (no pin needed: only this handle
+    /// replaces it, and callers on the writer thread cannot race it).
+    pub fn current(&self) -> &Arc<RouteTable> {
+        &self.latest
+    }
+
+    /// Register a reader handle (its own epoch slot, initially idle).
+    pub fn reader(&self) -> RouteReader {
+        let slot = Arc::new(AtomicU64::new(IDLE));
+        self.shared.slots.lock().unwrap().push(slot.clone());
+        RouteReader { shared: self.shared.clone(), slot }
+    }
+
+    /// Publish a new epoch whose pin set is the current one transformed by
+    /// `edit`.  Returns the new epoch.  The swap is pointer-then-epoch so
+    /// no reader can pair the new epoch with the old table.
+    pub fn publish(&mut self, edit: impl FnOnce(&mut BTreeMap<String, usize>)) -> u64 {
+        let mut pins = self.latest.pins.clone();
+        edit(&mut pins);
+        let epoch = self.latest.epoch + 1;
+        let next = Arc::new(RouteTable {
+            epoch,
+            pins,
+            placement: self.latest.placement.clone(),
+            workers: self.latest.workers,
+            n_shards: self.latest.n_shards,
+        });
+        self.shared.retired.lock().unwrap().push(next.clone());
+        self.shared
+            .current
+            .store(Arc::as_ptr(&next) as *mut RouteTable, Ordering::SeqCst);
+        self.shared.epoch.store(epoch, Ordering::SeqCst);
+        self.latest = next;
+        epoch
+    }
+
+    /// Pin `artifact` to `worker` in a new epoch (the migration route
+    /// swap).  Returns the new epoch.
+    pub fn pin_route(&mut self, artifact: &str, worker: usize) -> u64 {
+        assert!(worker < self.latest.workers, "pin to a worker outside the pool");
+        self.publish(|pins| {
+            pins.insert(artifact.to_string(), worker);
+        })
+    }
+
+    /// Block until every reader is idle or pinned at epoch ≥ `epoch` — the
+    /// migration protocol's grace period.  After this returns, no admission
+    /// can still be routing by a table older than `epoch`, so every request
+    /// for a migrating artifact admitted before the route swap has already
+    /// reached the source worker's queue and the quiesce fence will drain
+    /// it.  Must only be called from the writer thread (a reader waiting on
+    /// itself would spin forever).
+    pub fn wait_for_readers(&self, epoch: u64) {
+        loop {
+            let settled = {
+                let slots = self.shared.slots.lock().unwrap();
+                slots.iter().all(|s| {
+                    let v = s.load(Ordering::SeqCst);
+                    v == IDLE || v >= epoch
+                })
+            };
+            if settled {
+                return;
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// A per-thread reader handle: pins snapshots of the current route table.
+///
+/// Each handle owns one epoch slot; dropping the handle parks the slot
+/// idle forever (slots are never removed — a server mints a handful, not
+/// millions).
+pub struct RouteReader {
+    shared: Arc<RouterShared>,
+    slot: Arc<AtomicU64>,
+}
+
+impl RouteReader {
+    /// Pin the current table: announce the observed epoch in this reader's
+    /// slot, re-validate it (the store-load fence against the writer's
+    /// pointer-then-epoch publish), then load the pointer.  The returned
+    /// guard keeps the writer's [`RouteWriter::wait_for_readers`] honest
+    /// until it drops; hold it across the *entire* admission decision
+    /// including the enqueue, and never across a blocking wait.  One pin
+    /// may be live per reader at a time (a second pin would overwrite the
+    /// slot announcement).
+    pub fn pin(&self) -> Snapshot {
+        loop {
+            let e = self.shared.epoch.load(Ordering::SeqCst);
+            self.slot.store(e, Ordering::SeqCst);
+            if self.shared.epoch.load(Ordering::SeqCst) == e {
+                let table = self.shared.current.load(Ordering::SeqCst);
+                debug_assert!(
+                    unsafe { &*table }.epoch() >= e,
+                    "publish order is pointer, then epoch"
+                );
+                return Snapshot {
+                    _shared: self.shared.clone(),
+                    slot: self.slot.clone(),
+                    table,
+                };
+            }
+            // a publish raced the announcement: retract and retry so the
+            // slot never advertises an epoch older than the one we use
+            self.slot.store(IDLE, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for RouteReader {
+    fn drop(&mut self) {
+        self.slot.store(IDLE, Ordering::SeqCst);
+    }
+}
+
+/// A pinned, immutable view of one routing epoch (derefs to
+/// [`RouteTable`]).  Dropping it retires the pin.  Owns its handles (no
+/// borrow of the reader), so admission can hold a pin across `&mut self`
+/// bookkeeping; the raw table pointer keeps it `!Send` — a pin lives and
+/// dies on the thread that took it.
+pub struct Snapshot {
+    /// Keeps the retired list — and therefore `table`'s target — alive.
+    _shared: Arc<RouterShared>,
+    slot: Arc<AtomicU64>,
+    table: *const RouteTable,
+}
+
+impl std::ops::Deref for Snapshot {
+    type Target = RouteTable;
+
+    fn deref(&self) -> &RouteTable {
+        // Safety: `_shared.retired` owns every table ever published and is
+        // only drained when the shared state drops, which `_shared` forbids
+        // while this snapshot lives.
+        unsafe { &*self.table }
+    }
+}
+
+impl Drop for Snapshot {
+    fn drop(&mut self) {
+        self.slot.store(IDLE, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn resolution_order_is_pin_then_placement_then_hash() {
+        use crate::analysis::InterferenceModel;
+        use crate::hw::profile_by_name;
+        use crate::telemetry::serving_mix_profiles;
+
+        let cpu = profile_by_name("a53").unwrap().cpu;
+        let profiles = serving_mix_profiles(&cpu);
+        let plan = Arc::new(super::super::placement::plan(
+            &InterferenceModel::new(&cpu),
+            &profiles,
+            2,
+        ));
+        let planned = profiles.keys().next().unwrap().clone();
+        let mut w = RouteWriter::new(2, 8, Some(plan.clone()));
+
+        // placement wins over the hash for planned artifacts
+        assert_eq!(w.current().worker_for(&planned), plan.worker_for(&planned).unwrap());
+        // hash fallback for everything else
+        assert_eq!(w.current().worker_for("unplanned"), shard_for("unplanned", 8) % 2);
+        // a pin beats both
+        let pinned_to = 1 - plan.worker_for(&planned).unwrap();
+        w.pin_route(&planned, pinned_to);
+        assert_eq!(w.current().worker_for(&planned), pinned_to);
+        assert_eq!(w.current().pinned(&planned), Some(pinned_to));
+    }
+
+    #[test]
+    fn publishes_bump_the_epoch_monotonically() {
+        let mut w = RouteWriter::new(2, 8, None);
+        assert_eq!(w.current().epoch(), 0);
+        for k in 1..=5u64 {
+            let e = w.pin_route("a", (k % 2) as usize);
+            assert_eq!(e, k);
+            assert_eq!(w.current().epoch(), k);
+        }
+    }
+
+    #[test]
+    fn pinned_snapshot_keeps_its_epoch_while_the_writer_advances() {
+        let mut w = RouteWriter::new(2, 8, None);
+        w.pin_route("a", 0);
+        let reader = w.reader();
+        let snap = reader.pin();
+        let at_pin = snap.worker_for("a");
+        w.pin_route("a", 1);
+        // the pinned view is immutable: same resolution as at pin time,
+        // while the writer already sees the new epoch
+        assert_eq!(snap.worker_for("a"), at_pin);
+        assert_eq!(w.current().worker_for("a"), 1);
+        assert!(w.current().epoch() > snap.epoch());
+    }
+
+    #[test]
+    fn wait_for_readers_blocks_on_a_stale_pin_and_releases_on_drop() {
+        let mut w = RouteWriter::new(2, 8, None);
+        let reader = w.reader();
+        let snap = reader.pin(); // pinned at epoch 0
+        let target = w.pin_route("hot", 1);
+
+        let done = Arc::new(AtomicBool::new(false));
+        let handle = {
+            // the writer side of the fence, on its own thread so the test
+            // can observe it blocking
+            let done = done.clone();
+            let shared_writer_view = (w.shared.clone(), target);
+            std::thread::spawn(move || {
+                let (shared, epoch) = shared_writer_view;
+                loop {
+                    let settled = shared.slots.lock().unwrap().iter().all(|s| {
+                        let v = s.load(Ordering::SeqCst);
+                        v == IDLE || v >= epoch
+                    });
+                    if settled {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                done.store(true, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!done.load(Ordering::SeqCst), "fence must wait on the stale pin");
+        drop(snap);
+        handle.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn concurrent_readers_never_observe_a_partial_swap() {
+        // the writer always pins the pair ("x", "y") to the same worker in
+        // one publish; a torn or partially applied swap would let a reader
+        // see them split
+        let mut w = RouteWriter::new(4, 16, None);
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = w.reader();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut last_epoch = 0u64;
+                    let mut observed = 0usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        let snap = r.pin();
+                        assert_eq!(
+                            snap.worker_for("x"),
+                            snap.worker_for("y"),
+                            "partial swap observed at epoch {}",
+                            snap.epoch()
+                        );
+                        assert!(snap.epoch() >= last_epoch, "epochs ran backwards");
+                        last_epoch = snap.epoch();
+                        observed += 1;
+                    }
+                    observed
+                })
+            })
+            .collect();
+        for k in 0..500usize {
+            let target = k % 4;
+            let e = w.publish(|pins| {
+                pins.insert("x".into(), target);
+                pins.insert("y".into(), target);
+            });
+            if k % 8 == 0 {
+                w.wait_for_readers(e);
+            }
+        }
+        stop.store(true, Ordering::SeqCst);
+        for h in readers {
+            assert!(h.join().unwrap() > 0, "reader never pinned");
+        }
+    }
+}

@@ -53,29 +53,59 @@
 //! [`RebalanceMode::Live`] closes the telemetry → scheduling feedback loop
 //! *mid-stream*: when the observed per-worker working-set pressure diverges
 //! from the active plan past `ServeConfig::rebalance_threshold`, the
-//! admission thread re-plans over the artifacts actually being served and
+//! coordinator thread re-plans over the artifacts actually being served and
 //! moves the ones whose assignment changed ([`ShardedServer::maybe_rebalance`];
 //! [`ShardedServer::migrate`] is the forced variant the chaos tests drive).
-//! One artifact moves in three steps:
+//! One artifact moves in four steps, fenced so the protocol stays correct
+//! even while other threads admit concurrently (§Admission concurrency):
 //!
-//! 1. **quiesce** — a `Quiesce` fence is sent down the source worker's
-//!    request channel.  Channel FIFO means every request admitted before
-//!    the fence is already in the worker's local queues when the fence is
-//!    dequeued; the worker extracts and serves *only the migrating
-//!    artifact's* queued requests (other shard queues are untouched), then
-//!    exports the artifact's LRU response-cache entry and transferable
-//!    executor state ([`Executor::export_state`]) and acks;
-//! 2. **adopt** — the state is forwarded down the target worker's channel.
-//!    Channel FIFO again guarantees it is installed before any post-swap
-//!    request for the artifact reaches the target;
-//! 3. **swap** — only after the ack does the admission thread update its
-//!    routing table, so the first request routed to the target is
-//!    *causally after* the source's last response (the fence ack), which
-//!    is what preserves per-artifact FIFO end to end.
+//! 1. **hold** — the target worker is told to *pen* incoming requests for
+//!    the artifact (a `Hold` fence down its channel): they queue in
+//!    arrival order but are not served until the state arrives;
+//! 2. **swap + grace** — the coordinator publishes the new route as a
+//!    fresh epoch of the [`super::routing`] table (one atomic pointer
+//!    swap), then waits for every admission reader to advance past the
+//!    old epoch ([`super::routing::RouteWriter::wait_for_readers`]).
+//!    After the grace period, every request routed by the *old* table has
+//!    already reached the source's channel, and every *new* admission
+//!    routes to the target — where the pen holds it;
+//! 3. **quiesce** — a `Quiesce` fence is sent down the source worker's
+//!    request channel.  Channel FIFO means every pre-swap request is
+//!    already in the worker's local queues when the fence is dequeued;
+//!    the worker extracts and serves *only the migrating artifact's*
+//!    queued requests (other shard queues are untouched), then exports
+//!    the artifact's LRU response-cache entry and transferable executor
+//!    state ([`Executor::export_state`]) and acks;
+//! 4. **adopt** — the state is forwarded down the target worker's
+//!    channel, which installs it and releases the pen.  The ack → adopt →
+//!    release ordering makes every penned response *causally after* the
+//!    source's last response, which is what preserves per-artifact FIFO
+//!    end to end.
 //!
-//! No request is ever dropped or duplicated: quiesce serves queued work
-//! through the ordinary path and the route swap is a single-threaded
-//! in-memory update.  Every move is logged as a [`MigrationRecord`].
+//! No request is ever dropped or duplicated: quiesce and the pen release
+//! serve queued work through the ordinary path, and the route swap is one
+//! atomic publish.  Every move is logged as a [`MigrationRecord`].
+//!
+//! # Admission concurrency
+//!
+//! Admission used to serialize on the coordinator thread's authoritative
+//! `routes: BTreeMap` — the next throughput ceiling once the operators
+//! run at the cache bound.  Routing now lives in an epoch-versioned,
+//! immutable [`super::routing::RouteTable`]: admission pins a snapshot
+//! with one atomic load, makes the *entire* disposition decision
+//! (catalog check, route, shed/degrade, enqueue) against that one table,
+//! and unpins.  [`ShardedServer::admission_handle`] mints a movable
+//! [`AdmissionHandle`] per admission thread; `serve --admission-threads N`
+//! (and [`ServeConfig::admission_threads`]) drives the built-in streams
+//! through N such handles, partitioned by artifact hash so per-artifact
+//! admission order — and therefore the FIFO invariant — is preserved per
+//! submitting thread.  The coordinator thread keeps the single-writer
+//! roles: reaping responses, folding the handles' first-touch
+//! notifications into the residency accounting, the rebalance cadence,
+//! and every route publish.  The chaos suite
+//! (`rust/tests/serve_admission.rs`) drives concurrent admission against
+//! seeded migration storms; `rust/tests/proptests.rs` pins the
+//! route-table invariants themselves.
 //!
 //! # Open-loop serving and admission control
 //!
@@ -100,8 +130,9 @@
 //! matrix.
 
 use std::any::Any;
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -123,6 +154,7 @@ use crate::util::lru::LruCache;
 use crate::util::stats::{percentile_sorted, Summary};
 
 use super::placement::{self, Placement, PlacementPolicy, RebalanceMode};
+use super::routing::{RouteReader, RouteWriter};
 use super::shard::{shard_for, ShardMetrics};
 
 /// One inference request.
@@ -157,6 +189,13 @@ pub struct Response {
     pub cached: bool,
     /// Shard that owned the request (0 for the single-threaded [`Server`]).
     pub shard: usize,
+    /// Worker that served the request (0 for front-door answers —
+    /// rejections and sheds — and for the single-threaded [`Server`]).
+    /// The coordinator's reaper decrements this worker's in-flight count,
+    /// which stays correct across migrations: a quiesce serves queued
+    /// envelopes at the source, so a request is always answered by the
+    /// worker it was admitted to.
+    pub worker: usize,
     /// Answered at the front door by admission control
     /// ([`AdmissionMode::Shed`], or [`AdmissionMode::Degrade`] with no
     /// smaller variant available).  Shed responses are not failures:
@@ -967,6 +1006,7 @@ impl Server {
                                 payload: None,
                                 cached: false,
                                 shard: 0,
+                                worker: 0,
                                 shed: false,
                                 degraded_from: None,
                             });
@@ -999,6 +1039,7 @@ impl Server {
             payload: None,
             cached: false,
             shard: 0,
+            worker: 0,
             shed: false,
             degraded_from: None,
         }
@@ -1077,6 +1118,14 @@ pub struct ServeConfig {
     /// lattice fp32 → int8 → bit-serial at the same N.  Ignored under the
     /// other admission modes.
     pub tier_policy: TierPolicy,
+    /// Admission threads the built-in drives
+    /// ([`ShardedServer::serve_stream`] / [`ShardedServer::serve_open_loop`])
+    /// use: 1 (the default) keeps the classic coordinator-thread admission
+    /// loop; N > 1 partitions the stream by artifact hash across N
+    /// [`AdmissionHandle`]s that classify, route and enqueue concurrently
+    /// against pinned route snapshots (module docs, §Admission
+    /// concurrency) while the coordinator reaps, rebalances and migrates.
+    pub admission_threads: usize,
     /// Root of the persistent compiled-artifact cache
     /// ([`crate::runtime::ArtifactCache`]).  When set, each worker opens
     /// the store on startup: first-touch preparation loads warm artifacts
@@ -1107,6 +1156,7 @@ impl ServeConfig {
             admission: AdmissionMode::None,
             admission_limit: 64,
             tier_policy: TierPolicy::Pinned,
+            admission_threads: 1,
             cache_dir: None,
         }
     }
@@ -1134,6 +1184,14 @@ impl ServeConfig {
     /// downshift) — see [`TierPolicy`].
     pub fn with_tier_policy(mut self, policy: TierPolicy) -> Self {
         self.tier_policy = policy;
+        self
+    }
+
+    /// Admit the built-in drives' streams across `threads` concurrent
+    /// admission threads (floored at 1 — the classic single-threaded
+    /// loop).  See [`ServeConfig::admission_threads`].
+    pub fn with_admission_threads(mut self, threads: usize) -> Self {
+        self.admission_threads = threads.max(1);
         self
     }
 
@@ -1203,20 +1261,27 @@ struct Envelope {
     degraded_from: Option<String>,
 }
 
-/// Everything the admission thread can send a worker: ordinary requests
-/// plus the two control messages of the migration protocol.  Channel FIFO
-/// is what makes the protocol correct — a `Quiesce` fence arrives after
-/// every pre-swap request, an `Adopt` before every post-swap one.
+/// Everything an admission thread can send a worker: ordinary requests
+/// plus the control messages of the migration protocol.  Channel FIFO is
+/// what makes the protocol correct — a `Hold` fence arrives before any
+/// post-swap request for the migrating artifact, a `Quiesce` fence after
+/// every pre-swap one, and the `Adopt` that releases the hold after the
+/// source's ack.
 enum WorkerMsg {
     /// An admitted request.
     Req(Envelope),
-    /// Migration fence: serve everything already queued for `artifact`,
-    /// export its state, ack on `reply`.
+    /// Migration fence (target side): pen incoming requests for
+    /// `artifact` — queue them in arrival order but do not serve them —
+    /// until the `Adopt` carrying the artifact's state releases the pen.
+    Hold { artifact: String },
+    /// Migration fence (source side): serve everything already queued for
+    /// `artifact`, export its state, ack on `reply`.
     Quiesce {
         artifact: String,
         reply: mpsc::Sender<ArtifactState>,
     },
-    /// Install state another worker exported for `state.artifact`.
+    /// Install state another worker exported for `state.artifact`, and
+    /// release any pen held for it.
     Adopt { state: ArtifactState },
     /// Migration pre-warm: load `artifact` from the persistent artifact
     /// cache *now*, ahead of the `Adopt` that will follow, so the target
@@ -1263,10 +1328,14 @@ pub struct ShardedServer {
     catalog: Option<Arc<Manifest>>,
     profiles: Option<Arc<BTreeMap<String, CacheProfile>>>,
     /// The cache-aware plan, when the config asked for one and profiles
-    /// were available; None under hash placement.
+    /// were available; None under hash placement.  Routing reads it
+    /// through the route table's snapshot, not this field.
     placement: Option<Arc<Placement>>,
-    /// The plan adopted by a live rebalance, superseding `placement` for
-    /// routing, pressure prediction and the drain-time hook.
+    /// The plan adopted by a live rebalance — coordinator-side only
+    /// (pressure prediction and the drain-time hook).  It never routes:
+    /// a live plan covers exactly the observed artifacts, and adoption
+    /// moves each diverging one with the fenced migration protocol, so
+    /// the route table is always at least as current as this plan.
     live_plan: Option<Arc<Placement>>,
     /// CPU the plan was priced against (also used by the rebalance hook).
     cpu: CpuSpec,
@@ -1276,20 +1345,31 @@ pub struct ShardedServer {
     senders: Vec<mpsc::Sender<WorkerMsg>>,
     resp_rx: mpsc::Receiver<Response>,
     handles: Vec<thread::JoinHandle<(Vec<ShardMetrics>, Vec<PrepRecord>)>>,
-    admitted: u64,
     rejected: Vec<Response>,
     admission: AdmissionMode,
     admission_limit: usize,
     tier_policy: TierPolicy,
-    /// In-flight requests per worker: incremented at admission,
-    /// decremented when the worker's response is reaped — the queue-depth
-    /// signal admission control acts on.
-    in_flight: Vec<u64>,
-    /// Which worker each in-flight request id was admitted to, so the
-    /// decrement lands on the right counter even after a route swap
-    /// (envelopes never move between workers: a quiesce serves them at
-    /// the source).
-    in_flight_ids: HashMap<u64, usize>,
+    /// Admission threads the concurrent drives partition the stream
+    /// across (1 = the classic single-threaded coordinator loop).
+    admission_threads: usize,
+    /// Single-writer handle on the epoch-versioned route table
+    /// ([`super::routing`]): the coordinator publishes placement pins and
+    /// migration swaps here; admission threads read snapshots.
+    router: RouteWriter,
+    /// Counters shared with every [`AdmissionHandle`] (in-flight per
+    /// worker, resident bytes per worker, total admitted).
+    shared: Arc<AdmissionShared>,
+    /// Every artifact ever admitted — the coordinator's view, fed by the
+    /// handles' first-touch notices (lags concurrent admission by at most
+    /// one `coordinate` pass).
+    observed: BTreeSet<String>,
+    /// First-touch notices from admission handles: `(artifact, worker)`.
+    observed_tx: mpsc::Sender<(String, usize)>,
+    observed_rx: mpsc::Receiver<(String, usize)>,
+    /// Admitted count at the last live divergence check (concurrent
+    /// drives can't use a `% check_every` cadence — admissions land in
+    /// batches between `coordinate` calls).
+    last_check: u64,
     /// Responses admission control produced at the front door under
     /// `Shed`/`Degrade`-without-a-variant.
     shed: Vec<Response>,
@@ -1299,19 +1379,97 @@ pub struct ShardedServer {
     /// `(seconds since start, total in-flight)` — one sample per
     /// submission.
     depth_samples: Vec<(f64, u64)>,
-    /// Σ `working_set_bytes` of each worker's profiled resident
-    /// artifacts, maintained incrementally on route pin and migration —
-    /// the cheap [`WorkerPressure`] signal the admission check reads.
-    resident_bytes: Vec<u64>,
-    /// The authoritative artifact→worker routing table: populated on an
-    /// artifact's first admission, mutated only by migrations.
-    routes: BTreeMap<String, usize>,
     /// Distinct artifacts resident per worker (working-set accounting;
     /// migrations move entries between sets).
     worker_artifacts: Vec<BTreeSet<String>>,
     /// Completed migrations, in execution order.
     migrations: Vec<MigrationRecord>,
     started: Instant,
+}
+
+/// Counters shared between the coordinator and every [`AdmissionHandle`].
+/// All loads/stores are `Relaxed`: these are statistics and backpressure
+/// signals, not synchronization — the route table's SeqCst protocol and
+/// the mpsc channels carry every ordering the protocol needs.
+struct AdmissionShared {
+    /// In-flight requests per worker: incremented at admission (any
+    /// thread), decremented when the coordinator reaps that worker's
+    /// response — the queue-depth signal admission control acts on.
+    in_flight: Vec<AtomicU64>,
+    /// Σ `working_set_bytes` of each worker's profiled resident
+    /// artifacts, written by the coordinator on first touch and
+    /// migration — the cheap [`WorkerPressure`] signal the admission
+    /// check reads.
+    resident_bytes: Vec<AtomicU64>,
+    /// Total admitted requests (drives the rebalance cadence and the
+    /// migration log's `at_request` stamps).
+    admitted: AtomicU64,
+}
+
+impl AdmissionShared {
+    fn new(workers: usize) -> Self {
+        AdmissionShared {
+            in_flight: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            resident_bytes: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            admitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Total in-flight across workers (the queue-depth sample).
+    fn depth(&self) -> u64 {
+        self.in_flight.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The in-flight limit for `worker` right now: the configured limit,
+    /// halved when the worker's profiled resident working set overflows
+    /// the L2 — a cache-pressured worker drains slower, so it earns a
+    /// shorter queue (the [`WorkerPressure`] signal feeding admission).
+    fn effective_limit(&self, worker: usize, limit: u64, l2_bytes: u64) -> u64 {
+        if self.resident_bytes[worker].load(Ordering::Relaxed) > l2_bytes {
+            (limit / 2).max(1)
+        } else {
+            limit
+        }
+    }
+}
+
+/// Front-door rejection (unknown artifact).
+fn reject_response(req: Request, enqueued: Instant) -> Response {
+    Response {
+        id: req.id,
+        artifact: req.artifact,
+        exec_seconds: 0.0,
+        latency_seconds: enqueued.elapsed().as_secs_f64(),
+        ok: false,
+        error: Some("artifact not in manifest (rejected at admission)".into()),
+        payload: None,
+        cached: false,
+        shard: 0,
+        worker: 0,
+        shed: false,
+        degraded_from: None,
+    }
+}
+
+/// Front-door shed disposition.
+fn shed_response(req: Request, enqueued: Instant) -> Response {
+    Response {
+        id: req.id,
+        artifact: req.artifact,
+        exec_seconds: 0.0,
+        // the shed's latency sample is its time-to-rejection — tiny, but
+        // a real measurement, so shed traffic stays visible in the
+        // percentile population
+        latency_seconds: enqueued.elapsed().as_secs_f64(),
+        ok: false,
+        error: Some("shed by admission control (worker at in-flight limit)".into()),
+        payload: None,
+        cached: false,
+        shard: 0,
+        worker: 0,
+        shed: true,
+        degraded_from: None,
+    }
 }
 
 impl ShardedServer {
@@ -1360,12 +1518,13 @@ impl ShardedServer {
                 .expect("spawn serve worker");
             handles.push(handle);
         }
+        let (observed_tx, observed_rx) = mpsc::channel();
         ShardedServer {
             n_shards,
             workers,
             catalog: config.catalog,
             profiles: config.profiles,
-            placement: placement_plan,
+            placement: placement_plan.clone(),
             live_plan: None,
             cpu,
             rebalance_threshold: config.rebalance_threshold,
@@ -1374,18 +1533,20 @@ impl ShardedServer {
             senders,
             resp_rx,
             handles,
-            admitted: 0,
             rejected: Vec::new(),
             admission: config.admission,
             admission_limit: config.admission_limit.max(1),
             tier_policy: config.tier_policy,
-            in_flight: vec![0; workers],
-            in_flight_ids: HashMap::new(),
+            admission_threads: config.admission_threads.max(1),
+            router: RouteWriter::new(workers, n_shards, placement_plan),
+            shared: Arc::new(AdmissionShared::new(workers)),
+            observed: BTreeSet::new(),
+            observed_tx,
+            observed_rx,
+            last_check: 0,
             shed: Vec::new(),
             collected: Vec::new(),
             depth_samples: Vec::new(),
-            resident_bytes: vec![0; workers],
-            routes: BTreeMap::new(),
             worker_artifacts: vec![BTreeSet::new(); workers],
             migrations: Vec::new(),
             started: Instant::now(),
@@ -1405,9 +1566,16 @@ impl ShardedServer {
     }
 
     /// Worker currently serving `artifact` (None before its first
-    /// admission, unless a forced migration pinned it).
+    /// admission, unless a forced migration pinned it).  Routes are
+    /// deterministic even before first admission; this keeps the
+    /// pre-snapshot "seen" semantics for callers that probe placement.
     pub fn route_of(&self, artifact: &str) -> Option<usize> {
-        self.routes.get(artifact).copied()
+        let table = self.router.current();
+        if self.observed.contains(artifact) || table.pinned(artifact).is_some() {
+            Some(table.worker_for(artifact))
+        } else {
+            None
+        }
     }
 
     /// Migrations performed so far, in execution order.
@@ -1423,6 +1591,12 @@ impl ShardedServer {
     /// Worker-thread count of this server.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Current route-table epoch (0 at start; bumped only by migrations'
+    /// route swaps — admission never publishes).
+    pub fn route_epoch(&self) -> u64 {
+        self.router.current().epoch()
     }
 
     /// Shard a request and hand it to the owning worker — or answer it at
@@ -1441,26 +1615,23 @@ impl ShardedServer {
         let enqueued = Instant::now();
         if let Some(cat) = &self.catalog {
             if cat.by_name(&req.artifact).is_none() {
-                self.rejected.push(Response {
-                    id: req.id,
-                    artifact: req.artifact,
-                    exec_seconds: 0.0,
-                    latency_seconds: enqueued.elapsed().as_secs_f64(),
-                    ok: false,
-                    error: Some("artifact not in manifest (rejected at admission)".into()),
-                    payload: None,
-                    cached: false,
-                    shard: 0,
-                    shed: false,
-                    degraded_from: None,
-                });
+                self.rejected.push(reject_response(req, enqueued));
                 self.sample_depth();
                 return;
             }
         }
-        let worker = self.route_for(&req.artifact);
+        // One snapshot read routes the whole decision — the old
+        // `routes.get` + first-admission re-insert double lookup is gone
+        // (regression-tested by `admit_hot_path_is_one_snapshot_read`).
+        let table = self.router.current().clone();
+        let worker = table.worker_for(&req.artifact);
         if self.admission != AdmissionMode::None
-            && self.in_flight[worker] >= self.effective_limit(worker)
+            && self.shared.in_flight[worker].load(Ordering::Relaxed)
+                >= self.shared.effective_limit(
+                    worker,
+                    self.admission_limit as u64,
+                    self.cpu.l2.size_bytes as u64,
+                )
         {
             match self.admission {
                 AdmissionMode::Degrade => {
@@ -1480,13 +1651,13 @@ impl ShardedServer {
                     if let Some(smaller) = smaller {
                         let original = req.artifact;
                         let degraded = Request { id: req.id, artifact: smaller };
-                        let worker = self.route_for(&degraded.artifact);
+                        let worker = table.worker_for(&degraded.artifact);
                         self.dispatch(degraded, worker, enqueued, Some(original));
                     } else {
-                        self.shed_now(req, enqueued);
+                        self.shed.push(shed_response(req, enqueued));
                     }
                 }
-                _ => self.shed_now(req, enqueued),
+                _ => self.shed.push(shed_response(req, enqueued)),
             }
             self.sample_depth();
             return;
@@ -1495,40 +1666,10 @@ impl ShardedServer {
         self.sample_depth();
     }
 
-    /// Worker for `artifact`, pinning the route on first admission.  The
-    /// routing table is authoritative: first admission computes the route
-    /// (live plan, else starting plan, else the shard→worker hash) and
-    /// pins it; only a migration's fenced swap may change it afterwards.
-    /// Per-artifact FIFO survives because an artifact always maps to one
-    /// shard queue on one (consistently chosen) worker.
-    fn route_for(&mut self, artifact: &str) -> usize {
-        if let Some(&w) = self.routes.get(artifact) {
-            return w;
-        }
-        // Route by the live plan, then the starting plan (a live plan
-        // only covers artifacts observed when it was adopted, so the
-        // starting plan still speaks for late arrivals), then the hash.
-        // An explicit plan built for a different worker count may name
-        // out-of-range workers; those assignments degrade to the hash
-        // route instead of indexing out of bounds.
-        let shard = shard_for(artifact, self.n_shards);
-        let w = self
-            .live_plan
-            .as_deref()
-            .and_then(|p| p.worker_for(artifact))
-            .or_else(|| self.placement.as_deref().and_then(|p| p.worker_for(artifact)))
-            .filter(|&w| w < self.workers)
-            .unwrap_or(shard % self.workers);
-        self.routes.insert(artifact.to_string(), w);
-        self.worker_artifacts[w].insert(artifact.to_string());
-        if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
-            self.resident_bytes[w] += p.working_set_bytes;
-        }
-        w
-    }
-
     /// Send one admitted request down its worker's channel, maintaining
-    /// the in-flight accounting and the live-rebalance cadence.
+    /// the in-flight accounting and the live-rebalance cadence.  (The
+    /// single-threaded coordinator path; concurrent admission goes
+    /// through [`AdmissionHandle::submit`].)
     fn dispatch(
         &mut self,
         req: Request,
@@ -1537,65 +1678,57 @@ impl ShardedServer {
         degraded_from: Option<String>,
     ) {
         let shard = shard_for(&req.artifact, self.n_shards);
-        self.admitted += 1;
-        self.in_flight[worker] += 1;
-        self.in_flight_ids.insert(req.id, worker);
+        self.note_observed(&req.artifact, worker);
+        let admitted = self.shared.admitted.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.in_flight[worker].fetch_add(1, Ordering::Relaxed);
         self.senders[worker]
             .send(WorkerMsg::Req(Envelope { req, enqueued, shard, degraded_from }))
             .expect("serve worker alive");
-        if self.rebalance == RebalanceMode::Live && self.admitted % self.check_every == 0 {
+        if self.rebalance == RebalanceMode::Live && admitted % self.check_every == 0 {
             self.maybe_rebalance();
         }
     }
 
-    /// Answer a request at the front door with the shed disposition.
-    fn shed_now(&mut self, req: Request, enqueued: Instant) {
-        self.shed.push(Response {
-            id: req.id,
-            artifact: req.artifact,
-            exec_seconds: 0.0,
-            // the shed's latency sample is its time-to-rejection — tiny,
-            // but a real measurement, so shed traffic stays visible in
-            // the percentile population
-            latency_seconds: enqueued.elapsed().as_secs_f64(),
-            ok: false,
-            error: Some("shed by admission control (worker at in-flight limit)".into()),
-            payload: None,
-            cached: false,
-            shard: 0,
-            shed: true,
-            degraded_from: None,
-        });
+    /// First-touch bookkeeping: the first admission of `artifact` makes it
+    /// resident on `worker` (working-set accounting and the admission
+    /// pressure signal).  Idempotent — later touches, including notices
+    /// arriving after a migration already claimed the artifact, are no-ops.
+    fn note_observed(&mut self, artifact: &str, worker: usize) {
+        if self.observed.insert(artifact.to_string()) {
+            self.worker_artifacts[worker].insert(artifact.to_string());
+            if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
+                self.shared.resident_bytes[worker]
+                    .fetch_add(p.working_set_bytes, Ordering::Relaxed);
+            }
+        }
     }
 
-    /// The in-flight limit for `worker` right now: the configured limit,
-    /// halved when the worker's profiled resident working set overflows
-    /// the L2 — a cache-pressured worker drains slower, so it earns a
-    /// shorter queue (the [`WorkerPressure`] signal feeding admission).
-    fn effective_limit(&self, worker: usize) -> u64 {
-        let limit = self.admission_limit as u64;
-        if self.resident_bytes[worker] > self.cpu.l2.size_bytes as u64 {
-            (limit / 2).max(1)
-        } else {
-            limit
+    /// Absorb first-touch notices queued by concurrent admission handles.
+    fn drain_observed(&mut self) {
+        while let Ok((artifact, worker)) = self.observed_rx.try_recv() {
+            self.note_observed(&artifact, worker);
         }
     }
 
     /// Drain every response already sitting in the channel, updating the
-    /// in-flight accounting.
+    /// in-flight accounting.  `Response::worker` pairs every decrement
+    /// with the dispatch-side increment exactly once — front-door answers
+    /// (rejects, sheds) never enter the channel.
     fn reap(&mut self) {
         while let Ok(r) = self.resp_rx.try_recv() {
-            if let Some(w) = self.in_flight_ids.remove(&r.id) {
-                self.in_flight[w] = self.in_flight[w].saturating_sub(1);
-            }
+            let _ = self.shared.in_flight[r.worker].fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(1)),
+            );
             self.collected.push(r);
         }
     }
 
     /// Record one `(elapsed, total in-flight)` sample.
     fn sample_depth(&mut self) {
-        let depth: u64 = self.in_flight.iter().sum();
-        self.depth_samples.push((self.started.elapsed().as_secs_f64(), depth));
+        self.depth_samples
+            .push((self.started.elapsed().as_secs_f64(), self.shared.depth()));
     }
 
     /// The live divergence check ([`RebalanceMode::Live`]; run
@@ -1616,7 +1749,8 @@ impl ShardedServer {
             return 0;
         }
         let Some(profiles) = self.profiles.clone() else { return 0 };
-        if !self.routes.keys().any(|a| profiles.contains_key(a)) {
+        self.drain_observed();
+        if !self.observed.iter().any(|a| profiles.contains_key(a)) {
             return 0; // nothing profiled has been served: nothing to plan
         }
         // the cheap gate first — a quiet check costs one pressure pass,
@@ -1631,8 +1765,8 @@ impl ShardedServer {
             return 0;
         }
         let observed: BTreeMap<String, CacheProfile> = self
-            .routes
-            .keys()
+            .observed
+            .iter()
             .filter_map(|a| profiles.get(a).map(|p| (a.clone(), p.clone())))
             .collect();
         let candidate = placement::plan(
@@ -1640,15 +1774,19 @@ impl ShardedServer {
             &observed,
             self.workers,
         );
+        let table = self.router.current().clone();
         let moves: Vec<(String, usize)> = candidate
             .assignments
             .iter()
-            .filter(|(a, &w)| self.routes.get(a.as_str()).is_some_and(|&cur| cur != w))
+            .filter(|(a, &w)| table.worker_for(a) != w)
             .map(|(a, &w)| (a.clone(), w))
             .collect();
         // Adopt the candidate even when nothing moves: it covers exactly
         // the observed set, so the divergence signal resets and the check
-        // stays quiet until the mix drifts again.
+        // stays quiet until the mix drifts again.  Adoption changes zero
+        // routes — the plan stays coordinator-side, and each diverging
+        // artifact moves through the fenced protocol below, so concurrent
+        // admission never sees an unfenced route change.
         self.live_plan = Some(Arc::new(candidate));
         for (artifact, to) in &moves {
             self.migrate_with(artifact, *to, divergence, false);
@@ -1665,14 +1803,19 @@ impl ShardedServer {
     /// When `to_worker` is out of range.
     pub fn migrate(&mut self, artifact: &str, to_worker: usize) -> Option<MigrationRecord> {
         assert!(to_worker < self.workers, "target worker {to_worker} out of range");
-        if self.routes.get(artifact) == Some(&to_worker) {
+        if self.router.current().worker_for(artifact) == to_worker {
             return None;
         }
         Some(self.migrate_with(artifact, to_worker, 0.0, true))
     }
 
-    /// The three-step migration protocol (see the module docs): quiesce
-    /// the source, hand the state to the target, swap the route.
+    /// The four-step migration protocol (see the module docs): hold the
+    /// target, swap the route and wait out the reader grace period,
+    /// quiesce the source, adopt.  Uniform for seen and unseen artifacts —
+    /// an unseen one simply drains zero requests at its natural route's
+    /// worker (under concurrent admission its first request may be in
+    /// flight *right now*, so it gets the full fence like everything
+    /// else).
     fn migrate_with(
         &mut self,
         artifact: &str,
@@ -1680,28 +1823,8 @@ impl ShardedServer {
         divergence: f64,
         forced: bool,
     ) -> MigrationRecord {
-        let Some(&from) = self.routes.get(artifact) else {
-            // never admitted: nothing is queued or resident anywhere, so
-            // pinning the route *is* the whole migration
-            self.routes.insert(artifact.to_string(), to);
-            self.worker_artifacts[to].insert(artifact.to_string());
-            if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
-                self.resident_bytes[to] += p.working_set_bytes;
-            }
-            let rec = MigrationRecord {
-                at_request: self.admitted,
-                artifact: artifact.to_string(),
-                from_worker: to,
-                to_worker: to,
-                drained: 0,
-                cache_moved: false,
-                state_moved: false,
-                divergence,
-                forced,
-            };
-            self.migrations.push(rec.clone());
-            return rec;
-        };
+        self.drain_observed();
+        let from = self.router.current().worker_for(artifact);
         debug_assert_ne!(from, to, "caller filters same-worker moves");
         // 0. pre-warm: tell the target to load the compiled artifact from
         //    the persistent cache *before* the source quiesces, so the
@@ -1712,16 +1835,28 @@ impl ShardedServer {
         self.senders[to]
             .send(WorkerMsg::Prewarm { artifact: artifact.to_string() })
             .expect("serve worker alive");
-        // 1. fence + quiesce: the source serves everything already queued
-        //    for the artifact (channel FIFO puts the fence after every
-        //    pre-swap request), then exports the transferable state
+        // 1. hold: the target pens post-swap requests for the artifact
+        //    until the adopt below releases them — they must not execute
+        //    before the source's drained state arrives
+        self.senders[to]
+            .send(WorkerMsg::Hold { artifact: artifact.to_string() })
+            .expect("serve worker alive");
+        // 2. swap + grace: publish the new route, then wait until no
+        //    admission thread can still be routing by an older epoch.
+        //    After the wait, every pre-swap admission has reached the
+        //    source's queue and every post-swap one lands behind the hold.
+        let epoch = self.router.pin_route(artifact, to);
+        self.router.wait_for_readers(epoch);
+        // 3. quiesce: the source serves everything already queued for the
+        //    artifact (channel FIFO puts the fence after every pre-swap
+        //    request), then exports the transferable state
         let (reply_tx, reply_rx) = mpsc::channel();
         self.senders[from]
             .send(WorkerMsg::Quiesce { artifact: artifact.to_string(), reply: reply_tx })
             .expect("serve worker alive");
         let state = reply_rx.recv().expect("quiesce ack");
         let rec = MigrationRecord {
-            at_request: self.admitted,
+            at_request: self.shared.admitted.load(Ordering::Relaxed),
             artifact: artifact.to_string(),
             from_worker: from,
             to_worker: to,
@@ -1731,18 +1866,25 @@ impl ShardedServer {
             divergence,
             forced,
         };
-        // 2. adopt: channel FIFO installs the state before any post-swap
-        //    request for the artifact reaches the target
+        // 4. adopt: installs the state and releases the hold — channel
+        //    FIFO puts both before any request admitted after this point
         self.senders[to].send(WorkerMsg::Adopt { state }).expect("serve worker alive");
-        // 3. swap the route — admission is single-threaded, so this is
-        //    atomic with respect to every future `submit`
-        self.routes.insert(artifact.to_string(), to);
-        self.worker_artifacts[from].remove(artifact);
+        // residency accounting follows the route
+        let was_observed = self.observed.contains(artifact);
+        if was_observed {
+            self.worker_artifacts[from].remove(artifact);
+        }
         self.worker_artifacts[to].insert(artifact.to_string());
+        self.observed.insert(artifact.to_string());
         if let Some(p) = self.profiles.as_ref().and_then(|ps| ps.get(artifact)) {
-            self.resident_bytes[from] =
-                self.resident_bytes[from].saturating_sub(p.working_set_bytes);
-            self.resident_bytes[to] += p.working_set_bytes;
+            if was_observed {
+                let _ = self.shared.resident_bytes[from].fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |v| Some(v.saturating_sub(p.working_set_bytes)),
+                );
+            }
+            self.shared.resident_bytes[to].fetch_add(p.working_set_bytes, Ordering::Relaxed);
         }
         self.migrations.push(rec.clone());
         rec
@@ -1755,6 +1897,14 @@ impl ShardedServer {
     where
         I: IntoIterator<Item = String>,
     {
+        if self.admission_threads > 1 {
+            let reqs: Vec<(u64, String, Option<f64>)> = stream
+                .into_iter()
+                .enumerate()
+                .map(|(id, a)| (id as u64, a, None))
+                .collect();
+            return self.serve_concurrent(reqs);
+        }
         for (id, artifact) in stream.into_iter().enumerate() {
             self.submit(Request { id: id as u64, artifact });
         }
@@ -1774,6 +1924,15 @@ impl ShardedServer {
     where
         I: IntoIterator<Item = String>,
     {
+        if self.admission_threads > 1 {
+            let reqs: Vec<(u64, String, Option<f64>)> = stream
+                .into_iter()
+                .zip(arrivals)
+                .enumerate()
+                .map(|(id, (a, &at))| (id as u64, a, Some(at)))
+                .collect();
+            return self.serve_concurrent(reqs);
+        }
         let t0 = Instant::now();
         for (id, (artifact, &at)) in stream.into_iter().zip(arrivals).enumerate() {
             loop {
@@ -1791,6 +1950,113 @@ impl ShardedServer {
         self.finish()
     }
 
+    /// Mint a [`AdmissionHandle`] for one admission thread: a route-table
+    /// reader plus clones of everything the admission decision needs.
+    /// Handles are `Send`; each lives on exactly one thread.
+    pub fn admission_handle(&self) -> AdmissionHandle {
+        AdmissionHandle {
+            reader: self.router.reader(),
+            senders: self.senders.clone(),
+            catalog: self.catalog.clone(),
+            admission: self.admission,
+            admission_limit: self.admission_limit as u64,
+            tier_policy: self.tier_policy,
+            l2_bytes: self.cpu.l2.size_bytes as u64,
+            n_shards: self.n_shards,
+            shared: self.shared.clone(),
+            observed_tx: self.observed_tx.clone(),
+            seen: HashSet::new(),
+            started: self.started,
+            rejected: Vec::new(),
+            shed: Vec::new(),
+            depth_samples: Vec::new(),
+        }
+    }
+
+    /// Fold a finished admission thread's front-door dispositions back
+    /// into the coordinator before [`ShardedServer::finish`].
+    pub fn absorb(&mut self, outcome: AdmissionOutcome) {
+        self.rejected.extend(outcome.rejected);
+        self.shed.extend(outcome.shed);
+        self.depth_samples.extend(outcome.depth_samples);
+    }
+
+    /// One coordinator pass while admission threads run: reap worker
+    /// responses, absorb first-touch notices, and run the live divergence
+    /// check when enough new admissions accumulated (the concurrent
+    /// analogue of `dispatch`'s `% check_every` cadence).
+    pub fn coordinate(&mut self) {
+        self.reap();
+        self.drain_observed();
+        let admitted = self.shared.admitted.load(Ordering::Relaxed);
+        if self.rebalance == RebalanceMode::Live && admitted >= self.last_check + self.check_every
+        {
+            self.last_check = admitted;
+            self.maybe_rebalance();
+        }
+    }
+
+    /// The concurrent drive: partition the stream by artifact hash across
+    /// `admission_threads` handles (each artifact has exactly one
+    /// submitter, preserving per-artifact FIFO), run them under
+    /// `thread::scope` while this thread keeps the coordinator duties
+    /// (reap, rebalance, migrations), then absorb and finish.  Entries
+    /// with an arrival offset pace themselves against one shared clock.
+    fn serve_concurrent(mut self, reqs: Vec<(u64, String, Option<f64>)>) -> ServeOutcome {
+        let threads = self.admission_threads;
+        let mut parts: Vec<Vec<(u64, String, Option<f64>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for item in reqs {
+            let t = shard_for(&item.1, threads);
+            parts[t].push(item);
+        }
+        let mut handles: Vec<AdmissionHandle> =
+            (0..threads).map(|_| self.admission_handle()).collect();
+        let t0 = Instant::now();
+        let outcomes: Vec<AdmissionOutcome> = thread::scope(|s| {
+            let joins: Vec<_> = parts
+                .into_iter()
+                .zip(handles.drain(..))
+                .map(|(part, mut handle)| {
+                    s.spawn(move || {
+                        for (id, artifact, at) in part {
+                            if let Some(at) = at {
+                                // pace without holding a pin — a sleeping
+                                // reader must never stall a migration fence
+                                loop {
+                                    let now = t0.elapsed().as_secs_f64();
+                                    if now >= at {
+                                        break;
+                                    }
+                                    thread::sleep(Duration::from_secs_f64(
+                                        (at - now).min(1e-3),
+                                    ));
+                                }
+                            }
+                            handle.submit(Request { id, artifact });
+                        }
+                        handle.into_outcome()
+                    })
+                })
+                .collect();
+            loop {
+                self.coordinate();
+                if joins.iter().all(|j| j.is_finished()) {
+                    break;
+                }
+                thread::sleep(Duration::from_micros(200));
+            }
+            joins
+                .into_iter()
+                .map(|j| j.join().expect("admission thread panicked"))
+                .collect()
+        });
+        for outcome in outcomes {
+            self.absorb(outcome);
+        }
+        self.finish()
+    }
+
     /// Drain any responses already available, without blocking.  The
     /// returned values are clones: the originals stay with the server so
     /// [`ShardedServer::finish`] still accounts for every disposition.
@@ -1802,16 +2068,19 @@ impl ShardedServer {
 
     /// Close admission, drain every in-flight request, join the workers and
     /// roll per-shard metrics up into the aggregate [`Metrics`].
-    pub fn finish(self) -> ServeOutcome {
+    pub fn finish(mut self) -> ServeOutcome {
+        // late first-touch notices still in the channel belong to this
+        // run's residency accounting
+        self.drain_observed();
         let ShardedServer {
             senders,
             resp_rx,
             handles,
-            admitted,
+            shared,
             rejected,
             shed,
             collected,
-            depth_samples,
+            mut depth_samples,
             started,
             profiles,
             placement,
@@ -1823,6 +2092,10 @@ impl ShardedServer {
             migrations,
             ..
         } = self;
+        let admitted = shared.admitted.load(Ordering::Relaxed);
+        // concurrent admission interleaves samples from several threads;
+        // restore chronological order for the depth series
+        depth_samples.sort_by(|a, b| a.0.total_cmp(&b.0));
         // The active plan: pressure prediction and the drain-time hook
         // must follow a live plan swap — a stale `placement` here is
         // exactly the predicted-vs-observed bug the regression tests pin.
@@ -1920,6 +2193,140 @@ impl ShardedServer {
     }
 }
 
+/// One admission thread's working state: a route-table reader plus
+/// clones of the classification/shed/degrade machinery, so N threads can
+/// admit concurrently against snapshot routes while the coordinator keeps
+/// the single-writer duties (route publishes, reaping, rebalance).
+///
+/// Mint with [`ShardedServer::admission_handle`], move to a thread, feed
+/// it requests, then hand [`AdmissionHandle::into_outcome`] back to
+/// [`ShardedServer::absorb`].  Per-artifact FIFO is the *caller's*
+/// contract: give every artifact exactly one submitting thread (the
+/// built-in drives partition the stream by artifact hash).  `Degrade` may
+/// route a degraded variant owned by another thread — dispositions stay
+/// exactly-once, but the variant's FIFO is then interleaved across
+/// submitters.
+pub struct AdmissionHandle {
+    reader: RouteReader,
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    catalog: Option<Arc<Manifest>>,
+    admission: AdmissionMode,
+    admission_limit: u64,
+    tier_policy: TierPolicy,
+    l2_bytes: u64,
+    n_shards: usize,
+    shared: Arc<AdmissionShared>,
+    observed_tx: mpsc::Sender<(String, usize)>,
+    /// Artifacts this handle already reported as first-touched (keeps the
+    /// notice channel to one message per artifact per thread).
+    seen: HashSet<String>,
+    started: Instant,
+    rejected: Vec<Response>,
+    shed: Vec<Response>,
+    depth_samples: Vec<(f64, u64)>,
+}
+
+impl AdmissionHandle {
+    /// Admit one request: the same classify → route → shed/degrade →
+    /// enqueue decision as [`ShardedServer::submit`], made against one
+    /// pinned route-table snapshot.  The pin is held across the enqueue —
+    /// that is what lets a migration's
+    /// [`wait_for_readers`][super::routing::RouteWriter::wait_for_readers]
+    /// grace period conclude that every pre-swap admission has reached its
+    /// worker's queue.
+    pub fn submit(&mut self, req: Request) {
+        let enqueued = Instant::now();
+        if let Some(cat) = &self.catalog {
+            if cat.by_name(&req.artifact).is_none() {
+                self.rejected.push(reject_response(req, enqueued));
+                self.sample_depth();
+                return;
+            }
+        }
+        let snap = self.reader.pin();
+        let worker = snap.worker_for(&req.artifact);
+        if self.admission != AdmissionMode::None
+            && self.shared.in_flight[worker].load(Ordering::Relaxed)
+                >= self.shared.effective_limit(worker, self.admission_limit, self.l2_bytes)
+        {
+            match self.admission {
+                AdmissionMode::Degrade => {
+                    let smaller = match self.tier_policy {
+                        TierPolicy::Pinned => {
+                            workloads::degrade_artifact_within_tier(&req.artifact)
+                        }
+                        TierPolicy::DownshiftOnPressure => {
+                            workloads::degrade_artifact(&req.artifact)
+                        }
+                    };
+                    if let Some(smaller) = smaller {
+                        let original = req.artifact;
+                        let degraded = Request { id: req.id, artifact: smaller };
+                        let worker = snap.worker_for(&degraded.artifact);
+                        self.dispatch(degraded, worker, enqueued, Some(original));
+                    } else {
+                        self.shed.push(shed_response(req, enqueued));
+                    }
+                }
+                _ => self.shed.push(shed_response(req, enqueued)),
+            }
+            drop(snap);
+            self.sample_depth();
+            return;
+        }
+        self.dispatch(req, worker, enqueued, None);
+        drop(snap);
+        self.sample_depth();
+    }
+
+    /// Enqueue an admitted request (counter bumps, first-touch notice,
+    /// channel send).  Caller holds the route pin across this call.
+    fn dispatch(
+        &mut self,
+        req: Request,
+        worker: usize,
+        enqueued: Instant,
+        degraded_from: Option<String>,
+    ) {
+        let shard = shard_for(&req.artifact, self.n_shards);
+        if self.seen.insert(req.artifact.clone()) {
+            // a closed coordinator just means the run is draining;
+            // residency bookkeeping is best-effort at that point
+            let _ = self.observed_tx.send((req.artifact.clone(), worker));
+        }
+        self.shared.admitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.in_flight[worker].fetch_add(1, Ordering::Relaxed);
+        self.senders[worker]
+            .send(WorkerMsg::Req(Envelope { req, enqueued, shard, degraded_from }))
+            .expect("serve worker alive");
+    }
+
+    /// Record one `(elapsed, total in-flight)` sample.
+    fn sample_depth(&mut self) {
+        self.depth_samples
+            .push((self.started.elapsed().as_secs_f64(), self.shared.depth()));
+    }
+
+    /// Finish this thread's admission work: unpin the reader and surrender
+    /// the locally buffered dispositions.
+    pub fn into_outcome(self) -> AdmissionOutcome {
+        AdmissionOutcome {
+            rejected: self.rejected,
+            shed: self.shed,
+            depth_samples: self.depth_samples,
+        }
+    }
+}
+
+/// What one admission thread hands back to the coordinator: front-door
+/// dispositions and depth samples buffered locally while it ran.  Feed to
+/// [`ShardedServer::absorb`] before `finish`.
+pub struct AdmissionOutcome {
+    rejected: Vec<Response>,
+    shed: Vec<Response>,
+    depth_samples: Vec<(f64, u64)>,
+}
+
 /// Observed per-worker pressure rows: residency summed from the profiled
 /// artifacts resident on each worker, prediction read off `plan` (0 with
 /// no plan).  Shared by the live divergence check and the drain rollup so
@@ -1971,6 +2378,11 @@ struct WorkerState<E> {
     /// First-touch preparation log, returned to `finish` with the shard
     /// metrics.
     prep: Vec<PrepRecord>,
+    /// Migration pens: requests for an artifact under a `Hold` fence wait
+    /// here, in arrival order, until the matching `Adopt` releases them
+    /// into the shard queues (or the channel closes — a drain must answer
+    /// everything even if a migration was cut short).
+    held: BTreeMap<String, Vec<Envelope>>,
 }
 
 /// One worker: drains its message channel into per-shard FIFO queues and
@@ -1997,10 +2409,17 @@ fn worker_loop<E: Executor>(
         artifact_cache: cache_dir.and_then(|d| ArtifactCache::open(d).ok()),
         warmed: BTreeSet::new(),
         prep: Vec::new(),
+        held: BTreeMap::new(),
     };
     let mut open = true;
 
     loop {
+        if !open && !st.held.is_empty() {
+            // the channel closed before an `Adopt` released these pens
+            // (an interrupted migration): serve what we have — exactly
+            // one response per request still holds
+            release_pens(&mut st);
+        }
         let queued = st.queues.values().map(|q| q.len()).sum::<usize>();
         if queued == 0 {
             if !open {
@@ -2055,13 +2474,26 @@ fn worker_loop<E: Executor>(
 /// Dispatch one admission-channel message.
 fn handle_msg<E: Executor>(st: &mut WorkerState<E>, msg: WorkerMsg) {
     match msg {
-        WorkerMsg::Req(env) => st.queues.entry(env.shard).or_default().push_back(env),
+        WorkerMsg::Req(env) => {
+            // a held artifact's requests wait in the pen (arrival order)
+            // until the migration's Adopt releases them
+            if let Some(pen) = st.held.get_mut(&env.req.artifact) {
+                pen.push(env);
+            } else {
+                st.queues.entry(env.shard).or_default().push_back(env);
+            }
+        }
+        WorkerMsg::Hold { artifact } => {
+            st.held.entry(artifact).or_default();
+        }
         WorkerMsg::Quiesce { artifact, reply } => {
             // Extract every queued request for the migrating artifact.
             // The artifact lives on exactly one shard, and extraction
             // preserves both its internal order (per-artifact FIFO) and
             // the order of everything left behind; other shard queues are
-            // untouched — only the affected queue quiesces.
+            // untouched — only the affected queue quiesces.  (A pen for
+            // the artifact cannot be live here — its Adopt always lands
+            // first in channel order — but drain one defensively.)
             let mut pending: VecDeque<Envelope> = VecDeque::new();
             for q in st.queues.values_mut() {
                 if !q.iter().any(|e| e.req.artifact == artifact) {
@@ -2076,6 +2508,9 @@ fn handle_msg<E: Executor>(st: &mut WorkerState<E>, msg: WorkerMsg) {
                     }
                 }
                 *q = rest;
+            }
+            if let Some(pen) = st.held.remove(&artifact) {
+                pending.extend(pen);
             }
             let drained = pending.len() as u64;
             while !pending.is_empty() {
@@ -2100,10 +2535,29 @@ fn handle_msg<E: Executor>(st: &mut WorkerState<E>, msg: WorkerMsg) {
                 ex.import_state(&artifact, s);
             }
             if let Some(payload) = cached {
-                st.cache.put(artifact, payload);
+                st.cache.put(artifact.clone(), payload);
+            }
+            // release the pen: penned requests join the shard queues in
+            // arrival order, now that the source's state is installed
+            if let Some(pen) = st.held.remove(&artifact) {
+                for env in pen {
+                    st.queues.entry(env.shard).or_default().push_back(env);
+                }
             }
         }
         WorkerMsg::Prewarm { artifact } => prewarm_from_disk(st, &artifact),
+    }
+}
+
+/// Release every pen into the shard queues (channel closed before the
+/// migration's `Adopt` arrived): served without the migrated state, but
+/// served — the exactly-one-response invariant outranks state locality.
+fn release_pens<E: Executor>(st: &mut WorkerState<E>) {
+    let held = std::mem::take(&mut st.held);
+    for (_, pen) in held {
+        for env in pen {
+            st.queues.entry(env.shard).or_default().push_back(env);
+        }
     }
 }
 
@@ -2232,6 +2686,7 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                 payload: Some(payload),
                 cached: true,
                 shard,
+                worker,
                 shed: false,
                 degraded_from: env.degraded_from,
             });
@@ -2262,6 +2717,7 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                     payload: Some(exec.payload),
                     cached: false,
                     shard,
+                    worker,
                     shed: false,
                     degraded_from: env.degraded_from,
                 });
@@ -2278,6 +2734,7 @@ fn serve_batch<E: Executor>(st: &mut WorkerState<E>, batch: Vec<Envelope>) {
                     payload: None,
                     cached: false,
                     shard,
+                    worker,
                     shed: false,
                     degraded_from: env.degraded_from,
                 });
@@ -2799,6 +3256,69 @@ mod tests {
             assert_eq!(r.exec_seconds, 0.0);
             assert_eq!(r.payload, Some(payload), "bit-identical across the move");
         }
+    }
+
+    #[test]
+    fn admit_hot_path_is_one_snapshot_read() {
+        // Regression for the old routes.get + re-insert double lookup:
+        // admission must never write the route table.  Epochs advance
+        // only on migrations, so any number of admissions — including
+        // first admissions of brand-new artifacts — leaves the epoch
+        // untouched, and the resolved route is identical before and after.
+        let mut srv = synthetic_server(2, 8);
+        assert_eq!(srv.route_epoch(), 0);
+        let artifact = workloads::synthetic_artifact(32);
+        assert_eq!(srv.route_of(&artifact), None, "unseen and unpinned");
+        for id in 0..6u64 {
+            srv.submit(Request { id, artifact: artifact.clone() });
+            assert_eq!(srv.route_epoch(), 0, "admission published a route epoch");
+        }
+        let routed = srv.route_of(&artifact).expect("observed after admission");
+        assert_eq!(routed, shard_for(&artifact, srv.n_shards()) % srv.workers());
+        // a migration is the only writer
+        let rec = srv.migrate(&artifact, 1 - routed).expect("moves");
+        assert_eq!(rec.to_worker, 1 - routed);
+        assert_eq!(srv.route_epoch(), 1);
+        let out = srv.finish();
+        assert_eq!(out.metrics.completed, 6);
+    }
+
+    #[test]
+    fn concurrent_admission_serves_the_mix_exactly_once() {
+        // The concurrent drive must preserve the serving invariants the
+        // single-threaded one guarantees: every request answered exactly
+        // once, per-artifact FIFO (each artifact has one submitting
+        // thread), totals reconciled.
+        let mix = workloads::serving_mix();
+        let stream: Vec<String> = (0..96)
+            .map(|i| mix[i % mix.len()].artifact.clone())
+            .collect();
+        let srv = ShardedServer::start(
+            ServeConfig::new(2).with_cache(8).with_admission_threads(4),
+            |_w| Ok(SyntheticExecutor::new()),
+        );
+        let out = srv.serve_stream(stream.clone());
+        assert_eq!(out.responses.len(), 96, "exactly one disposition each");
+        assert_eq!(out.metrics.completed, 96);
+        assert_eq!(out.metrics.requests, 96);
+        let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..96).collect::<Vec<_>>(), "no lost or duplicated ids");
+        // per-artifact FIFO: completion order restricted to one artifact
+        // is its admission order
+        let mut last: BTreeMap<&str, u64> = BTreeMap::new();
+        for r in &out.responses {
+            if let Some(&prev) = last.get(r.artifact.as_str()) {
+                assert!(prev < r.id, "FIFO broke for {}: {} then {}", r.artifact, prev, r.id);
+            }
+            last.insert(r.artifact.as_str(), r.id);
+        }
+        // depth series is chronological after the merge sort in finish
+        assert!(out
+            .metrics
+            .queue_depth
+            .windows(2)
+            .all(|w| w[0].0 <= w[1].0));
     }
 
     #[test]

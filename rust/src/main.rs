@@ -196,7 +196,8 @@ commands:
         [--max-batch B] [--shards M] [--synthetic] [--cache-dir DIR]
         [--placement hash|cache-aware] [--rebalance off|drain|live]
         [--arrival-rate RPS] [--slo-ms MS] [--admission none|shed|degrade]
-        [--admission-limit L] [--tiers] [--tier-policy pinned|downshift]
+        [--admission-limit L] [--admission-threads N]
+        [--tiers] [--tier-policy pinned|downshift]
                               sharded multi-worker serving over AOT artifacts
                               (falls back to the synthetic native-GEMM mix
                               when artifacts/ is absent or --synthetic is set;
@@ -217,6 +218,11 @@ commands:
                               per-worker in-flight limit (L, def. 64, halved
                               when the worker's resident set overflows L2),
                               degrade reroutes to a smaller GEMM variant;
+                              --admission-threads N > 1 partitions the stream
+                              by artifact hash across N admission threads that
+                              classify, route and enqueue concurrently against
+                              lock-free route-table snapshots (migrations keep
+                              their fenced atomic swap);
                               --tiers serves the full precision-tier menu —
                               fp32 + int8 + packed bit-serial twins — so the
                               cache-aware packer can exploit the smaller
@@ -736,6 +742,8 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     cfg.rebalance = rebalance;
     cfg.admission = admission;
     cfg.admission_limit = opts.usize("admission-limit", cfg.admission_limit)?;
+    let admission_threads = opts.usize("admission-threads", 1)?;
+    cfg = cfg.with_admission_threads(admission_threads);
     cfg.tier_policy = tier_policy;
     if let Some(dir) = opts.get("cache-dir") {
         cfg = cfg.with_cache_dir(dir);
@@ -844,7 +852,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let m = &outcome.metrics;
     println!(
         "served {}/{} requests in {:.2}s -> {:.1} req/s  \
-         ({workers} workers, {mode}, {} placement, rebalance {}, admission {}, \
+         ({workers} workers, {mode}, {} placement, rebalance {}, admission {} x{}, \
          tier policy {})",
         m.completed,
         m.requests,
@@ -853,6 +861,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         placement.name(),
         rebalance.name(),
         admission.name(),
+        admission_threads.max(1),
         tier_policy.name(),
     );
     println!(

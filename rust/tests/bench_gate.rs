@@ -45,13 +45,14 @@ fn sweep_roundtrips_through_bench_json() {
         assert!(!r.class.is_empty(), "{}", r.key);
         assert!(r.l1_read_s < r.l2_read_s && r.l2_read_s < r.ram_read_s, "{}", r.key);
         // serving records (servedrift: MRC-predicted per-request times;
-        // servslo/servtier: 1/max-sustainable-rate; servcache: total
-        // startup time) are not bound-line measurements — the ≤105%
+        // servslo/servtier/servadm: 1/max-sustainable-rate; servcache:
+        // total startup time) are not bound-line measurements — the ≤105%
         // clamp only applies to the operator grid
         if r.family != "servedrift"
             && r.family != "servslo"
             && r.family != "servtier"
             && r.family != "servcache"
+            && r.family != "servadm"
         {
             assert!(
                 r.pct_of_bound > 0.0 && r.pct_of_bound <= 105.0,
@@ -79,6 +80,11 @@ fn sweep_roundtrips_through_bench_json() {
     // so does the cold-vs-warm artifact-cache A/B
     assert_eq!(
         report.records.iter().filter(|r| r.family == "servcache").count(),
+        4
+    );
+    // and the admission-concurrency A/B (1t vs 4t, both profiles)
+    assert_eq!(
+        report.records.iter().filter(|r| r.family == "servadm").count(),
         4
     );
     let dir = temp_dir("roundtrip");

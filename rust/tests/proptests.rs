@@ -10,7 +10,7 @@ use cachebound::coordinator::pool::WorkerPool;
 use cachebound::coordinator::server::{
     AdmissionMode, Request, ServeConfig, ShardedServer, SyntheticExecutor, TierPolicy,
 };
-use cachebound::coordinator::RebalanceMode;
+use cachebound::coordinator::{shard_for, RebalanceMode, RouteWriter};
 use cachebound::hw::profile_by_name;
 use cachebound::operators::bitserial;
 use cachebound::operators::conv::{self, ConvSchedule};
@@ -486,6 +486,105 @@ fn prop_tier_downshift_dispositions_reconcile() {
                     );
                 }
             }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Route-table invariants (epoch-versioned snapshots, coordinator::routing)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_route_epochs_monotone_and_pinned_views_immutable() {
+    // Random pin schedules against a shadow model: epochs are strictly
+    // monotone, a snapshot pinned across any number of publishes resolves
+    // every artifact exactly as it did at pin time, and a fresh snapshot
+    // always agrees with the model (pins beat the hash fallback).
+    forall("route_snapshots", 12, |rng| {
+        let workers = 1 + rng.below(4) as usize;
+        let n_shards = 2 << rng.below(4);
+        let mut w = RouteWriter::new(workers, n_shards, None);
+        let reader = w.reader();
+        let artifacts: Vec<String> =
+            (0..1 + rng.below(8)).map(|i| format!("prop_route_{i}")).collect();
+        // epoch 0, no pins: the deterministic hash routes everything
+        for a in &artifacts {
+            assert_eq!(w.current().worker_for(a), shard_for(a, n_shards) % workers);
+        }
+        let mut model = std::collections::BTreeMap::new();
+        let mut last_epoch = 0u64;
+        for _ in 0..5 + rng.below(20) {
+            let stale = reader.pin();
+            let at_pin: Vec<usize> = artifacts.iter().map(|a| stale.worker_for(a)).collect();
+            let victim = &artifacts[rng.below(artifacts.len() as u64) as usize];
+            let target = rng.below(workers as u64) as usize;
+            let epoch = w.pin_route(victim, target);
+            assert!(epoch > last_epoch, "epochs must be strictly monotone");
+            last_epoch = epoch;
+            model.insert(victim.clone(), target);
+            // the pinned view is frozen: the publish must not leak into it
+            for (a, &before) in artifacts.iter().zip(&at_pin) {
+                assert_eq!(stale.worker_for(a), before, "pinned view moved for {a}");
+            }
+            drop(stale);
+            let fresh = reader.pin();
+            assert_eq!(fresh.epoch(), epoch, "a fresh pin sees the latest publish");
+            for a in &artifacts {
+                let want =
+                    model.get(a).copied().unwrap_or(shard_for(a, n_shards) % workers);
+                assert_eq!(fresh.worker_for(a), want, "{a} disagrees with the model");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_route_swaps_atomic_under_concurrent_readers() {
+    // The writer always publishes the pair ("pair_a", "pair_b") to one
+    // worker in a single epoch; hammering readers must never observe them
+    // split (a torn swap) or an epoch running backwards, for random worker
+    // counts, reader counts and fence cadences.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    forall("route_atomic_swaps", 4, |rng| {
+        let workers = 2 + rng.below(3) as usize;
+        let mut w = RouteWriter::new(workers, 8, None);
+        let publishes = 100 + rng.below(200);
+        let fence_every = 4 << rng.below(3);
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..2 + rng.below(3) as usize)
+            .map(|_| {
+                let r = w.reader();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut last_epoch = 0u64;
+                    while !stop.load(Ordering::SeqCst) {
+                        let snap = r.pin();
+                        assert_eq!(
+                            snap.worker_for("pair_a"),
+                            snap.worker_for("pair_b"),
+                            "partial swap at epoch {}",
+                            snap.epoch()
+                        );
+                        assert!(snap.epoch() >= last_epoch, "epochs ran backwards");
+                        last_epoch = snap.epoch();
+                    }
+                })
+            })
+            .collect();
+        for k in 0..publishes {
+            let target = rng.below(workers as u64) as usize;
+            let epoch = w.publish(|pins| {
+                pins.insert("pair_a".into(), target);
+                pins.insert("pair_b".into(), target);
+            });
+            if k % fence_every == 0 {
+                w.wait_for_readers(epoch);
+            }
+        }
+        stop.store(true, Ordering::SeqCst);
+        for h in readers {
+            h.join().unwrap();
         }
     });
 }

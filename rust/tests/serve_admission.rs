@@ -1,0 +1,372 @@
+//! Admission-concurrency chaos harness (DESIGN.md §Admission concurrency).
+//!
+//! The lock-free admission path claims that N admission threads can
+//! classify, route and enqueue against epoch-versioned route snapshots
+//! while the coordinator migrates artifacts mid-stream — and that *any*
+//! interleaving preserves the serving invariants: exactly one disposition
+//! per request, per-artifact FIFO (each artifact has one submitting
+//! thread), reconciling metrics, and bit-identical payloads against an
+//! undisturbed single-threaded run.  This suite attacks the claim with a
+//! deterministic chaos driver: seeded drifting request streams partitioned
+//! across four admission threads, forced migration storms injected from
+//! the coordinator thread at seeded points, and the automatic divergence
+//! trigger running on top.
+//!
+//! Seeds: every chaos test runs once per seed in `ADMISSION_CHAOS_SEEDS`
+//! (comma-separated, `0x` hex or decimal; default two seeds).  CI re-runs
+//! the suite with a 4-seed matrix.
+
+use std::collections::{BTreeMap, HashMap};
+use std::thread;
+use std::time::Duration;
+
+use cachebound::coordinator::server::{
+    AdmissionMode, Request, Response, ServeConfig, ServeOutcome, ShardedServer,
+    SyntheticExecutor,
+};
+use cachebound::coordinator::RebalanceMode;
+use cachebound::hw::profile_by_name;
+use cachebound::operators::workloads;
+use cachebound::telemetry::serving_mix_profiles;
+use cachebound::util::rng::Xoshiro256;
+
+/// Admission threads every chaos run partitions its stream across — the
+/// `serve --admission-threads 4` configuration the CI matrix exercises.
+const ADMISSION_THREADS: usize = 4;
+
+/// The chaos seed matrix: `ADMISSION_CHAOS_SEEDS` (comma-separated,
+/// decimal or `0x` hex), defaulting to two seeds so the suite is cheap in
+/// a plain `cargo test` and broad in CI.
+fn seeds() -> Vec<u64> {
+    match std::env::var("ADMISSION_CHAOS_SEEDS") {
+        Ok(raw) => raw
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.strip_prefix("0x")
+                    .map(|h| u64::from_str_radix(h, 16))
+                    .unwrap_or_else(|| s.parse())
+                    .unwrap_or_else(|e| panic!("bad chaos seed '{s}': {e}"))
+            })
+            .collect(),
+        Err(_) => vec![0xADA117, 0x5EED_50C5],
+    }
+}
+
+/// A drifting request stream: three phases drawn from different sub-menus
+/// of the serving mix, so the artifact population the admission threads
+/// observe changes mid-stream (same shape as the migration chaos suite).
+fn drifting_stream(n: usize, seed: u64) -> Vec<String> {
+    let mix = workloads::serving_mix();
+    let menu = |idx: &[usize], weight_seed: u64| -> Vec<(String, u32)> {
+        idx.iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                (mix[m].artifact.clone(), 1 + ((weight_seed >> i) & 3) as u32)
+            })
+            .collect()
+    };
+    let phases: [Vec<(String, u32)>; 3] = [
+        menu(&[0, 1, 2], seed),
+        menu(&[2, 3, 4], seed >> 8),
+        menu(&[0, 4], seed >> 16),
+    ];
+    let per_phase = n / 3;
+    let mut out = Vec::with_capacity(n);
+    for (i, m) in phases.iter().enumerate() {
+        let want = if i == 2 { n - out.len() } else { per_phase };
+        out.extend(workloads::bursty_requests(m, want, seed ^ (i as u64 + 1)));
+    }
+    out
+}
+
+fn assert_exactly_once(out: &ServeOutcome, n: usize) {
+    let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    assert_eq!(
+        ids,
+        (0..n as u64).collect::<Vec<_>>(),
+        "dropped or duplicated dispositions"
+    );
+}
+
+fn assert_per_artifact_fifo(responses: &[Response]) {
+    let mut per_artifact: HashMap<&str, Vec<u64>> = HashMap::new();
+    for r in responses {
+        per_artifact.entry(r.artifact.as_str()).or_default().push(r.id);
+    }
+    for (artifact, ids) in per_artifact {
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "FIFO violated for {artifact}: {ids:?}"
+        );
+    }
+}
+
+/// Drive one stream through `ADMISSION_THREADS` admission handles under
+/// `thread::scope` — the same artifact-hash partition `serve_concurrent`
+/// uses (one submitter per artifact ⇒ per-artifact FIFO is preserved) —
+/// while the calling closure keeps the coordinator duties on this thread.
+/// Returns the finished outcome and whatever `coordinate_extra` counted.
+fn drive_concurrent(
+    mut srv: ShardedServer,
+    stream: &[String],
+    mut coordinate_extra: impl FnMut(&mut ShardedServer) -> usize,
+) -> (ServeOutcome, usize) {
+    let mut parts: Vec<Vec<(u64, String)>> =
+        (0..ADMISSION_THREADS).map(|_| Vec::new()).collect();
+    for (id, artifact) in stream.iter().enumerate() {
+        let t = cachebound::coordinator::shard_for(artifact, ADMISSION_THREADS);
+        parts[t].push((id as u64, artifact.clone()));
+    }
+    let handles: Vec<_> =
+        (0..ADMISSION_THREADS).map(|_| srv.admission_handle()).collect();
+    let mut extra = 0usize;
+    let outcomes: Vec<_> = thread::scope(|s| {
+        let joins: Vec<_> = parts
+            .into_iter()
+            .zip(handles)
+            .map(|(part, mut handle)| {
+                s.spawn(move || {
+                    for (k, (id, artifact)) in part.into_iter().enumerate() {
+                        // light pacing stretches the submission window so
+                        // the coordinator's storm genuinely interleaves
+                        // with live admission instead of racing a burst
+                        if k % 8 == 0 {
+                            thread::sleep(Duration::from_micros(200));
+                        }
+                        handle.submit(Request { id, artifact });
+                    }
+                    handle.into_outcome()
+                })
+            })
+            .collect();
+        // the coordinator loop: reap, rebalance, and storm (migrations
+        // are single-writer operations and stay on this thread)
+        loop {
+            srv.coordinate();
+            extra += coordinate_extra(&mut srv);
+            if joins.iter().all(|j| j.is_finished()) {
+                break;
+            }
+            thread::sleep(Duration::from_micros(100));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("admission thread panicked"))
+            .collect()
+    });
+    for outcome in outcomes {
+        srv.absorb(outcome);
+    }
+    (srv.finish(), extra)
+}
+
+/// The core chaos property: four admission threads racing a seeded
+/// migration storm (forced moves of seen *and* unseen artifacts, plus the
+/// automatic divergence trigger) keep every serving invariant, and every
+/// payload stays bit-identical to an undisturbed single-threaded run.
+#[test]
+fn chaos_concurrent_admission_survives_migration_storms() {
+    let mix = workloads::serving_mix();
+    let profiles = serving_mix_profiles(&profile_by_name("a53").unwrap().cpu);
+    for seed in seeds() {
+        let mut rng = Xoshiro256::new(seed);
+        let workers = 2 + rng.below(3) as usize; // 2..=4
+        let n = 240;
+        let stream = drifting_stream(n, seed);
+
+        // the undisturbed baseline: same stream, one thread, no plans,
+        // no migrations
+        let baseline = ShardedServer::start(ServeConfig::new(workers), |_w| {
+            Ok(SyntheticExecutor::new())
+        })
+        .serve_stream(stream.iter().cloned());
+        assert_eq!(baseline.metrics.completed, n as u64, "seed {seed:#x}");
+
+        // the chaos run: concurrent admission, live rebalancing, and a
+        // forced-migration storm driven from the coordinator thread
+        let mut cfg = ServeConfig::new(workers)
+            .with_cache(1 + rng.below(8) as usize)
+            .with_profiles(profiles.clone())
+            .with_rebalance(RebalanceMode::Live)
+            .with_admission_threads(ADMISSION_THREADS);
+        cfg.rebalance_check_every = 16 + rng.below(32) as usize;
+        let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let mut storm_rng = Xoshiro256::new(seed ^ 0x5701_u64);
+        let (out, forced) = drive_concurrent(srv, &stream, |srv| {
+            // roughly every fourth coordinator pass, force a move of a
+            // random mix artifact (often one no thread has admitted yet —
+            // the uniform unseen-artifact protocol) to a random worker
+            if storm_rng.below(4) == 0 {
+                let victim = &mix[storm_rng.below(mix.len() as u64) as usize].artifact;
+                let target = storm_rng.below(workers as u64) as usize;
+                usize::from(srv.migrate(victim, target).is_some())
+            } else {
+                0
+            }
+        });
+
+        assert_exactly_once(&out, n);
+        assert_per_artifact_fifo(&out.responses);
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64, "seed {seed:#x}");
+        assert_eq!(m.completed + m.failed, m.requests, "seed {seed:#x}");
+        assert_eq!(m.failed, 0, "seed {seed:#x}: {:?}",
+            out.responses.iter().find(|r| !r.ok));
+        // per-(shard, worker) rows still sum to the aggregate, across
+        // every owner epoch the storm minted
+        assert_eq!(
+            m.per_shard.iter().map(|s| s.completed).sum::<u64>(),
+            m.completed,
+            "seed {seed:#x}: per-shard completed"
+        );
+        assert_eq!(
+            m.per_shard.iter().map(|s| s.requests).sum::<u64>(),
+            m.requests,
+            "seed {seed:#x}: per-shard requests"
+        );
+        assert!(
+            m.migrations.len() >= forced,
+            "seed {seed:#x}: log must cover every forced move ({} < {forced})",
+            m.migrations.len()
+        );
+        // an artifact migrates workers, never shards
+        let mut artifact_shard: HashMap<&str, usize> = HashMap::new();
+        for r in &out.responses {
+            if let Some(prev) = artifact_shard.insert(r.artifact.as_str(), r.shard) {
+                assert_eq!(prev, r.shard, "artifact {} changed shards", r.artifact);
+            }
+        }
+        // the depth series stays chronological even though four threads
+        // sampled it concurrently
+        assert!(
+            m.queue_depth.windows(2).all(|w| w[0].0 <= w[1].0),
+            "seed {seed:#x}: depth samples out of order"
+        );
+
+        // purity across storms: executor state and cache entries moved,
+        // never corrupted — every payload matches the undisturbed run
+        let payload = |o: &ServeOutcome| -> BTreeMap<u64, f64> {
+            o.responses.iter().map(|r| (r.id, r.payload.unwrap())).collect()
+        };
+        assert_eq!(
+            payload(&out),
+            payload(&baseline),
+            "seed {seed:#x}: migrations must not change any payload"
+        );
+    }
+}
+
+/// Shed admission under concurrency: with a tiny in-flight limit some
+/// requests shed at the front door, and every one of the N requests still
+/// gets exactly one disposition — no lost, no duplicated, counts
+/// reconciling across completed/failed/shed.
+#[test]
+fn concurrent_shed_admission_keeps_exactly_one_disposition() {
+    for seed in seeds() {
+        let n = 192;
+        let stream = drifting_stream(n, seed);
+        let mut cfg = ServeConfig::new(2)
+            .with_admission(AdmissionMode::Shed)
+            .with_admission_threads(ADMISSION_THREADS);
+        cfg.admission_limit = 2; // shed aggressively
+        let srv = ShardedServer::start(cfg, |_w| Ok(SyntheticExecutor::new()));
+        let (out, _) = drive_concurrent(srv, &stream, |_| 0);
+        assert_exactly_once(&out, n);
+        let m = &out.metrics;
+        assert_eq!(m.requests, n as u64, "seed {seed:#x}");
+        assert_eq!(
+            m.completed + m.failed + m.shed,
+            m.requests,
+            "seed {seed:#x}: dispositions must partition the stream"
+        );
+        assert_eq!(m.failed, 0, "seed {seed:#x}: shed is not failure");
+        // every latency percentile population covers every disposition
+        assert_eq!(m.latency_seconds.len() as u64, m.requests, "seed {seed:#x}");
+    }
+}
+
+/// The built-in concurrent drive (`serve_stream` with
+/// `--admission-threads 4`) and the single-threaded drive serve the same
+/// stream to the same completed payloads — admission concurrency changes
+/// scheduling, never results.
+#[test]
+fn concurrent_drive_matches_single_threaded_payloads() {
+    let seed = seeds()[0];
+    let n = 128;
+    let stream = drifting_stream(n, seed);
+    let single = ShardedServer::start(ServeConfig::new(2), |_w| {
+        Ok(SyntheticExecutor::new())
+    })
+    .serve_stream(stream.iter().cloned());
+    let multi = ShardedServer::start(
+        ServeConfig::new(2).with_admission_threads(ADMISSION_THREADS),
+        |_w| Ok(SyntheticExecutor::new()),
+    )
+    .serve_stream(stream.iter().cloned());
+    assert_exactly_once(&single, n);
+    assert_exactly_once(&multi, n);
+    assert_per_artifact_fifo(&multi.responses);
+    assert_eq!(multi.metrics.completed, n as u64);
+    let payload = |o: &ServeOutcome| -> BTreeMap<u64, f64> {
+        o.responses.iter().map(|r| (r.id, r.payload.unwrap())).collect()
+    };
+    assert_eq!(payload(&multi), payload(&single));
+}
+
+/// The CLI surface: `cachebound serve --admission-threads 4` runs end to
+/// end — alone and combined with live rebalancing — serving the full
+/// stream and reporting the thread count in the summary line.
+#[test]
+fn cli_serve_admission_threads_round_trips() {
+    use std::process::Command;
+
+    let exe = env!("CARGO_BIN_EXE_cachebound");
+    let out = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "64",
+            "--admission-threads",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "serve --admission-threads 4 must exit 0: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("admission none x4"), "{stdout}");
+    assert!(stdout.contains("served 64/64"), "{stdout}");
+
+    // combined with live rebalancing: the chaos configuration end to end
+    let live = Command::new(exe)
+        .args([
+            "serve",
+            "--synthetic",
+            "--workers",
+            "2",
+            "--requests",
+            "64",
+            "--admission-threads",
+            "4",
+            "--rebalance",
+            "live",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        live.status.success(),
+        "--admission-threads 4 --rebalance live must exit 0: {}",
+        String::from_utf8_lossy(&live.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&live.stdout);
+    assert!(stdout.contains("served 64/64"), "{stdout}");
+}
