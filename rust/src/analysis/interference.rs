@@ -168,11 +168,16 @@ impl InterferenceModel {
     }
 
     /// Re-read the profile's MRC with the L1 unchanged and the L2 reduced
-    /// to `effective_l2` — the same arithmetic as `MissRatioCurve::predict`
-    /// at a different capacity.
+    /// to `effective_l2` — the same arithmetic as
+    /// `MissRatioCurve::predict_set_aware` at a different capacity.  The
+    /// L1 term is the profile's stored `l1_hit_rate` (already
+    /// conflict-corrected by the trace driver) rather than a curve lookup:
+    /// the sampled curve is fully-associative, and re-deriving the
+    /// set-aware rate from it would both lose the conflict correction and
+    /// break the bit-for-bit solo-reproduces-`predict_workload` invariant.
     fn rates_at(&self, p: &CacheProfile, effective_l2: u64) -> PredictedRates {
         let l1 = self.cpu.l1.size_bytes as u64;
-        let p1 = hit_rate_at(&p.mrc_points, l1);
+        let p1 = p.l1_hit_rate;
         let p2 = hit_rate_at(&p.mrc_points, effective_l2.max(l1)).max(p1);
         let miss1 = 1.0 - p1;
         let l2_hit_rate = if miss1 > 1e-12 { (p2 - p1) / miss1 } else { 1.0 };
@@ -307,7 +312,7 @@ mod tests {
         let n = 96;
         // the reference: a direct predict_workload over the same replay
         let mut h = Hierarchy::new(&cpu);
-        let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+        let mut analyzer = ReuseAnalyzer::with_sets(cpu.l1.line_bytes, cpu.l1.sets());
         replay_gemm_traced(&mut h, n, n, n, GemmSchedule::default_tuned(), 4, &mut analyzer);
         let meta = TraceMeta {
             traced_accesses: analyzer.accesses(),
@@ -315,7 +320,8 @@ mod tests {
             traced_write_accesses: analyzer.write_accesses,
             scale: 1.0,
         };
-        let mrc = MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes);
+        let sets = analyzer.take_set_histograms().expect("with_sets tracks per-set stacks");
+        let mrc = MissRatioCurve::with_sets(analyzer.combined(), cpu.l1.line_bytes, sets);
         let reference = predict_workload(&cpu, &BenchWorkload::Gemm { n }, &mrc, &meta, 2.5);
 
         let p = trace_workload(&cpu, &BenchWorkload::Gemm { n }, TraceBudget::new(n))

@@ -50,8 +50,18 @@ pub struct TraceMeta {
 /// A full MRC-derived prediction for one workload on one CPU.
 #[derive(Clone, Copy, Debug)]
 pub struct MrcPrediction {
-    /// Hit rates at the CPU's L1/L2 geometry.
+    /// Hit rates at the CPU's L1/L2 geometry, conflict-corrected: the L1
+    /// term comes from `MissRatioCurve::predict_set_aware` (exact per-set
+    /// Mattson counts when the trace carried them, Smith fallback
+    /// otherwise).
     pub rates: PredictedRates,
+    /// The fully-associative L1 hit rate before the conflict correction.
+    pub fa_l1_hit_rate: f64,
+    /// `(fa_l1_hit_rate − rates.l1_hit_rate) · 100`: L1 hit-rate
+    /// percentage points the fully-associative model over-promises
+    /// (negative when set filtering helps — see
+    /// `telemetry::misscurve::SetAwarePrediction`).
+    pub conflict_pp: f64,
     /// Extrapolated full-shape per-level traffic.
     pub traffic: Traffic,
     /// Roofline decomposition of the predicted execution time.
@@ -185,11 +195,13 @@ pub fn predict_workload(
     meta: &TraceMeta,
     slack: f64,
 ) -> MrcPrediction {
-    let rates = mrc.predict(cpu);
-    let traffic = traffic_from_rates(cpu, w, &rates, meta);
+    let sa = mrc.predict_set_aware(cpu);
+    let traffic = traffic_from_rates(cpu, w, &sa.rates, meta);
     let (time, class) = classify_traffic(cpu, w, &traffic, slack);
     MrcPrediction {
-        rates,
+        rates: sa.rates,
+        fa_l1_hit_rate: sa.fa_l1_hit_rate,
+        conflict_pp: sa.conflict_pp,
         traffic,
         time,
         class,

@@ -27,7 +27,8 @@
 //!                "telemetry": {"sim_l1_hit_rate": 0.93, "sim_l2_hit_rate": 0.97,
 //!                              "mrc_l1_hit_rate": 0.93, "mrc_l2_hit_rate": 0.98,
 //!                              "sim_class": "L2-read", "predicted_class": "L2-read",
-//!                              "working_set_bytes": 20480}} ]
+//!                              "working_set_bytes": 20480,
+//!                              "conflict_pp": 0.42}} ]
 //! }
 //! ```
 //!
@@ -149,6 +150,12 @@ pub struct TelemetryRecord {
     pub predicted_class: String,
     /// Working-set estimate (98% of peak hit rate).
     pub working_set_bytes: u64,
+    /// Signed fully-assoc-minus-set-aware L1 hit-rate gap, percentage
+    /// points.  Positive means the set-aware model priced conflict misses
+    /// the fully-associative Mattson curve could not see; near zero means
+    /// associativity did not matter for this trace.  Records written
+    /// before this field exists read back as `0.0`.
+    pub conflict_pp: f64,
 }
 
 impl TelemetryRecord {
@@ -162,6 +169,7 @@ impl TelemetryRecord {
             sim_class: s.sim_class.clone(),
             predicted_class: s.predicted_class.clone(),
             working_set_bytes: s.working_set_bytes,
+            conflict_pp: s.conflict_pp,
         }
     }
 
@@ -174,6 +182,7 @@ impl TelemetryRecord {
             ("sim_class", json::s(self.sim_class.as_str())),
             ("predicted_class", json::s(self.predicted_class.as_str())),
             ("working_set_bytes", json::num(self.working_set_bytes as f64)),
+            ("conflict_pp", json::num(self.conflict_pp)),
         ])
     }
 
@@ -186,6 +195,12 @@ impl TelemetryRecord {
             sim_class: v.req("sim_class")?.as_str()?.to_string(),
             predicted_class: v.req("predicted_class")?.as_str()?.to_string(),
             working_set_bytes: v.req("working_set_bytes")?.as_u64()?,
+            // Introduced after the telemetry section shipped: default to
+            // 0.0 (no measured conflict gap) for older files.
+            conflict_pp: match v.get("conflict_pp") {
+                Some(x) => x.as_f64()?,
+                None => 0.0,
+            },
         })
     }
 }
@@ -397,6 +412,7 @@ mod tests {
                 sim_class: "L2-read".into(),
                 predicted_class: "L2-read".into(),
                 working_set_bytes: 20480,
+                conflict_pp: 0.42,
             }),
         }
     }

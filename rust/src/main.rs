@@ -653,6 +653,12 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
         (r.prediction.rates.l2_hit_rate - r.sim_l2_hit_rate) * 100.0,
     );
     println!(
+        "  conflict     {:+.2} p.p. (fully-assoc L1 {:.2}% vs set-aware {:.2}%)",
+        r.prediction.conflict_pp,
+        r.prediction.fa_l1_hit_rate * 100.0,
+        r.prediction.rates.l1_hit_rate * 100.0,
+    );
+    println!(
         "  time         {} (mrc) vs {} (sim)",
         fmt_time(r.prediction.time.total_s),
         fmt_time(r.sim_time_s)

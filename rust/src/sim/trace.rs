@@ -105,6 +105,27 @@ pub fn replay_gemm_traced<S: EventSink>(
     }
 }
 
+/// Replay a power-of-two-strided sweep: `lines` addresses spaced
+/// `stride_bytes` apart, re-touched for `rounds` passes.  With a
+/// power-of-two stride that is a multiple of `sets × line_bytes`, every
+/// address lands in the *same* L1 set — the adversarial conflict-miss
+/// workload the set-aware MRC validation (`tests/telemetry_mrc.rs`)
+/// thrashes the A72's 2-way L1 with.  All accesses are 4-byte reads
+/// tagged `Operand::A`.
+pub fn replay_strided<S: EventSink>(
+    h: &mut Hierarchy,
+    stride_bytes: u64,
+    lines: usize,
+    rounds: usize,
+    sink: &mut S,
+) {
+    for _ in 0..rounds {
+        for i in 0..lines {
+            h.access_traced(i as u64 * stride_bytes, 4, AccessKind::Read, Operand::A, sink);
+        }
+    }
+}
+
 /// Replay the spatial-pack convolution (loop order of
 /// `operators::conv::spatial_pack`): (co-block, row-block) tiles, taps
 /// unrolled, innermost `ox` contiguous.

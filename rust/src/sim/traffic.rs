@@ -17,6 +17,7 @@ use crate::hw::{CpuSpec, MemLevel};
 use crate::operators::conv::ConvSchedule;
 use crate::operators::gemm::GemmSchedule;
 use crate::operators::workloads::ConvLayer;
+use crate::telemetry::misscurve::conflict_capacity_fraction;
 
 /// Per-level traffic in bytes (reads unless suffixed).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -39,9 +40,6 @@ impl Default for MemLevel {
         MemLevel::Ram
     }
 }
-
-/// Fraction of cache capacity usable before conflict misses bite.
-const CAPACITY_UTIL: f64 = 0.75;
 
 /// The analytic traffic model, parameterized by the machine.
 #[derive(Clone, Debug)]
@@ -67,12 +65,20 @@ impl TrafficModel {
         }
     }
 
+    /// Usable L1 capacity before conflict misses bite.  The fraction is no
+    /// longer a hardcoded fudge: it comes from the same per-set retention
+    /// argument the set-aware MRC rests on
+    /// ([`conflict_capacity_fraction`]), so the 2-way A72 L1 is priced at
+    /// half its nominal capacity while the 4-way A53 keeps the historical
+    /// 0.75 (`capacity_fraction_matches_set_aware_retention` ties the two
+    /// models together).
     fn l1_cap(&self) -> f64 {
-        self.cpu.l1.size_bytes as f64 * CAPACITY_UTIL
+        self.cpu.l1.size_bytes as f64 * conflict_capacity_fraction(self.cpu.l1.associativity)
     }
 
+    /// Usable L2 capacity; 16-way caches retain ~94% (see [`Self::l1_cap`]).
     fn l2_cap(&self) -> f64 {
-        self.cpu.l2.size_bytes as f64 * CAPACITY_UTIL
+        self.cpu.l2.size_bytes as f64 * conflict_capacity_fraction(self.cpu.l2.associativity)
     }
 
     /// Tiled-GEMM traffic for `(M,K)·(K,N)` with element width `elem`
@@ -299,6 +305,53 @@ mod tests {
         assert!(t.l2_bytes >= t.ram_bytes, "RAM never exceeds L2 traffic");
         // one-read-per-MAC lower bound
         assert!(t.l1_bytes >= l.macs_exact() as f64 * 4.0);
+    }
+
+    #[test]
+    fn capacity_fraction_matches_set_aware_retention() {
+        // The usable-capacity fraction is exactly the per-set LRU retention
+        // limit the set-aware model measures: with one streaming intruder
+        // line per set, a W-way set retains W−1 resident lines forever
+        // (re-touch distance W−1 < W) and loses the W-th (distance W).  So
+        // (W−1)/W of nominal capacity is conflict-safe and one more line
+        // per set collapses it — the fraction is derived, not fudged.
+        use crate::telemetry::reuse::SetHistograms;
+        let (sets, rounds) = (8usize, 50u64);
+        for ways in [2usize, 4, 16] {
+            let survive = |residents_per_set: usize| {
+                let residents = (residents_per_set * sets) as u64;
+                let mut sh = SetHistograms::new(sets);
+                for round in 0..rounds {
+                    for line in 0..residents {
+                        sh.record(line, round == 0);
+                    }
+                    // one fresh conflict line per set each round
+                    for s in 0..sets as u64 {
+                        sh.record((residents_per_set as u64 + 1 + round) * sets as u64 + s, true);
+                    }
+                }
+                sh.hits_within_ways(ways)
+            };
+            // W−1 residents/set: every re-touch hits, across all rounds
+            assert_eq!(
+                survive(ways - 1),
+                ((ways - 1) * sets) as u64 * (rounds - 1),
+                "{ways}-way retains W−1 lines/set against a streaming intruder"
+            );
+            // W residents/set: the intruder evicts everything, zero hits
+            assert_eq!(survive(ways), 0, "{ways}-way collapses at W lines/set");
+            // ...and the traffic model's fraction is exactly that limit
+            let retained = (ways - 1) as f64 / ways as f64;
+            assert!(
+                (conflict_capacity_fraction(ways) - retained).abs() < 1e-12,
+                "fraction({ways}) = {} vs retention {retained}",
+                conflict_capacity_fraction(ways)
+            );
+        }
+        // the profiles' L1 fractions: A53 keeps the historical 0.75, the
+        // 2-way A72 is priced at half its nominal capacity
+        assert_eq!(conflict_capacity_fraction(4), 0.75);
+        assert_eq!(conflict_capacity_fraction(2), 0.5);
     }
 
     #[test]

@@ -14,19 +14,31 @@
 //! fully-associative LRU and approximations for the set-associative
 //! hardware `sim` models; the gap *is* the conflict-miss contribution,
 //! which the A53's 4-way L1 keeps small for blocked operators while the
-//! A72's 2-way L1 can blow it wide open on power-of-two strides — a
-//! set-conflict sensitivity this module makes measurable (see
+//! A72's 2-way L1 can blow it wide open on power-of-two strides (see
 //! `DESIGN.md` §Telemetry).
+//!
+//! [`MissRatioCurve::predict_set_aware`] closes that gap for the L1: when
+//! the trace carried per-set stack distances ([`SetHistograms`]), the
+//! Mattson property applies *per set* — each set of a `W`-way LRU cache is
+//! an independent fully-associative LRU cache of `W` lines over its
+//! sub-stream, so the per-set hit count is **exact** for the simulated
+//! geometry, conflict misses included.  Without per-set data it falls back
+//! to a Smith-style associativity factor ([`smith_factor`]) scaling the
+//! fully-associative miss ratio.  The fully-assoc-vs-set-aware difference
+//! is surfaced as `conflict_pp`.
 
 use crate::hw::CpuSpec;
 
-use super::reuse::{MAX_EXACT_DISTANCE, ReuseHistogram};
+use super::reuse::{MAX_EXACT_DISTANCE, ReuseHistogram, SetHistograms};
 
 /// A miss-ratio curve over line-granular capacities.
 #[derive(Clone, Debug)]
 pub struct MissRatioCurve {
     hist: ReuseHistogram,
     line_bytes: usize,
+    /// Per-set refinement for exact conflict-miss accounting (only when
+    /// built [`with_sets`](Self::with_sets)).
+    sets: Option<SetHistograms>,
 }
 
 /// Hit rates predicted for a concrete two-level hierarchy.
@@ -54,10 +66,62 @@ pub struct Knee {
     pub gain: f64,
 }
 
+/// Set-aware hit rates plus the conflict-miss gap against the
+/// fully-associative prediction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SetAwarePrediction {
+    /// Conflict-corrected rates (the L1 term set-aware, L2 as in
+    /// [`MissRatioCurve::predict`] — the 16-way L2s of both parts sit
+    /// close enough to fully-associative that the global curve stands).
+    pub rates: PredictedRates,
+    /// The fully-associative L1 hit rate the correction started from.
+    pub fa_l1_hit_rate: f64,
+    /// `(fa_l1_hit_rate − set-aware L1 hit rate) · 100`: percentage points
+    /// of L1 hit rate the fully-associative model over-promises.  Positive
+    /// when conflict misses hurt; slightly negative when set filtering
+    /// shortens within-set distances past a capacity knife-edge (the 64³
+    /// B-panel case).
+    pub conflict_pp: f64,
+}
+
+/// Smith-style associativity factor: the multiplier on the
+/// fully-associative miss ratio that approximates a `ways`-associative
+/// cache of the same capacity (Smith, "Cache Memories", 1982; Hill &
+/// Smith's measurements put 2-way ≈ 1.2–1.3× and 4-way ≈ 1.1–1.15× the
+/// fully-associative miss ratio).  `1 + 0.5/ways`: 1.25 at 2 ways, 1.125
+/// at 4, 1.03 at 16, → 1 as associativity grows.
+pub fn smith_factor(ways: usize) -> f64 {
+    1.0 + 0.5 / ways.max(1) as f64
+}
+
+/// Fraction of a `ways`-associative cache's capacity that reliably stays
+/// resident while a streaming operand passes through: per set, LRU retains
+/// `ways − 1` lines against a one-line-at-a-time stream, so the usable
+/// fraction is `1 − 1/ways` (floored at 1/2 for direct-mapped degenerate
+/// geometry).  0.75 at 4 ways reproduces the capacity-utilization constant
+/// `sim::traffic` validated against trace simulation before this model
+/// existed; 2 ways drop to 0.5, 16-way L2s keep 0.9375.  The tie to the
+/// per-set model is pinned by `sim::traffic`'s
+/// `capacity_fraction_matches_set_aware_retention` test.
+pub fn conflict_capacity_fraction(ways: usize) -> f64 {
+    (1.0 - 1.0 / ways.max(1) as f64).max(0.5)
+}
+
 impl MissRatioCurve {
     /// Curve over `hist` with `line_bytes`-sized lines.
     pub fn new(hist: ReuseHistogram, line_bytes: usize) -> Self {
-        MissRatioCurve { hist, line_bytes }
+        MissRatioCurve { hist, line_bytes, sets: None }
+    }
+
+    /// Curve carrying the trace's per-set refinement, enabling the exact
+    /// leg of [`predict_set_aware`](Self::predict_set_aware).
+    pub fn with_sets(hist: ReuseHistogram, line_bytes: usize, sets: SetHistograms) -> Self {
+        MissRatioCurve { hist, line_bytes, sets: Some(sets) }
+    }
+
+    /// The per-set refinement, when one was attached.
+    pub fn set_histograms(&self) -> Option<&SetHistograms> {
+        self.sets.as_ref()
     }
 
     /// Cache-line size the distances were measured in.
@@ -91,6 +155,48 @@ impl MissRatioCurve {
             l1_hit_rate: p1,
             l2_hit_rate,
             ram_fraction: 1.0 - p2,
+        }
+    }
+
+    /// Hit rates with the L1 term corrected for set conflicts.
+    ///
+    /// When the curve carries per-set stack distances matching `cpu`'s L1
+    /// geometry, the L1 hit rate is the *exact* per-set Mattson count —
+    /// an access hits iff its within-set distance is below the
+    /// associativity — so conflict misses the fully-associative curve
+    /// cannot see are priced exactly.  Otherwise the fully-associative
+    /// miss ratio is scaled by [`smith_factor`] (the budgeted-trace
+    /// fallback).  The L2 term stays the global-curve prediction: both
+    /// parts' L2s are 16-way (factor 1.03), and the L1's conflict misses
+    /// land there, which is exactly how the corrected rates raise L2
+    /// traffic downstream in `analysis::predict::traffic_from_rates`.
+    ///
+    /// The arithmetic mirrors `analysis::interference::rates_at` term for
+    /// term so a solo co-run over a traced profile reproduces this
+    /// prediction bit-for-bit.
+    pub fn predict_set_aware(&self, cpu: &CpuSpec) -> SetAwarePrediction {
+        let fa_l1 = self.hit_rate_at_bytes(cpu.l1.size_bytes);
+        let p1 = match &self.sets {
+            Some(sh)
+                if sh.sets() == cpu.l1.sets()
+                    && self.line_bytes == cpu.l1.line_bytes
+                    && sh.total() > 0 =>
+            {
+                sh.hit_rate_within_ways(cpu.l1.associativity)
+            }
+            _ => (1.0 - (1.0 - fa_l1) * smith_factor(cpu.l1.associativity)).max(0.0),
+        };
+        let p2 = self.hit_rate_at_bytes(cpu.l2.size_bytes).max(p1);
+        let miss1 = 1.0 - p1;
+        let l2_hit_rate = if miss1 > 1e-12 { (p2 - p1) / miss1 } else { 1.0 };
+        SetAwarePrediction {
+            rates: PredictedRates {
+                l1_hit_rate: p1,
+                l2_hit_rate,
+                ram_fraction: 1.0 - p2,
+            },
+            fa_l1_hit_rate: fa_l1,
+            conflict_pp: (fa_l1 - p1) * 100.0,
         }
     }
 
@@ -261,5 +367,74 @@ mod tests {
         let ws = mrc.capacity_for_fraction(0.9);
         // the sweep's working set is 100 lines = 6400 bytes
         assert!(ws >= 100 * 64 && ws <= 128 * 64, "{ws}");
+    }
+
+    #[test]
+    fn smith_factor_and_capacity_fraction_anchor_points() {
+        assert!((smith_factor(2) - 1.25).abs() < 1e-12);
+        assert!((smith_factor(4) - 1.125).abs() < 1e-12);
+        assert!(smith_factor(16) < 1.04);
+        assert_eq!(conflict_capacity_fraction(2), 0.5);
+        assert_eq!(conflict_capacity_fraction(4), 0.75);
+        assert_eq!(conflict_capacity_fraction(16), 0.9375);
+        assert_eq!(conflict_capacity_fraction(1), 0.5, "direct-mapped floor");
+    }
+
+    #[test]
+    fn set_aware_prediction_prices_a_conflict_set_exactly() {
+        use crate::telemetry::event::Operand;
+        use crate::telemetry::reuse::ReuseAnalyzer;
+
+        // A72 L1: 256 sets of 2 ways.  A 16 KiB stride steps one full way
+        // span, so all 8 lines collide in set 0: the per-set model scores
+        // every warm access a conflict miss, while the fully-associative
+        // curve (8 lines << 512-line capacity) promises ~all hits.
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let mut a = ReuseAnalyzer::with_sets(cpu.l1.line_bytes, cpu.l1.sets());
+        for _ in 0..32 {
+            for i in 0..8u64 {
+                a.touch(i * 16384, Operand::A);
+            }
+        }
+        let hist = a.combined();
+        let sets = a.take_set_histograms().unwrap();
+        let mrc = MissRatioCurve::with_sets(hist, cpu.l1.line_bytes, sets);
+        let p = mrc.predict_set_aware(&cpu);
+        assert!(p.fa_l1_hit_rate > 0.9, "{p:?}");
+        assert!(p.rates.l1_hit_rate < 1e-9, "all conflict misses: {p:?}");
+        assert!(p.conflict_pp > 90.0, "{p:?}");
+    }
+
+    #[test]
+    fn smith_fallback_scales_the_fully_assoc_miss_ratio() {
+        // Without per-set data (or with mismatched geometry) the
+        // correction is the associativity-factor fallback, which by
+        // construction never exceeds the fully-associative hit rate.
+        let cpu = profile_by_name("a72").unwrap().cpu;
+        let mrc = MissRatioCurve::new(sweep_hist(300, 10), 64);
+        let fa = mrc.predict(&cpu);
+        let sa = mrc.predict_set_aware(&cpu);
+        let expect = 1.0 - (1.0 - fa.l1_hit_rate) * smith_factor(2);
+        assert!((sa.rates.l1_hit_rate - expect).abs() < 1e-12, "{sa:?}");
+        assert!(sa.rates.l1_hit_rate <= fa.l1_hit_rate);
+        assert!(sa.conflict_pp >= 0.0);
+
+        // per-set data tracked at the *wrong* geometry must not be used
+        let mut a = crate::telemetry::reuse::ReuseAnalyzer::with_sets(64, 8);
+        for _ in 0..10 {
+            for l in 0..300u64 {
+                a.touch(l * 64, crate::telemetry::event::Operand::A);
+            }
+        }
+        let hist = a.combined();
+        let sets = a.take_set_histograms().unwrap();
+        let mismatched = MissRatioCurve::with_sets(hist, 64, sets);
+        let sa2 = mismatched.predict_set_aware(&cpu);
+        let fa2 = mismatched.predict(&cpu);
+        let expect2 = 1.0 - (1.0 - fa2.l1_hit_rate) * smith_factor(2);
+        assert!(
+            (sa2.rates.l1_hit_rate - expect2).abs() < 1e-12,
+            "8-set tracker vs 256-set L1 must fall back to Smith: {sa2:?}"
+        );
     }
 }

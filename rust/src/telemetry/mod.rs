@@ -11,11 +11,14 @@
 //!   into a pluggable [`sink::EventSink`].  The no-op [`sink::NullSink`]
 //!   keeps the untraced hot path allocation-free and branch-identical.
 //! * [`reuse`] — streaming, bounded-memory stack-distance analysis over
-//!   cache lines, with per-operand histograms.
+//!   cache lines, with per-operand histograms and optional per-set
+//!   histograms ([`reuse::SetHistograms`]) at a target L1 geometry.
 //! * [`misscurve`] — the Mattson stack property turns one distance
 //!   histogram into hit rates for **every** cache capacity: the miss-ratio
 //!   curve, its working-set knees, and L1/L2 predictions for a concrete
-//!   CPU.
+//!   CPU.  [`misscurve::MissRatioCurve::predict_set_aware`] additionally
+//!   prices conflict misses: exact per-set Mattson curves when the traced
+//!   geometry matches, a Smith associativity factor otherwise.
 //! * [`profile`] — the [`profile::trace_workload`] driver tying it
 //!   together: one traced replay yields the set-associative ground truth
 //!   *and* the MRC prediction, per-operand histograms, an optional JSON
@@ -53,11 +56,14 @@ pub mod reuse;
 pub mod sink;
 
 pub use event::{CacheEvent, EventKind, Operand};
-pub use misscurve::{Knee, MissRatioCurve, PredictedRates};
+pub use misscurve::{
+    conflict_capacity_fraction, smith_factor, Knee, MissRatioCurve, PredictedRates,
+    SetAwarePrediction,
+};
 pub use profile::{
     serving_mix_profiles, serving_tier_mix_profiles, synthetic_gemm_profile,
     synthetic_gemm_profile_budgeted, synthetic_tier_profile, trace_workload, CacheProfile,
     TraceBudget, TraceReport, TraceSummary,
 };
-pub use reuse::{ReuseAnalyzer, ReuseHistogram};
+pub use reuse::{ReuseAnalyzer, ReuseHistogram, SetHistograms};
 pub use sink::{CountingSink, EventSink, NullSink, TeeSink, VecSink};

@@ -135,7 +135,10 @@ pub struct TraceReport {
 /// with a reuse-analyzer sink, then predict and classify both ways.
 pub fn trace_workload(cpu: &CpuSpec, w: &BenchWorkload, budget: TraceBudget) -> TraceReport {
     let mut h = Hierarchy::new(cpu);
-    let mut analyzer = ReuseAnalyzer::new(cpu.l1.line_bytes);
+    // Track per-set stack distances at the target L1's geometry alongside
+    // the fully-associative histogram, so the MRC can price the 2-way
+    // A72's conflict misses exactly (misscurve::predict_set_aware).
+    let mut analyzer = ReuseAnalyzer::with_sets(cpu.l1.line_bytes, cpu.l1.sets());
     let (scale, max_rows) = match w {
         BenchWorkload::Gemm { n } | BenchWorkload::QnnGemm { n } => {
             // int8 shares the tiled loop nest at 1-byte operands (the C
@@ -185,7 +188,10 @@ pub fn trace_workload(cpu: &CpuSpec, w: &BenchWorkload, budget: TraceBudget) -> 
         traced_write_accesses: analyzer.write_accesses,
         scale,
     };
-    let mrc = MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes);
+    let mrc = match analyzer.take_set_histograms() {
+        Some(sets) => MissRatioCurve::with_sets(analyzer.combined(), cpu.l1.line_bytes, sets),
+        None => MissRatioCurve::new(analyzer.combined(), cpu.l1.line_bytes),
+    };
     let prediction = predict_workload(cpu, w, &mrc, &meta, CLASSIFY_SLACK);
 
     let sim_traffic = traffic_from_counts(cpu, w, &h.counts, analyzer.write_accesses, scale);
@@ -246,6 +252,14 @@ impl TraceReport {
         (self.prediction.rates.l1_hit_rate - self.sim_l1_hit_rate).abs() * 100.0
     }
 
+    /// Fully-assoc-minus-set-aware L1 hit-rate gap in percentage points:
+    /// what ignoring set conflicts would have cost this workload (signed —
+    /// negative on anti-conflict knife-edges where the per-set view hits
+    /// *more* than the fully-associative stack does).
+    pub fn conflict_pp(&self) -> f64 {
+        self.prediction.conflict_pp
+    }
+
     /// |predicted − simulated| L2 hit rate, percentage points.
     pub fn l2_err_pp(&self) -> f64 {
         (self.prediction.rates.l2_hit_rate - self.sim_l2_hit_rate).abs() * 100.0
@@ -266,6 +280,7 @@ impl TraceReport {
             sim_l2_hit_rate: self.sim_l2_hit_rate,
             mrc_l1_hit_rate: self.prediction.rates.l1_hit_rate,
             mrc_l2_hit_rate: self.prediction.rates.l2_hit_rate,
+            conflict_pp: self.prediction.conflict_pp,
             sim_class: self.sim_class.clone(),
             predicted_class: self.predicted_class.clone(),
             working_set_bytes: self.working_set_bytes,
@@ -371,6 +386,8 @@ impl TraceReport {
                     ("l1_hit_rate", json::num(self.prediction.rates.l1_hit_rate)),
                     ("l2_hit_rate", json::num(self.prediction.rates.l2_hit_rate)),
                     ("ram_fraction", json::num(self.prediction.rates.ram_fraction)),
+                    ("fa_l1_hit_rate", json::num(self.prediction.fa_l1_hit_rate)),
+                    ("conflict_pp", json::num(self.prediction.conflict_pp)),
                     ("time_s", json::num(self.prediction.time.total_s)),
                     ("class", json::s(self.predicted_class.as_str())),
                     ("l1_err_pp", json::num(self.l1_err_pp())),
@@ -400,6 +417,9 @@ pub struct TraceSummary {
     pub mrc_l1_hit_rate: f64,
     /// MRC-predicted L2 hit rate.
     pub mrc_l2_hit_rate: f64,
+    /// Fully-assoc-minus-set-aware L1 hit-rate gap, percentage points
+    /// (signed; see [`TraceReport::conflict_pp`]).
+    pub conflict_pp: f64,
     /// Boundness class of the full-simulation time.
     pub sim_class: String,
     /// Boundness class of the MRC prediction.
@@ -417,11 +437,12 @@ impl TraceSummary {
     /// One-line rendering for result-store details and logs.
     pub fn render(&self) -> String {
         format!(
-            "L1 {:.1}%/{:.1}% L2 {:.1}%/{:.1}% (sim/mrc), ws {} KiB, class {}/{}",
+            "L1 {:.1}%/{:.1}% L2 {:.1}%/{:.1}% (sim/mrc), conflict {:+.2}pp, ws {} KiB, class {}/{}",
             self.sim_l1_hit_rate * 100.0,
             self.mrc_l1_hit_rate * 100.0,
             self.sim_l2_hit_rate * 100.0,
             self.mrc_l2_hit_rate * 100.0,
+            self.conflict_pp,
             self.working_set_bytes / 1024,
             self.sim_class,
             self.predicted_class,

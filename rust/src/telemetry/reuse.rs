@@ -232,6 +232,116 @@ impl Fenwick {
 /// Minimum slot-window size (keeps compaction amortized for tiny traces).
 const MIN_SLOTS: usize = 1 << 12;
 
+/// Per-set LRU stack depth kept by [`SetHistograms`].  Within-set stack
+/// distances only matter up to the associativity (at most 16 ways in the
+/// modelled parts); anything deeper is a guaranteed miss, so re-accesses
+/// of truncated lines fold into the `far` bucket.  64 keeps the per-set
+/// linear scan cache-resident while leaving headroom for property tests
+/// that probe distances well past any real associativity.
+pub const SET_STACK_DEPTH: usize = 64;
+
+/// Per-set stack-distance histograms: the set-associative refinement of
+/// the fully-associative analysis.
+///
+/// Each set of a `W`-way set-associative LRU cache behaves as an
+/// *independent fully-associative LRU cache of `W` lines* over the
+/// sub-stream of accesses mapping to it, so the Mattson stack property
+/// applies per set: an access hits **iff** its within-set stack distance
+/// is `< W`.  Unlike the fully-associative approximation this is *exact*
+/// for the simulated hierarchy (`sim::cache` is true-LRU per set), which
+/// is what lets `misscurve::predict_set_aware` price conflict misses the
+/// fully-associative curve cannot see.
+///
+/// Set indexing matches `sim/cache.rs` exactly:
+/// `set = (addr >> line_shift) as usize & (sets - 1)`.
+#[derive(Clone, Debug)]
+pub struct SetHistograms {
+    sets: usize,
+    /// Per-set LRU stacks of line addresses, MRU first, truncated at
+    /// [`SET_STACK_DEPTH`].
+    stacks: Vec<Vec<u64>>,
+    hists: Vec<ReuseHistogram>,
+}
+
+impl SetHistograms {
+    /// Empty tracker for a cache with `sets` sets (must be a power of two,
+    /// mirroring the simulator's index arithmetic).
+    pub fn new(sets: usize) -> Self {
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        SetHistograms {
+            sets,
+            stacks: vec![Vec::new(); sets],
+            hists: vec![ReuseHistogram::new(); sets],
+        }
+    }
+
+    /// Number of sets tracked.
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    /// One line-granular access.  `cold` is the *global* first-touch flag
+    /// from the fully-associative analyzer: a line absent from its set's
+    /// (truncated) stack but seen before globally records as `far`, not
+    /// cold, so cold mass is conserved between the two views.
+    pub fn record(&mut self, line: u64, cold: bool) {
+        let s = (line as usize) & (self.sets - 1);
+        let stack = &mut self.stacks[s];
+        match stack.iter().position(|&l| l == line) {
+            Some(pos) => {
+                stack.remove(pos);
+                stack.insert(0, line);
+                self.hists[s].record(Some(pos as u64));
+            }
+            None => {
+                stack.insert(0, line);
+                if stack.len() > SET_STACK_DEPTH {
+                    stack.pop();
+                }
+                self.hists[s].record(if cold {
+                    None
+                } else {
+                    // truncated out of the bounded stack: finite but
+                    // deeper than any associativity we evaluate
+                    Some(MAX_EXACT_DISTANCE as u64)
+                });
+            }
+        }
+    }
+
+    /// The within-set distance histogram of one set.
+    pub fn histogram(&self, set: usize) -> &ReuseHistogram {
+        &self.hists[set]
+    }
+
+    /// Accesses whose within-set distance is `< ways` — the exact hit
+    /// count of a `ways`-associative LRU cache with this set count
+    /// (for `ways <= SET_STACK_DEPTH`).
+    pub fn hits_within_ways(&self, ways: usize) -> u64 {
+        self.hists.iter().map(|h| h.hits_within(ways)).sum()
+    }
+
+    /// Total accesses recorded across all sets.
+    pub fn total(&self) -> u64 {
+        self.hists.iter().map(|h| h.total()).sum()
+    }
+
+    /// Cold first touches across all sets (equals the fully-associative
+    /// analyzer's cold count — conservation the proptests pin).
+    pub fn cold(&self) -> u64 {
+        self.hists.iter().map(|h| h.cold()).sum()
+    }
+
+    /// Set-associative hit rate at `ways` (0 when empty).
+    pub fn hit_rate_within_ways(&self, ways: usize) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits_within_ways(ways) as f64 / total as f64
+    }
+}
+
 /// The streaming analyzer: feeds per-operand [`ReuseHistogram`]s from a
 /// line-granular address stream.  Implements [`EventSink`], consuming the
 /// L1 hit/miss events of a traced replay (exactly one per core access).
@@ -245,6 +355,8 @@ pub struct ReuseAnalyzer {
     /// Next free slot.
     time: usize,
     per_operand: [ReuseHistogram; 4],
+    /// Per-set refinement (only with [`ReuseAnalyzer::with_sets`]).
+    set_hists: Option<SetHistograms>,
     /// Total element bytes requested (for traffic extrapolation).
     pub bytes_accessed: u64,
     /// Write-flavoured accesses (C-store stream estimate).
@@ -261,9 +373,20 @@ impl ReuseAnalyzer {
             occupied: Fenwick::new(MIN_SLOTS),
             time: 0,
             per_operand: Default::default(),
+            set_hists: None,
             bytes_accessed: 0,
             write_accesses: 0,
         }
+    }
+
+    /// Analyzer that additionally keeps per-set stack distances for a
+    /// cache with `sets` sets (the L1 geometry of the CPU the trace will
+    /// be scored against) — the data `misscurve::predict_set_aware` needs
+    /// for exact conflict-miss accounting.
+    pub fn with_sets(line_bytes: usize, sets: usize) -> Self {
+        let mut a = Self::new(line_bytes);
+        a.set_hists = Some(SetHistograms::new(sets));
+        a
     }
 
     /// Cache-line size distances are measured in.
@@ -307,6 +430,10 @@ impl ReuseAnalyzer {
         self.last.insert(line, slot);
         self.time += 1;
         self.per_operand[operand.index()].record(distance);
+        if let Some(sh) = &mut self.set_hists {
+            // globally-cold flag keeps cold mass identical in both views
+            sh.record(line, distance.is_none());
+        }
     }
 
     /// Rebuild the slot window keeping only live lines, preserving their
@@ -338,6 +465,18 @@ impl ReuseAnalyzer {
             out.merge(h);
         }
         out
+    }
+
+    /// The per-set refinement, when this analyzer was built
+    /// [`with_sets`](Self::with_sets).
+    pub fn set_histograms(&self) -> Option<&SetHistograms> {
+        self.set_hists.as_ref()
+    }
+
+    /// Move the per-set refinement out (for handing to
+    /// `MissRatioCurve::with_sets` without cloning).
+    pub fn take_set_histograms(&mut self) -> Option<SetHistograms> {
+        self.set_hists.take()
     }
 }
 
@@ -512,5 +651,55 @@ mod tests {
         assert_eq!(h.hit_rate(1024), 0.0);
         assert_eq!(h.percentile(50.0), None);
         assert!(h.log_buckets().is_empty());
+    }
+
+    #[test]
+    fn per_set_distances_contract_against_the_global_view() {
+        // 2 sets: lines 0, 2 -> set 0; line 1 -> set 1.  Trace 0 1 2 0:
+        // global distance of the 0-reuse is 2 (lines 1 and 2 intervene),
+        // but its within-set distance is 1 (only line 2 shares the set).
+        let mut a = ReuseAnalyzer::with_sets(64, 2);
+        touch_all(&mut a, &[0, 1, 2, 0]);
+        let sh = a.set_histograms().unwrap();
+        assert_eq!(sh.sets(), 2);
+        assert_eq!(sh.total(), 4);
+        assert_eq!(sh.cold(), 3);
+        assert_eq!(sh.hits_within_ways(2), 1, "within-set distance 1 < 2 ways");
+        assert_eq!(sh.hits_within_ways(1), 0);
+        assert_eq!(a.combined().hits_within(2), 0, "global view sees distance 2");
+    }
+
+    #[test]
+    fn conflict_misses_visible_only_per_set() {
+        // Stride of 4 lines maps everything to set 0 of a 4-set tracker:
+        // cycling 3 lines thrashes a 2-way set (within-set distance 2 >= 2
+        // ways) while the fully-associative view at the same total
+        // capacity (8 lines) scores every warm access a hit.
+        let mut a = ReuseAnalyzer::with_sets(64, 4);
+        for _ in 0..4 {
+            touch_all(&mut a, &[0, 4, 8]);
+        }
+        let sh = a.set_histograms().unwrap();
+        assert_eq!(sh.hits_within_ways(2), 0, "3 lines in one 2-way set thrash");
+        assert_eq!(a.combined().hits_within(8), 9, "fully-assoc view hits");
+        assert_eq!(sh.total(), a.combined().total());
+        assert_eq!(sh.cold(), a.combined().cold());
+    }
+
+    #[test]
+    fn truncated_reaccess_records_far_not_cold() {
+        // More live lines than the bounded stack holds: second-round
+        // accesses fall off the stack, so they must score as far (finite,
+        // deep) rather than cold — conserving cold mass with the
+        // fully-associative analyzer.
+        let mut a = ReuseAnalyzer::with_sets(64, 1);
+        let lines: Vec<u64> = (0..SET_STACK_DEPTH as u64 + 8).collect();
+        touch_all(&mut a, &lines);
+        touch_all(&mut a, &lines);
+        let sh = a.set_histograms().unwrap();
+        assert_eq!(sh.cold(), lines.len() as u64);
+        assert_eq!(sh.cold(), a.combined().cold());
+        assert_eq!(sh.total(), 2 * lines.len() as u64);
+        assert_eq!(sh.hits_within_ways(SET_STACK_DEPTH), 0, "truncated reuses are far");
     }
 }

@@ -19,6 +19,7 @@ use cachebound::operators::tensor::max_abs_diff;
 use cachebound::operators::workloads;
 use cachebound::operators::Tensor;
 use cachebound::sim::cache::{AccessKind, SetAssocCache};
+use cachebound::telemetry::{MissRatioCurve, Operand, ReuseAnalyzer};
 use cachebound::util::json;
 use cachebound::util::rng::Xoshiro256;
 
@@ -711,5 +712,104 @@ fn prop_simulated_time_positive_and_monotone_in_work() {
             cachebound::sim::timing::simulate_gemm_time(&cpu, 2 * n, 2 * n, 2 * n, s, 32).total_s;
         assert!(t1 > 0.0 && t2.is_finite());
         assert!(t2 > t1, "8x work must take longer: {t1} vs {t2} (n={n}, {s:?})");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Set-aware reuse-distance invariants
+// ---------------------------------------------------------------------------
+
+/// Feed `a` a random access mix: mostly uniform lines, with occasional
+/// power-of-two strided runs (the aliasing pattern that makes per-set and
+/// fully-associative views diverge the most).
+fn random_line_trace(a: &mut ReuseAnalyzer, rng: &mut Xoshiro256) {
+    let bursts = 50 + rng.below(100);
+    for _ in 0..bursts {
+        if rng.below(4) == 0 {
+            let stride = 1u64 << rng.below(7);
+            let base = rng.below(64);
+            for i in 0..8u64 {
+                a.touch((base + i * stride) * 64, Operand::A);
+            }
+        } else {
+            a.touch(rng.below(256) * 64, Operand::A);
+        }
+    }
+}
+
+#[test]
+fn prop_per_set_histograms_conserve_mass_and_dominate_fully_assoc() {
+    // The per-set refinement is an exact repartition of the same access
+    // stream: total and cold mass match the fully-associative histogram,
+    // and because a within-set distance only counts *same-set* intervening
+    // lines (a subset of all intervening lines), the per-set view hits at
+    // least as often at every depth up to the bounded stack.
+    forall("set_hist_conservation", 20, |rng| {
+        let sets = 1usize << rng.below(5); // 1..16 sets
+        let mut a = ReuseAnalyzer::with_sets(64, sets);
+        random_line_trace(&mut a, rng);
+        let fa = a.combined();
+        let sh = a.set_histograms().unwrap();
+        assert_eq!(sh.total(), fa.total(), "mass conservation ({sets} sets)");
+        assert_eq!(sh.cold(), fa.cold(), "cold conservation ({sets} sets)");
+        for d in [1usize, 2, 4, 8, 16, 32] {
+            assert!(
+                sh.hits_within_ways(d) >= fa.hits_within(d),
+                "{sets} sets, depth {d}: per-set {} < fully-assoc {}",
+                sh.hits_within_ways(d),
+                fa.hits_within(d)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_set_aware_hits_equal_lru_simulation_exactly() {
+    // Each set of a W-way true-LRU cache is an independent W-line LRU over
+    // its sub-stream, so per-set Mattson is *exact*: hit counts must equal
+    // the simulator's, access for access, at any geometry.  The Smith
+    // fallback (no per-set data) must stay conservative: never above the
+    // fully-associative estimate.
+    forall("set_aware_vs_sim", 20, |rng| {
+        let line = 64usize;
+        let ways = 1usize << rng.below(3); // 1, 2, 4
+        let sets = 1usize << (2 + rng.below(4)); // 4..32
+        let spec = cachebound::hw::CacheLevelSpec {
+            size_bytes: sets * ways * line,
+            line_bytes: line,
+            associativity: ways,
+            read_bw: 1.0,
+            write_bw: 1.0,
+            latency_cycles: 1,
+        };
+        let mut c = SetAssocCache::new(&spec);
+        let mut a = ReuseAnalyzer::with_sets(line, sets);
+        let accesses = 400 + rng.below(400);
+        for _ in 0..accesses {
+            let addr = rng.below(1 << 14);
+            let kind = if rng.below(4) == 0 { AccessKind::Write } else { AccessKind::Read };
+            c.access(addr, kind);
+            a.touch(addr, Operand::A);
+        }
+        let sh = a.set_histograms().unwrap();
+        assert_eq!(
+            sh.hits_within_ways(ways),
+            c.stats.hits(),
+            "{sets} sets x {ways} ways: per-set Mattson must equal true-LRU simulation"
+        );
+        assert_eq!(sh.total(), c.stats.accesses());
+
+        // Smith fallback: a curve with no per-set data scored against a
+        // real CPU must discount, never inflate, the fully-assoc rate.
+        let cpu = profile_by_name(*rng.choose(&["a53", "a72"])).unwrap().cpu;
+        let mrc = MissRatioCurve::new(a.combined(), line);
+        let p = mrc.predict_set_aware(&cpu);
+        assert!(
+            p.rates.l1_hit_rate <= p.fa_l1_hit_rate + 1e-12,
+            "Smith fallback above fully-assoc: {} vs {}",
+            p.rates.l1_hit_rate,
+            p.fa_l1_hit_rate
+        );
+        assert!(p.conflict_pp >= -1e-9, "fallback conflict gap must be non-negative");
     });
 }

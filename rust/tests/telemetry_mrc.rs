@@ -1,7 +1,10 @@
 //! Acceptance tests for the cache-telemetry subsystem: MRC predictions
 //! versus full `sim::Hierarchy` simulation on the paper's Tables IV/V
-//! GEMM grid, trace coverage of every operator family, and the
-//! `cachebound trace` CLI's JSON contract.
+//! GEMM grid — on **both** boards, the A53's 4-way L1 and the A72's
+//! 2-way L1 — plus adversarial power-of-two-stride workloads where the
+//! fully-associative Mattson curve is demonstrably wrong and only the
+//! set-aware model tracks the simulator, trace coverage of every operator
+//! family, and the `cachebound trace` CLI's JSON contract.
 //!
 //! Both sides of every comparison come from the *same* traced replay: the
 //! replay runs through the set-associative hierarchy with a reuse-distance
@@ -17,9 +20,9 @@ use std::process::Command;
 use cachebound::hw::profile_by_name;
 use cachebound::operators::workloads::{BenchWorkload, ConvLayer, GEMM_TABLE_SIZES};
 use cachebound::sim::hierarchy::Hierarchy;
-use cachebound::sim::trace::{replay_gemm, replay_gemm_traced};
+use cachebound::sim::trace::{replay_gemm, replay_gemm_traced, replay_strided};
 use cachebound::telemetry::{
-    trace_workload, NullSink, ReuseAnalyzer, TraceBudget, TraceReport,
+    trace_workload, MissRatioCurve, NullSink, ReuseAnalyzer, TraceBudget, TraceReport,
 };
 use cachebound::util::json;
 
@@ -33,39 +36,48 @@ fn rows_for(n: usize) -> usize {
     }
 }
 
-fn traced_grid_reports() -> &'static Vec<(usize, TraceReport)> {
-    static REPORTS: std::sync::OnceLock<Vec<(usize, TraceReport)>> = std::sync::OnceLock::new();
+/// The hardware grid: both boards the paper measures.  The A53's 4-way L1
+/// is the friendly case; the A72's 2-way L1 is the one that *needs* the
+/// set-aware model — half the ways means conflict misses bite at half the
+/// per-set depth.
+const GRID_PROFILES: [&str; 2] = ["a53", "a72"];
+
+fn traced_grid_reports() -> &'static Vec<(&'static str, usize, TraceReport)> {
+    static REPORTS: std::sync::OnceLock<Vec<(&'static str, usize, TraceReport)>> =
+        std::sync::OnceLock::new();
     REPORTS.get_or_init(|| {
-        let cpu = profile_by_name("a53").unwrap().cpu;
-        GEMM_TABLE_SIZES
-            .iter()
-            .map(|&n| {
+        let mut out = Vec::new();
+        for profile in GRID_PROFILES {
+            let cpu = profile_by_name(profile).unwrap().cpu;
+            for &n in GEMM_TABLE_SIZES {
                 let r = trace_workload(
                     &cpu,
                     &BenchWorkload::Gemm { n },
                     TraceBudget::new(rows_for(n)),
                 );
-                (n, r)
-            })
-            .collect()
+                out.push((profile, n, r));
+            }
+        }
+        out
     })
 }
 
-/// Acceptance: MRC-predicted L1/L2 hit rates within 2 percentage points of
-/// the full set-associative simulation on every Tables IV/V GEMM shape.
+/// Acceptance: set-aware MRC-predicted L1/L2 hit rates within 2 percentage
+/// points of the full set-associative simulation on every Tables IV/V GEMM
+/// shape, on both the A53 (4-way L1) and the A72 (2-way L1).
 #[test]
 fn mrc_hit_rates_match_full_simulation_on_tables_iv_v_grid() {
-    for (n, r) in traced_grid_reports() {
+    for (profile, n, r) in traced_grid_reports() {
         assert!(
             r.l1_err_pp() <= 2.0,
-            "n={n}: L1 hit-rate error {:.3} p.p. (mrc {:.4} vs sim {:.4})",
+            "{profile} n={n}: L1 hit-rate error {:.3} p.p. (mrc {:.4} vs sim {:.4})",
             r.l1_err_pp(),
             r.prediction.rates.l1_hit_rate,
             r.sim_l1_hit_rate,
         );
         assert!(
             r.l2_err_pp() <= 2.0,
-            "n={n}: L2 hit-rate error {:.3} p.p. (mrc {:.4} vs sim {:.4})",
+            "{profile} n={n}: L2 hit-rate error {:.3} p.p. (mrc {:.4} vs sim {:.4})",
             r.l2_err_pp(),
             r.prediction.rates.l2_hit_rate,
             r.sim_l2_hit_rate,
@@ -75,13 +87,13 @@ fn mrc_hit_rates_match_full_simulation_on_tables_iv_v_grid() {
 
 /// Acceptance: the MRC-derived boundness class agrees with
 /// `analysis::classify` (applied through the shared roofline path) on the
-/// Tables IV/V grid.
+/// Tables IV/V grid, on both boards.
 #[test]
 fn mrc_boundness_class_agrees_with_classify_on_grid() {
-    for (n, r) in traced_grid_reports() {
+    for (profile, n, r) in traced_grid_reports() {
         assert!(
             r.classes_agree(),
-            "n={n}: predicted {} vs simulated {} (pred {:?})",
+            "{profile} n={n}: predicted {} vs simulated {} (pred {:?})",
             r.predicted_class,
             r.sim_class,
             r.prediction.time,
@@ -90,10 +102,114 @@ fn mrc_boundness_class_agrees_with_classify_on_grid() {
         assert!(
             ["compute", "L1-read", "L2-read", "RAM-read", "overhead"]
                 .contains(&r.predicted_class.as_str()),
-            "n={n}: unexpected class {}",
+            "{profile} n={n}: unexpected class {}",
             r.predicted_class
         );
     }
+}
+
+/// One adversarial strided replay: `lines` lines `stride_bytes` apart,
+/// swept `rounds` times, through the named profile's hierarchy with a
+/// per-set reuse sink attached.  Returns `(fully_assoc_l1, set_aware_l1,
+/// sim_l1, conflict_pp)` — all from the same access stream.
+fn strided_case(profile: &str, stride_bytes: u64, lines: usize, rounds: usize) -> (f64, f64, f64, f64) {
+    let cpu = profile_by_name(profile).unwrap().cpu;
+    let mut h = Hierarchy::new(&cpu);
+    let mut analyzer = ReuseAnalyzer::with_sets(cpu.l1.line_bytes, cpu.l1.sets());
+    replay_strided(&mut h, stride_bytes, lines, rounds, &mut analyzer);
+    let sets = analyzer.take_set_histograms().expect("with_sets tracks per-set stacks");
+    let mrc = MissRatioCurve::with_sets(analyzer.combined(), cpu.l1.line_bytes, sets);
+    let p = mrc.predict_set_aware(&cpu);
+    (p.fa_l1_hit_rate, p.rates.l1_hit_rate, h.l1.stats.hit_rate(), p.conflict_pp)
+}
+
+/// Shared assertion: the fully-associative curve must be demonstrably
+/// wrong (> 2 p.p. off the simulator) while the set-aware prediction stays
+/// within the grid tolerance, and the gap is surfaced as `conflict_pp`.
+fn assert_conflict_case(name: &str, fa: f64, sa: f64, sim: f64, conflict_pp: f64) {
+    let fa_err = (fa - sim).abs() * 100.0;
+    let sa_err = (sa - sim).abs() * 100.0;
+    assert!(
+        fa_err > 2.0,
+        "{name}: fully-assoc is not adversarial here (err {fa_err:.2} p.p., fa {fa:.4} vs sim {sim:.4})"
+    );
+    assert!(
+        sa_err <= 2.0,
+        "{name}: set-aware error {sa_err:.2} p.p. (sa {sa:.4} vs sim {sim:.4})"
+    );
+    assert!(
+        conflict_pp > 2.0,
+        "{name}: conflict gap {conflict_pp:.2} p.p. should expose the mispricing"
+    );
+}
+
+/// Adversarial: on the A72 a 16 KiB stride aliases every line to set 0,
+/// so 8 lines thrash the 2-way set — the simulator misses every warm
+/// access while the fully-associative curve (8 lines ≪ 512-line L1)
+/// predicts near-perfect hits.  The set-aware model must side with the
+/// simulator.
+#[test]
+fn a72_single_set_stride_defeats_fully_assoc_model() {
+    // stride 16384 B = 256 lines; set = (i·256) & 255 = 0 for every i
+    let (fa, sa, sim, pp) = strided_case("a72", 16384, 8, 32);
+    assert_conflict_case("a72 stride 16KiB x8", fa, sa, sim, pp);
+    assert!(sim < 0.01, "8 lines cycling one 2-way set never hit (sim {sim:.4})");
+}
+
+/// Adversarial: 8 KiB stride on the A72 folds 16 lines onto two sets
+/// (8 per 2-way set) — same thrash, spread across sets.
+#[test]
+fn a72_two_set_stride_defeats_fully_assoc_model() {
+    // stride 8192 B = 128 lines; sets alternate {0, 128}
+    let (fa, sa, sim, pp) = strided_case("a72", 8192, 16, 32);
+    assert_conflict_case("a72 stride 8KiB x16", fa, sa, sim, pp);
+}
+
+/// Adversarial: 4 KiB stride on the A72 folds 16 lines onto four sets
+/// (4 per 2-way set); within-set distance 3 >= 2 ways still misses.
+#[test]
+fn a72_four_set_stride_defeats_fully_assoc_model() {
+    // stride 4096 B = 64 lines; sets cycle {0, 64, 128, 192}
+    let (fa, sa, sim, pp) = strided_case("a72", 4096, 16, 32);
+    assert_conflict_case("a72 stride 4KiB x16", fa, sa, sim, pp);
+}
+
+/// Adversarial (A53 leg): 4 KiB stride aliases every line to set 0 of the
+/// 64-set L1; 8 lines overwhelm even 4 ways.  Conflict modelling is not an
+/// A72-only concern — the A53 just needs deeper aliasing to expose it.
+#[test]
+fn a53_single_set_stride_defeats_fully_assoc_model() {
+    // stride 4096 B = 64 lines; set = (i·64) & 63 = 0 for every i
+    let (fa, sa, sim, pp) = strided_case("a53", 4096, 8, 32);
+    assert_conflict_case("a53 stride 4KiB x8", fa, sa, sim, pp);
+}
+
+/// Regression (the 64-cubed knife edge): the B panel's reuse distance
+/// (~267 lines) sits just past the A53's 256-line L1, so the
+/// fully-associative curve is forced to round the whole panel one way or
+/// the other.  The per-set model is exact for the simulated LRU, so it
+/// must (a) stay within the grid tolerance and (b) never be further from
+/// the simulator than the fully-associative estimate.
+#[test]
+fn gemm64_knife_edge_set_aware_tracks_simulator() {
+    let cpu = profile_by_name("a53").unwrap().cpu;
+    let r = trace_workload(&cpu, &BenchWorkload::Gemm { n: 64 }, TraceBudget::new(64));
+    let sim = r.sim_l1_hit_rate;
+    let sa_err = (r.prediction.rates.l1_hit_rate - sim).abs() * 100.0;
+    let fa_err = (r.prediction.fa_l1_hit_rate - sim).abs() * 100.0;
+    assert!(
+        sa_err <= 2.0,
+        "knife edge: set-aware L1 error {sa_err:.3} p.p. (sa {:.4} vs sim {sim:.4})",
+        r.prediction.rates.l1_hit_rate
+    );
+    assert!(
+        sa_err <= fa_err + 1e-9,
+        "knife edge: set-aware ({sa_err:.3} p.p.) must not be further from the \
+         simulator than fully-assoc ({fa_err:.3} p.p.)"
+    );
+    // the surfaced gap is exactly the (signed) fa-vs-sa difference
+    let expected_pp = (r.prediction.fa_l1_hit_rate - r.prediction.rates.l1_hit_rate) * 100.0;
+    assert!((r.conflict_pp() - expected_pp).abs() < 1e-9);
 }
 
 /// Acceptance: one shape of each operator family traces and emits valid
@@ -128,6 +244,16 @@ fn every_family_emits_valid_trace_json() {
         let predicted = v.req("predicted").unwrap();
         assert!(predicted.req("class").unwrap().as_str().is_ok());
         assert!(predicted.req("l1_hit_rate").unwrap().as_f64().unwrap() >= 0.0);
+        // the conflict-miss fields: the surfaced gap must reconcile with
+        // the fully-associative and set-aware rates it is defined from
+        let fa = predicted.req("fa_l1_hit_rate").unwrap().as_f64().unwrap();
+        let sa = predicted.req("l1_hit_rate").unwrap().as_f64().unwrap();
+        let pp = predicted.req("conflict_pp").unwrap().as_f64().unwrap();
+        assert!(
+            (pp - (fa - sa) * 100.0).abs() < 1e-9,
+            "{}: conflict_pp {pp} vs fa {fa} / sa {sa}",
+            r.key()
+        );
     }
 }
 
@@ -200,6 +326,8 @@ fn trace_cli_emits_valid_json_for_every_family() {
         let v = json::parse(&text).unwrap();
         assert_eq!(v.req("family").unwrap().as_str().unwrap(), family);
         assert!(v.req("predicted").unwrap().req("class").is_ok());
+        assert!(v.req("predicted").unwrap().req("conflict_pp").unwrap().as_f64().is_ok());
+        assert!(v.req("predicted").unwrap().req("fa_l1_hit_rate").unwrap().as_f64().is_ok());
         assert!(v.req("simulated").unwrap().req("l1_hit_rate").is_ok());
         assert!(!v.req("mrc").unwrap().as_arr().unwrap().is_empty());
     }
